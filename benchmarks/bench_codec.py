@@ -1,0 +1,62 @@
+"""§4's codec choice: zstd vs zlib/lzma on serialized cache values.
+
+The paper reports zstd wins on both speed and ratio for their value
+payloads (lists of int64 vertex ids); this micro-benchmark reproduces that
+comparison on our serialized leaf-id arrays.
+"""
+
+from __future__ import annotations
+
+import lzma
+import time
+import zlib
+
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+
+def payloads(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(5, 2000))
+        ids = rng.choice(10_000_000, size=k, replace=False).astype(np.int64)
+        out.append(np.sort(ids).tobytes())
+    return out
+
+
+def bench(name, comp, decomp, data):
+    t0 = time.perf_counter()
+    cs = [comp(d) for d in data]
+    t_c = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for c, d in zip(cs, data):
+        assert decomp(c) == d
+    t_d = time.perf_counter() - t0
+    ratio = sum(map(len, data)) / sum(map(len, cs))
+    n = len(data)
+    return dict(codec=name, ratio=round(ratio, 2),
+                comp_us=round(t_c / n * 1e6, 1), decomp_us=round(t_d / n * 1e6, 1))
+
+
+def main():
+    data = payloads()
+    rows = []
+    if zstd is not None:
+        c = zstd.ZstdCompressor(level=3)
+        d = zstd.ZstdDecompressor()
+        rows.append(bench("zstd", c.compress, d.decompress, data))
+    rows.append(bench("zlib", lambda b: zlib.compress(b, 6), zlib.decompress, data))
+    rows.append(bench("lzma", lambda b: lzma.compress(b, preset=1), lzma.decompress, data))
+    print("codec,ratio,comp_us,decomp_us")
+    for r in rows:
+        print(",".join(str(r[k]) for k in r))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

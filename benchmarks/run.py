@@ -1,0 +1,61 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows summarizing each benchmark,
+then each benchmark's own detailed table. Reduced op counts keep the whole
+run CPU-friendly; pass --full for the EXPERIMENTS.md-scale runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(name, fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    dt = time.perf_counter() - t0
+    return name, dt, out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    n = 300 if args.full else 60
+
+    from benchmarks import bench_codec, bench_errors, bench_invalidation, bench_latency
+    from benchmarks import roofline
+
+    benches = {
+        # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
+        "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
+        # Table 2 + 6 (impacted keys per write type)
+        "invalidation_tables_2_6": lambda: bench_invalidation.main(n_writes=n),
+        # Table 9 (error rates)
+        "errors_table_9": lambda: bench_errors.main(n_ops=max(n // 2, 40)),
+        # §4 codec micro-benchmark
+        "codec_zstd": bench_codec.main,
+        # §Roofline summary from the dry-run artifacts
+        "roofline": roofline.main,
+    }
+    rows = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            nm, dt, out = _timed(name, fn)
+            derived = len(out) if isinstance(out, list) else 1
+            rows.append((nm, dt * 1e6, derived))
+        except FileNotFoundError as e:
+            print(f"skipped ({e})")
+    print("\nname,us_per_call,derived")
+    for nm, us, d in rows:
+        print(f"{nm},{us:.0f},{d}")
+
+
+if __name__ == "__main__":
+    main()

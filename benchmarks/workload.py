@@ -1,0 +1,262 @@
+"""The eCommerce production workload (synthetic twin of §5).
+
+World: users own watch-lists; watch-lists include listings (edge property
+IsActive); listings are sold by users. Listing vertices carry Status (0/1),
+a unique ListingId, and LastSeen. Access is Zipfian.
+
+Six one-hop sub-query templates (the paper's production count) cover the
+query mix; queries reference 1–4 one-hop sub-queries; one aggregate query
+references none (Lesson 3's indirect beneficiary, ~14% of traffic). Write
+mix follows Table 7: Upsert 44.85%, Update-LastSeen 43.94%, Delete-Edges
+11.22%; >25% of upserts are predicate no-ops (Lesson 2).
+
+Workload mixes (§5 Figure 4): R̂ 99% reads @ high load, Ŵ 62:38, Ř 94:6 @
+low load.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import (
+    ANY_LABEL,
+    DIR_IN,
+    DIR_OUT,
+    FINAL_COUNT,
+    FINAL_IDS,
+    FINAL_VALUES,
+    OP_EQ,
+    WILDCARD,
+    CacheSpec,
+    EngineSpec,
+    Hop,
+    QueryPlan,
+    Template,
+    make_pred,
+    make_template_table,
+)
+from repro.core.lifecycle import GraphQP, ServiceCoordinator
+from repro.graphstore import StoreSpec, ingest, make_mutation_batch
+from repro.utils import PROP_MISSING
+
+MISSING = int(PROP_MISSING)
+
+# labels
+L_USER, L_WATCHLIST, L_LISTING = 2, 0, 1
+E_INCLUDES, E_OWNS, E_SOLD_BY = 0, 1, 2
+# vprops
+P_STATUS, P_LISTING_ID, P_LAST_SEEN = 0, 1, 2
+# eprops
+P_ISACTIVE = 0
+
+TEMPLATES = [
+    Template("SQ1", DIR_OUT, (L_WATCHLIST, []),
+             (ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+             (L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]), edge_label=E_INCLUDES),
+    Template("SQ2", DIR_IN, (L_LISTING, []),
+             (ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+             (L_WATCHLIST, []), edge_label=E_INCLUDES),
+    Template("SQ3", DIR_OUT, (L_USER, []), (ANY_LABEL, []),
+             (L_WATCHLIST, []), edge_label=E_OWNS),
+    Template("SQ4", DIR_IN, (L_WATCHLIST, []), (ANY_LABEL, []),
+             (L_USER, []), edge_label=E_OWNS),
+    Template("SQ5", DIR_OUT, (L_LISTING, []), (ANY_LABEL, []),
+             (L_USER, []), edge_label=E_SOLD_BY),
+    Template("SQ6", DIR_IN, (L_USER, []), (ANY_LABEL, []),
+             (L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]), edge_label=E_SOLD_BY),
+]
+TPL_META = {
+    0: (DIR_OUT, E_INCLUDES), 1: (DIR_IN, E_INCLUDES), 2: (DIR_OUT, E_OWNS),
+    3: (DIR_IN, E_OWNS), 4: (DIR_OUT, E_SOLD_BY), 5: (DIR_IN, E_SOLD_BY),
+}
+
+
+def _params(*pairs):
+    p = np.full(6, MISSING, np.int32)
+    for i, v in pairs:
+        p[i] = v
+    return p
+
+
+def hops():
+    """Hop factories bound to the registered templates."""
+    sq1 = lambda ia=1, st=0: Hop(
+        DIR_OUT, E_INCLUDES, make_pred(L_WATCHLIST, []),
+        make_pred(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+        make_pred(L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]),
+        0, _params((0, ia), (3, st)))
+    sq2 = lambda ia=1: Hop(
+        DIR_IN, E_INCLUDES, make_pred(L_LISTING, []),
+        make_pred(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+        make_pred(L_WATCHLIST, []), 1, _params((0, ia)))
+    sq3 = lambda: Hop(
+        DIR_OUT, E_OWNS, make_pred(L_USER, []), make_pred(ANY_LABEL, []),
+        make_pred(L_WATCHLIST, []), 2, _params())
+    sq5 = lambda: Hop(
+        DIR_OUT, E_SOLD_BY, make_pred(L_LISTING, []), make_pred(ANY_LABEL, []),
+        make_pred(L_USER, []), 4, _params())
+    sq6 = lambda st=0: Hop(
+        DIR_IN, E_SOLD_BY, make_pred(L_USER, []), make_pred(ANY_LABEL, []),
+        make_pred(L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]), 5,
+        _params((3, st)))
+    # the aggregate query's hop matches NO registered template (tpl_idx=-1):
+    # it scans all includes edges regardless of IsActive
+    agg = lambda: Hop(
+        DIR_OUT, E_INCLUDES, make_pred(L_WATCHLIST, []),
+        make_pred(ANY_LABEL, []), make_pred(L_LISTING, []), -1, _params())
+    return dict(sq1=sq1, sq2=sq2, sq3=sq3, sq5=sq5, sq6=sq6, agg=agg)
+
+
+def query_plans():
+    """The query-template mix: (name, plan, root_label, weight, class)."""
+    h = hops()
+    plans = [
+        # Figure 1: watch-list actives (1 one-hop) — the dominant query
+        ("q_fig1", QueryPlan((h["sq1"](),), FINAL_IDS), L_WATCHLIST, 0.30, "cached"),
+        # §2 two-hop: other listings sharing a watch-list (+ rewriteable filter)
+        ("q_common", QueryPlan((h["sq2"](), h["sq1"]()), FINAL_IDS,
+                               post_filter=("prop_neq_root", P_LISTING_ID)),
+         L_LISTING, 0.18, "cached"),
+        # user's active listings across their watch-lists (2 one-hops)
+        ("q_user", QueryPlan((h["sq3"](), h["sq1"]()), FINAL_IDS),
+         L_USER, 0.14, "cached"),
+        # 4 one-hops: active listings sold by sellers of the user's watched items
+        ("q_sellers", QueryPlan(
+            (h["sq3"](), h["sq1"](), h["sq5"](), h["sq6"]()), FINAL_IDS),
+         L_USER, 0.10, "cached"),
+        # valueMap query (rewrite drops the fetch phase)
+        ("q_values", QueryPlan((h["sq1"](),), FINAL_VALUES,
+                               final_prop=P_LISTING_ID), L_WATCHLIST, 0.14, "cached"),
+        # Lesson 3: the aggregate query — no one-hop template, no rewrite
+        ("q_agg", QueryPlan((h["agg"](),), FINAL_COUNT, extra_phases=2),
+         L_WATCHLIST, 0.14, "agg"),
+    ]
+    return plans
+
+
+@dataclass
+class World:
+    spec: StoreSpec
+    espec: EngineSpec
+    store: object
+    ttable: object
+    sc: object
+    qp: object
+    n_users: int
+    n_watchlists: int
+    n_listings: int
+    rng: np.random.Generator
+    includes_eids: list = field(default_factory=list)
+
+    def zipf_pick(self, lo, hi, a=1.3):
+        n = hi - lo
+        r = min(int(self.rng.zipf(a)) - 1, n - 1)
+        return lo + r
+
+    def vertex_range(self, label):
+        if label == L_USER:
+            return 0, self.n_users
+        if label == L_WATCHLIST:
+            return self.n_users, self.n_users + self.n_watchlists
+        return self.n_users + self.n_watchlists, self.n_users + self.n_watchlists + self.n_listings
+
+
+def build_world(
+    n_users=200, n_watchlists=300, n_listings=2000, avg_wl_size=12,
+    seed=0, cache_capacity=8192, max_deg=64,
+) -> World:
+    rng = np.random.default_rng(seed)
+    nv = n_users + n_watchlists + n_listings
+    spec = StoreSpec(
+        v_cap=1 << (nv + 512).bit_length(), e_cap=1 << 16, n_vprops=3,
+        n_eprops=1, recent_cap=512,
+    )
+    vlabels = np.array(
+        [L_USER] * n_users + [L_WATCHLIST] * n_watchlists + [L_LISTING] * n_listings
+    )
+    vprops = np.full((nv, 3), MISSING, np.int64)
+    l0 = n_users + n_watchlists
+    vprops[l0:, P_STATUS] = rng.integers(0, 2, n_listings)
+    vprops[l0:, P_LISTING_ID] = 10_000 + np.arange(n_listings)
+    vprops[:, P_LAST_SEEN] = 0
+    es, ed, el, ep = [], [], [], []
+    # owns: each watch-list owned by a user
+    for w in range(n_users, n_users + n_watchlists):
+        es.append(int(rng.integers(0, n_users)))
+        ed.append(w)
+        el.append(E_OWNS)
+        ep.append([MISSING])
+    # includes: Zipf watch-list sizes
+    for w in range(n_users, n_users + n_watchlists):
+        size = min(int(rng.zipf(1.4) * avg_wl_size / 3) + 2, max_deg - 8)
+        members = rng.choice(np.arange(l0, nv), size=min(size, n_listings), replace=False)
+        for m in members:
+            es.append(w)
+            ed.append(int(m))
+            el.append(E_INCLUDES)
+            ep.append([int(rng.integers(0, 2))])
+    # sold_by: each listing sold by one user
+    for li in range(l0, nv):
+        es.append(li)
+        ed.append(int(rng.integers(0, n_users)))
+        el.append(E_SOLD_BY)
+        ep.append([MISSING])
+    store = ingest(spec, vlabels, vprops, es, ed, el, np.array(ep))
+    cspec = CacheSpec(capacity=cache_capacity, probes=8, max_leaves=32, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=max_deg, frontier=32)
+    ttable = make_template_table(TEMPLATES)
+    qp = GraphQP("qp0")
+    sc = ServiceCoordinator([qp])
+    for t in range(len(TEMPLATES)):
+        sc.register(t)
+        sc.enable(t)
+    ttable = qp.ttable_masks(ttable, len(TEMPLATES))
+    includes = [i for i, lab in enumerate(el) if lab == E_INCLUDES]
+    return World(
+        spec=spec, espec=espec, store=store, ttable=ttable, sc=sc, qp=qp,
+        n_users=n_users, n_watchlists=n_watchlists, n_listings=n_listings,
+        rng=rng, includes_eids=includes,
+    )
+
+
+# --------------------------------------------------------------- write mix
+def make_write(world: World, kind: str):
+    """Returns (kind, MutationBatch | None). None = predicate no-op upsert."""
+    rng = world.rng
+    spec = world.spec
+    l0, l1 = world.vertex_range(L_LISTING)
+    w0, w1 = world.vertex_range(L_WATCHLIST)
+    if kind == "upsert":
+        # Type 1: upsert a sub-graph; ~30% are predicate no-ops (Lesson 2)
+        if rng.random() < 0.3:
+            return kind, None
+        listing = world.zipf_pick(l0, l1)
+        wl = world.zipf_pick(w0, w1)
+        ops = dict(
+            set_vprops=[(listing, P_STATUS, int(rng.integers(0, 2)))],
+            new_edges=[(wl, listing, E_INCLUDES, [int(rng.integers(0, 2))])],
+        )
+        return kind, make_mutation_batch(spec, **ops)
+    if kind == "last_seen":
+        # Type 2: LastSeen is not referenced by any template predicate
+        v = world.zipf_pick(l0, l1)
+        return kind, make_mutation_batch(
+            spec, set_vprops=[(v, P_LAST_SEEN, int(rng.integers(1, 1 << 30)))]
+        )
+    if kind == "del_edges":
+        k = int(rng.integers(1, 4))
+        eids = rng.choice(world.includes_eids, size=k, replace=False)
+        return kind, make_mutation_batch(spec, del_edges=[int(e) for e in eids])
+    raise ValueError(kind)
+
+
+WRITE_MIX = [("upsert", 0.4485), ("last_seen", 0.4394), ("del_edges", 0.1122)]
+
+# workload mixes: (name, read_fraction, arrival_rate_relative)
+MIXES = {
+    "R_hat": dict(read_frac=0.99, load=1.0),  # heavy read-dominated
+    "W_hat": dict(read_frac=0.62, load=0.85),  # batch-write window
+    "R_low": dict(read_frac=0.94, load=0.35),  # low load
+}

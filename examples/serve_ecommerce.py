@@ -1,0 +1,78 @@
+"""End-to-end serving driver (the paper's kind of system is a serving one):
+replay a diurnal eCommerce workload against one Graph-QP with the cache and
+async population on, interleaving gRW-Txs, and report hit rates + latency
+percentiles per phase of day.
+
+Run:  PYTHONPATH=src python examples/serve_ecommerce.py [--ops 200]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.workload import MIXES, TPL_META, WRITE_MIX, build_world, make_write, query_plans
+from repro.core import GraphEngine, build_grw_step, cache_stats, empty_cache
+from repro.core.population import CachePopulator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    world = build_world(seed=args.seed)
+    cache = empty_cache(world.espec.cache)
+    pop = CachePopulator(world.espec, TPL_META)
+    grw = build_grw_step(world.espec)
+    plans = query_plans()
+    engines = {n: GraphEngine(world.espec, p, use_cache=True) for (n, p, _, _, _) in plans}
+    weights = np.array([w for (_, _, _, w, _) in plans])
+    weights /= weights.sum()
+    store = world.store
+
+    kinds, wweights = zip(*WRITE_MIX)
+    wweights = np.array(wweights) / sum(wweights)
+
+    for mix_name, mix in MIXES.items():
+        lat = []
+        hits0 = pop.committed
+        t_mix = time.perf_counter()
+        world.rng = np.random.default_rng(args.seed + hash(mix_name) % 1000)
+        h = m = 0
+        for i in range(args.ops):
+            if world.rng.random() < mix["read_frac"]:
+                j = int(world.rng.choice(len(plans), p=weights))
+                name, plan, label, _, _ = plans[j]
+                lo, hi = world.vertex_range(label)
+                roots = np.array([world.zipf_pick(lo, hi) for _ in range(8)], np.int32)
+                t0 = time.perf_counter()
+                _, misses, mm = engines[name].run(store, cache, world.ttable, roots)
+                lat.append((time.perf_counter() - t0) / 8)
+                pop.queue.push(misses)
+                h += mm["hits"]; m += mm["misses"]
+            else:
+                wk = kinds[int(world.rng.choice(len(kinds), p=wweights))]
+                _, mb = make_write(world, wk)
+                if mb is not None:
+                    store, cache, _ = grw(store, cache, world.ttable, mb)
+            if i % 10 == 9:
+                cache = pop.drain(store, store, cache, world.ttable, 256)
+        lat_ms = np.array(lat) * 1e3
+        print(
+            f"{mix_name:6} ops={args.ops} "
+            f"p50={np.percentile(lat_ms,50):6.2f}ms p95={np.percentile(lat_ms,95):6.2f}ms "
+            f"p99={np.percentile(lat_ms,99):6.2f}ms hit_rate={h/max(h+m,1):.2%} "
+            f"({time.perf_counter()-t_mix:.1f}s)"
+        )
+    print("cache:", cache_stats(cache))
+    print("population: committed=%d aborted=%d discarded=%d" % (
+        pop.committed, pop.aborted, pop.queue.discarded))
+
+
+if __name__ == "__main__":
+    main()

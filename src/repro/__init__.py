@@ -1,0 +1,13 @@
+"""repro: One-Hop Sub-Query Result Caches for Graph Database Systems, in JAX.
+
+A production-grade JAX training/serving framework reproducing and extending
+Nguyen, Li & Ghandeharizadeh (2024). The paper's contribution — a strongly
+consistent cache of one-hop sub-query results inside a transactional graph
+store — lives in :mod:`repro.core`, built on the tensorized property-graph
+substrate in :mod:`repro.graphstore`. Assigned model families (LM / GNN /
+RecSys) live in their own subpackages with configs under
+:mod:`repro.configs` and the distributed launchers under
+:mod:`repro.launch`.
+"""
+
+__version__ = "1.0.0"

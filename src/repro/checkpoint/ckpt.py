@@ -1,0 +1,90 @@
+"""Atomic, compressed, reshardable checkpoints.
+
+Layout: ``<dir>/step_<n>/`` with one ``<idx>.zst`` blob per pytree leaf
+(zstd-compressed raw array bytes — §4's codec, reused on the persistence
+path) plus ``manifest.json`` (treedef, shapes, dtypes, step). Writes go to
+``step_<n>.tmp`` and are renamed into place, so a reader never observes a
+torn checkpoint and a crashed writer leaves only a .tmp to garbage-collect.
+
+Restore accepts target ``shardings`` — a checkpoint written on one mesh can
+be restored onto a *different* mesh (elastic re-scale after node loss):
+each leaf is loaded on host then ``jax.device_put`` with the new sharding.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+
+def _comp(b: bytes) -> bytes:
+    return zstd.ZstdCompressor(level=3).compress(b) if zstd else b
+
+
+def _decomp(b: bytes) -> bytes:
+    return zstd.ZstdDecompressor().decompress(b) if zstd else b
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+        with open(os.path.join(tmp, f"{i}.zst"), "wb") as f:
+            f.write(_comp(arr.tobytes()))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    return final
+
+
+def latest_step(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching pytree of
+    NamedShardings for elastic placement on the current mesh."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    assert len(t_leaves) == len(manifest["leaves"]), "pytree mismatch"
+    s_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(t_leaves)
+    )
+    out = []
+    for i, (tmpl, meta, shard) in enumerate(zip(t_leaves, manifest["leaves"], s_leaves)):
+        with open(os.path.join(path, f"{i}.zst"), "rb") as f:
+            arr = np.frombuffer(_decomp(f.read()), dtype=np.dtype(meta["dtype"]))
+        arr = arr.reshape(meta["shape"])
+        assert tuple(arr.shape) == tuple(tmpl.shape), f"leaf {i} shape mismatch"
+        out.append(jax.device_put(arr, shard) if shard is not None else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,51 @@
+"""Architecture registry: 10 assigned archs + the paper's own graph engine.
+
+Each config module exposes:
+  FAMILY: "lm" | "gnn" | "recsys" | "graph"
+  FULL:   the exact published configuration
+  SMOKE:  a reduced same-family config for CPU smoke tests
+  SHAPES: {shape_name: dict(kind=..., **dims)}
+  SKIPS:  {shape_name: reason} — cells excluded per DESIGN.md §Arch-applicability
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "glm4-9b",
+    "yi-6b",
+    "gemma3-4b",
+    "kimi-k2-1t-a32b",
+    "grok-1-314b",
+    "pna",
+    "nequip",
+    "gat-cora",
+    "egnn",
+    "two-tower-retrieval",
+    "ecommerce-graph",  # the paper's own architecture
+]
+
+
+def get_arch(arch_id: str):
+    mod = importlib.import_module(f"repro.configs.{arch_id.replace('-', '_')}")
+    return mod
+
+
+def all_cells(include_paper_arch: bool = True):
+    """Every (arch, shape) cell incl. skip annotations."""
+    cells = []
+    for a in ARCH_IDS:
+        if a == "ecommerce-graph" and not include_paper_arch:
+            continue
+        mod = get_arch(a)
+        for shape, info in mod.SHAPES.items():
+            cells.append(
+                dict(
+                    arch=a,
+                    shape=shape,
+                    kind=info["kind"],
+                    skip=mod.SKIPS.get(shape),
+                )
+            )
+    return cells

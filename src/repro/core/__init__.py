@@ -1,0 +1,74 @@
+"""The paper's contribution: a one-hop sub-query result cache.
+
+Modules map 1:1 onto the paper:
+
+- ``templates``   — Definitions 2.1/2.2: one-hop sub-query templates
+                    ``(P^r, P^e, P^l)`` with wildcard predicates, tensorized.
+- ``keys``        — §3: cache-key construction (template id, root vertex id,
+                    wildcard values of P^e and P^l).
+- ``cache``       — §4: the cache itself (open-addressing tensor hash table,
+                    chunked values, sweep-deletes standing in for FDB
+                    clearRange).
+- ``engine``      — §3.1: gR-Tx processing — per-hop cache probe, miss
+                    execution, miss enqueue, final clause.
+- ``invalidation``— §3.2 + Appendix A: vectorized Algorithms 1–9
+                    (write-around) and the write-through variant.
+- ``population``  — §4: asynchronous transactional cache population (the CP
+                    threads), with OCC conflict checks and bounded retries.
+- ``lifecycle``   — §4.1: Service-Coordinator two-phase template
+                    enable/disable state machine.
+- ``rewrite``     — §4.2: query re-writing rules (Q+).
+"""
+
+from repro.core.templates import (
+    ANY_LABEL,
+    DIR_BOTH,
+    DIR_IN,
+    DIR_OUT,
+    OP_EQ,
+    OP_GE,
+    OP_GT,
+    OP_LE,
+    OP_LT,
+    OP_NEQ,
+    WILDCARD,
+    PredSpec,
+    Template,
+    TemplateTable,
+    evaluate_pred,
+    extract_wildcards,
+    make_pred,
+    make_template_table,
+)
+from repro.core.keys import make_param_vec, key_fingerprint, key_slot_hash
+from repro.core.cache import (
+    CacheSpec,
+    CacheState,
+    cache_delete,
+    cache_insert,
+    cache_lookup,
+    cache_stats,
+    empty_cache,
+    sweep_root,
+    sweep_template,
+)
+from repro.core.engine import (
+    FINAL_COUNT,
+    FINAL_IDS,
+    FINAL_VALUES,
+    EngineSpec,
+    GraphEngine,
+    Hop,
+    MissRecord,
+    QueryPlan,
+    build_grw_step,
+    onehop_exec,
+    run_gr_tx_batch,
+    run_grw_tx,
+)
+from repro.core.invalidation import invalidate_write_around, write_through_update
+from repro.core.population import MissQueue, populate_step
+from repro.core.lifecycle import ServiceCoordinator, TemplateState
+from repro.core.rewrite import rewrite_plan
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,267 @@
+"""The one-hop sub-query result cache (§4), as a tensor hash table.
+
+Physical design (the FDB-subspace analogue):
+
+- Open-addressing table of ``capacity`` slots (power of two), linear probe
+  window of ``probes`` slots. Template id and root vertex id are stored
+  *explicitly* per slot; the parameter vector is fingerprinted. This keeps
+  FDB's two key-prefix operations cheap:
+    * ``clearRange(template)``        -> ``sweep_template`` (vectorized mask)
+    * ``clearRange(template, root)``  -> ``sweep_root``
+- Values are padded leaf-id rows of ``max_leaves``; results larger than one
+  slot spill into continuation *chunks* (the paper's 100KB FDB value-size
+  chunking) — chunk i of a key lives at an independent hash. Results larger
+  than ``max_chunks * max_leaves`` are not cached (counted), mirroring the
+  paper's supernode discussion.
+- Inserts walk the batch sequentially (fori_loop): the insert path is the
+  *write* path which the paper deliberately keeps off the read path, so
+  serializing it costs reads nothing. Eviction policy: overwrite the last
+  probe slot (documented FIFO-within-window; a cache may always drop).
+
+Strong-consistency note: a fingerprint collision inside a probe window could
+alias two different parameter vectors of the same (template, root). With 32b
+slot-hash + 32b fingerprint + explicit (tpl, root) this is ~2^-64 per pair;
+DESIGN.md §2 records the budget.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.keys import PARAM_LEN
+from repro.utils import NULL_ID, hash_rows
+
+_SEED_SLOT = 0x51ED5EED
+_SEED_FP = 0xF1A9F00D
+
+
+class CacheSpec(NamedTuple):
+    capacity: int = 4096  # power of two
+    probes: int = 8
+    max_leaves: int = 32  # leaf ids per slot (one FDB value chunk)
+    max_chunks: int = 2  # continuation chunks per key
+
+
+class CacheState(NamedTuple):
+    tpl: jax.Array  # int32 [cap] (-1 = never used)
+    root: jax.Array  # int32 [cap]
+    fp: jax.Array  # uint32 [cap]
+    chunk: jax.Array  # int32 [cap]
+    total_len: jax.Array  # int32 [cap] (authoritative on chunk 0)
+    vals: jax.Array  # int32 [cap, max_leaves]
+    version: jax.Array  # int32 [cap] commit version of the populating txn
+    valid: jax.Array  # bool [cap]
+    # stats (0-d int32): read hits / read misses / inserts / evictions /
+    # deletes / oversize results skipped
+    n_hit: jax.Array
+    n_miss: jax.Array
+    n_insert: jax.Array
+    n_evict: jax.Array
+    n_delete: jax.Array
+    n_oversize: jax.Array
+
+
+def empty_cache(spec: CacheSpec) -> CacheState:
+    cap = spec.capacity
+    assert cap & (cap - 1) == 0, "capacity must be a power of two"
+    z = jnp.int32(0)
+    return CacheState(
+        tpl=jnp.full((cap,), -1, jnp.int32),
+        root=jnp.full((cap,), -1, jnp.int32),
+        fp=jnp.zeros((cap,), jnp.uint32),
+        chunk=jnp.zeros((cap,), jnp.int32),
+        total_len=jnp.zeros((cap,), jnp.int32),
+        vals=jnp.full((cap, spec.max_leaves), NULL_ID, jnp.int32),
+        version=jnp.zeros((cap,), jnp.int32),
+        valid=jnp.zeros((cap,), bool),
+        n_hit=z, n_miss=z, n_insert=z, n_evict=z, n_delete=z, n_oversize=z,
+    )
+
+
+def _key_cols(tpl_id, root, params, chunk):
+    tpl = jnp.broadcast_to(jnp.asarray(tpl_id, jnp.int32), jnp.shape(root))
+    ch = jnp.broadcast_to(jnp.asarray(chunk, jnp.int32), jnp.shape(root))
+    cols = [tpl, jnp.asarray(root, jnp.int32)]
+    cols += [params[..., i] for i in range(PARAM_LEN)]
+    cols.append(ch)
+    return cols
+
+
+def _probe(spec: CacheSpec, cache: CacheState, tpl_id, root, params, chunk):
+    """Find the slot holding (tpl, root, params, chunk). Returns (found, slot)."""
+    h = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_SLOT)
+    fp = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_FP)
+    base = (h & jnp.uint32(spec.capacity - 1)).astype(jnp.int32)
+    offs = jnp.arange(spec.probes, dtype=jnp.int32)
+    slots = (base[..., None] + offs) & (spec.capacity - 1)  # [..., P]
+    match = (
+        cache.valid[slots]
+        & (cache.tpl[slots] == jnp.asarray(tpl_id, jnp.int32)[..., None])
+        & (cache.root[slots] == jnp.asarray(root, jnp.int32)[..., None])
+        & (cache.fp[slots] == fp[..., None])
+        & (cache.chunk[slots] == chunk)
+    )
+    found = jnp.any(match, axis=-1)
+    first = jnp.argmax(match, axis=-1)
+    slot = jnp.where(found, jnp.take_along_axis(slots, first[..., None], -1)[..., 0], -1)
+    return found, slot, slots, fp
+
+
+def cache_lookup(spec: CacheSpec, cache: CacheState, tpl_id, root, params):
+    """Batched read-path lookup (§3.1).
+
+    Returns ``(hit [B], leaves [B, max_chunks*max_leaves], lmask, version)``.
+    A hit requires chunk 0 plus every continuation chunk implied by
+    ``total_len`` to be present (a partially-evicted chain is a miss).
+    Stats are *not* updated here (pure read); the engine accumulates them.
+    """
+    L, C = spec.max_leaves, spec.max_chunks
+    founds, slots = [], []
+    for c in range(C):
+        f, s, _, _ = _probe(spec, cache, tpl_id, root, params, c)
+        founds.append(f)
+        slots.append(s)
+    found0 = founds[0]
+    slot0 = slots[0]
+    tlen = jnp.where(found0, cache.total_len[jnp.clip(slot0, 0)], 0)
+    need = jnp.clip((tlen + L - 1) // L, 1, C)  # chunks required
+    ok = found0
+    for c in range(1, C):
+        ok &= (need <= c) | founds[c]
+    # chain consistency: continuation chunks must carry the same total_len
+    for c in range(1, C):
+        same = cache.total_len[jnp.clip(slots[c], 0)] == tlen
+        ok &= (need <= c) | same
+    leaves = jnp.concatenate(
+        [cache.vals[jnp.clip(slots[c], 0)] for c in range(C)], axis=-1
+    )
+    pos = jnp.arange(L * C, dtype=jnp.int32)
+    lmask = ok[..., None] & (pos < tlen[..., None])
+    leaves = jnp.where(lmask, leaves, NULL_ID)
+    version = jnp.where(ok, cache.version[jnp.clip(slot0, 0)], -1)
+    return ok, leaves, lmask, version
+
+
+def cache_insert(
+    spec: CacheSpec,
+    cache: CacheState,
+    tpl_id,
+    root,
+    params,
+    leaves,
+    lens,
+    commit_version,
+    mask,
+):
+    """Write-path insert of B results (CP population / write-through).
+
+    ``leaves``: int32 [B, >= max_chunks*max_leaves] compacted leaf ids.
+    Sequential over the batch (see module docstring). Oversize results are
+    skipped and counted.
+    """
+    L, C = spec.max_leaves, spec.max_chunks
+    B = leaves.shape[0]
+    width = leaves.shape[1]
+    oversize = lens > L * C
+
+    def body(i, cache):
+        do = mask[i] & ~oversize[i]
+        tlen = jnp.minimum(lens[i], L * C)
+        nchunks = jnp.clip((tlen + L - 1) // L, 1, C)
+
+        def write_chunk(c, cache):
+            found, slot, slots, fp = _probe(
+                spec, cache, tpl_id[i], root[i], params[i], c
+            )
+            empty = ~cache.valid[slots]
+            has_empty = jnp.any(empty)
+            first_empty = jnp.take_along_axis(
+                slots, jnp.argmax(empty, -1)[None], -1
+            )[0]
+            # reuse matching slot, else first empty, else evict last probe
+            target = jnp.where(found, slot, jnp.where(has_empty, first_empty, slots[-1]))
+            evict = ~found & ~has_empty & cache.valid[target]
+            active = do & (c < nchunks)
+            t = jnp.where(active, target, spec.capacity)  # OOB -> drop
+            seg = jax.lax.dynamic_slice(
+                leaves[i], (c * L,), (L,)
+            )
+            seg = jnp.where(jnp.arange(L) < tlen - c * L, seg, NULL_ID)
+            cache = cache._replace(
+                tpl=cache.tpl.at[t].set(jnp.int32(tpl_id[i]), mode="drop"),
+                root=cache.root.at[t].set(jnp.int32(root[i]), mode="drop"),
+                fp=cache.fp.at[t].set(fp, mode="drop"),
+                chunk=cache.chunk.at[t].set(c, mode="drop"),
+                total_len=cache.total_len.at[t].set(tlen, mode="drop"),
+                vals=cache.vals.at[t].set(seg, mode="drop"),
+                version=cache.version.at[t].set(
+                    jnp.int32(commit_version[i]), mode="drop"
+                ),
+                valid=cache.valid.at[t].set(True, mode="drop"),
+                n_evict=cache.n_evict + jnp.where(active & evict, 1, 0),
+            )
+            return cache
+
+        cache = jax.lax.fori_loop(0, C, write_chunk, cache)
+        return cache._replace(
+            n_insert=cache.n_insert + jnp.where(do, 1, 0),
+            n_oversize=cache.n_oversize + jnp.where(mask[i] & oversize[i], 1, 0),
+        )
+
+    assert width >= L * C or width >= L, "leaves row narrower than one chunk"
+    if width < L * C:  # pad so dynamic_slice stays in range
+        pad = jnp.full((B, L * C - width), NULL_ID, leaves.dtype)
+        leaves = jnp.concatenate([leaves, pad], axis=1)
+    return jax.lax.fori_loop(0, B, body, cache)
+
+
+def cache_delete(spec: CacheSpec, cache: CacheState, tpl_id, root, params, mask):
+    """Exact-key write-around delete (all chunks). Batched scatter — deletes
+    are idempotent so scatter races are harmless."""
+    deleted = jnp.zeros(jnp.shape(root), bool)
+    for c in range(spec.max_chunks):
+        found, slot, _, _ = _probe(spec, cache, tpl_id, root, params, c)
+        do = found & mask
+        t = jnp.where(do, slot, spec.capacity)
+        cache = cache._replace(valid=cache.valid.at[t].set(False, mode="drop"))
+        deleted |= do
+    return cache._replace(n_delete=cache.n_delete + jnp.sum(deleted.astype(jnp.int32)))
+
+
+def sweep_root(spec: CacheSpec, cache: CacheState, tpl_id, root, mask):
+    """``clearRange(template, root)`` — delete every cached instance of the
+    template whose root is ``root``, regardless of parameter values
+    (DeleteKeysForRoot / Algorithm 6)."""
+    tpl_id = jnp.asarray(tpl_id, jnp.int32).reshape(-1)
+    root = jnp.asarray(root, jnp.int32).reshape(-1)
+    mask = jnp.asarray(mask, bool).reshape(-1)
+    kill = (
+        (cache.tpl[:, None] == tpl_id[None, :])
+        & (cache.root[:, None] == root[None, :])
+        & mask[None, :]
+    ).any(axis=1)
+    n = jnp.sum((kill & cache.valid).astype(jnp.int32))
+    return cache._replace(valid=cache.valid & ~kill, n_delete=cache.n_delete + n)
+
+
+def sweep_template(spec: CacheSpec, cache: CacheState, tpl_id):
+    """``clearRange(template)`` — SC removal path (§4.1)."""
+    kill = cache.tpl == jnp.asarray(tpl_id, jnp.int32)
+    n = jnp.sum((kill & cache.valid).astype(jnp.int32))
+    return cache._replace(valid=cache.valid & ~kill, n_delete=cache.n_delete + n)
+
+
+def cache_stats(cache: CacheState) -> dict:
+    occ = jnp.sum(cache.valid.astype(jnp.int32))
+    return {
+        "hits": int(cache.n_hit),
+        "misses": int(cache.n_miss),
+        "inserts": int(cache.n_insert),
+        "evictions": int(cache.n_evict),
+        "deletes": int(cache.n_delete),
+        "oversize_skipped": int(cache.n_oversize),
+        "occupancy": int(occ),
+    }

@@ -1,0 +1,412 @@
+"""gR-Tx processing with the one-hop sub-query result cache (§3.1).
+
+A ``QueryPlan`` is the engine's IR for a Gremlin read: a chain of one-hop
+hops (Definition 2.1) plus a final clause. Processing follows the paper
+exactly: per hop, construct the cache keys for the current frontier, probe
+the cache, execute *only the misses* against the storage manager, enqueue
+misses for asynchronous population, and feed the union of leaf sets to the
+next hop.
+
+The engine is split into jitted device steps (probe / exec / final) and a
+thin host orchestrator (`GraphEngine.run`) that routes hit/miss rows — the
+same shape as a Graph-QP node: the cache hit path genuinely skips the
+storage gathers, which is where the paper's latency win comes from. Miss
+batches are padded to power-of-two buckets so the jit cache stays small.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheSpec, CacheState, cache_lookup
+from repro.core.keys import PARAM_LEN
+from repro.core.templates import (
+    DIR_BOTH,
+    DIR_IN,
+    DIR_OUT,
+    MAX_CONDS,
+    PredSpec,
+    TemplateTable,
+    evaluate_pred,
+)
+from repro.graphstore.store import GraphStore, StoreSpec, gather_in, gather_out
+from repro.graphstore.mutations import MutationBatch, apply_mutations
+from repro.utils import NULL_ID, compact_masked, dedup_masked, take_along0
+
+FINAL_IDS, FINAL_COUNT, FINAL_VALUES = 0, 1, 2
+
+
+class EngineSpec(NamedTuple):
+    store: StoreSpec
+    cache: CacheSpec
+    max_deg: int = 64  # padded adjacency width per hop
+    frontier: int = 64  # per-query frontier width between hops
+
+    @property
+    def result_width(self) -> int:
+        # must equal the cache's value capacity so that any result the
+        # engine can produce is either fully cacheable or flagged oversize
+        return self.cache.max_leaves * self.cache.max_chunks
+
+
+class Hop(NamedTuple):
+    """One one-hop sub-query instance in a plan (template + bound params)."""
+
+    direction: int  # DIR_OUT / DIR_IN / DIR_BOTH (static)
+    edge_label: int  # static; ANY_LABEL = -1
+    pr: PredSpec
+    pe: PredSpec
+    pl: PredSpec
+    tpl_idx: int  # index into the TemplateTable; -1 = not cacheable
+    params: np.ndarray  # int32 [PARAM_LEN] concrete wildcard values
+
+
+class QueryPlan(NamedTuple):
+    hops: tuple
+    final: int = FINAL_IDS
+    final_prop: int = -1  # for FINAL_VALUES
+    # post filter over the final frontier:
+    #   ("prop_neq_root", pid): drop leaves whose prop equals the root's
+    #       prop value — costs one extra storage phase (property fetch).
+    #   ("id_neq",): drop leaves equal to the root id — free (§4.2 rewrite).
+    post_filter: Optional[tuple] = None
+    # extra non-one-hop storage phases this query performs regardless of the
+    # cache (Amdahl's 1-f portion; e.g. the aggregate query of Lesson 3)
+    extra_phases: int = 0
+
+
+def onehop_exec(
+    espec: EngineSpec,
+    store: GraphStore,
+    direction: int,
+    edge_label: int,
+    pr: PredSpec,
+    pe: PredSpec,
+    pl: PredSpec,
+    roots: jax.Array,  # int32 [B]
+    params: jax.Array,  # int32 [B, PARAM_LEN]
+    rmask: jax.Array,  # bool [B]
+):
+    """Execute one one-hop sub-query instance per root (the cache-miss path).
+
+    Returns (leaves [B, RW], lmask, n_true [B], truncated [B], stats) where
+    RW = espec.result_width. ``n_true`` is the un-truncated cardinality and
+    ``truncated`` flags supernode rows whose adjacency exceeded the gather
+    window — neither is cacheable when truncated.
+    """
+    sspec = espec.store
+    pe_bound = params[:, :MAX_CONDS]
+    pl_bound = params[:, MAX_CONDS:]
+
+    rlab = take_along0(store.vlabel, roots)
+    rprops = take_along0(store.vprops, roots)
+    r_ok = evaluate_pred(pr, rlab, rprops) & rmask
+
+    eids_parts, leaf_parts, mask_parts, trunc = [], [], [], jnp.zeros_like(r_ok)
+    if direction in (DIR_OUT, DIR_BOTH):
+        e, o, m, t = gather_out(sspec, store, roots, espec.max_deg)
+        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        trunc |= t
+    if direction in (DIR_IN, DIR_BOTH):
+        e, o, m, t = gather_in(sspec, store, roots, espec.max_deg)
+        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        trunc |= t
+    eids = jnp.concatenate(eids_parts, axis=1)
+    leaf = jnp.concatenate(leaf_parts, axis=1)
+    mask = jnp.concatenate(mask_parts, axis=1)
+    n_edges_scanned = jnp.sum(mask.astype(jnp.int32))
+
+    elab = take_along0(store.elabel, eids)
+    ep = take_along0(store.eprops, eids)
+    e_ok = (edge_label < 0) | (elab == edge_label)
+    e_ok &= evaluate_pred(pe, elab, ep, bound_vals=pe_bound[:, None, :])
+    mask &= e_ok
+    n_leaf_fetches = jnp.sum(mask.astype(jnp.int32))  # the paper's "n"
+
+    llab = take_along0(store.vlabel, leaf)
+    lp = take_along0(store.vprops, leaf)
+    l_ok = evaluate_pred(pl, llab, lp, bound_vals=pl_bound[:, None, :])
+    mask &= l_ok & r_ok[:, None]
+
+    mask = dedup_masked(leaf, mask)  # set semantics (Definition 2.1)
+    n_true = jnp.sum(mask.astype(jnp.int32), axis=1)
+    leaves, lmask = compact_masked(leaf, mask, espec.result_width)
+    stats = {
+        "edges_scanned": n_edges_scanned,
+        "leaf_fetches": n_leaf_fetches,
+        # full read-conflict set for OCC population commits: every vertex
+        # whose state this execution *observed*, including filtered-out
+        # leaves (their property writes can change the result too)
+        "scanned": leaf,
+        "scanned_mask": jnp.concatenate(mask_parts, axis=1),
+    }
+    return leaves, lmask, n_true, trunc & rmask, stats
+
+
+class MissRecord(NamedTuple):
+    """Host-side record of one cache miss awaiting async population."""
+
+    tpl_idx: int
+    root: int
+    params: np.ndarray  # int32 [PARAM_LEN]
+    read_version: int
+
+
+class GraphEngine:
+    """One Graph-QP: pre-jitted probe/exec/final closures for one plan."""
+
+    _BUCKETS = (8, 32, 128, 512, 2048, 8192)
+
+    def __init__(self, espec: EngineSpec, plan: QueryPlan, use_cache: bool = True):
+        assert espec.result_width >= 1
+        self.espec = espec
+        self.plan = plan
+        self.use_cache = use_cache
+        self._probe_fns = {}
+        self._exec_fns = {}
+        self._final_fn = None
+
+    # ---------------- jitted step builders ----------------
+    def _probe(self, hop_idx: int):
+        if hop_idx not in self._probe_fns:
+            hop = self.plan.hops[hop_idx]
+            espec = self.espec
+
+            @jax.jit
+            def probe(cache: CacheState, ttable: TemplateTable, roots, rmask):
+                params = jnp.broadcast_to(
+                    jnp.asarray(hop.params, jnp.int32), (roots.shape[0], PARAM_LEN)
+                )
+                hit, leaves, lmask, version = cache_lookup(
+                    espec.cache, cache, hop.tpl_idx, roots, params
+                )
+                enabled = ttable.read_enabled[hop.tpl_idx]
+                hit = hit & rmask & enabled
+                return hit, leaves, lmask & hit[:, None]
+
+            self._probe_fns[hop_idx] = probe
+        return self._probe_fns[hop_idx]
+
+    def _exec(self, hop_idx: int, bucket: int):
+        key = (hop_idx, bucket)
+        if key not in self._exec_fns:
+            hop = self.plan.hops[hop_idx]
+            espec = self.espec
+
+            @jax.jit
+            def exec_(store: GraphStore, roots, rmask):
+                params = jnp.broadcast_to(
+                    jnp.asarray(hop.params, jnp.int32), (roots.shape[0], PARAM_LEN)
+                )
+                return onehop_exec(
+                    espec, store, hop.direction, hop.edge_label,
+                    hop.pr, hop.pe, hop.pl, roots, params, rmask,
+                )
+
+            self._exec_fns[key] = exec_
+        return self._exec_fns[key]
+
+    def _final(self):
+        if self._final_fn is None:
+            plan, espec = self.plan, self.espec
+
+            @jax.jit
+            def final(store: GraphStore, q_roots, leaves, lmask):
+                if plan.post_filter is not None:
+                    kind = plan.post_filter[0]
+                    if kind == "id_neq":
+                        lmask = lmask & (leaves != q_roots[:, None])
+                    elif kind == "prop_neq_root":
+                        pid = plan.post_filter[1]
+                        lp = take_along0(store.vprops, leaves)[..., pid]
+                        rp = take_along0(store.vprops, q_roots)[..., pid]
+                        lmask = lmask & (lp != rp[:, None])
+                if plan.final == FINAL_COUNT:
+                    return jnp.sum(lmask.astype(jnp.int32), axis=1)
+                if plan.final == FINAL_VALUES:
+                    vals = take_along0(store.vprops, leaves)[..., plan.final_prop]
+                    return jnp.where(lmask, vals, NULL_ID)
+                return jnp.where(lmask, leaves, NULL_ID)
+
+            self._final_fn = final
+        return self._final_fn
+
+    # ---------------- host orchestration ----------------
+    def run(
+        self,
+        store: GraphStore,
+        cache: CacheState,
+        ttable: TemplateTable,
+        roots: np.ndarray,
+    ):
+        """Process a batch of gR-Txs sharing this plan.
+
+        Returns (result, misses: list[MissRecord], metrics: dict). The result
+        array shape depends on the final clause. ``metrics["phases"]`` is the
+        number of *sequential* storage round-trips the batch needed (the
+        paper's n+2 → 2 effect); ``metrics["requests"]`` the total storage
+        requests issued.
+        """
+        espec = self.espec
+        B = len(roots)
+        F = espec.frontier
+        RW = espec.result_width
+        read_version = int(store.version)
+
+        frontier = np.full((B, F), NULL_ID, np.int32)
+        frontier[:, 0] = roots
+        fmask = np.zeros((B, F), bool)
+        fmask[:, 0] = True
+
+        misses: list[MissRecord] = []
+        metrics = {
+            "phases": 1,  # index lookup of the root vertex (paper's request 1)
+            "requests": B,
+            "hits": 0,
+            "misses": 0,
+            "truncated": 0,
+            "leaf_fetches": 0,
+            "edges_scanned": 0,
+            "cache_reads": 0,
+        }
+
+        for hop_idx, hop in enumerate(self.plan.hops):
+            roots_flat = frontier.reshape(-1)
+            rmask_flat = fmask.reshape(-1)
+            BF = roots_flat.shape[0]
+            leaves_all = np.full((BF, RW), NULL_ID, np.int32)
+            lmask_all = np.zeros((BF, RW), bool)
+
+            cacheable = hop.tpl_idx >= 0 and self.use_cache
+            if cacheable:
+                hit, leaves_c, lmask_c = self._probe(hop_idx)(
+                    cache, ttable, jnp.asarray(roots_flat), jnp.asarray(rmask_flat)
+                )
+                hit = np.asarray(hit)
+                leaves_all[hit] = np.asarray(leaves_c)[hit]
+                lmask_all[hit] = np.asarray(lmask_c)[hit]
+                metrics["phases"] += 1  # one cache get round-trip
+                metrics["requests"] += int(rmask_flat.sum())
+                metrics["cache_reads"] += int(rmask_flat.sum())
+                metrics["hits"] += int(hit.sum())
+            else:
+                hit = np.zeros(BF, bool)
+
+            miss_mask = rmask_flat & ~hit
+            miss_idx = np.nonzero(miss_mask)[0]
+            k = len(miss_idx)
+            if k > 0:
+                bucket = next(b for b in self._BUCKETS if b >= k)
+                mroots = np.full(bucket, 0, np.int32)
+                mroots[:k] = roots_flat[miss_idx]
+                mvalid = np.zeros(bucket, bool)
+                mvalid[:k] = True
+                leaves_e, lmask_e, n_true, trunc, stats = self._exec(hop_idx, bucket)(
+                    store, jnp.asarray(mroots), jnp.asarray(mvalid)
+                )
+                leaves_e = np.asarray(leaves_e)[:k]
+                lmask_e = np.asarray(lmask_e)[:k]
+                n_true = np.asarray(n_true)[:k]
+                trunc = np.asarray(trunc)[:k]
+                leaves_all[miss_idx] = leaves_e
+                lmask_all[miss_idx] = lmask_e
+                metrics["phases"] += 2  # edge range read + n leaf fetches
+                metrics["requests"] += k + int(stats["leaf_fetches"])
+                metrics["leaf_fetches"] += int(stats["leaf_fetches"])
+                metrics["edges_scanned"] += int(stats["edges_scanned"])
+                metrics["misses"] += k
+                metrics["truncated"] += int(trunc.sum())
+                if cacheable:
+                    params = np.asarray(hop.params, np.int32)
+                    for j, row in enumerate(miss_idx):
+                        if not trunc[j] and n_true[j] <= RW:
+                            misses.append(
+                                MissRecord(hop.tpl_idx, int(roots_flat[row]), params, read_version)
+                            )
+
+            # next frontier: union of leaf sets per original query
+            merged = leaves_all.reshape(B, F * RW)
+            mmask = lmask_all.reshape(B, F * RW)
+            nf, nm = _host_compact_dedup(merged, mmask, F)
+            frontier, fmask = nf, nm
+
+        result = self._final()(
+            store, jnp.asarray(roots), jnp.asarray(frontier), jnp.asarray(fmask)
+        )
+        if self.plan.post_filter is not None and self.plan.post_filter[0] != "id_neq":
+            metrics["phases"] += 1  # property fetch for the un-rewritten filter
+            metrics["requests"] += int(fmask.sum())
+        if self.plan.final == FINAL_VALUES:
+            metrics["phases"] += 1  # valueMap fetch
+            metrics["requests"] += int(fmask.sum())
+        metrics["phases"] += self.plan.extra_phases
+        return np.asarray(result), misses, metrics
+
+
+def _host_compact_dedup(vals: np.ndarray, mask: np.ndarray, width: int):
+    """Host-side per-row dedup + compaction (frontier merge between hops)."""
+    B = vals.shape[0]
+    out = np.full((B, width), NULL_ID, np.int32)
+    omask = np.zeros((B, width), bool)
+    for b in range(B):
+        row = vals[b][mask[b]]
+        if row.size:
+            _, first = np.unique(row, return_index=True)
+            row = row[np.sort(first)][:width]
+            out[b, : len(row)] = row
+            omask[b, : len(row)] = True
+    return out, omask
+
+
+def run_gr_tx_batch(
+    espec: EngineSpec,
+    store: GraphStore,
+    cache: CacheState,
+    ttable: TemplateTable,
+    plan: QueryPlan,
+    roots: np.ndarray,
+    use_cache: bool = True,
+):
+    """One-shot convenience wrapper (tests / examples)."""
+    return GraphEngine(espec, plan, use_cache).run(store, cache, ttable, roots)
+
+
+def build_grw_step(espec: EngineSpec, policy: str = "write-around"):
+    """Build the jitted gRW-Tx commit: apply mutations + maintain the cache.
+
+    Both the graph writes and the cache deletions happen in one functional
+    state transition — the tensor analogue of FDB buffering both in one
+    transaction commit (§4).
+    """
+    from repro.core.invalidation import invalidate_write_around, write_through_update
+
+    @jax.jit
+    def step(store: GraphStore, cache: CacheState, ttable: TemplateTable, batch: MutationBatch):
+        store2, applied = apply_mutations(espec.store, store, batch)
+        before = cache.n_delete
+        if policy == "write-around":
+            cache2 = invalidate_write_around(espec, store, store2, cache, ttable, applied)
+        else:
+            cache2 = write_through_update(espec, store, store2, cache, ttable, applied)
+        impacted = cache2.n_delete - before
+        return store2, cache2, impacted
+
+    return step
+
+
+def run_grw_tx(
+    espec: EngineSpec,
+    store: GraphStore,
+    cache: CacheState,
+    ttable: TemplateTable,
+    batch: MutationBatch,
+    policy: str = "write-around",
+):
+    """One-shot gRW-Tx (tests / examples). Returns (store', cache', metrics)."""
+    step = build_grw_step(espec, policy)
+    store2, cache2, impacted = step(store, cache, ttable, batch)
+    return store2, cache2, {"impacted_keys": int(impacted)}

@@ -1,0 +1,333 @@
+"""Cache maintenance under gRW-Txs (§3.2 + Appendix A), vectorized.
+
+``invalidate_write_around`` implements Algorithms 1–9 over a *batch* of
+mutations × all registered templates, entirely as tensor ops:
+
+- Algorithm 6 (DeleteKeysForRoot / FDB clearRange)  -> ``sweep_root``
+- Algorithm 7 (DeleteKeysForLeaf, reverse traversal) -> ``_delete_keys_for_leaf``
+- Algorithm 8 (HandleEdgeChange)                     -> ``_handle_edge_change``
+- Algorithms 1–4 are the per-change-type drivers below.
+
+``write_through_update`` is the §3 write-through policy (designed but not
+implemented in the paper — we implement it as a beyond-paper feature):
+instead of deleting impacted entries it appends/removes single vertex ids
+in place, falling back to deletion for multi-chunk or full entries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import CacheSpec, CacheState, cache_delete, sweep_root, _probe
+from repro.core.keys import PARAM_LEN
+from repro.core.templates import (
+    DIR_BOTH,
+    DIR_IN,
+    DIR_OUT,
+    MAX_CONDS,
+    PredSpec,
+    TemplateTable,
+    evaluate_pred,
+    extract_wildcards,
+)
+from repro.graphstore.store import GraphStore, gather_in, gather_out
+from repro.graphstore.mutations import AppliedMutations
+from repro.utils import NULL_ID, PROP_MISSING, compact_masked, take_along0
+
+
+def _pred_row(stacked: PredSpec, t: int) -> PredSpec:
+    return PredSpec(*(getattr(stacked, f)[t] for f in PredSpec._fields))
+
+
+def _has_all_wildcards(pred: PredSpec, props):
+    """Algorithm 7 line 2 / Algorithm 8 line 2: element must carry every
+    wildcard property of the predicate."""
+    ok = jnp.ones(props.shape[:-1], bool)
+    for c in range(MAX_CONDS):
+        pid = pred.prop_ids[c]
+        need = (pid >= 0) & pred.wild[c]
+        pv = jnp.take(props, jnp.clip(pid, 0, props.shape[-1] - 1), axis=-1)
+        ok &= ~need | (pv != PROP_MISSING)
+    return ok
+
+
+def _prop_in_pred(pred: PredSpec, pid):
+    """'P appears in P^x' test, vectorized over a batch of pids."""
+    hit = jnp.zeros(jnp.shape(pid), bool)
+    for c in range(MAX_CONDS):
+        hit |= (pred.prop_ids[c] >= 0) & (pred.prop_ids[c] == pid)
+    return hit
+
+
+def _handle_edge_change(
+    espec,
+    cache: CacheState,
+    ttable: TemplateTable,
+    t: int,
+    store_ep: GraphStore,
+    elabel,
+    eprops,
+    src,
+    dst,
+    active,
+    value_delta=None,
+):
+    """Algorithm 8 over a batch of edges. ``store_ep`` supplies endpoint
+    labels/properties (pre- or post-state per the caller's change type).
+
+    ``value_delta``: None -> write-around (delete keys); +1 -> write-through
+    append leaf; -1 -> write-through remove leaf.
+    """
+    cspec = espec.cache
+    pe = _pred_row(ttable.pe, t)
+    pr = _pred_row(ttable.pr, t)
+    pl = _pred_row(ttable.pl, t)
+    direction = ttable.direction[t]
+    elab_t = ttable.edge_label[t]
+
+    e_ok = active & _has_all_wildcards(pe, eprops) & evaluate_pred(pe, elabel, eprops)
+    e_ok &= (elab_t < 0) | (elabel == elab_t)
+    we = extract_wildcards(pe, eprops)  # [K, MAXC]
+
+    use_rl = (direction == DIR_OUT) | (direction == DIR_BOTH)  # R=src, L=dst
+    use_lr = (direction == DIR_IN) | (direction == DIR_BOTH)  # R=dst, L=src
+    for R, L, use in ((src, dst, use_rl), (dst, src, use_lr)):
+        rlab = take_along0(store_ep.vlabel, R)
+        rprops = take_along0(store_ep.vprops, R)
+        llab = take_along0(store_ep.vlabel, L)
+        lprops = take_along0(store_ep.vprops, L)
+        ok = (
+            e_ok
+            & use
+            & _has_all_wildcards(pl, lprops)
+            & evaluate_pred(pr, rlab, rprops)
+            & evaluate_pred(pl, llab, lprops)
+        )
+        wl = extract_wildcards(pl, lprops)
+        params = jnp.concatenate([we, wl], axis=-1)
+        if value_delta is None:
+            cache = cache_delete(cspec, cache, jnp.full(R.shape, t), R, params, ok)
+        else:
+            cache = _value_update(cspec, cache, t, R, params, L, ok, value_delta)
+    return cache
+
+
+def _delete_keys_for_leaf(
+    espec,
+    cache: CacheState,
+    ttable: TemplateTable,
+    t: int,
+    store_trav: GraphStore,
+    leaf_vid,
+    leaf_label,
+    leaf_props,
+    active,
+    value_delta=None,
+):
+    """Algorithm 7 over a batch of leaves: reverse-traverse to each possible
+    root and delete (or write-through update) the corresponding keys."""
+    cspec = espec.cache
+    pe = _pred_row(ttable.pe, t)
+    pr = _pred_row(ttable.pr, t)
+    pl = _pred_row(ttable.pl, t)
+    direction = ttable.direction[t]
+    elab_t = ttable.edge_label[t]
+
+    act = active & _has_all_wildcards(pl, leaf_props)
+    act &= evaluate_pred(pl, leaf_label, leaf_props)
+    wl = extract_wildcards(pl, leaf_props)  # [K, MAXC]
+
+    # reverse query: template OUT -> roots via the leaf's incoming edges;
+    # template IN -> via outgoing; BOTH -> both sides.
+    use_in = (direction == DIR_OUT) | (direction == DIR_BOTH)
+    use_out = (direction == DIR_IN) | (direction == DIR_BOTH)
+    sides = (
+        (gather_in(espec.store, store_trav, leaf_vid, espec.max_deg), use_in),
+        (gather_out(espec.store, store_trav, leaf_vid, espec.max_deg), use_out),
+    )
+    for (eids, roots, emask, _trunc), use in sides:
+        elab = take_along0(store_trav.elabel, eids)
+        ep = take_along0(store_trav.eprops, eids)
+        ok = emask & act[:, None] & use
+        ok &= (elab_t < 0) | (elab == elab_t)
+        ok &= _has_all_wildcards(pe, ep) & evaluate_pred(pe, elab, ep)
+        we = extract_wildcards(pe, ep)  # [K, W, MAXC]
+        rlab = take_along0(store_trav.vlabel, roots)
+        rprops = take_along0(store_trav.vprops, roots)
+        ok &= evaluate_pred(pr, rlab, rprops)
+        params = jnp.concatenate(
+            [we, jnp.broadcast_to(wl[:, None, :], we.shape)], axis=-1
+        )
+        K, W = roots.shape
+        flat = lambda x: x.reshape((K * W,) + x.shape[2:])
+        if value_delta is None:
+            cache = cache_delete(
+                cspec, cache, jnp.full((K * W,), t), flat(roots), flat(params), flat(ok)
+            )
+        else:
+            leaf_b = jnp.broadcast_to(leaf_vid[:, None], (K, W))
+            cache = _value_update(
+                cspec, cache, t, flat(roots), flat(params), flat(leaf_b), flat(ok), value_delta
+            )
+    return cache
+
+
+def _value_update(cspec: CacheSpec, cache: CacheState, t, root, params, vid, mask, delta):
+    """Write-through in-place value edit: append (delta=+1) or remove
+    (delta=-1) ``vid`` from the entry's leaf list. Single-chunk entries only;
+    multi-chunk or full entries fall back to write-around deletion. Walks the
+    batch sequentially (write path)."""
+    L = cspec.max_leaves
+    K = root.shape[0]
+    tpl = jnp.full((K,), t, jnp.int32)
+
+    def body(i, cache):
+        found, slot, _, _ = _probe(cspec, cache, tpl[i], root[i], params[i], 0)
+        s = jnp.clip(slot, 0)
+        tlen = cache.total_len[s]
+        single = tlen <= L
+        do = mask[i] & found
+        row = cache.vals[s]
+        present = jnp.any((row == vid[i]) & (jnp.arange(L) < tlen))
+        if delta > 0:
+            new_row = row.at[jnp.clip(tlen, 0, L - 1)].set(vid[i])
+            new_len = tlen + 1
+            write = do & single & ~present & (tlen < L)
+            # full entry (or multi-chunk chain): fall back to write-around
+            kill = do & (~single | ((tlen >= L) & ~present))
+        else:
+            keep = (row != vid[i]) & (jnp.arange(L) < tlen)
+            new_row, _ = compact_masked(row, keep, L)
+            new_len = jnp.sum(keep.astype(jnp.int32))
+            write = do & single & present
+            kill = do & ~single
+        tgt = jnp.where(write, s, cspec.capacity)
+        cache = cache._replace(
+            vals=cache.vals.at[tgt].set(jnp.where(write, new_row, row), mode="drop"),
+            total_len=cache.total_len.at[tgt].set(
+                jnp.where(write, new_len, tlen), mode="drop"
+            ),
+        )
+        kt = jnp.where(kill, s, cspec.capacity)
+        cache = cache._replace(
+            valid=cache.valid.at[kt].set(False, mode="drop"),
+            n_delete=cache.n_delete + jnp.where(kill, 1, 0),
+        )
+        return cache
+
+    return jax.lax.fori_loop(0, K, body, cache)
+
+
+def _sec(mask_len, ids):
+    return jnp.arange(ids.shape[0]) < mask_len
+
+
+def _run_policy(
+    espec, store_pre, store_post, cache, ttable, applied: AppliedMutations, *, through: bool
+):
+    b = applied.batch
+    T = int(ttable.direction.shape[0])
+    nv = espec.store.n_vprops
+
+    ne_m = _sec(b.ne_n, b.ne_src)
+    de_m = _sec(b.de_n, b.de_eid)
+    se_m = _sec(b.se_n, b.se_eid)
+    sv_m = _sec(b.sv_n, b.sv_vid)
+    dv_m = _sec(b.dv_n, b.dv_vid)
+
+    # edge-prop change = delete old edge + add new edge (Example 5)
+    pid_col = jnp.clip(b.se_pid, 0, espec.store.n_eprops - 1)
+    se_old_props = applied.se_props.at[
+        jnp.arange(b.se_eid.shape[0]), pid_col
+    ].set(applied.se_old)
+
+    # vertex-prop pre/post rows
+    sv_post = take_along0(store_post.vprops, b.sv_vid)
+    vpid_col = jnp.clip(b.sv_pid, 0, nv - 1)
+    sv_pre = sv_post.at[jnp.arange(b.sv_vid.shape[0]), vpid_col].set(applied.sv_old)
+    sv_lab = take_along0(store_post.vlabel, b.sv_vid)
+
+    dv_lab = take_along0(store_pre.vlabel, b.dv_vid)
+    dv_props = take_along0(store_pre.vprops, b.dv_vid)
+
+    add_d = +1 if through else None
+    del_d = -1 if through else None
+
+    for t in range(T):
+        wen = ttable.write_enabled[t]
+        pr = _pred_row(ttable.pr, t)
+        pl = _pred_row(ttable.pl, t)
+
+        # --- Algorithm 3: add edges (post state) / delete edges (pre state)
+        cache = _handle_edge_change(
+            espec, cache, ttable, t, store_post,
+            b.ne_label, b.ne_props, b.ne_src, b.ne_dst, ne_m & wen,
+            value_delta=add_d,
+        )
+        cache = _handle_edge_change(
+            espec, cache, ttable, t, store_pre,
+            applied.de_label, applied.de_props, applied.de_src, applied.de_dst,
+            de_m & wen, value_delta=del_d,
+        )
+
+        # --- Algorithm 4: edge property change (only templates whose P^e
+        # references the property)
+        in_pe = _prop_in_pred(_pred_row(ttable.pe, t), b.se_pid)
+        cache = _handle_edge_change(
+            espec, cache, ttable, t, store_pre,
+            applied.se_label, se_old_props, applied.se_src, applied.se_dst,
+            se_m & wen & in_pe, value_delta=del_d,
+        )
+        cache = _handle_edge_change(
+            espec, cache, ttable, t, store_post,
+            applied.se_label, applied.se_props, applied.se_src, applied.se_dst,
+            se_m & wen & in_pe, value_delta=add_d,
+        )
+
+        # --- Algorithm 2: vertex property change
+        in_pr = _prop_in_pred(pr, b.sv_pid)
+        r_hit = evaluate_pred(pr, sv_lab, sv_pre) | evaluate_pred(pr, sv_lab, sv_post)
+        # root-side changes clear the whole (template, root) range — both
+        # policies delete (write-through has no cheaper option, §3.2)
+        cache = sweep_root(
+            espec.cache, cache, jnp.full(b.sv_vid.shape, t), b.sv_vid,
+            sv_m & wen & in_pr & r_hit,
+        )
+        in_pl = _prop_in_pred(pl, b.sv_pid)
+        cache = _delete_keys_for_leaf(
+            espec, cache, ttable, t, store_post, b.sv_vid, sv_lab, sv_pre,
+            sv_m & wen & in_pl, value_delta=del_d,
+        )
+        cache = _delete_keys_for_leaf(
+            espec, cache, ttable, t, store_post, b.sv_vid, sv_lab, sv_post,
+            sv_m & wen & in_pl, value_delta=add_d,
+        )
+
+        # --- Algorithm 1: delete vertex (pre state)
+        r_ok = evaluate_pred(pr, dv_lab, dv_props)
+        cache = sweep_root(
+            espec.cache, cache, jnp.full(b.dv_vid.shape, t), b.dv_vid,
+            dv_m & wen & r_ok,
+        )
+        cache = _delete_keys_for_leaf(
+            espec, cache, ttable, t, store_pre, b.dv_vid, dv_lab, dv_props,
+            dv_m & wen, value_delta=del_d,
+        )
+    return cache
+
+
+def invalidate_write_around(espec, store_pre, store_post, cache, ttable, applied):
+    """Write-around policy (§4): delete every impacted cache entry, in the
+    same commit as the graph writes."""
+    return _run_policy(
+        espec, store_pre, store_post, cache, ttable, applied, through=False
+    )
+
+
+def write_through_update(espec, store_pre, store_post, cache, ttable, applied):
+    """Write-through policy (§3.2, lazy variant): update impacted entries in
+    place where possible, delete where not."""
+    return _run_policy(
+        espec, store_pre, store_post, cache, ttable, applied, through=True
+    )

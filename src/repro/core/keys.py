@@ -1,0 +1,47 @@
+"""Cache-key construction (§3).
+
+A key identifies a unique one-hop sub-query instance:
+``(template id, root vertex id, wildcard values of P^e, wildcard values of
+P^l)``. We keep template id and root id *explicit* in the cache slot arrays
+(so FDB's prefix ``clearRange`` becomes a vectorized sweep over the cache
+partition — see cache.py), and reduce the parameter vector to a 32-bit
+fingerprint plus an independently-seeded 32-bit slot hash (64 effective
+bits; DESIGN.md §2 records the collision budget).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.templates import MAX_CONDS
+from repro.utils import hash_rows
+
+PARAM_LEN = 2 * MAX_CONDS  # P^e wildcards then P^l wildcards
+
+_SEED_SLOT = 0x51ED5EED
+_SEED_FP = 0xF1A9F00D
+
+
+def make_param_vec(pe_wild_vals, pl_wild_vals):
+    """Concatenate wildcard value vectors into the key's parameter vector."""
+    return jnp.concatenate([pe_wild_vals, pl_wild_vals], axis=-1)
+
+
+def _cols(tpl_id, root, params):
+    tpl = jnp.broadcast_to(jnp.asarray(tpl_id, jnp.int32), jnp.shape(root))
+    cols = [tpl, jnp.asarray(root, jnp.int32)]
+    for i in range(PARAM_LEN):
+        cols.append(params[..., i])
+    return cols
+
+
+def key_slot_hash(tpl_id, root, params):
+    """uint32 slot-selection hash of the full key tuple."""
+    return hash_rows(_cols(tpl_id, root, params), _SEED_SLOT)
+
+
+def key_fingerprint(tpl_id, root, params):
+    """uint32 fingerprint over the *parameter* portion (tpl/root are stored
+    explicitly in the slot, so the fingerprint only needs to disambiguate
+    parameter vectors that collide in the probe window)."""
+    return hash_rows(_cols(tpl_id, root, params), _SEED_FP)

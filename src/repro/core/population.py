@@ -1,0 +1,211 @@
+"""Asynchronous, transactional cache population (§4's CP threads).
+
+A cache miss enqueues ``(template, root, params, read_version)``. A drain
+step re-executes the one-hop sub-query at the *current* committed version
+(CP transactions take their own read version), then commits the insert with
+an optimistic conflict check: if any vertex the result depends on (root +
+produced leaves) was written after the CP read version, the insert aborts —
+exactly how FDB's OCC prevents a CP transaction from installing a stale
+entry over a concurrent gRW-Tx. Aborted entries are retried a bounded
+number of times and then discarded (§4).
+
+Keeping population here — and never on the gR-Tx path — preserves the
+paper's separation of read and write paths.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheSpec, CacheState, cache_insert
+from repro.core.engine import EngineSpec, MissRecord, onehop_exec
+from repro.core.keys import PARAM_LEN
+from repro.core.templates import TemplateTable, PredSpec
+from repro.graphstore.store import GraphStore
+from repro.graphstore.txn import conflicts
+from repro.utils import take_along0
+
+
+class MissQueue:
+    """Host-side FIFO of cache misses with retry accounting."""
+
+    def __init__(self, max_retries: int = 3, maxlen: int = 100_000):
+        self.q: deque = deque(maxlen=maxlen)
+        self.max_retries = max_retries
+        self.discarded = 0
+        self.retried = 0
+        self._seen_inflight: set = set()
+
+    def push(self, records):
+        for r in records:
+            key = (r.tpl_idx, r.root, tuple(np.asarray(r.params).tolist()))
+            if key in self._seen_inflight:
+                continue  # dedupe identical in-flight misses
+            self._seen_inflight.add(key)
+            self.q.append((r, 0))
+
+    def drain(self, k: int):
+        out = []
+        while self.q and len(out) < k:
+            out.append(self.q.popleft())
+        return out
+
+    def requeue(self, rec, attempts):
+        if attempts + 1 >= self.max_retries:
+            self.discarded += 1
+            self._release(rec)
+        else:
+            self.retried += 1
+            self.q.append((rec, attempts + 1))
+
+    def done(self, rec):
+        self._release(rec)
+
+    def _release(self, rec):
+        key = (rec.tpl_idx, rec.root, tuple(np.asarray(rec.params).tolist()))
+        self._seen_inflight.discard(key)
+
+    def __len__(self):
+        return len(self.q)
+
+
+def _tpl_row(stacked: PredSpec, t: int) -> PredSpec:
+    return PredSpec(*(getattr(stacked, f)[t] for f in PredSpec._fields))
+
+
+def populate_step(
+    espec: EngineSpec,
+    store_exec: GraphStore,
+    store_commit: GraphStore,
+    cache: CacheState,
+    ttable: TemplateTable,
+    tpl_idx: int,
+    direction: int,
+    edge_label: int,
+    roots,
+    params,
+    mask,
+    read_versions,
+):
+    """One CP transaction batch for one template (jit this with static
+    espec/tpl_idx/direction/edge_label via functools.partial).
+
+    Executes against ``store_exec`` (the CP read snapshot) and commits
+    against ``store_commit`` (current state at commit time): entries whose
+    read set was written in between abort. Returns (cache', committed[B],
+    aborted[B]).
+    """
+    pr = _tpl_row(ttable.pr, tpl_idx)
+    pe = _tpl_row(ttable.pe, tpl_idx)
+    pl = _tpl_row(ttable.pl, tpl_idx)
+    leaves, lmask, n_true, trunc, stats = onehop_exec(
+        espec, store_exec, direction, edge_label, pr, pe, pl, roots, params, mask
+    )
+    cacheable = mask & ~trunc & (n_true <= espec.result_width)
+    cp_read_version = store_exec.version
+
+    # OCC conflict check per entry: the root plus every vertex the execution
+    # observed (scanned neighbors, not just qualifying leaves — a write to a
+    # filtered-out neighbor can change the result as well)
+    read_set = jnp.concatenate([roots[:, None], stats["scanned"]], axis=1)
+    read_mask = jnp.concatenate([mask[:, None], stats["scanned_mask"]], axis=1)
+    ver = take_along0(store_commit.vversion, read_set)
+    conflict = jnp.any(read_mask & (ver > cp_read_version), axis=1)
+    # the write itself must also be enabled for this template (lifecycle) —
+    # reads may only be served for enabled templates, but populating while
+    # installed-for-writes is safe and matches §4.1 Phase 2.
+    ok = cacheable & ~conflict & ttable.read_enabled[tpl_idx]
+
+    cache = cache_insert(
+        espec.cache,
+        cache,
+        jnp.full(roots.shape, tpl_idx, jnp.int32),
+        roots,
+        params,
+        leaves,
+        n_true,
+        jnp.full(roots.shape, cp_read_version, jnp.int32),
+        ok,
+    )
+    return cache, ok, cacheable & conflict
+
+
+class CachePopulator:
+    """Host orchestrator: drains a MissQueue and runs CP transactions.
+
+    ``templates_meta[t] = (direction, edge_label)`` — static per template.
+    """
+
+    _BUCKETS = (8, 32, 128, 512)
+
+    def __init__(self, espec: EngineSpec, templates_meta, max_retries: int = 3):
+        self.espec = espec
+        self.meta = templates_meta
+        self.queue = MissQueue(max_retries=max_retries)
+        self._jitted = {}
+        self.committed = 0
+        self.aborted = 0
+
+    def _fn(self, tpl_idx: int, bucket: int):
+        key = (tpl_idx, bucket)
+        if key not in self._jitted:
+            espec = self.espec
+            direction, edge_label = self.meta[tpl_idx]
+            import functools
+
+            self._jitted[key] = jax.jit(
+                functools.partial(
+                    populate_step, espec, tpl_idx=tpl_idx, direction=direction,
+                    edge_label=edge_label,
+                )
+            )
+        return self._jitted[key]
+
+    def drain(self, store_exec, store_commit, cache, ttable, k: int = 128):
+        """Process up to k queued misses. Returns the new cache."""
+        batch = self.queue.drain(k)
+        if not batch:
+            return cache
+        by_tpl: dict = {}
+        for rec, attempts in batch:
+            by_tpl.setdefault(rec.tpl_idx, []).append((rec, attempts))
+        for t, items in by_tpl.items():
+            n = len(items)
+            bucket = next(b for b in self._BUCKETS if b >= n) if n <= self._BUCKETS[-1] else self._BUCKETS[-1]
+            for lo in range(0, n, bucket):
+                chunk = items[lo : lo + bucket]
+                roots = np.zeros(bucket, np.int32)
+                params = np.zeros((bucket, PARAM_LEN), np.int32)
+                vers = np.zeros(bucket, np.int32)
+                m = np.zeros(bucket, bool)
+                for j, (rec, _a) in enumerate(chunk):
+                    roots[j] = rec.root
+                    params[j] = rec.params
+                    vers[j] = rec.read_version
+                    m[j] = True
+                fn = self._fn(t, bucket)
+                cache, ok, conflicted = fn(
+                    store_exec=store_exec,
+                    store_commit=store_commit,
+                    cache=cache,
+                    ttable=ttable,
+                    roots=jnp.asarray(roots),
+                    params=jnp.asarray(params),
+                    mask=jnp.asarray(m),
+                    read_versions=jnp.asarray(vers),
+                )
+                ok = np.asarray(ok)
+                conflicted = np.asarray(conflicted)
+                for j, (rec, attempts) in enumerate(chunk):
+                    if conflicted[j]:
+                        self.aborted += 1
+                        self.queue.requeue(rec, attempts)
+                    else:
+                        self.committed += int(ok[j])
+                        self.queue.done(rec)
+        return cache

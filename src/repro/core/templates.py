@@ -1,0 +1,154 @@
+"""One-hop sub-query templates (Definitions 2.1 / 2.2), tensorized.
+
+A template is ``(direction, P^r, P^e, P^l)``. Each predicate holds a label
+test plus up to ``MAX_CONDS`` property conditions; a condition is either a
+bound comparison ``prop <op> value`` or a wildcard ``prop = ?`` (matches any
+*present* value; the matched value becomes part of the cache key). All
+predicates evaluate vectorized over batches of vertices/edges.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import PROP_MISSING
+
+MAX_CONDS = 3  # paper's production templates use <= 2 conditions
+
+# direction codes (Definition 2.1: incoming, outgoing, or both)
+DIR_OUT, DIR_IN, DIR_BOTH = 0, 1, 2
+# comparison ops
+OP_EQ, OP_NEQ, OP_LT, OP_LE, OP_GT, OP_GE = 0, 1, 2, 3, 4, 5
+ANY_LABEL = -1
+WILDCARD = object()  # host-side marker in template definitions
+
+
+class PredSpec(NamedTuple):
+    """Tensorized predicate. Stacks to [T, ...] in a TemplateTable."""
+
+    label: jax.Array  # int32 scalar; ANY_LABEL = no label test
+    prop_ids: jax.Array  # int32 [MAX_CONDS]; -1 = unused condition
+    ops: jax.Array  # int32 [MAX_CONDS]
+    vals: jax.Array  # int32 [MAX_CONDS] (ignored when wild)
+    wild: jax.Array  # bool  [MAX_CONDS]
+
+
+@dataclass(frozen=True)
+class Template:
+    """Host-side template definition (what an admin registers with the SC)."""
+
+    name: str
+    direction: int  # DIR_OUT / DIR_IN / DIR_BOTH
+    root: tuple  # (label, [(prop_id, op, value|WILDCARD), ...])
+    edge: tuple
+    leaf: tuple
+    edge_label: int = ANY_LABEL
+
+
+class TemplateTable(NamedTuple):
+    """All registered templates stacked for vectorized evaluation.
+
+    ``read_enabled`` / ``write_enabled`` are the lifecycle masks driven by
+    the Service Coordinator (§4.1): reads may use the cache only when
+    read-enabled; writes must invalidate whenever write-enabled.
+    """
+
+    direction: jax.Array  # int32 [T]
+    edge_label: jax.Array  # int32 [T]
+    pr: PredSpec  # fields shaped [T, ...]
+    pe: PredSpec
+    pl: PredSpec
+    read_enabled: jax.Array  # bool [T]
+    write_enabled: jax.Array  # bool [T]
+
+
+def make_pred(label: int, conds: Sequence[tuple]) -> PredSpec:
+    assert len(conds) <= MAX_CONDS
+    pid = np.full(MAX_CONDS, -1, np.int32)
+    ops = np.zeros(MAX_CONDS, np.int32)
+    vals = np.zeros(MAX_CONDS, np.int32)
+    wild = np.zeros(MAX_CONDS, bool)
+    for i, (p, op, v) in enumerate(conds):
+        pid[i] = p
+        ops[i] = op
+        if v is WILDCARD:
+            wild[i] = True
+        else:
+            vals[i] = v
+    return PredSpec(
+        label=jnp.int32(label),
+        prop_ids=jnp.asarray(pid),
+        ops=jnp.asarray(ops),
+        vals=jnp.asarray(vals),
+        wild=jnp.asarray(wild),
+    )
+
+
+def make_template_table(templates: Sequence[Template]) -> TemplateTable:
+    preds = {"pr": [], "pe": [], "pl": []}
+    for t in templates:
+        preds["pr"].append(make_pred(*t.root))
+        preds["pe"].append(make_pred(*t.edge))
+        preds["pl"].append(make_pred(*t.leaf))
+    stack = lambda ps: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+    return TemplateTable(
+        direction=jnp.asarray([t.direction for t in templates], jnp.int32),
+        edge_label=jnp.asarray([t.edge_label for t in templates], jnp.int32),
+        pr=stack(preds["pr"]),
+        pe=stack(preds["pe"]),
+        pl=stack(preds["pl"]),
+        read_enabled=jnp.zeros(len(templates), bool),
+        write_enabled=jnp.zeros(len(templates), bool),
+    )
+
+
+def _cmp(op, a, b):
+    return jnp.select(
+        [op == OP_EQ, op == OP_NEQ, op == OP_LT, op == OP_LE, op == OP_GT, op == OP_GE],
+        [a == b, a != b, a < b, a <= b, a > b, a >= b],
+        default=jnp.zeros_like(a, bool),
+    )
+
+
+def evaluate_pred(pred: PredSpec, labels, props, bound_vals=None):
+    """Algorithm 5 (Evaluate), vectorized over N graph elements.
+
+    ``labels``: int32 [...], ``props``: int32 [..., NP]. ``bound_vals``
+    optionally binds wildcard conditions to concrete values (int32
+    [MAX_CONDS]) — used when evaluating a template *instance* (the engine's
+    forward path). Unbound wildcards only require presence (Algorithm 7
+    line 2: the element must have all wildcard properties).
+    """
+    ok = (pred.label < 0) | (labels == pred.label)
+    for c in range(MAX_CONDS):
+        pid = pred.prop_ids[c]
+        used = pid >= 0
+        pv = jnp.take(props, jnp.clip(pid, 0, props.shape[-1] - 1), axis=-1)
+        present = pv != PROP_MISSING
+        if bound_vals is None:
+            cond = jnp.where(pred.wild[c], present, present & _cmp(pred.ops[c], pv, pred.vals[c]))
+        else:
+            val = jnp.where(pred.wild[c], bound_vals[..., c], pred.vals[c])
+            cond = present & _cmp(jnp.where(pred.wild[c], OP_EQ, pred.ops[c]), pv, val)
+        ok = ok & (~used | cond)
+    return ok
+
+
+def extract_wildcards(pred: PredSpec, props):
+    """Algorithm 9 (ExtractWildcardValues), vectorized.
+
+    Returns int32 [..., MAX_CONDS]: the element's value for each wildcard
+    condition (PROP_MISSING where the condition is unused or bound).
+    """
+    outs = []
+    for c in range(MAX_CONDS):
+        pid = pred.prop_ids[c]
+        pv = jnp.take(props, jnp.clip(pid, 0, props.shape[-1] - 1), axis=-1)
+        take = (pid >= 0) & pred.wild[c]
+        outs.append(jnp.where(take, pv, PROP_MISSING))
+    return jnp.stack(outs, axis=-1)

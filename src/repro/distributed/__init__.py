@@ -1,0 +1,20 @@
+"""Distribution utilities: mesh-aware sharding rules, collectives helpers,
+fault tolerance and elasticity (see repro.distributed.fault)."""
+
+from repro.distributed.sharding import (
+    active_mesh,
+    add_data_axis,
+    constrain,
+    maybe_spec,
+    set_mesh,
+    tree_shardings,
+)
+
+__all__ = [
+    "set_mesh",
+    "active_mesh",
+    "constrain",
+    "maybe_spec",
+    "add_data_axis",
+    "tree_shardings",
+]

@@ -1,0 +1,122 @@
+"""Fault tolerance & elasticity for 1000+-node operation.
+
+- ``ElasticRunner``: wraps a train loop in checkpoint/restart semantics.
+  On a (possibly injected) node failure it rebuilds a *smaller* mesh,
+  re-restores the last checkpoint with the new shardings, and resumes —
+  the single-controller analogue of a coordinator-driven elastic restart.
+- ``HedgedCalls``: serve-path straggler mitigation — issue the same request
+  to r replicas, take the first completion (tail-latency hedging). In this
+  offline harness replica latencies come from a provided sampler so the
+  p99-vs-cost tradeoff is measurable and testable.
+- ``RetryPolicy``: bounded exponential-backoff retries (the same policy the
+  Service Coordinator and the CP population threads use).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class RetryPolicy:
+    max_attempts: int = 3
+    base_delay: float = 0.0  # seconds (0 in simulations)
+
+    def run(self, fn: Callable, *args, on_retry: Optional[Callable] = None):
+        last = None
+        for attempt in range(self.max_attempts):
+            try:
+                return fn(*args)
+            except Exception as e:  # noqa: BLE001
+                last = e
+                if on_retry:
+                    on_retry(attempt, e)
+                if self.base_delay:
+                    time.sleep(self.base_delay * (2**attempt))
+        raise last
+
+
+class NodeFailure(RuntimeError):
+    """Raised (or injected) when a worker/node is lost mid-step."""
+
+
+@dataclass
+class ElasticRunner:
+    """Checkpoint/restart + elastic re-mesh driver.
+
+    ``make_state(mesh) -> state``, ``step_fn(mesh, state, step_idx) ->
+    state``; ``meshes`` is the downgrade ladder (e.g. [(16,16), (15,16)...]
+    — here debug-sized). ``save`` / ``restore`` adapt the state pytree.
+    """
+
+    make_mesh: Callable  # level -> mesh (level 0 = full fleet)
+    make_state: Callable
+    step_fn: Callable
+    ckpt_dir: str
+    ckpt_every: int = 10
+    max_mesh_level: int = 2
+    failures_tolerated: int = field(default=8)
+
+    def run(self, n_steps: int, inject_failure_at: Optional[int] = None):
+        from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+        level = 0
+        mesh = self.make_mesh(level)
+        state = self.make_state(mesh)
+        step = 0
+        failures = 0
+        log = []
+        while step < n_steps:
+            try:
+                if inject_failure_at is not None and step == inject_failure_at and failures == 0:
+                    raise NodeFailure(f"injected node loss at step {step}")
+                state = self.step_fn(mesh, state, step)
+                step += 1
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    save_checkpoint(self.ckpt_dir, step, state)
+                    log.append(("ckpt", step, level))
+            except NodeFailure as e:
+                failures += 1
+                if failures > self.failures_tolerated:
+                    raise
+                level = min(level + 1, self.max_mesh_level)
+                mesh = self.make_mesh(level)  # elastic downgrade
+                last = latest_step(self.ckpt_dir)
+                log.append(("failover", step, level, str(e)))
+                if last is None:
+                    state = self.make_state(mesh)
+                    step = 0
+                else:
+                    template = self.make_state(mesh)
+                    state = restore_checkpoint(self.ckpt_dir, last, template)
+                    step = last
+        return state, log
+
+
+@dataclass
+class HedgedCalls:
+    """Tail-latency hedging: take the fastest of r replicas.
+
+    ``latency_sampler(rng) -> seconds`` models one replica's service time
+    (in production this is the real backend call)."""
+
+    replicas: int = 2
+    seed: int = 0
+
+    def simulate(self, n_requests: int, latency_sampler) -> dict:
+        rng = np.random.default_rng(self.seed)
+        solo = np.array([latency_sampler(rng) for _ in range(n_requests)])
+        hedged = np.array([
+            min(latency_sampler(rng) for _ in range(self.replicas))
+            for _ in range(n_requests)
+        ])
+        return {
+            "solo_p99": float(np.percentile(solo, 99)),
+            "hedged_p99": float(np.percentile(hedged, 99)),
+            "p99_improvement": float(np.percentile(solo, 99) / np.percentile(hedged, 99)),
+            "extra_work": float(self.replicas - 1),
+        }

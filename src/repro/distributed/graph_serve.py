@@ -1,0 +1,244 @@
+"""Distributed graph-query serving — the paper's production architecture
+mapped onto a TPU mesh with shard_map.
+
+Layout: vertices are range-partitioned over all mesh axes (shard s owns
+[s*Vloc, (s+1)*Vloc)); each shard holds its vertices' outgoing edges in a
+local CSR block and the *co-partitioned cache shard* for keys rooted at its
+vertices (a hop's cache probe is always local to the root's owner).
+
+``serve_step`` processes a global batch of one-hop gR-Txs (one registered
+template instance, the paper's SQ1 shape):
+
+  round 1:  route each root to its owner            (all_to_all #1)
+            probe the local cache shard; misses run the local CSR gather +
+            edge-predicate filter
+  round 2:  leaf property fetch — leaf ids route to *their* owners for the
+            P^l evaluation                           (all_to_all #2, #3)
+  return:   results route back to the querying shard (all_to_all #4)
+
+A cache hit skips rounds 2's traffic entirely, which is exactly the paper's
+"n+2 requests -> 2" effect in collective form: the §Roofline collective
+term of this step is what the cache attacks. The write/invalidate path
+reuses the single-host core (gRW-Txs are batch, throughput-oriented).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils import NULL_ID, hash_rows
+
+
+@dataclass(frozen=True)
+class GraphServeConfig:
+    name: str = "ecommerce-graph"
+    v_total: int = 2**30  # ~1.1B vertices (tens of billions of edges)
+    e_per_vertex: int = 8  # average degree for capacity planning
+    n_vprops: int = 2
+    n_eprops: int = 1
+    max_deg: int = 64  # per-hop gather window
+    max_leaves: int = 64  # cache value width
+    cache_slots_total: int = 2**26  # cache capacity across the fleet
+    route_cap_factor: int = 4  # per-peer routing capacity multiplier
+    # the served template instance (Figure 1): edge prop0 == 1, leaf prop0 == 0
+    edge_prop: int = 0
+    edge_val: int = 1
+    leaf_prop: int = 0
+    leaf_val: int = 0
+    tpl_id: int = 1
+    # §Perf (paper-arch cell): denormalize the leaf predicate property onto
+    # the edge record (JanusGraph vertex-centric-index style). Eliminates
+    # the entire round-2 remote leaf fetch (all_to_all #2/#3 and the remote
+    # vprop reads) at the cost of write amplification: a leaf-prop gRW-Tx
+    # must update every in-edge copy (bounded by the leaf's in-degree; the
+    # same L factor as Table 2's DeleteKeysForLeaf).
+    denormalize_leaf_props: bool = False
+
+    def e_total(self) -> int:
+        return self.v_total * self.e_per_vertex
+
+
+def abstract_state(cfg: GraphServeConfig, n_shards: int):
+    """ShapeDtypeStructs for the sharded store + cache (dry-run inputs)."""
+    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    out_extra = {"ldprop": sds((E,), i32)} if cfg.denormalize_leaf_props else {}
+    return dict(
+        deg=sds((V,), i32),
+        start=sds((V,), i32),  # local offset into the owner's edge block
+        dst=sds((E,), i32),
+        eprop=sds((E,), i32),  # the predicate property (IsActive)
+        vprop=sds((V,), i32),  # the leaf predicate property (Status)
+        **out_extra,
+        c_root=sds((C,), i32),
+        c_fp=sds((C,), jnp.uint32),
+        c_len=sds((C,), i32),
+        c_vals=sds((C, cfg.max_leaves), i32),
+        c_valid=sds((C,), jnp.bool_),
+    )
+
+
+def state_shardings(cfg: GraphServeConfig, mesh: Mesh):
+    axes = tuple(mesh.axis_names)
+    s1 = NamedSharding(mesh, P(axes))
+    extra = {"ldprop": s1} if cfg.denormalize_leaf_props else {}
+    return dict(
+        deg=s1, start=s1, dst=s1, eprop=s1, vprop=s1,
+        c_root=s1, c_fp=s1, c_len=s1,
+        c_vals=NamedSharding(mesh, P(axes, None)),
+        c_valid=s1, **extra,
+    )
+
+
+def _bucketize(vals, dest, n, cap, fill=NULL_ID):
+    """Route ``vals`` into [n, cap] peer buckets (MoE-dispatch style).
+
+    Returns (buckets [n, cap], slot [M] — each input's (peer*cap+rank) or
+    OOB when dropped, kept mask)."""
+    M = vals.shape[0]
+    order = jnp.argsort(dest)
+    sd, sv = dest[order], vals[order]
+    offs = jnp.searchsorted(sd, jnp.arange(n, dtype=dest.dtype), side="left")
+    rank = jnp.arange(M) - offs[jnp.clip(sd, 0, n - 1)]
+    keep = (rank < cap) & (sd >= 0) & (sd < n)
+    slot_sorted = jnp.where(keep, sd * cap + rank, n * cap)
+    buckets = jnp.full((n * cap,), fill, vals.dtype)
+    buckets = buckets.at[slot_sorted].set(sv, mode="drop").reshape(n, cap)
+    # map back to input order
+    slot = jnp.full((M,), n * cap, jnp.int32)
+    slot = slot.at[order].set(slot_sorted.astype(jnp.int32), mode="drop")
+    return buckets, slot, slot < n * cap
+
+
+def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
+                     global_batch: int = 8192):
+    """Returns a jit-able ``step(state_dict, roots) -> (results, stats)``.
+
+    roots: int32 [global_batch] sharded over all axes; results
+    [global_batch, max_leaves] (NULL_ID padded).
+    """
+    axes = tuple(mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
+    assert V % n == 0 and E % n == 0 and C % n == 0 and global_batch % n == 0
+    Vloc, Eloc, Cloc = V // n, E // n, C // n
+    Bloc = global_batch // n
+    cap = max(1, cfg.route_cap_factor * Bloc // n)
+    cap2 = max(1, cfg.route_cap_factor * (cap * cfg.max_deg) // n)
+    D = cfg.max_deg
+
+    def local_step(deg, start, dst, eprop, vprop, c_root, c_fp, c_len, c_vals,
+                   c_valid, roots, ldprop=None):
+        me = jax.lax.axis_index(axes)
+        # ---- round 1: route roots to owners --------------------------------
+        owner = roots // Vloc
+        send, slot1, kept1 = _bucketize(roots, owner, n, cap)
+        recv = jax.lax.all_to_all(send, axes, split_axis=0, concat_axis=0, tiled=True)
+        q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
+        qvalid = q >= 0
+        local = jnp.clip(q - me * Vloc, 0, Vloc - 1)
+
+        # ---- local cache probe --------------------------------------------
+        params = jnp.stack([jnp.full_like(q, cfg.edge_val), jnp.full_like(q, cfg.leaf_val)])
+        h = hash_rows([jnp.full_like(q, cfg.tpl_id), q, params[0], params[1]], 0x51ED5EED)
+        fp = hash_rows([jnp.full_like(q, cfg.tpl_id), q, params[0], params[1]], 0xF1A9F00D)
+        cslot = (h % jnp.uint32(Cloc)).astype(jnp.int32)
+        hit = (
+            qvalid
+            & c_valid[cslot]
+            & (c_root[cslot] == q)
+            & (c_fp[cslot] == fp)
+        ) if use_cache else jnp.zeros_like(qvalid)
+        cached_vals = c_vals[cslot]
+        cached_len = c_len[cslot]
+
+        # ---- miss execution: local CSR gather + edge filter ----------------
+        pos = start[local][:, None] + jnp.arange(D, dtype=jnp.int32)[None, :]
+        within = jnp.arange(D)[None, :] < deg[local][:, None]
+        pos = jnp.clip(pos, 0, Eloc - 1)
+        leaf = dst[pos]  # [n*cap, D] global leaf ids
+        e_ok = within & (eprop[pos] == cfg.edge_val) & qvalid[:, None] & ~hit[:, None]
+
+        if ldprop is not None:
+            # §Perf: denormalized leaf property rides on the edge record —
+            # the remote round-2 fetch disappears entirely.
+            l_ok = (ldprop[pos] == cfg.leaf_val) & e_ok
+        else:
+            # ---- round 2: leaf property fetch at the leaves' owners --------
+            lflat = jnp.where(e_ok.reshape(-1), leaf.reshape(-1), -1)
+            lowner = jnp.where(lflat >= 0, lflat // Vloc, -1)
+            send2, slot2, kept2 = _bucketize(lflat, lowner, n, cap2)
+            recv2 = jax.lax.all_to_all(send2, axes, split_axis=0, concat_axis=0, tiled=True)
+            rloc = jnp.clip(recv2.reshape(-1) - me * Vloc, 0, Vloc - 1)
+            props = jnp.where(recv2.reshape(-1) >= 0, vprop[rloc], NULL_ID)
+            back2 = jax.lax.all_to_all(
+                props.reshape(n, cap2), axes, split_axis=0, concat_axis=0, tiled=True
+            ).reshape(-1)
+            leaf_prop = jnp.where(
+                kept2, back2[jnp.clip(slot2, 0, n * cap2 - 1)], NULL_ID
+            )
+            l_ok = ((leaf_prop == cfg.leaf_val) & e_ok.reshape(-1) & kept2).reshape(n * cap, D)
+
+        # compact executed results to max_leaves
+        idx = jnp.cumsum(l_ok, axis=1) - 1
+        dest = jnp.where(l_ok, jnp.minimum(idx, cfg.max_leaves - 1), cfg.max_leaves)
+        rows = jnp.arange(n * cap)[:, None]
+        exec_vals = jnp.full((n * cap, cfg.max_leaves), NULL_ID, jnp.int32)
+        exec_vals = exec_vals.at[rows, dest].set(leaf, mode="drop")
+
+        merged = jnp.where(hit[:, None], cached_vals, exec_vals)
+        mlen = jnp.where(hit, cached_len, jnp.sum(l_ok, axis=1))
+        width = jnp.arange(cfg.max_leaves)[None, :]
+        merged = jnp.where(width < mlen[:, None], merged, NULL_ID)
+
+        # ---- route results back to the querying shards ---------------------
+        back = jax.lax.all_to_all(
+            merged.reshape(n, cap, cfg.max_leaves), axes,
+            split_axis=0, concat_axis=0, tiled=True,
+        ).reshape(n * cap, cfg.max_leaves)
+        results = jnp.where(
+            kept1[:, None], back[jnp.clip(slot1, 0, n * cap - 1)], NULL_ID
+        )
+        stats = dict(
+            hits=jax.lax.psum(jnp.sum(hit.astype(jnp.int32)), axes),
+            processed=jax.lax.psum(jnp.sum(qvalid.astype(jnp.int32)), axes),
+            route_dropped=jax.lax.psum(
+                jnp.sum((~kept1).astype(jnp.int32)), axes
+            ),
+        )
+        return results, stats
+
+    spec1 = P(axes)
+    denorm = cfg.denormalize_leaf_props
+    in_specs = [spec1] * 5 + [spec1, spec1, spec1, P(axes, None), spec1, P(axes)]
+    if denorm:
+        in_specs.append(spec1)
+
+    sm = shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(axes, None), dict(hits=P(), processed=P(), route_dropped=P())),
+        check_rep=False,
+    )
+
+    def step(state, roots):
+        args = [
+            state["deg"], state["start"], state["dst"], state["eprop"],
+            state["vprop"], state["c_root"], state["c_fp"], state["c_len"],
+            state["c_vals"], state["c_valid"], roots,
+        ]
+        if denorm:
+            args.append(state["ldprop"])
+        return sm(*args)
+
+    return step

@@ -1,0 +1,102 @@
+"""Mesh-aware sharding helpers.
+
+Model code calls ``constrain(x, spec)`` with *logical* PartitionSpecs; when
+no mesh is active (CPU smoke tests) the call is a no-op, and axes that don't
+divide the corresponding dimension are dropped automatically — this is what
+lets one model definition compile unmodified on (16,16), (2,16,16) and a
+single CPU device. The same validation backs the jit in_shardings built by
+``tree_shardings``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    """Install the process-wide mesh used by ``constrain``/``tree_shardings``."""
+    global _MESH
+    _MESH = mesh
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def maybe_spec(shape, spec, mesh: Optional[Mesh] = None) -> P:
+    """Validate a PartitionSpec against a shape: drop axes that are absent
+    from the mesh or do not divide the dimension."""
+    mesh = mesh or _MESH
+    if mesh is None:
+        return P()
+    out = []
+    spec = tuple(spec)[: len(shape)]  # rank-0 leaves (e.g. step counters)
+    for d, axis in enumerate(spec + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if size <= 1 or shape[d] % size != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def constrain(x, *spec):
+    """``with_sharding_constraint`` against the active mesh; no-op without
+    one. Axes are validated per ``maybe_spec``."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    s = maybe_spec(x.shape, spec, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+
+def add_data_axis(spec: P, shape, mesh: Optional[Mesh] = None, axes=("data",)) -> P:
+    """ZeRO-1: extend a param spec with the data axis on the largest
+    still-replicated, divisible dimension (optimizer-state sharding)."""
+    mesh = mesh or _MESH
+    if mesh is None:
+        return spec
+    size = int(np.prod([mesh.shape[a] for a in axes if a in mesh.shape]))
+    if size <= 1:
+        return spec
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    order = sorted(range(len(shape)), key=lambda d: -shape[d])
+    for d in order:
+        if entries[d] is None and shape[d] % size == 0:
+            entries[d] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+    return P(*entries)
+
+
+def tree_shardings(tree, rule, mesh: Optional[Mesh] = None):
+    """Build a NamedSharding pytree: ``rule(path, leaf) -> spec tuple``."""
+    mesh = mesh or _MESH
+
+    def leaf_fn(path, leaf):
+        spec = rule(jax.tree_util.keystr(path), leaf)
+        s = maybe_spec(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map_with_path(leaf_fn, tree)

@@ -1,0 +1,23 @@
+"""GNN substrate: segment-op message passing (SpMM regime), multi-aggregator
+PNA, GAT edge-softmax (SDDMM regime), E(n)-equivariant EGNN, and a
+NequIP-style restricted tensor-product network — plus the fanout neighbor
+sampler and its one-hop-cache-backed variant (the paper's technique applied
+to GNN data loading)."""
+
+from repro.gnn.config import GNNConfig
+from repro.gnn.graph import GraphBatch, random_graph_batch, segment_softmax
+from repro.gnn.models import forward as gnn_forward, loss_fn as gnn_loss, train_step as gnn_train_step, init_params as gnn_init
+from repro.gnn.sampler import FanoutSampler, CachedNeighborSampler
+
+__all__ = [
+    "GNNConfig",
+    "GraphBatch",
+    "random_graph_batch",
+    "segment_softmax",
+    "gnn_forward",
+    "gnn_loss",
+    "gnn_train_step",
+    "gnn_init",
+    "FanoutSampler",
+    "CachedNeighborSampler",
+]

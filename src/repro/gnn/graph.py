@@ -1,0 +1,115 @@
+"""Padded graph batches + segment-op primitives.
+
+JAX sparse is BCOO-only, so message passing is expressed directly over an
+edge-index list with ``jax.ops.segment_sum`` / ``segment_max`` — this IS the
+SpMM/SDDMM layer of the system (kernel_taxonomy §GNN). All shapes are static
+(padded with masks) so everything jits and shards.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+from dataclasses import dataclass, field
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=(
+        "node_feat", "edge_src", "edge_dst", "node_mask", "edge_mask",
+        "labels", "positions", "graph_ids",
+    ),
+    meta_fields=("n_graphs",),
+)
+@dataclass(frozen=True)
+class GraphBatch:
+    node_feat: jax.Array  # [N, F] float
+    edge_src: jax.Array  # [E] int32
+    edge_dst: jax.Array  # [E] int32
+    node_mask: jax.Array  # [N] bool
+    edge_mask: jax.Array  # [E] bool
+    labels: jax.Array  # [N] int32 (node classification) or graph targets
+    positions: Optional[jax.Array] = None  # [N, 3] for equivariant models
+    graph_ids: Optional[jax.Array] = None  # [N] int32 for batched small graphs
+    n_graphs: int = 1  # static: segment count for graph pooling
+
+    def _replace(self, **kw):
+        from dataclasses import replace
+
+        return replace(self, **kw)
+
+
+def random_graph_batch(
+    key, n_nodes, n_edges, d_feat, n_classes=16, positions=False, n_graphs=1
+) -> GraphBatch:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    src = jax.random.randint(k1, (n_edges,), 0, n_nodes, jnp.int32)
+    dst = jax.random.randint(k2, (n_edges,), 0, n_nodes, jnp.int32)
+    return GraphBatch(
+        node_feat=jax.random.normal(k3, (n_nodes, d_feat), jnp.float32),
+        edge_src=src,
+        edge_dst=dst,
+        node_mask=jnp.ones(n_nodes, bool),
+        edge_mask=jnp.ones(n_edges, bool),
+        labels=jax.random.randint(k4, (n_nodes,), 0, n_classes, jnp.int32),
+        positions=jax.random.normal(k5, (n_nodes, 3), jnp.float32) if positions else None,
+        graph_ids=(jnp.arange(n_nodes, dtype=jnp.int32) % n_graphs) if n_graphs > 1 else None,
+        n_graphs=n_graphs,
+    )
+
+
+NODE_AXES = ("pod", "data", "model")
+
+
+def _npin(t):
+    """§Perf (GNN cell) — REFUTED on XLA-CPU: pinning segment-reduction
+    outputs node-sharded was meant to turn the combine into reduce-scatter,
+    but this partitioner emits extra all-gathers instead (+3%); kept unused
+    pending the shard_map edge-aligned path (EXPERIMENTS.md §Perf)."""
+    from repro.distributed import constrain
+
+    return constrain(t, *((NODE_AXES,) + (None,) * (t.ndim - 1)))
+
+
+def scatter_sum(messages, dst, n_nodes, edge_mask):
+    m = jnp.where(edge_mask[:, None], messages, 0)
+    return jax.ops.segment_sum(m, dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages, dst, n_nodes, edge_mask):
+    s = scatter_sum(messages, dst, n_nodes, edge_mask)
+    cnt = jax.ops.segment_sum(edge_mask.astype(messages.dtype), dst, num_segments=n_nodes)
+    return s / jnp.maximum(cnt, 1)[:, None], cnt
+
+
+def scatter_max(messages, dst, n_nodes, edge_mask):
+    m = jnp.where(edge_mask[:, None], messages, -jnp.inf)
+    out = jax.ops.segment_max(m, dst, num_segments=n_nodes)
+    return jnp.where(jnp.isfinite(out), out, 0)
+
+
+def scatter_min(messages, dst, n_nodes, edge_mask):
+    return -scatter_max(-messages, dst, n_nodes, edge_mask)
+
+
+def segment_softmax(scores, dst, n_nodes, edge_mask):
+    """Edge-softmax normalized over incoming edges of each dst node.
+
+    scores: [E, H]. Returns [E, H] weights (masked edges -> 0).
+    """
+    s = jnp.where(edge_mask[:, None], scores, -jnp.inf)
+    mx = jax.ops.segment_max(s, dst, num_segments=n_nodes)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0)
+    ex = jnp.where(edge_mask[:, None], jnp.exp(s - mx[dst]), 0)
+    den = jax.ops.segment_sum(ex, dst, num_segments=n_nodes)
+    return ex / jnp.maximum(den[dst], 1e-16)
+
+
+def degrees(dst, n_nodes, edge_mask):
+    return jax.ops.segment_sum(edge_mask.astype(jnp.float32), dst, num_segments=n_nodes)

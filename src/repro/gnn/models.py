@@ -1,0 +1,121 @@
+"""GNN models: init/forward/loss/train_step dispatched on config.kind."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.gnn.config import GNNConfig
+from repro.gnn.graph import GraphBatch
+from repro.gnn.layers import (
+    egnn_layer,
+    egnn_layer_init,
+    gat_layer,
+    gat_layer_init,
+    mlp,
+    mlp_init,
+    nequip_layer,
+    nequip_layer_init,
+    pna_layer,
+    pna_layer_init,
+)
+
+NODE_AXES = ("pod", "data")
+
+
+def init_params(cfg: GNNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    if cfg.kind == "pna":
+        layers = [pna_layer_init(ks[i], cfg.d_in if i == 0 else d, d, cfg) for i in range(cfg.n_layers)]
+        return {"layers": layers, "head": mlp_init(ks[-1], (d, cfg.n_classes))}
+    if cfg.kind == "gat":
+        h = cfg.n_heads
+        layers = [
+            gat_layer_init(ks[i], cfg.d_in if i == 0 else d * h, d, h)
+            for i in range(cfg.n_layers - 1)
+        ]
+        layers.append(gat_layer_init(ks[cfg.n_layers - 1], d * h if cfg.n_layers > 1 else cfg.d_in, cfg.n_classes, h))
+        return {"layers": layers}
+    if cfg.kind == "egnn":
+        emb = mlp_init(ks[-2], (cfg.d_in, d))
+        layers = [egnn_layer_init(ks[i], d, cfg) for i in range(cfg.n_layers)]
+        return {"embed": emb, "layers": layers, "head": mlp_init(ks[-1], (d, d, 1))}
+    if cfg.kind == "nequip":
+        emb = mlp_init(ks[-2], (cfg.d_in, d))
+        layers = [nequip_layer_init(ks[i], d, cfg) for i in range(cfg.n_layers)]
+        return {"embed": emb, "layers": layers, "head": mlp_init(ks[-1], (d, d, 1))}
+    raise ValueError(cfg.kind)
+
+
+def forward(cfg: GNNConfig, params, g: GraphBatch):
+    """Returns node logits [N, n_classes] (pna/gat) or per-graph energy
+    [n_graphs] (egnn/nequip)."""
+    src, dst, em, nm = g.edge_src, g.edge_dst, g.edge_mask, g.node_mask
+    if cfg.kind == "pna":
+        h = constrain(g.node_feat, NODE_AXES, None)
+        for lp in params["layers"]:
+            h = pna_layer(lp, cfg, h, src, dst, em, nm)
+            h = constrain(h, NODE_AXES, None)
+        return mlp(params["head"], h)
+    if cfg.kind == "gat":
+        h = constrain(g.node_feat, NODE_AXES, None)
+        for i, lp in enumerate(params["layers"]):
+            last = i == len(params["layers"]) - 1
+            h = gat_layer(lp, h, src, dst, em, nm, concat=not last)
+            h = constrain(h, NODE_AXES, None)
+        return h
+    if cfg.kind == "egnn":
+        h = mlp(params["embed"], g.node_feat)
+        x = g.positions
+        for lp in params["layers"]:
+            h, x = egnn_layer(lp, h, x, src, dst, em, nm)
+            h = constrain(h, NODE_AXES, None)
+        e_node = mlp(params["head"], h)[:, 0] * nm
+        return _graph_pool(e_node, g)
+    if cfg.kind == "nequip":
+        n = g.node_feat.shape[0]
+        c = cfg.d_hidden
+        s = mlp(params["embed"], g.node_feat)
+        v = jnp.zeros((n, c, 3), s.dtype)
+        t = jnp.zeros((n, c, 3, 3), s.dtype)
+        for lp in params["layers"]:
+            s, v, t = nequip_layer(lp, cfg, s, v, t, g.positions, src, dst, em, nm)
+            s = constrain(s, NODE_AXES, None)
+        e_node = mlp(params["head"], s)[:, 0] * nm
+        return _graph_pool(e_node, g)
+    raise ValueError(cfg.kind)
+
+
+def _graph_pool(e_node, g: GraphBatch):
+    if g.graph_ids is None:
+        return jnp.sum(e_node)[None]
+    return jax.ops.segment_sum(e_node, g.graph_ids, num_segments=g.n_graphs)
+
+
+def loss_fn(cfg: GNNConfig, params, g: GraphBatch, targets=None):
+    out = forward(cfg, params, g)
+    if cfg.kind in ("pna", "gat"):
+        logits = out.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, g.labels[:, None], -1)[:, 0]
+        per = (logz - gold) * g.node_mask
+        return jnp.sum(per) / jnp.maximum(jnp.sum(g.node_mask), 1)
+    # energy regression
+    tgt = targets if targets is not None else jnp.zeros(out.shape, out.dtype)
+    return jnp.mean(jnp.square(out - tgt))
+
+
+def train_step(cfg: GNNConfig, optimizer):
+    def step(params, opt_state, g: GraphBatch, targets=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, g, targets)
+        )(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step

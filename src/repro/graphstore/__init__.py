@@ -1,0 +1,41 @@
+"""Tensorized transactional property-graph store (the FDB/JanusGraph analogue).
+
+Layout (DESIGN.md §2): slotted vertex/edge arrays + CSR indexes over the
+compacted prefix, with a linearly-scanned *recent region* for post-compaction
+edge inserts — an LSM expressed in fixed-shape tensors. Per-vertex version
+counters provide FDB-style optimistic conflict detection at vertex
+granularity.
+"""
+
+from repro.graphstore.store import (
+    GraphStore,
+    StoreSpec,
+    compact,
+    empty_store,
+    gather_in,
+    gather_out,
+    ingest,
+)
+from repro.graphstore.mutations import (
+    AppliedMutations,
+    MutationBatch,
+    apply_mutations,
+    make_mutation_batch,
+)
+from repro.graphstore.txn import TxnError, commit_with_conflict_check
+
+__all__ = [
+    "GraphStore",
+    "StoreSpec",
+    "empty_store",
+    "ingest",
+    "gather_out",
+    "gather_in",
+    "compact",
+    "MutationBatch",
+    "AppliedMutations",
+    "make_mutation_batch",
+    "apply_mutations",
+    "commit_with_conflict_check",
+    "TxnError",
+]

@@ -1,0 +1,259 @@
+"""Batched graph mutations (the write half of gRW-Txs).
+
+A ``MutationBatch`` is a structure-of-arrays with one fixed-capacity section
+per change type from §3.2 of the paper. ``apply_mutations`` applies the whole
+batch as one commit: it snapshots the *old* state the paper's mutation
+listener needs (Algorithms 1–9 take both old and new values), applies the
+writes functionally, and bumps per-vertex versions — the write-conflict
+ranges used by optimistic CP-population commits.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphstore.store import GraphStore, StoreSpec
+from repro.utils import PROP_MISSING, take_along0
+
+
+class MutationBatch(NamedTuple):
+    """Padded change sections. ``*_n`` is the live count per section."""
+
+    # add vertices
+    nv_label: jax.Array  # int32 [KNV]
+    nv_props: jax.Array  # int32 [KNV, n_vprops]
+    nv_n: jax.Array
+    # add edges
+    ne_src: jax.Array  # int32 [KNE]
+    ne_dst: jax.Array
+    ne_label: jax.Array
+    ne_props: jax.Array  # int32 [KNE, n_eprops]
+    ne_n: jax.Array
+    # delete edges
+    de_eid: jax.Array  # int32 [KDE]
+    de_n: jax.Array
+    # delete vertices
+    dv_vid: jax.Array  # int32 [KDV]
+    dv_n: jax.Array
+    # set/del vertex property (val == PROP_MISSING deletes the property)
+    sv_vid: jax.Array  # int32 [KSV]
+    sv_pid: jax.Array
+    sv_val: jax.Array
+    sv_n: jax.Array
+    # set/del edge property
+    se_eid: jax.Array  # int32 [KSE]
+    se_pid: jax.Array
+    se_val: jax.Array
+    se_n: jax.Array
+
+
+class AppliedMutations(NamedTuple):
+    """Old-state snapshots captured at apply time, consumed by invalidation."""
+
+    batch: MutationBatch
+    ne_eid: jax.Array  # assigned edge slots [KNE]
+    nv_vid: jax.Array  # assigned vertex slots [KNV]
+    # deleted-edge pre-images
+    de_src: jax.Array
+    de_dst: jax.Array
+    de_label: jax.Array
+    de_props: jax.Array  # [KDE, n_eprops]
+    # vertex-prop pre-images
+    sv_old: jax.Array  # [KSV]
+    # edge-prop pre-images and the (immutable) edge identity
+    se_old: jax.Array  # [KSE]
+    se_src: jax.Array
+    se_dst: jax.Array
+    se_label: jax.Array
+    se_props: jax.Array  # [KSE, n_eprops] post-change props (for key calc)
+    commit_version: jax.Array  # int32 scalar
+
+
+def _pad(arr, cap, fill=0, dtype=jnp.int32):
+    a = np.asarray(arr, dtype=np.int32).reshape(len(arr), *np.shape(arr)[1:])
+    out = np.full((cap,) + a.shape[1:], fill, dtype=np.int32)
+    out[: len(a)] = a
+    return jnp.asarray(out, dtype)
+
+
+def make_mutation_batch(
+    spec: StoreSpec,
+    *,
+    new_vertices: Sequence = (),  # (label, props[n_vprops])
+    new_edges: Sequence = (),  # (src, dst, label, props[n_eprops])
+    del_edges: Sequence = (),  # eid
+    del_vertices: Sequence = (),  # vid
+    set_vprops: Sequence = (),  # (vid, pid, val)
+    set_eprops: Sequence = (),  # (eid, pid, val)
+    caps: tuple = (8, 32, 32, 8, 32, 32),
+) -> MutationBatch:
+    """Host-side builder: pads python change lists into a MutationBatch."""
+    knv, kne, kde, kdv, ksv, kse = caps
+    assert len(new_vertices) <= knv and len(new_edges) <= kne
+    assert len(del_edges) <= kde and len(del_vertices) <= kdv
+    assert len(set_vprops) <= ksv and len(set_eprops) <= kse
+    nv_label = _pad([v[0] for v in new_vertices], knv, -1)
+    nv_props = _pad(
+        [v[1] for v in new_vertices] or np.zeros((0, spec.n_vprops)),
+        knv,
+        int(PROP_MISSING),
+    ).reshape(knv, spec.n_vprops)
+    ne = list(new_edges)
+    ne_props = _pad(
+        [e[3] for e in ne] or np.zeros((0, spec.n_eprops)), kne, int(PROP_MISSING)
+    ).reshape(kne, spec.n_eprops)
+    sv = list(set_vprops)
+    se = list(set_eprops)
+    return MutationBatch(
+        nv_label=nv_label,
+        nv_props=nv_props,
+        nv_n=jnp.int32(len(new_vertices)),
+        ne_src=_pad([e[0] for e in ne], kne, -1),
+        ne_dst=_pad([e[1] for e in ne], kne, -1),
+        ne_label=_pad([e[2] for e in ne], kne, -1),
+        ne_props=ne_props,
+        ne_n=jnp.int32(len(ne)),
+        de_eid=_pad(list(del_edges), kde, -1),
+        de_n=jnp.int32(len(del_edges)),
+        dv_vid=_pad(list(del_vertices), kdv, -1),
+        dv_n=jnp.int32(len(del_vertices)),
+        sv_vid=_pad([x[0] for x in sv], ksv, -1),
+        sv_pid=_pad([x[1] for x in sv], ksv, 0),
+        sv_val=_pad([x[2] for x in sv], ksv, int(PROP_MISSING)),
+        sv_n=jnp.int32(len(sv)),
+        se_eid=_pad([x[0] for x in se], kse, -1),
+        se_pid=_pad([x[1] for x in se], kse, 0),
+        se_val=_pad([x[2] for x in se], kse, int(PROP_MISSING)),
+        se_n=jnp.int32(len(se)),
+    )
+
+
+def _sec_mask(ids, n):
+    return jnp.arange(ids.shape[0]) < n
+
+
+def apply_mutations(
+    spec: StoreSpec, store: GraphStore, batch: MutationBatch
+) -> tuple[GraphStore, AppliedMutations]:
+    """Apply one commit. Returns the new store and the listener snapshot."""
+    new_version = store.version + 1
+
+    # ---- pre-images (captured against the pre-state) -----------------------
+    de_mask = _sec_mask(batch.de_eid, batch.de_n)
+    de_src = jnp.where(de_mask, take_along0(store.esrc, batch.de_eid), -1)
+    de_dst = jnp.where(de_mask, take_along0(store.edst, batch.de_eid), -1)
+    de_label = jnp.where(de_mask, take_along0(store.elabel, batch.de_eid), -1)
+    de_props = jnp.where(
+        de_mask[:, None], take_along0(store.eprops, batch.de_eid), PROP_MISSING
+    )
+    sv_mask = _sec_mask(batch.sv_vid, batch.sv_n)
+    sv_rows = take_along0(store.vprops, batch.sv_vid)
+    sv_old = jnp.where(
+        sv_mask,
+        jnp.take_along_axis(
+            sv_rows, jnp.clip(batch.sv_pid, 0, spec.n_vprops - 1)[:, None], axis=1
+        )[:, 0],
+        PROP_MISSING,
+    )
+    se_mask = _sec_mask(batch.se_eid, batch.se_n)
+    se_rows = take_along0(store.eprops, batch.se_eid)
+    se_old = jnp.where(
+        se_mask,
+        jnp.take_along_axis(
+            se_rows, jnp.clip(batch.se_pid, 0, spec.n_eprops - 1)[:, None], axis=1
+        )[:, 0],
+        PROP_MISSING,
+    )
+    se_src = jnp.where(se_mask, take_along0(store.esrc, batch.se_eid), -1)
+    se_dst = jnp.where(se_mask, take_along0(store.edst, batch.se_eid), -1)
+    se_label = jnp.where(se_mask, take_along0(store.elabel, batch.se_eid), -1)
+
+    # ---- allocate new vertex / edge slots ----------------------------------
+    knv = batch.nv_label.shape[0]
+    kne = batch.ne_src.shape[0]
+    nv_mask = _sec_mask(batch.nv_label, batch.nv_n)
+    ne_mask = _sec_mask(batch.ne_src, batch.ne_n)
+    nv_vid = jnp.where(nv_mask, store.v_len + jnp.arange(knv, dtype=jnp.int32), -1)
+    ne_eid = jnp.where(ne_mask, store.e_len + jnp.arange(kne, dtype=jnp.int32), -1)
+    nv_idx = jnp.where(nv_mask, nv_vid, spec.v_cap)  # OOB -> scatter-drop
+    ne_idx = jnp.where(ne_mask, ne_eid, spec.e_cap)
+
+    vlabel = store.vlabel.at[nv_idx].set(batch.nv_label, mode="drop")
+    valive = store.valive.at[nv_idx].set(True, mode="drop")
+    vprops = store.vprops.at[nv_idx].set(batch.nv_props, mode="drop")
+    esrc = store.esrc.at[ne_idx].set(batch.ne_src, mode="drop")
+    edst = store.edst.at[ne_idx].set(batch.ne_dst, mode="drop")
+    elabel = store.elabel.at[ne_idx].set(batch.ne_label, mode="drop")
+    ealive = store.ealive.at[ne_idx].set(True, mode="drop")
+    eprops = store.eprops.at[ne_idx].set(batch.ne_props, mode="drop")
+
+    # ---- property writes ----------------------------------------------------
+    sv_idx = jnp.where(sv_mask, batch.sv_vid, spec.v_cap)
+    vprops = vprops.at[sv_idx, jnp.clip(batch.sv_pid, 0, spec.n_vprops - 1)].set(
+        batch.sv_val, mode="drop"
+    )
+    se_idx = jnp.where(se_mask, batch.se_eid, spec.e_cap)
+    eprops = eprops.at[se_idx, jnp.clip(batch.se_pid, 0, spec.n_eprops - 1)].set(
+        batch.se_val, mode="drop"
+    )
+    se_props_new = jnp.where(se_mask[:, None], take_along0(eprops, batch.se_eid), PROP_MISSING)
+
+    # ---- deletes -------------------------------------------------------------
+    de_idx = jnp.where(de_mask, batch.de_eid, spec.e_cap)
+    ealive = ealive.at[de_idx].set(False, mode="drop")
+    dv_mask = _sec_mask(batch.dv_vid, batch.dv_n)
+    dv_idx = jnp.where(dv_mask, batch.dv_vid, spec.v_cap)
+    valive = valive.at[dv_idx].set(False, mode="drop")
+
+    # ---- version bumps (write-conflict ranges at vertex granularity) -------
+    vversion = store.vversion
+    for vid, m in (
+        (batch.ne_src, ne_mask),
+        (batch.ne_dst, ne_mask),
+        (de_src, de_mask),
+        (de_dst, de_mask),
+        (batch.sv_vid, sv_mask),
+        (se_src, se_mask),
+        (se_dst, se_mask),
+        (batch.dv_vid, dv_mask),
+        (nv_vid, nv_mask),
+    ):
+        vversion = vversion.at[jnp.where(m, vid, spec.v_cap)].set(
+            new_version, mode="drop"
+        )
+
+    new_store = store._replace(
+        vlabel=vlabel,
+        valive=valive,
+        vprops=vprops,
+        vversion=vversion,
+        esrc=esrc,
+        edst=edst,
+        elabel=elabel,
+        ealive=ealive,
+        eprops=eprops,
+        v_len=store.v_len + batch.nv_n,
+        e_len=store.e_len + batch.ne_n,
+        version=new_version,
+    )
+    applied = AppliedMutations(
+        batch=batch,
+        ne_eid=ne_eid,
+        nv_vid=nv_vid,
+        de_src=de_src,
+        de_dst=de_dst,
+        de_label=de_label,
+        de_props=de_props,
+        sv_old=sv_old,
+        se_old=se_old,
+        se_src=se_src,
+        se_dst=se_dst,
+        se_label=se_label,
+        se_props=se_props_new,
+        commit_version=new_version,
+    )
+    return new_store, applied

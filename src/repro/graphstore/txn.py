@@ -1,0 +1,54 @@
+"""Optimistic commit protocol (the FDB OCC analogue, DESIGN.md §2).
+
+A transaction reads at a snapshot version and records the vertices whose
+state its result depends on (its read-conflict set). Commit succeeds only if
+none of those vertices was written after the snapshot — exactly FDB's
+key-range conflict check, at vertex granularity. Used by the asynchronous
+cache-population path (core/population.py) so that a CP transaction racing a
+gRW-Tx aborts instead of installing a stale cache entry.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphstore.store import GraphStore, StoreSpec
+from repro.utils import take_along0
+
+
+class TxnError(Exception):
+    """Raised (host-side) when a transaction exceeds its retry budget."""
+
+
+def conflicts(
+    spec: StoreSpec,
+    store: GraphStore,
+    read_version,
+    read_set,
+    read_mask,
+):
+    """True iff any vertex in ``read_set`` was written after ``read_version``."""
+    ver = take_along0(store.vversion, read_set)
+    return jnp.any(read_mask & (ver > read_version))
+
+
+def commit_with_conflict_check(
+    spec: StoreSpec,
+    store: GraphStore,
+    read_version,
+    read_set,
+    read_mask,
+    apply_fn,
+):
+    """Functionally commit ``apply_fn(store)`` iff the read set is clean.
+
+    Returns (store', committed: bool array). ``apply_fn`` must be pure.
+    """
+    bad = conflicts(spec, store, read_version, read_set, read_mask)
+    new_store = apply_fn(store)
+    import jax
+
+    merged = jax.tree_util.tree_map(
+        lambda a, b: jnp.where(bad, a, b), store, new_store
+    )
+    return merged, ~bad

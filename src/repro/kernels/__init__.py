@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the system's compute hot-spots. Each subpackage is
+# kernel.py (pl.pallas_call + explicit BlockSpec VMEM tiling) + ops.py (jit'd
+# wrapper with interpret fallback) + ref.py (pure-jnp oracle). Validated via
+# interpret=True on CPU; the BlockSpecs are written for TPU v5e VMEM/MXU.

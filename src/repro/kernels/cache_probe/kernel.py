@@ -1,0 +1,66 @@
+"""Cache hash-probe, Pallas TPU.
+
+Batched open-addressing lookup for the one-hop result cache: for a block of
+(tpl, root, fingerprint, slot-hash) keys, gather the PROBES candidate slots'
+metadata and emit (hit, slot). All hash math is uint32 vector ops in VMEM;
+the slot-metadata gathers hit the cache shard resident on this chip (the
+cache is co-partitioned with its root vertices, DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(c_tpl_ref, c_root_ref, c_fp_ref, c_valid_ref,
+                  tpl_ref, root_ref, h_ref, fp_ref, hit_ref, slot_ref, *,
+                  probes, capacity):
+    tpl = tpl_ref[...]
+    root = root_ref[...]
+    h = h_ref[...]
+    fp = fp_ref[...]
+    base = (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+    hit = jnp.zeros(tpl.shape, jnp.bool_)
+    slot = jnp.full(tpl.shape, -1, jnp.int32)
+    for i in range(probes):  # static probe window unroll
+        s = (base + i) & (capacity - 1)
+        ok = (
+            c_valid_ref[s]
+            & (c_tpl_ref[s] == tpl)
+            & (c_root_ref[s] == root)
+            & (c_fp_ref[s] == fp)
+        )
+        take = ok & ~hit
+        slot = jnp.where(take, s, slot)
+        hit = hit | ok
+    hit_ref[...] = hit
+    slot_ref[...] = slot
+
+
+def cache_probe_pallas(c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, *,
+                       probes=8, block_b=256, interpret=False):
+    """Cache arrays [C]; key arrays [B] (h/fp uint32). -> (hit [B], slot [B])."""
+    C = c_tpl.shape[0]
+    B = tpl.shape[0]
+    assert C & (C - 1) == 0
+    block_b = min(block_b, B)
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    full = lambda: pl.BlockSpec((C,), lambda i: (0,))
+    blk = lambda: pl.BlockSpec((block_b,), lambda i: (i,))
+    hit, slot = pl.pallas_call(
+        functools.partial(_probe_kernel, probes=probes, capacity=C),
+        grid=grid,
+        in_specs=[full(), full(), full(), full(), blk(), blk(), blk(), blk()],
+        out_specs=[blk(), blk()],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.bool_),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp)
+    return hit, slot

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for cache_probe."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cache_probe.kernel import cache_probe_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("probes", "block_b", "interpret"))
+def cache_probe(c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, *, probes=8,
+                block_b=256, interpret=True):
+    return cache_probe_pallas(
+        c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, probes=probes,
+        block_b=block_b, interpret=interpret,
+    )

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for cache_probe."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cache_probe_ref(c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, *, probes=8):
+    C = c_tpl.shape[0]
+    base = (h & jnp.uint32(C - 1)).astype(jnp.int32)
+    offs = jnp.arange(probes, dtype=jnp.int32)
+    slots = (base[:, None] + offs[None, :]) & (C - 1)
+    ok = (
+        c_valid[slots]
+        & (c_tpl[slots] == tpl[:, None])
+        & (c_root[slots] == root[:, None])
+        & (c_fp[slots] == fp[:, None])
+    )
+    hit = jnp.any(ok, axis=1)
+    first = jnp.argmax(ok, axis=1)
+    slot = jnp.where(hit, jnp.take_along_axis(slots, first[:, None], 1)[:, 0], -1)
+    return hit, slot

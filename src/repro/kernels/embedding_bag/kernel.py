@@ -1,0 +1,54 @@
+"""EmbeddingBag (gather + bag-reduce), Pallas TPU.
+
+Grid: (B / block_b, D / block_d). Per program: one bag block's id matrix
+[block_b, K] in VMEM plus a [V, block_d] column stripe of the table; the
+gather runs as a K-step accumulation so the VMEM working set is
+O(block_b*K + V_stripe + block_b*block_d). On a real deployment the table
+stripe is the shard owned by this chip (row-sharded tables), so V here is
+the per-device vocab slice.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(table_ref, ids_ref, mask_ref, out_ref, *, mode):
+    ids = ids_ref[...]  # [bb, K]
+    mask = mask_ref[...]
+    K = ids.shape[1]
+    acc = jnp.zeros((ids.shape[0], out_ref.shape[1]), jnp.float32)
+    for j in range(K):  # static unroll: K gathers of a [bb, bd] stripe
+        rows = table_ref[ids[:, j]]  # [bb, bd]
+        acc = acc + jnp.where(mask[:, j][:, None], rows.astype(jnp.float32), 0)
+    if mode == "mean":
+        cnt = jnp.sum(mask.astype(jnp.float32), axis=1, keepdims=True)
+        acc = acc / jnp.maximum(cnt, 1.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table, ids, mask, *, mode="sum", block_b=128,
+                         block_d=128, interpret=False):
+    """table [V, D]; ids/mask [B, K] -> [B, D]."""
+    V, D = table.shape
+    B, K = ids.shape
+    block_b = min(block_b, B)
+    block_d = min(block_d, D)
+    assert B % block_b == 0 and D % block_d == 0
+    grid = (B // block_b, D // block_d)
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((V, block_d), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(table, ids, mask)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for embedding_bag."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_b", "block_d", "interpret")
+)
+def embedding_bag(table, ids, mask, *, mode="sum", block_b=128, block_d=128,
+                  interpret=True):
+    return embedding_bag_pallas(
+        table, ids, mask, mode=mode, block_b=block_b, block_d=block_d,
+        interpret=interpret,
+    )

@@ -1,0 +1,5 @@
+"""Oracle: repro.recsys.embedding.embedding_bag."""
+
+from repro.recsys.embedding import embedding_bag as embedding_bag_ref
+
+__all__ = ["embedding_bag_ref"]

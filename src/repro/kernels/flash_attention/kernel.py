@@ -1,0 +1,105 @@
+"""Flash attention forward, Pallas TPU.
+
+Grid: (batch*kv_heads*q_groups, num_q_blocks). Each program holds one
+(q_block x d) query tile in VMEM and streams k/v blocks through VMEM via the
+BlockSpec index maps, maintaining the online-softmax (m, l, acc) state in
+VMEM scratch. Tile sizes default to (128, 128) — MXU-aligned on v5e.
+
+Causal + sliding-window band masks are applied via block-position iota; the
+kernel processes all k blocks (a production version would early-exit fully
+masked blocks via the grid's k-range; recorded as a §Perf follow-up).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, causal, window, block_q, block_k, seq_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)  # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bq, bk]
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None and window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    m_scr[...] = m_new
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention_pallas(
+    q, k, v, *, causal=True, window=None, block_q=128, block_k=128,
+    interpret=False,
+):
+    """q [B, H, Sq, d]; k/v [B, H, Sk, d] (kv heads pre-broadcast).
+
+    Returns [B, H, Sq, d]."""
+    B, H, Sq, d = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    grid = (B * H, Sq // block_q, Sk // block_k)
+    qr = q.reshape(B * H, Sq, d)
+    kr = k.reshape(B * H, Sk, d)
+    vr = v.reshape(B * H, Sk, d)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=d**-0.5, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, seq_k=Sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, d)

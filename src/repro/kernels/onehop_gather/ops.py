@@ -1,0 +1,22 @@
+"""jit'd public wrapper for onehop_gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.onehop_gather.kernel import onehop_gather_pallas
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_deg", "edge_val", "leaf_val", "block_b", "interpret"),
+)
+def onehop_gather(start, deg, dst, eprop, vprop, roots, *, max_deg,
+                  edge_val, leaf_val, block_b=128, interpret=True):
+    return onehop_gather_pallas(
+        start, deg, dst, eprop, vprop, roots, max_deg=max_deg,
+        edge_val=edge_val, leaf_val=leaf_val, block_b=block_b,
+        interpret=interpret,
+    )

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the onehop_gather kernel (and the conceptual ref is
+repro.core.oracle.onehop_oracle for full predicate generality)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.utils import NULL_ID
+
+
+def onehop_gather_ref(start, deg, dst, eprop, vprop, roots, *, max_deg,
+                      edge_val, leaf_val):
+    E = dst.shape[0]
+    pos = start[roots][:, None] + jnp.arange(max_deg)[None, :]
+    within = jnp.arange(max_deg)[None, :] < deg[roots][:, None]
+    pos = jnp.clip(pos, 0, E - 1)
+    leaf = dst[pos]
+    ok = within & (eprop[pos] == edge_val) & (vprop[leaf] == leaf_val)
+    ok &= roots[:, None] >= 0
+    return jnp.where(ok, leaf, NULL_ID), ok

@@ -1,0 +1,33 @@
+"""Public wrapper for segment_spmm: sorts edges by dst and builds the
+per-tile offsets the kernel contract requires."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm.kernel import segment_spmm_pallas
+
+
+def prepare_edges(src, dst, n_nodes: int, block_n: int):
+    """Sort by dst; tile_offsets[t] = first edge whose dst is in tile t."""
+    order = jnp.argsort(dst)
+    src_s, dst_s = src[order], dst[order]
+    T = n_nodes // block_n
+    bounds = jnp.arange(T + 1, dtype=jnp.int32) * block_n
+    offs = jnp.searchsorted(dst_s, bounds, side="left").astype(jnp.int32)
+    return src_s, dst_s, offs
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_e", "max_chunks", "interpret")
+)
+def segment_spmm(x, src, dst, *, block_n=128, block_e=256, max_chunks=64,
+                 interpret=True):
+    src_s, dst_s, offs = prepare_edges(src, dst, x.shape[0], block_n)
+    return segment_spmm_pallas(
+        x, src_s, dst_s, offs, block_n=block_n, block_e=block_e,
+        max_chunks=max_chunks, interpret=interpret,
+    )

@@ -1,0 +1,117 @@
+"""Optimized-HLO structural analysis for the roofline.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE regardless of trip
+count (scan-over-layers therefore undercounts by ~n_layers). This module
+parses the optimized HLO text into computations, extracts each while loop's
+static trip count from its condition computation, propagates multipliers
+ENTRY -> body (handling nested scans, e.g. flash attention's k-scan inside
+the layer scan), and reports collective bytes both raw (cost_analysis
+semantics) and trip-weighted (true per-step traffic).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u32|s8|u8|pred)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "u32": 4, "s8": 1, "u8": 1, "pred": 1}
+_OP_RE = re.compile(
+    r"\s((?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?)\(%?"
+)
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur = None
+    for line in hlo.splitlines():
+        m = _HDR_RE.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps, entry
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry = parse_computations(hlo)
+
+    # while structure: (owner comp, condition, body)
+    whiles = []
+    for name, lines in comps.items():
+        for ln in lines:
+            w = _WHILE_RE.search(ln)
+            if w:
+                whiles.append((name, w.group(1), w.group(2)))
+
+    def trip_count(cond: str) -> int:
+        consts = [int(c) for c in _CONST_RE.findall("\n".join(comps.get(cond, [])))]
+        consts = [c for c in consts if c > 1]
+        return max(consts) if consts else 1
+
+    # propagate multipliers from ENTRY
+    mult: Dict[str, int] = {entry: 1}
+    changed = True
+    guard = 0
+    while changed and guard < 50:
+        guard += 1
+        changed = False
+        for owner, cond, body in whiles:
+            if owner in mult:
+                m = mult[owner] * trip_count(cond)
+                if mult.get(body) != m:
+                    mult[body] = m
+                    changed = True
+
+    raw = {k: 0 for k in _COLLECTIVES}
+    weighted = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for ln in lines:
+            mm = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ln)
+            if not mm:
+                continue
+            rhs = mm.group(1)
+            op = _OP_RE.search(rhs)
+            if not op:
+                continue
+            kind = op.group(1).replace("-start", "")
+            b = shape_bytes(rhs[: op.start(1)])
+            raw[kind] += b
+            weighted[kind] += b * m
+            counts[kind] += 1
+    loops = [
+        {"body": body, "trip": trip_count(cond), "owner_mult": mult.get(owner, 1)}
+        for owner, cond, body in whiles
+    ]
+    max_mult = max(mult.values()) if mult else 1
+    return dict(
+        raw=raw, weighted=weighted, counts=counts, loops=loops,
+        dominant_trip=max_mult,
+    )

@@ -1,0 +1,227 @@
+"""Per-family step builders + abstract input specs for the dry-run.
+
+``build_cell(arch_id, shape_name, mesh)`` returns
+``(step_fn, in_shardings, abstract_args)`` ready for
+``jax.jit(step_fn, in_shardings=...).lower(*abstract_args)``.
+
+All shapes below are padded to multiples of 512 where the published number
+is indivisible (masked padding; recorded in gnn_shapes docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as configs_pkg
+from repro.distributed import add_data_axis, maybe_spec, set_mesh, tree_shardings
+from repro.optim import adamw, chain, clip_by_global_norm
+
+BATCH_AXES = ("pod", "data")
+ALL_AXES = ("pod", "data", "model")
+
+
+def _pad512(n: int) -> int:
+    return ((n + 511) // 512) * 512
+
+
+def _ns(mesh, shape, spec):
+    return NamedSharding(mesh, maybe_spec(shape, spec, mesh))
+
+
+def _tok_sharding(mesh, shape):
+    return _ns(mesh, shape, (BATCH_AXES, None))
+
+
+# ---------------------------------------------------------------- LM
+def _lm_cell(mod, shape_name, info, mesh):
+    from repro.lm import model as lm_model
+    from repro.lm import LMConfig
+
+    cfg: LMConfig = mod.FULL
+    moment_dtype = jnp.bfloat16 if cfg.param_count() > 3e11 else jnp.float32
+    params = lm_model.abstract_params(cfg)
+    rule = lm_model.param_spec_rule(cfg)
+    pshard = tree_shardings(params, rule, mesh)
+    S, B = info["seq_len"], info["global_batch"]
+
+    if info["kind"] == "train":
+        opt = chain(clip_by_global_norm(1.0), adamw(3e-4, moment_dtype=moment_dtype))
+        opt_state = jax.eval_shape(opt.init, params)
+        # ZeRO-1: moments take the param spec + a data axis
+        def moment_rule(path, leaf):
+            return tuple(rule(path, leaf))
+
+        mshard = jax.tree_util.tree_map(
+            lambda l, s: NamedSharding(
+                mesh, add_data_axis(s.spec, l.shape, mesh, axes=("data",))
+            ),
+            opt_state,
+            tree_shardings(opt_state, moment_rule, mesh),
+        )
+        step = lm_model.train_step(cfg, opt)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        labels = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        shardings = (pshard, mshard, _tok_sharding(mesh, (B, S)), _tok_sharding(mesh, (B, S)))
+        return step, shardings, (params, opt_state, tokens, labels)
+
+    if info["kind"] == "prefill":
+        step = functools.partial(lm_model.prefill_step, cfg)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return step, (pshard, _tok_sharding(mesh, (B, S))), (params, tokens)
+
+    if info["kind"] == "decode":
+        cache = lm_model.init_kv_cache(cfg, B, S, abstract=True)
+        crule = lm_model.kv_cache_spec_rule(cfg)
+        cshard = tree_shardings(cache, crule, mesh)
+        step = functools.partial(lm_model.decode_step, cfg)
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        shardings = (pshard, cshard, _tok_sharding(mesh, (B, 1)), NamedSharding(mesh, P()))
+        return step, shardings, (params, cache, tokens, pos)
+
+    raise ValueError(info["kind"])
+
+
+# ---------------------------------------------------------------- GNN
+def _gnn_cell(mod, shape_name, info, mesh):
+    from repro.gnn.config import GNNConfig
+    from repro.gnn.graph import GraphBatch
+    from repro.gnn.models import init_params, train_step
+
+    cfg: GNNConfig = mod.FULL
+    cfg = type(cfg)(**{**cfg.__dict__, "d_in": info["d_feat"], "n_classes": max(info["n_classes"], 2)})
+    N, E = _pad512(info["n_nodes"]), _pad512(info["n_edges"])
+    ng = info.get("n_graphs", 1)
+    sds = jax.ShapeDtypeStruct
+    g = GraphBatch(
+        node_feat=sds((N, info["d_feat"]), jnp.float32),
+        edge_src=sds((E,), jnp.int32),
+        edge_dst=sds((E,), jnp.int32),
+        node_mask=sds((N,), jnp.bool_),
+        edge_mask=sds((E,), jnp.bool_),
+        labels=sds((N,), jnp.int32),
+        positions=sds((N, 3), jnp.float32) if cfg.needs_positions else None,
+        graph_ids=sds((N,), jnp.int32) if ng > 1 else None,
+        n_graphs=ng,
+    )
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    opt = adamw(1e-3)
+    opt_state = jax.eval_shape(opt.init, params)
+    step = train_step(cfg, opt)
+    targets = sds((ng,), jnp.float32) if cfg.kind in ("egnn", "nequip") else None
+
+    repl = lambda t: jax.tree_util.tree_map(lambda l: NamedSharding(mesh, P()), t)
+    gshard = GraphBatch(
+        node_feat=_ns(mesh, (N, info["d_feat"]), (ALL_AXES, None)),
+        edge_src=_ns(mesh, (E,), (ALL_AXES,)),
+        edge_dst=_ns(mesh, (E,), (ALL_AXES,)),
+        node_mask=_ns(mesh, (N,), (ALL_AXES,)),
+        edge_mask=_ns(mesh, (E,), (ALL_AXES,)),
+        labels=_ns(mesh, (N,), (ALL_AXES,)),
+        positions=_ns(mesh, (N, 3), (ALL_AXES, None)) if cfg.needs_positions else None,
+        graph_ids=_ns(mesh, (N,), (ALL_AXES,)) if ng > 1 else None,
+        n_graphs=ng,
+    )
+    if targets is not None:
+        return (
+            step,
+            (repl(params), repl(opt_state), gshard, NamedSharding(mesh, P())),
+            (params, opt_state, g, targets),
+        )
+    return step, (repl(params), repl(opt_state), gshard), (params, opt_state, g)
+
+
+# ---------------------------------------------------------------- recsys
+def _rec_cell(mod, shape_name, info, mesh):
+    from repro.recsys import twotower as tt
+    from repro.recsys.config import TwoTowerConfig
+
+    cfg: TwoTowerConfig = mod.FULL
+    params = tt.abstract_params(cfg)
+    pshard = tree_shardings(params, tt.param_spec_rule(cfg), mesh)
+    sds = jax.ShapeDtypeStruct
+    B = info["batch"]
+    K, Fu, Fi, D = cfg.bag_size, cfg.user_fields, cfg.item_fields, cfg.embed_dim
+    ub = sds((B, Fu, K), jnp.int32)
+    um = sds((B, Fu, K), jnp.bool_)
+    ubs = _ns(mesh, (B, Fu, K), (BATCH_AXES, None, None))
+
+    if info["kind"] == "rec_train":
+        opt = adamw(1e-3)
+        opt_state = jax.eval_shape(opt.init, params)
+        mshard = jax.tree_util.tree_map(
+            lambda l, s: NamedSharding(mesh, add_data_axis(s.spec, l.shape, mesh)),
+            opt_state,
+            tree_shardings(opt_state, tt.param_spec_rule(cfg), mesh),
+        )
+        step = tt.train_step(cfg, opt)
+        batch = dict(
+            user_bags=ub, user_mask=um,
+            item_bags=sds((B, Fi, K), jnp.int32),
+            item_mask=sds((B, Fi, K), jnp.bool_),
+            item_logq=sds((B,), jnp.float32),
+        )
+        bshard = dict(
+            user_bags=ubs, user_mask=ubs,
+            item_bags=_ns(mesh, (B, Fi, K), (BATCH_AXES, None, None)),
+            item_mask=_ns(mesh, (B, Fi, K), (BATCH_AXES, None, None)),
+            item_logq=_ns(mesh, (B,), (BATCH_AXES,)),
+        )
+        return step, (pshard, mshard, bshard), (params, opt_state, batch)
+
+    if info["kind"] == "rec_serve":
+        C = info["n_candidates"]
+        item_emb = sds((B, C, D), jnp.float32)
+        step = functools.partial(tt.serve_step, cfg)
+        shardings = (pshard, ubs, ubs, _ns(mesh, (B, C, D), (BATCH_AXES, None, None)))
+        return step, shardings, (params, ub, um, item_emb)
+
+    if info["kind"] == "rec_retrieval":
+        Nc = info["n_candidates"]
+        corpus = sds((Nc, D), jnp.float32)
+        step = functools.partial(tt.retrieval_step, cfg)
+        shardings = (pshard, _ns(mesh, (B, Fu, K), ()), _ns(mesh, (B, Fu, K), ()),
+                     _ns(mesh, (Nc, D), ("model", None)))
+        return step, shardings, (params, ub, um, corpus)
+
+    raise ValueError(info["kind"])
+
+
+# ---------------------------------------------------------------- graph
+def _graph_cell(mod, shape_name, info, mesh):
+    import dataclasses
+
+    from repro.distributed import graph_serve as gs
+
+    cfg = mod.FULL
+    if info.get("denormalize"):
+        cfg = dataclasses.replace(cfg, denormalize_leaf_props=True)
+    n = int(np.prod(list(mesh.shape.values())))
+    state = gs.abstract_state(cfg, n)
+    sshard = gs.state_shardings(cfg, mesh)
+    B = info["batch"]
+    step = gs.build_serve_step(cfg, mesh, use_cache=info["use_cache"], global_batch=B)
+    roots = jax.ShapeDtypeStruct((B,), jnp.int32)
+    rshard = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    return step, (sshard, rshard), (state, roots)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh):
+    """(step_fn, in_shardings, abstract_args) for one dry-run cell."""
+    mod = configs_pkg.get_arch(arch_id)
+    info = mod.SHAPES[shape_name]
+    set_mesh(mesh)
+    if mod.FAMILY == "lm":
+        return _lm_cell(mod, shape_name, info, mesh)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(mod, shape_name, info, mesh)
+    if mod.FAMILY == "recsys":
+        return _rec_cell(mod, shape_name, info, mesh)
+    if mod.FAMILY == "graph":
+        return _graph_cell(mod, shape_name, info, mesh)
+    raise ValueError(mod.FAMILY)

@@ -1,0 +1,26 @@
+"""Transformer LM substrate: GQA + RoPE, dense & MoE FFN, local:global
+attention hybrids, flash-style chunked attention, KV-cache decode."""
+
+from repro.lm.config import LMConfig
+from repro.lm.model import (
+    abstract_params,
+    decode_step,
+    forward,
+    init_kv_cache,
+    init_params,
+    loss_fn,
+    prefill_step,
+    train_step,
+)
+
+__all__ = [
+    "LMConfig",
+    "abstract_params",
+    "init_params",
+    "forward",
+    "loss_fn",
+    "train_step",
+    "decode_step",
+    "prefill_step",
+    "init_kv_cache",
+]

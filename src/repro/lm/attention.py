@@ -1,0 +1,117 @@
+"""Attention: flash-style chunked causal attention (train/prefill) and
+KV-cache decode attention. Pure JAX with nested scans so the lowered HLO
+stays compact and the VMEM-resident working set is O(q_chunk x k_chunk) —
+the same blocking the Pallas kernel (kernels/flash_attention) uses; that
+kernel's ref.py oracle is this function.
+
+GQA is expressed by reshaping queries to [B, S, KV, G, dh] so K/V never
+materialize repeated heads. Sliding-window (local) layers apply a band mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _band_mask(qi, ki, causal: bool, window):
+    """qi, ki: absolute positions [cq], [ck] -> allowed [cq, ck].
+
+    ``window`` may be a traced scalar; window <= 0 means unwindowed (used to
+    mix local/global layers inside one scan)."""
+    m = jnp.ones((qi.shape[0], ki.shape[0]), bool)
+    if causal:
+        m &= ki[None, :] <= qi[:, None]
+    if window is not None:
+        w = jnp.asarray(window)
+        m &= (w <= 0) | (ki[None, :] > qi[:, None] - w)
+    return m
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, H, dh]
+    k: jax.Array,  # [B, Sk, KV, dh]
+    v: jax.Array,  # [B, Sk, KV, dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_chunk: int = 256,
+    k_chunk: int = 256,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax blocked attention. Returns [B, Sq, H, dh]."""
+    B, Sq, H, dh = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % k_chunk == 0
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+    scale = dh**-0.5
+
+    qg = q.reshape(B, Sq, KV, G, dh) * scale
+
+    def q_body(_carry, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, axis=1)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_body(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=1)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            # scores: [B, KV, G, cq, ck]
+            s = jnp.einsum("bqkgd,bckd->bkgqc", q_blk, k_blk, preferred_element_type=jnp.float32)
+            allowed = _band_mask(qpos, kpos, causal, window)
+            s = jnp.where(allowed[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # [B, KV, G, cq, dh] -> [B, cq, H, dh]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))
+    # outs: [nq, B, q_chunk, H, dh] -> [B, Sq, H, dh]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dh)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, dh]
+    k_cache: jax.Array,  # [B, S, KV, dh]
+    v_cache: jax.Array,  # [B, S, KV, dh]
+    pos,  # int32 scalar: number of valid cache positions (inclusive of current)
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against the KV cache. Returns [B, 1, H, dh]."""
+    B, _, H, dh = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    scale = dh**-0.5
+    qg = (q[:, 0] * scale).reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
+    kpos = jnp.arange(S)
+    ok = kpos[None] < pos
+    if window is not None:
+        w = jnp.asarray(window)
+        ok &= (w <= 0) | (kpos[None] > pos - 1 - w)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

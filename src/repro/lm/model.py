@@ -1,0 +1,384 @@
+"""LM forward/training/decode with scan-over-layers and logical sharding.
+
+Everything shape-critical is expressed with ``jax.lax.scan`` over a stacked
+layer pytree so the lowered HLO is O(1) in depth, and all sharding is
+expressed through ``repro.distributed.constrain`` logical specs — the same
+code compiles on one CPU device, the (16,16) pod mesh, and the (2,16,16)
+multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.lm.attention import decode_attention, flash_attention
+from repro.lm.config import LMConfig
+from repro.lm.layers import moe_ffn, rms_norm, rope, swiglu
+
+BATCH = ("pod", "data")  # logical batch axes
+TP = "model"
+
+
+def _layer_shapes(cfg: LMConfig) -> dict:
+    D, H, KV, dh, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_ff
+    L = cfg.n_layers
+    shapes = {
+        "attn_norm": (L, D),
+        "mlp_norm": (L, D),
+        "wq": (L, D, H * dh),
+        "wk": (L, D, KV * dh),
+        "wv": (L, D, KV * dh),
+        "wo": (L, H * dh, D),
+    }
+    if cfg.is_moe:
+        shapes.update(
+            router=(L, D, cfg.n_experts),
+            we1=(L, cfg.n_experts, D, F),
+            we3=(L, cfg.n_experts, D, F),
+            we2=(L, cfg.n_experts, F, D),
+        )
+        if cfg.n_shared_experts:
+            Fs = F * cfg.n_shared_experts
+            shapes.update(ws1=(L, D, Fs), ws3=(L, D, Fs), ws2=(L, Fs, D))
+    else:
+        shapes.update(w1=(L, D, F), w3=(L, D, F), w2=(L, F, D))
+    return shapes
+
+
+def param_shapes(cfg: LMConfig) -> dict:
+    return {
+        "embed": (cfg.vocab, cfg.d_model),
+        "unembed": (cfg.d_model, cfg.vocab),
+        "final_norm": (cfg.d_model,),
+        "layers": _layer_shapes(cfg),
+    }
+
+
+def abstract_params(cfg: LMConfig):
+    """ShapeDtypeStruct pytree — the dry-run's zero-allocation stand-in."""
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s, dt), param_shapes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init_params(cfg: LMConfig, key):
+    """Real initialization (smoke tests / the 100M example run)."""
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+    dt = jnp.dtype(cfg.dtype)
+
+    def init_one(k, shape):
+        if len(shape) == 1 or shape[-1] == 1:
+            return jnp.ones(shape, dt)  # norms
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return (jax.random.normal(k, shape, jnp.float32) * fan_in**-0.5).astype(dt)
+
+    return jax.tree_util.tree_unflatten(treedef, [init_one(k, s) for k, s in zip(keys, flat)])
+
+
+def param_spec_rule(cfg: LMConfig):
+    """Logical PartitionSpecs by param name (validated/dropped per mesh)."""
+
+    def rule(path: str, leaf):
+        if "embed'" in path or path.endswith("embed']"):
+            return ("model", None) if "unembed" not in path else (None, "model")
+        if "unembed" in path:
+            return (None, "model")
+        if "norm" in path:
+            return (None,)
+        if any(k in path for k in ("wq", "wk", "wv", "w1", "w3", "ws1", "ws3")):
+            return (None, None, "model")
+        if any(k in path for k in ("wo", "w2", "ws2")):
+            return (None, "model", None)
+        if "router" in path:
+            return (None, None, None)
+        if any(k in path for k in ("we1", "we3")):
+            # expert parallel over 'model' when divisible, else TP on F
+            if cfg.n_experts % 16 == 0:
+                return (None, "model", None, None)
+            return (None, None, None, "model")
+        if "we2" in path:
+            if cfg.n_experts % 16 == 0:
+                return (None, "model", None, None)
+            return (None, None, "model", None)
+        return ()
+
+    return rule
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _block(cfg: LMConfig, x, lp, is_local, positions, layer_aux):
+    """One transformer block (scanned). x: [B, S, D].
+
+    Layout (§Perf iteration 5 — sequence parallel + context parallel):
+    the residual stream, norms and FFN run sharded along S over 'model'
+    (so every elementwise/norm op and its remat recompute touch 1/TP of
+    the activations); attention keeps q S-sharded while k/v gather to
+    full S (GQA KV heads are small), so scores never reshard inside the
+    flash scans. Iterations 1-4 (head-sharded activations / no
+    constraints / bf16-norm) were all refuted — see EXPERIMENTS.md §Perf.
+    """
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    # MoE blocks keep the batch-sharded residual: the [B,S,D]->[B*S,D]
+    # dispatch reshape cannot carry an S-sharding (GSPMD gathers), so SP
+    # only pays off for dense blocks (measured: kimi/grok regressed 2x
+    # under SP; glm4/yi/gemma3 improved 2.8-4.5x).
+    seq_par = not cfg.is_moe
+    res_spec = (BATCH, TP, None) if seq_par else (BATCH, None, None)
+    x = constrain(x, *res_spec)
+    h = rms_norm(x, lp["attn_norm"])
+    q = (h @ lp["wq"]).reshape(B, S, H, dh)
+    k = (h @ lp["wk"]).reshape(B, S, KV, dh)
+    v = (h @ lp["wv"]).reshape(B, S, KV, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if seq_par:
+        q = constrain(q, BATCH, TP, None, None)  # context parallel q
+        k = constrain(k, BATCH, None, None, None)  # full-S KV (GQA: small)
+        v = constrain(v, BATCH, None, None, None)
+    else:
+        q = constrain(q, BATCH, None, TP, None)  # head-TP (baseline layout)
+        k = constrain(k, BATCH, None, TP, None)
+    window = None
+    if cfg.sliding_window is not None:
+        # traced per-layer selector: 0 disables the band mask
+        window = jnp.where(is_local, cfg.sliding_window, 0)
+    # §Perf iteration 6: under sequence parallelism the outer q-scan's
+    # dynamic-slice walks a sharded axis (re-gathering q per block); with
+    # S-sharded q each device's rows are one chunk — skip the q-scan and
+    # let the k-scan bound memory.
+    from repro.distributed import active_mesh
+
+    q_chunk = S if (seq_par and active_mesh() is not None) else cfg.attn_q_chunk
+    attn = flash_attention(
+        q, k, v, causal=True, window=window,
+        q_chunk=q_chunk, k_chunk=cfg.attn_k_chunk,
+    )
+    if seq_par:
+        attn = constrain(attn, BATCH, TP, None, None)
+    x = x + constrain(attn.reshape(B, S, H * dh) @ lp["wo"], *res_spec)
+
+    h = rms_norm(x, lp["mlp_norm"])
+    if cfg.is_moe:
+        flat = h.reshape(B * S, D)
+        y, aux = moe_ffn(
+            flat, lp["router"], lp["we1"], lp["we3"], lp["we2"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        )
+        if cfg.n_shared_experts:
+            y = y + swiglu(flat, lp["ws1"], lp["ws3"], lp["ws2"])
+        y = y.reshape(B, S, D)
+        layer_aux = layer_aux + aux
+    else:
+        y = swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+    x = x + constrain(y, *res_spec)
+    # pin the scan carry's sharding so the while-loop body has a
+    # consistent fixed point
+    x = constrain(x, *res_spec)
+    return x, layer_aux
+
+
+def forward(cfg: LMConfig, params, tokens, positions=None):
+    """tokens [B, S] -> final hidden states [B, S, D] (+ MoE aux loss)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, BATCH, None, None)
+    is_local = jnp.asarray(
+        [cfg.layer_is_local(i) for i in range(cfg.n_layers)], bool
+    )
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, loc = xs
+        fn = _block
+        if cfg.remat:
+            fn = jax.checkpoint(
+                functools.partial(_block, cfg),
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+            x, aux = fn(x, lp, loc, positions, aux)
+        else:
+            x, aux = fn(cfg, x, lp, loc, positions, aux)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0)), (params["layers"], is_local))
+    return rms_norm(x, params["final_norm"]), aux
+
+
+def loss_fn(cfg: LMConfig, params, tokens, labels):
+    """Chunked softmax cross-entropy (never materializes [B, S, V])."""
+    h, aux = forward(cfg, params, tokens)
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    assert S % C == 0
+    n = S // C
+
+    def chunk(carry, i):
+        hs = jax.lax.dynamic_slice_in_dim(h, i * C, C, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * C, C, axis=1)
+        logits = hs @ params["unembed"]
+        logits = constrain(logits, BATCH, None, TP).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk, jnp.float32(0), jnp.arange(n))
+    loss = total / (B * S)
+    if cfg.is_moe:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss
+
+
+def train_step(cfg: LMConfig, optimizer):
+    """Build the jit-able (params, opt_state, batch) -> (params', state',
+    metrics) step. ``optimizer`` is a repro.optim GradientTransform."""
+
+    def step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg, tokens=tokens, labels=labels))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [L, B, S, KV, dh]
+    v: jax.Array
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, abstract=False):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    dt = jnp.dtype(cfg.dtype)
+    if abstract:
+        return KVCache(jax.ShapeDtypeStruct(shape, dt), jax.ShapeDtypeStruct(shape, dt))
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def kv_cache_spec_rule(cfg: LMConfig):
+    """KV cache sharding: batch over (pod,data); heads over model when they
+    divide, else the sequence axis (context parallelism for long KV)."""
+
+    def rule(path: str, leaf):
+        if cfg.n_kv_heads % 16 == 0:
+            return (None, BATCH, None, "model", None)
+        return (None, BATCH, "model", None, None)
+
+    return rule
+
+
+def decode_step(cfg: LMConfig, params, cache: KVCache, tokens, pos):
+    """One token for every sequence. tokens [B, 1]; pos scalar int32 =
+    current position (cache valid for [0, pos)). Returns (next_logits_argmax
+    [B, 1], cache')."""
+    B = tokens.shape[0]
+    H, KV, dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))  # [B, 1, D]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    is_local = jnp.asarray([cfg.layer_is_local(i) for i in range(cfg.n_layers)], bool)
+
+    def body(x, xs):
+        lp, kc, vc, loc = xs
+        h = rms_norm(x, lp["attn_norm"])
+        q = rope((h @ lp["wq"]).reshape(B, 1, H, dh), positions, cfg.rope_theta)
+        k = rope((h @ lp["wk"]).reshape(B, 1, KV, dh), positions, cfg.rope_theta)
+        v = (h @ lp["wv"]).reshape(B, 1, KV, dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        window = None
+        if cfg.sliding_window is not None:
+            window = jnp.where(loc, cfg.sliding_window, 0)  # 0 = unwindowed
+        attn = decode_attention(q, kc, vc, pos + 1, window=window)
+        x = x + attn.reshape(B, 1, H * dh) @ lp["wo"]
+        h2 = rms_norm(x, lp["mlp_norm"])
+        if cfg.is_moe:
+            flat = h2.reshape(B, D)
+            y, _ = moe_ffn(
+                flat, lp["router"], lp["we1"], lp["we3"], lp["we2"],
+                top_k=cfg.top_k, capacity_factor=4.0,
+            )
+            if cfg.n_shared_experts:
+                y = y + swiglu(flat, lp["ws1"], lp["ws3"], lp["ws2"])
+            y = y.reshape(B, 1, D)
+        else:
+            y = swiglu(h2, lp["w1"], lp["w3"], lp["w2"])
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], cache.k, cache.v, is_local)
+    )
+    h = rms_norm(x, params["final_norm"])
+    logits = (h @ params["unembed"]).astype(jnp.float32)
+    logits = constrain(logits, BATCH, None, TP)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, KVCache(k_new, v_new)
+
+
+def prefill_step(cfg: LMConfig, params, tokens):
+    """Prefill: full forward over the prompt, returning last-position logits
+    argmax and the populated KV cache (built layer-by-layer in the scan)."""
+    B, S = tokens.shape
+    H, KV, dh, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain(x, BATCH, None, None)
+    is_local = jnp.asarray([cfg.layer_is_local(i) for i in range(cfg.n_layers)], bool)
+
+    def body(x, xs):
+        lp, loc = xs
+        h = rms_norm(x, lp["attn_norm"])
+        q = rope((h @ lp["wq"]).reshape(B, S, H, dh), positions, cfg.rope_theta)
+        k = rope((h @ lp["wk"]).reshape(B, S, KV, dh), positions, cfg.rope_theta)
+        v = (h @ lp["wv"]).reshape(B, S, KV, dh)
+        window = None
+        if cfg.sliding_window is not None:
+            window = jnp.where(loc, cfg.sliding_window, 0)
+        attn = flash_attention(
+            q, k, v, causal=True, window=window,
+            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
+        )
+        x = x + attn.reshape(B, S, H * dh) @ lp["wo"]
+        h2 = rms_norm(x, lp["mlp_norm"])
+        if cfg.is_moe:
+            flat = h2.reshape(B * S, D)
+            y, _ = moe_ffn(
+                flat, lp["router"], lp["we1"], lp["we3"], lp["we2"],
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            )
+            if cfg.n_shared_experts:
+                y = y + swiglu(flat, lp["ws1"], lp["ws3"], lp["ws2"])
+            y = y.reshape(B, S, D)
+        else:
+            y = swiglu(h2, lp["w1"], lp["w3"], lp["w2"])
+        return x + y, (k.astype(x.dtype), v.astype(x.dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], is_local))
+    h = rms_norm(x[:, -1:], params["final_norm"])
+    logits = (h @ params["unembed"]).astype(jnp.float32)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, KVCache(ks, vs)

@@ -1,0 +1,15 @@
+"""Optimizers and distributed-optimization tricks (AdamW, ZeRO-1 sharding,
+int8 error-feedback gradient compression, clipping, schedules)."""
+
+from repro.optim.adamw import GradientTransform, adamw, clip_by_global_norm, chain
+from repro.optim.compression import int8_compress_grads
+from repro.optim.schedule import cosine_schedule
+
+__all__ = [
+    "GradientTransform",
+    "adamw",
+    "chain",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "int8_compress_grads",
+]

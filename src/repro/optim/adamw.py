@@ -1,0 +1,90 @@
+"""Minimal optax-style gradient transforms (no external deps).
+
+AdamW keeps fp32 moments regardless of param dtype; with ZeRO-1 the moment
+pytrees are sharded by ``repro.distributed.add_data_axis`` at the jit
+boundary (see launch/train.py) — the transform itself is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransform(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def chain(*transforms: GradientTransform) -> GradientTransform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransform(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), state
+
+    return GradientTransform(init, update)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object  # pytree like params, fp32
+    v: object
+
+
+def adamw(
+    lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0, moment_dtype=jnp.float32
+) -> GradientTransform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return AdamWState(
+            step=jnp.int32(0),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g32).astype(moment_dtype)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)).astype(moment_dtype)
+            mhat = m.astype(jnp.float32) / (1 - b1**step.astype(jnp.float32))
+            vhat = v.astype(jnp.float32) / (1 - b2**step.astype(jnp.float32))
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return updates, AdamWState(step=step, m=new_m, v=new_v)
+
+    return GradientTransform(init, update)

@@ -1,0 +1,28 @@
+"""RecSys substrate: two-tower retrieval with manual EmbeddingBag
+(jnp.take + segment_sum — JAX has no native EmbeddingBag) and in-batch
+sampled softmax with logQ correction."""
+
+from repro.recsys.config import TwoTowerConfig
+from repro.recsys.embedding import embedding_bag, embedding_bag_flat
+from repro.recsys.twotower import (
+    init_params as tt_init,
+    item_tower,
+    loss_fn as tt_loss,
+    retrieval_step,
+    serve_step as tt_serve_step,
+    train_step as tt_train_step,
+    user_tower,
+)
+
+__all__ = [
+    "TwoTowerConfig",
+    "embedding_bag",
+    "embedding_bag_flat",
+    "tt_init",
+    "tt_loss",
+    "tt_train_step",
+    "tt_serve_step",
+    "retrieval_step",
+    "user_tower",
+    "item_tower",
+]

@@ -1,0 +1,48 @@
+"""EmbeddingBag in JAX: gather + segment-reduce.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse — the lookup IS part of the
+system (kernel_taxonomy §RecSys). Two APIs:
+
+- ``embedding_bag``: padded bags [B, K] + mask (the model-facing form; maps
+  to one big ``jnp.take`` + masked sum — TPU-friendly, fully static).
+- ``embedding_bag_flat``: (ids [NNZ], segment_ids [NNZ]) ragged form via
+  ``jax.ops.segment_sum`` (the kernel regime; the Pallas embedding_bag
+  kernel implements this layout and ref's against it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table, ids, mask=None, *, mode: str = "sum", weights=None):
+    """table [V, D]; ids [B, K] padded; mask [B, K]. Returns [B, D]."""
+    emb = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1), axis=0)
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if mask is not None:
+        emb = jnp.where(mask[..., None], emb, 0)
+    out = jnp.sum(emb, axis=-2)
+    if mode == "mean":
+        cnt = (
+            jnp.sum(mask, axis=-1, keepdims=True).astype(out.dtype)
+            if mask is not None
+            else jnp.full(out.shape[:-1] + (1,), ids.shape[-1], out.dtype)
+        )
+        out = out / jnp.maximum(cnt, 1)
+    return out
+
+
+def embedding_bag_flat(table, ids, segment_ids, n_bags: int, *, mode: str = "sum", weights=None):
+    """Ragged form: ids/segment_ids [NNZ]. Returns [n_bags, D]."""
+    emb = jnp.take(table, jnp.clip(ids, 0, table.shape[0] - 1), axis=0)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    out = jax.ops.segment_sum(emb, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, out.dtype), segment_ids, num_segments=n_bags
+        )
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out

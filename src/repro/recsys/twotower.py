@@ -1,0 +1,140 @@
+"""Two-tower retrieval: towers, in-batch sampled softmax, serve paths.
+
+Embedding tables row-shard over 'model'; batch shards over (pod, data); the
+in-batch logits matrix [B, B] shards (batch, model) so the 64k-batch
+training shape never materializes more than a tile per device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.recsys.config import TwoTowerConfig
+from repro.recsys.embedding import embedding_bag
+
+BATCH = ("pod", "data")
+
+
+def param_shapes(cfg: TwoTowerConfig) -> dict:
+    d = cfg.embed_dim
+    shapes = {
+        "user_table": (cfg.user_vocab, d),
+        "item_table": (cfg.item_vocab, d),
+    }
+    for tower, fields in (("user", cfg.user_fields), ("item", cfg.item_fields)):
+        last = fields * d
+        for i, h in enumerate(cfg.tower_mlp):
+            shapes[f"{tower}_w{i}"] = (last, h)
+            shapes[f"{tower}_b{i}"] = (h,)
+            last = h
+    return shapes
+
+
+def abstract_params(cfg: TwoTowerConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        k: jax.ShapeDtypeStruct(s, dt) for k, s in param_shapes(cfg).items()
+    }
+
+
+def init_params(cfg: TwoTowerConfig, key):
+    shapes = param_shapes(cfg)
+    ks = jax.random.split(key, len(shapes))
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    for k, (name, shape) in zip(ks, shapes.items()):
+        if name.endswith(tuple("0123456789")) and "_b" in name:
+            out[name] = jnp.zeros(shape, dt)
+        else:
+            fan = shape[0]
+            out[name] = (jax.random.normal(k, shape, jnp.float32) * fan**-0.5).astype(dt)
+    return out
+
+
+def param_spec_rule(cfg: TwoTowerConfig):
+    def rule(path: str, leaf):
+        if "table" in path:
+            return ("model", None)  # row-sharded embedding tables
+        if "_w" in path:
+            return (None, "model")
+        return (None,)
+
+    return rule
+
+
+def _tower(cfg, params, prefix, bags, mask, table):
+    d = cfg.embed_dim
+    fields = []
+    for f in range(bags.shape[1]):
+        fields.append(embedding_bag(table, bags[:, f], mask[:, f], mode="mean"))
+    h = jnp.concatenate(fields, axis=-1)
+    h = constrain(h, BATCH, None)
+    i = 0
+    while f"{prefix}_w{i}" in params:
+        h = h @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if f"{prefix}_w{i+1}" in params:
+            h = jax.nn.relu(h)
+        i += 1
+    # L2-normalized embeddings (standard for dot retrieval)
+    return h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+
+
+def user_tower(cfg, params, user_bags, user_mask):
+    """user_bags [B, F_u, K] int32, user_mask same bool -> [B, D]."""
+    return _tower(cfg, params, "user", user_bags, user_mask, params["user_table"])
+
+
+def item_tower(cfg, params, item_bags, item_mask):
+    return _tower(cfg, params, "item", item_bags, item_mask, params["item_table"])
+
+
+def loss_fn(cfg: TwoTowerConfig, params, batch):
+    """In-batch sampled softmax with logQ correction.
+
+    batch: dict(user_bags, user_mask, item_bags, item_mask, item_logq [B]).
+    """
+    u = user_tower(cfg, params, batch["user_bags"], batch["user_mask"])
+    it = item_tower(cfg, params, batch["item_bags"], batch["item_mask"])
+    logits = (u @ it.T) / cfg.temperature
+    logits = constrain(logits, BATCH, "model").astype(jnp.float32)
+    logits = logits - batch["item_logq"][None, :]  # logQ correction
+    B = logits.shape[0]
+    labels = jnp.arange(B)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(cfg: TwoTowerConfig, optimizer):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def serve_step(cfg: TwoTowerConfig, params, user_bags, user_mask, item_emb):
+    """Online scoring: users [B] against their per-request candidate items
+    [B, C, D] (pre-embedded); returns top-1 scores + ids. serve_p99 /
+    serve_bulk shapes."""
+    u = user_tower(cfg, params, user_bags, user_mask)  # [B, D]
+    scores = jnp.einsum("bd,bcd->bc", u, item_emb)
+    best = jnp.argmax(scores, axis=-1)
+    return scores, best
+
+
+def retrieval_step(cfg: TwoTowerConfig, params, user_bags, user_mask, corpus_emb, k: int = 100):
+    """retrieval_cand: one (or few) queries against a 1M-item corpus
+    [N, D] — a single batched matmul + top-k, never a loop."""
+    u = user_tower(cfg, params, user_bags, user_mask)  # [B, D]
+    scores = u @ corpus_emb.T  # [B, N]
+    scores = constrain(scores, BATCH, "model")
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx

@@ -1,0 +1,21 @@
+"""Shared tensor utilities: sentinels, hashing, masked stream compaction."""
+
+from repro.utils.helpers import (
+    PROP_MISSING,
+    NULL_ID,
+    compact_masked,
+    dedup_masked,
+    hash_mix,
+    hash_rows,
+    take_along0,
+)
+
+__all__ = [
+    "PROP_MISSING",
+    "NULL_ID",
+    "compact_masked",
+    "dedup_masked",
+    "hash_mix",
+    "hash_rows",
+    "take_along0",
+]

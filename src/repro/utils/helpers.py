@@ -1,0 +1,100 @@
+"""Low-level tensor helpers used across the graph store, cache, and engine.
+
+Everything here is pure-functional, fixed-shape, and jit/vmap/shard_map
+friendly. We deliberately stay in 32-bit: slot-selection and fingerprint
+hashes are two *independently seeded* 32-bit multiplicative mixes, which
+together give 64 effective bits — the collision budget is documented in
+DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel for a missing property value (paper: a predicate on a missing
+# property never qualifies; wildcards require presence — Algorithm 7 line 2).
+PROP_MISSING = jnp.int32(-(2**31) + 1)
+# Sentinel for an absent id (padding in frontiers, values, probe results).
+NULL_ID = jnp.int32(-1)
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+_MIX1 = jnp.uint32(0x85EBCA6B)
+_MIX2 = jnp.uint32(0xC2B2AE35)
+
+
+def hash_mix(h, x):
+    """One round of a murmur3-style 32-bit mix: fold ``x`` into state ``h``."""
+    h = jnp.asarray(h, jnp.uint32)
+    x = jnp.asarray(x, jnp.uint32)
+    x = x * _GOLDEN
+    x = (x << 15) | (x >> 17)
+    x = x * _MIX1
+    h = h ^ x
+    h = (h << 13) | (h >> 19)
+    return h * jnp.uint32(5) + jnp.uint32(0xE6546B64)
+
+
+def _finalize(h):
+    h = h ^ (h >> 16)
+    h = h * _MIX1
+    h = h ^ (h >> 13)
+    h = h * _MIX2
+    return h ^ (h >> 16)
+
+
+def hash_rows(cols, seed: int):
+    """Hash a sequence of int32 arrays (same shape) element-wise into uint32.
+
+    ``cols`` is a list/tuple of broadcast-compatible int32 arrays; each array
+    contributes one mix round. Different ``seed`` values give independent
+    hash families (slot hash vs fingerprint).
+    """
+    h = jnp.uint32(seed)
+    for c in cols:
+        h = hash_mix(h, jnp.asarray(c).astype(jnp.uint32))
+    return _finalize(h)
+
+
+def compact_masked(vals, mask, out_width: int, fill=NULL_ID):
+    """Stream-compact ``vals`` where ``mask`` along the last axis.
+
+    Works on [..., W] inputs; returns ([..., out_width] vals, [..., out_width]
+    mask). Order-preserving. Entries beyond ``out_width`` are dropped (the
+    caller sees the returned count saturate).
+    """
+    mask = mask.astype(bool)
+    idx = jnp.cumsum(mask, axis=-1) - 1  # destination slot per kept element
+    dest = jnp.where(mask, idx, out_width)  # dropped -> OOB, scatter-drop
+    out = jnp.full(vals.shape[:-1] + (out_width,), fill, vals.dtype)
+    if vals.ndim == 1:
+        out = out.at[dest].set(vals, mode="drop")
+        n = jnp.minimum(jnp.sum(mask, -1), out_width)
+        omask = jnp.arange(out_width) < n
+        return out, omask
+    # batched: scatter along last axis with explicit leading index grid
+    flat_vals = vals.reshape(-1, vals.shape[-1])
+    flat_dest = dest.reshape(-1, vals.shape[-1])
+    flat_out = jnp.full((flat_vals.shape[0], out_width), fill, vals.dtype)
+    rows = jnp.arange(flat_vals.shape[0])[:, None]
+    flat_out = flat_out.at[rows, flat_dest].set(flat_vals, mode="drop")
+    out = flat_out.reshape(vals.shape[:-1] + (out_width,))
+    n = jnp.minimum(jnp.sum(mask, -1), out_width)
+    omask = jnp.arange(out_width) < n[..., None]
+    return out, omask
+
+
+def dedup_masked(vals, mask):
+    """Mask out duplicate values along the last axis (keeps first occurrence).
+
+    O(W^2) pairwise compare — W is a small static frontier width.
+    """
+    v = jnp.where(mask, vals, NULL_ID)
+    eq = v[..., :, None] == v[..., None, :]  # [..., W, W]
+    earlier = jnp.tril(jnp.ones(eq.shape[-2:], bool), k=-1)
+    dup = jnp.any(eq & earlier, axis=-1)
+    return mask & ~dup
+
+
+def take_along0(table, idx):
+    """``table[idx]`` with idx clipped to valid range (caller masks)."""
+    return jnp.take(table, jnp.clip(idx, 0, table.shape[0] - 1), axis=0)

@@ -1,0 +1,145 @@
+"""Shared fixtures: the watch-list/listing world of the paper's Figure 1."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ANY_LABEL,
+    DIR_IN,
+    DIR_OUT,
+    OP_EQ,
+    WILDCARD,
+    CacheSpec,
+    EngineSpec,
+    Hop,
+    QueryPlan,
+    Template,
+    empty_cache,
+    make_pred,
+    make_template_table,
+    FINAL_IDS,
+)
+from repro.core.lifecycle import GraphQP, ServiceCoordinator
+from repro.graphstore import StoreSpec, ingest
+from repro.utils import PROP_MISSING
+
+MISSING = int(PROP_MISSING)
+
+# labels
+L_WATCHLIST, L_LISTING = 0, 1
+E_INCLUDES = 0
+# props: vprop0 = Status (listings), vprop1 = user-visible ListingId (unique)
+P_STATUS, P_LISTING_ID = 0, 1
+# eprop0 = IsActive
+P_ISACTIVE = 0
+
+
+def build_world(n_watchlists=4, n_listings=12, seed=0, spec=None):
+    """Random small watch-list world; returns (spec, store, numpy arrays)."""
+    rng = np.random.default_rng(seed)
+    spec = spec or StoreSpec(v_cap=64, e_cap=512, n_vprops=2, n_eprops=1, recent_cap=64)
+    nv = n_watchlists + n_listings
+    vlabels = np.array([L_WATCHLIST] * n_watchlists + [L_LISTING] * n_listings)
+    vprops = np.full((nv, spec.n_vprops), MISSING, np.int64)
+    listing_ids = np.arange(n_watchlists, nv)
+    vprops[listing_ids, P_STATUS] = rng.integers(0, 2, n_listings)
+    vprops[listing_ids, P_LISTING_ID] = 1000 + listing_ids  # unique
+    es, ed, ep = [], [], []
+    for w in range(n_watchlists):
+        members = rng.choice(listing_ids, size=rng.integers(2, n_listings), replace=False)
+        for m in members:
+            es.append(w)
+            ed.append(int(m))
+            ep.append([int(rng.integers(0, 2))])
+    elabels = [E_INCLUDES] * len(es)
+    store = ingest(spec, vlabels, vprops, es, ed, elabels, np.array(ep))
+    return spec, store
+
+
+SQ1 = Template(  # watch-list -includes(IsActive=?)-> listing(Status=?)
+    name="SQ1",
+    direction=DIR_OUT,
+    edge_label=E_INCLUDES,
+    root=(L_WATCHLIST, []),
+    edge=(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+    leaf=(L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]),
+)
+SQ2 = Template(  # listing <-includes(IsActive=?)- watch-list   (reverse hop)
+    name="SQ2",
+    direction=DIR_IN,
+    edge_label=E_INCLUDES,
+    root=(L_LISTING, []),
+    edge=(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+    leaf=(L_WATCHLIST, []),
+)
+TEMPLATES = [SQ1, SQ2]
+TPL_META = {0: (DIR_OUT, E_INCLUDES), 1: (DIR_IN, E_INCLUDES)}
+
+
+def sq1_hop(is_active=1, status=0):
+    return Hop(
+        direction=DIR_OUT,
+        edge_label=E_INCLUDES,
+        pr=make_pred(L_WATCHLIST, []),
+        pe=make_pred(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+        pl=make_pred(L_LISTING, [(P_STATUS, OP_EQ, WILDCARD)]),
+        tpl_idx=0,
+        params=np.array([is_active, MISSING, MISSING, status, MISSING, MISSING], np.int32),
+    )
+
+
+def sq2_hop(is_active=1):
+    return Hop(
+        direction=DIR_IN,
+        edge_label=E_INCLUDES,
+        pr=make_pred(L_LISTING, []),
+        pe=make_pred(ANY_LABEL, [(P_ISACTIVE, OP_EQ, WILDCARD)]),
+        pl=make_pred(L_WATCHLIST, []),
+        tpl_idx=1,
+        params=np.array([is_active, MISSING, MISSING, MISSING, MISSING, MISSING], np.int32),
+    )
+
+
+def enabled_ttable():
+    ttable = make_template_table(TEMPLATES)
+    qp = GraphQP("qp0")
+    sc = ServiceCoordinator([qp])
+    for t in range(len(TEMPLATES)):
+        sc.register(t)
+        sc.enable(t)
+    assert sc.check_safety()
+    return qp.ttable_masks(ttable, len(TEMPLATES)), sc, qp
+
+
+@pytest.fixture
+def world():
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+    return dict(
+        spec=spec,
+        store=store,
+        espec=espec,
+        cspec=cspec,
+        cache=empty_cache(cspec),
+        ttable=ttable,
+        sc=sc,
+        qp=qp,
+    )
+
+
+def fig1_plan(is_active=1, status=0):
+    """The paper's Figure 1 query."""
+    return QueryPlan(hops=(sq1_hop(is_active, status),), final=FINAL_IDS)
+
+
+def common_watchlist_plan():
+    """§2's two-hop query: other active listings sharing a watch-list."""
+    return QueryPlan(
+        hops=(sq2_hop(1), sq1_hop(1, 0)),
+        final=FINAL_IDS,
+        post_filter=("prop_neq_root", P_LISTING_ID),
+    )

@@ -1,0 +1,172 @@
+"""THE system invariant (hypothesis): strong consistency of the cache.
+
+After *any* interleaving of gR-Txs, asynchronous cache population, and
+gRW-Txs (write-around or write-through), every entry the cache will serve
+must equal a fresh recomputation of its one-hop sub-query against the
+current database state — the paper's "no stale or inconsistent results"
+requirement. We enumerate the full reachable key space every step and
+compare against the pure-python oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from conftest import (
+    E_INCLUDES,
+    L_LISTING,
+    L_WATCHLIST,
+    MISSING,
+    P_ISACTIVE,
+    P_STATUS,
+    TPL_META,
+    build_world,
+    enabled_ttable,
+    fig1_plan,
+    sq2_hop,
+)
+from repro.core import (
+    CacheSpec,
+    EngineSpec,
+    GraphEngine,
+    QueryPlan,
+    cache_lookup,
+    empty_cache,
+    run_grw_tx,
+    FINAL_IDS,
+)
+from repro.core.keys import PARAM_LEN
+from repro.core.oracle import HostStore, onehop_oracle
+from repro.core.population import CachePopulator
+from repro.graphstore import compact, make_mutation_batch
+
+N_W, N_L = 3, 6
+NV = N_W + N_L
+
+op = st.one_of(
+    st.tuples(st.just("query"), st.integers(0, NV - 1), st.integers(0, 1), st.integers(0, 1)),
+    st.tuples(st.just("query2"), st.integers(N_W, NV - 1), st.integers(0, 1)),
+    st.tuples(st.just("populate")),
+    st.tuples(st.just("set_status"), st.integers(N_W, NV - 1), st.integers(0, 1)),
+    st.tuples(st.just("set_isactive"), st.integers(0, 63), st.integers(0, 1)),
+    st.tuples(st.just("add_edge"), st.integers(0, N_W - 1), st.integers(N_W, NV - 1), st.integers(0, 1)),
+    st.tuples(st.just("del_edge"), st.integers(0, 63)),
+    st.tuples(st.just("del_vertex"), st.integers(0, NV - 1)),
+    st.tuples(st.just("compact")),
+)
+
+
+def _enumerate_keys(espec, cache, ttable, hs, v_cap):
+    """Check every reachable cache key against the oracle."""
+    from conftest import sq1_hop
+
+    combos0 = [(ia, stt) for ia in (0, 1) for stt in (0, 1)]
+    roots = np.arange(v_cap, dtype=np.int32)
+    for ia, stt in combos0:
+        params = np.full((v_cap, PARAM_LEN), MISSING, np.int32)
+        params[:, 0] = ia
+        params[:, 3] = stt
+        hit, vals, lmask, _ = cache_lookup(
+            espec.cache, cache, jnp.zeros(v_cap, jnp.int32), jnp.asarray(roots), jnp.asarray(params)
+        )
+        hit = np.asarray(hit)
+        vals = np.asarray(vals)
+        lmask = np.asarray(lmask)
+        h = sq1_hop(ia, stt)
+        for r in np.nonzero(hit)[0]:
+            got = set(vals[r][lmask[r]].tolist())
+            want = onehop_oracle(
+                hs, h.direction, h.edge_label, h.pr, h.pe, h.pl, int(r), h.params
+            )
+            assert got == want, f"SQ1 root={r} ia={ia} st={stt}: cache {got} != db {want}"
+    for ia in (0, 1):
+        params = np.full((v_cap, PARAM_LEN), MISSING, np.int32)
+        params[:, 0] = ia
+        hit, vals, lmask, _ = cache_lookup(
+            espec.cache, cache, jnp.ones(v_cap, jnp.int32), jnp.asarray(roots), jnp.asarray(params)
+        )
+        hit = np.asarray(hit)
+        vals = np.asarray(vals)
+        lmask = np.asarray(lmask)
+        h = sq2_hop(ia)
+        for r in np.nonzero(hit)[0]:
+            got = set(vals[r][lmask[r]].tolist())
+            want = onehop_oracle(
+                hs, h.direction, h.edge_label, h.pr, h.pe, h.pl, int(r), h.params
+            )
+            assert got == want, f"SQ2 root={r} ia={ia}: cache {got} != db {want}"
+
+
+@settings(
+    max_examples=8,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+@given(
+    seed=st.integers(0, 10_000),
+    ops=st.lists(op, min_size=1, max_size=12),
+    policy=st.sampled_from(["write-around", "write-through"]),
+)
+def test_cache_always_consistent(seed, ops, policy):
+    spec, store = build_world(N_W, N_L, seed=seed)
+    cspec = CacheSpec(capacity=512, probes=8, max_leaves=8, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=16, frontier=16)
+    ttable, _, _ = enabled_ttable()
+    cache = empty_cache(cspec)
+    pop = CachePopulator(espec, TPL_META)
+    engines = {}
+
+    def engine(key, plan):
+        if key not in engines:
+            engines[key] = GraphEngine(espec, plan, use_cache=True)
+        return engines[key]
+
+    for o in ops:
+        kind = o[0]
+        if kind == "query":
+            _, root, ia, stt = o
+            eng = engine(("q1", ia, stt), fig1_plan(ia, stt))
+            res, misses, _ = eng.run(store, cache, ttable, np.array([root], np.int32))
+            pop.queue.push(misses)
+            hs = HostStore(store)
+            hop = fig1_plan(ia, stt).hops[0]
+            want = onehop_oracle(
+                hs, hop.direction, hop.edge_label, hop.pr, hop.pe, hop.pl, root, hop.params
+            )
+            got = set(res[0][res[0] >= 0].tolist())
+            assert got == want
+        elif kind == "query2":
+            _, root, ia = o
+            plan = QueryPlan(hops=(sq2_hop(ia),), final=FINAL_IDS)
+            eng = engine(("q2", ia), plan)
+            _, misses, _ = eng.run(store, cache, ttable, np.array([root], np.int32))
+            pop.queue.push(misses)
+        elif kind == "populate":
+            cache = pop.drain(store, store, cache, ttable)
+        elif kind == "set_status":
+            mb = make_mutation_batch(spec, set_vprops=[(o[1], P_STATUS, o[2])])
+            store, cache, _ = run_grw_tx(espec, store, cache, ttable, mb, policy=policy)
+        elif kind == "set_isactive":
+            eid = o[1] % max(1, int(store.e_len))
+            mb = make_mutation_batch(spec, set_eprops=[(eid, P_ISACTIVE, o[2])])
+            store, cache, _ = run_grw_tx(espec, store, cache, ttable, mb, policy=policy)
+        elif kind == "add_edge":
+            mb = make_mutation_batch(
+                spec, new_edges=[(o[1], o[2], E_INCLUDES, [o[3]])]
+            )
+            store, cache, _ = run_grw_tx(espec, store, cache, ttable, mb, policy=policy)
+        elif kind == "del_edge":
+            eid = o[1] % max(1, int(store.e_len))
+            mb = make_mutation_batch(spec, del_edges=[eid])
+            store, cache, _ = run_grw_tx(espec, store, cache, ttable, mb, policy=policy)
+        elif kind == "del_vertex":
+            mb = make_mutation_batch(spec, del_vertices=[o[1]])
+            store, cache, _ = run_grw_tx(espec, store, cache, ttable, mb, policy=policy)
+        elif kind == "compact":
+            store = compact(spec, store)
+        # the invariant — after every single operation
+        _enumerate_keys(espec, cache, ttable, HostStore(store), NV)
+    # final drain + check
+    cache = pop.drain(store, store, cache, ttable)
+    _enumerate_keys(espec, cache, ttable, HostStore(store), NV)

@@ -1,0 +1,153 @@
+"""Unit tests for templates/keys/cache data structures."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import MISSING
+from repro.core import (
+    CacheSpec,
+    cache_delete,
+    cache_insert,
+    cache_lookup,
+    cache_stats,
+    empty_cache,
+    evaluate_pred,
+    extract_wildcards,
+    make_pred,
+    sweep_root,
+    sweep_template,
+    OP_EQ,
+    OP_GT,
+    WILDCARD,
+    ANY_LABEL,
+)
+from repro.core.keys import PARAM_LEN
+
+
+def P(root, vals):
+    params = np.full((len(root), PARAM_LEN), MISSING, np.int32)
+    params[:, 0] = vals
+    return jnp.asarray(params)
+
+
+def test_pred_eval_and_wildcards():
+    pred = make_pred(1, [(0, OP_EQ, WILDCARD), (1, OP_GT, 5)])
+    labels = jnp.array([1, 1, 0, 1])
+    props = jnp.array(
+        [[3, 9], [3, 2], [3, 9], [MISSING, 9]], jnp.int32
+    )
+    ok = evaluate_pred(pred, labels, props)
+    # row0 ok; row1 fails GT; row2 wrong label; row3 wildcard prop missing
+    assert np.asarray(ok).tolist() == [True, False, False, False]
+    bound = jnp.array([[3, 0, 0]], jnp.int32)
+    okb = evaluate_pred(pred, labels, props, bound_vals=bound)
+    assert np.asarray(okb).tolist() == [True, False, False, False]
+    okb2 = evaluate_pred(pred, labels, props, bound_vals=jnp.array([[4, 0, 0]], jnp.int32))
+    assert np.asarray(okb2).tolist() == [False, False, False, False]
+    w = extract_wildcards(pred, props)
+    assert int(w[0, 0]) == 3 and int(w[0, 1]) == MISSING
+
+
+def test_cache_roundtrip_and_delete():
+    cspec = CacheSpec(capacity=128, probes=4, max_leaves=4, max_chunks=2)
+    cache = empty_cache(cspec)
+    roots = jnp.array([5, 6])
+    params = P(roots, [1, 1])
+    leaves = jnp.array([[10, 11, -1, -1, -1, -1, -1, -1], [12, -1, -1, -1, -1, -1, -1, -1]], jnp.int32)
+    lens = jnp.array([2, 1])
+    tpl = jnp.array([0, 0])
+    cache = cache_insert(cspec, cache, tpl, roots, params, leaves, lens, jnp.array([1, 1]), jnp.array([True, True]))
+    hit, vals, lmask, ver = cache_lookup(cspec, cache, tpl, roots, params)
+    assert np.asarray(hit).all()
+    assert sorted(np.asarray(vals[0])[np.asarray(lmask[0])].tolist()) == [10, 11]
+    # wrong params -> miss
+    hit2, *_ = cache_lookup(cspec, cache, tpl, roots, P(roots, [0, 0]))
+    assert not np.asarray(hit2).any()
+    cache = cache_delete(cspec, cache, tpl[:1], roots[:1], params[:1], jnp.array([True]))
+    hit3, *_ = cache_lookup(cspec, cache, tpl, roots, params)
+    assert np.asarray(hit3).tolist() == [False, True]
+
+
+def test_cache_empty_result_is_cacheable():
+    cspec = CacheSpec(capacity=64, probes=4, max_leaves=4, max_chunks=1)
+    cache = empty_cache(cspec)
+    roots = jnp.array([3])
+    cache = cache_insert(
+        cspec, cache, jnp.array([0]), roots, P(roots, [1]),
+        jnp.full((1, 4), -1, jnp.int32), jnp.array([0]), jnp.array([1]), jnp.array([True]),
+    )
+    hit, vals, lmask, _ = cache_lookup(cspec, cache, jnp.array([0]), roots, P(roots, [1]))
+    assert bool(hit[0]) and int(lmask.sum()) == 0
+
+
+def test_chunked_values():
+    cspec = CacheSpec(capacity=128, probes=4, max_leaves=4, max_chunks=3)
+    cache = empty_cache(cspec)
+    roots = jnp.array([9])
+    leaves = jnp.arange(12, dtype=jnp.int32).reshape(1, 12) + 100
+    cache = cache_insert(
+        cspec, cache, jnp.array([0]), roots, P(roots, [1]), leaves,
+        jnp.array([10]), jnp.array([1]), jnp.array([True]),
+    )
+    hit, vals, lmask, _ = cache_lookup(cspec, cache, jnp.array([0]), roots, P(roots, [1]))
+    assert bool(hit[0])
+    got = np.asarray(vals[0])[np.asarray(lmask[0])]
+    assert got.tolist() == (np.arange(10) + 100).tolist()
+
+
+def test_oversize_skipped():
+    cspec = CacheSpec(capacity=64, probes=4, max_leaves=2, max_chunks=2)
+    cache = empty_cache(cspec)
+    roots = jnp.array([1])
+    leaves = jnp.arange(8, dtype=jnp.int32).reshape(1, 8)
+    cache = cache_insert(
+        cspec, cache, jnp.array([0]), roots, P(roots, [1]), leaves,
+        jnp.array([8]), jnp.array([1]), jnp.array([True]),
+    )
+    assert cache_stats(cache)["oversize_skipped"] == 1
+    hit, *_ = cache_lookup(cspec, cache, jnp.array([0]), roots, P(roots, [1]))
+    assert not bool(hit[0])
+
+
+def test_sweep_root_clears_all_params():
+    cspec = CacheSpec(capacity=128, probes=4, max_leaves=4, max_chunks=1)
+    cache = empty_cache(cspec)
+    roots = jnp.array([7, 7, 8])
+    params = P(roots, [0, 1, 0])
+    tpl = jnp.array([0, 0, 0])
+    leaves = jnp.full((3, 4), -1, jnp.int32)
+    cache = cache_insert(cspec, cache, tpl, roots, params, leaves, jnp.array([0, 0, 0]), jnp.array([1, 1, 1]), jnp.array([True] * 3))
+    cache = sweep_root(cspec, cache, jnp.array([0]), jnp.array([7]), jnp.array([True]))
+    hit, *_ = cache_lookup(cspec, cache, tpl, roots, params)
+    assert np.asarray(hit).tolist() == [False, False, True]
+
+
+def test_sweep_template():
+    cspec = CacheSpec(capacity=128, probes=4, max_leaves=4, max_chunks=1)
+    cache = empty_cache(cspec)
+    roots = jnp.array([1, 2])
+    tpl = jnp.array([0, 1])
+    leaves = jnp.full((2, 4), -1, jnp.int32)
+    cache = cache_insert(cspec, cache, tpl, roots, P(roots, [1, 1]), leaves, jnp.array([0, 0]), jnp.array([1, 1]), jnp.array([True, True]))
+    cache = sweep_template(cspec, cache, 0)
+    hit, *_ = cache_lookup(cspec, cache, tpl, roots, P(roots, [1, 1]))
+    assert np.asarray(hit).tolist() == [False, True]
+
+
+def test_eviction_under_pressure():
+    cspec = CacheSpec(capacity=8, probes=2, max_leaves=2, max_chunks=1)
+    cache = empty_cache(cspec)
+    n = 32
+    roots = jnp.arange(n, dtype=jnp.int32)
+    params = P(roots, [1] * n)
+    leaves = jnp.full((n, 2), -1, jnp.int32)
+    cache = cache_insert(
+        cspec, cache, jnp.zeros(n, jnp.int32), roots, params, leaves,
+        jnp.zeros(n, jnp.int32), jnp.ones(n, jnp.int32), jnp.ones(n, bool),
+    )
+    st = cache_stats(cache)
+    assert st["evictions"] > 0
+    assert st["occupancy"] <= cspec.capacity
+    # whatever remains must still be exact
+    hit, vals, lmask, _ = cache_lookup(cspec, cache, jnp.zeros(n, jnp.int32), roots, params)
+    assert int(np.asarray(hit).sum()) == st["occupancy"]

@@ -1,0 +1,112 @@
+"""Engine behaviour: hit/miss equality, multi-hop, rewrites, metrics."""
+
+import numpy as np
+
+from conftest import (
+    MISSING,
+    P_LISTING_ID,
+    common_watchlist_plan,
+    fig1_plan,
+)
+from repro.core import (
+    FINAL_COUNT,
+    FINAL_VALUES,
+    GraphEngine,
+    rewrite_plan,
+)
+from repro.core.oracle import HostStore, onehop_oracle
+from repro.core.population import CachePopulator
+from conftest import TPL_META
+
+
+def _ids(row):
+    return set(row[row >= 0].tolist())
+
+
+def test_fig1_miss_then_hit_same_result(world):
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0, 1, 2, 3], np.int32)
+    res1, misses, m1 = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    assert m1["misses"] == 4 and m1["hits"] == 0
+    pop = CachePopulator(world["espec"], TPL_META)
+    pop.queue.push(misses)
+    cache = pop.drain(world["store"], world["store"], world["cache"], world["ttable"])
+    res2, _, m2 = eng.run(world["store"], cache, world["ttable"], roots)
+    assert m2["hits"] == 4 and m2["misses"] == 0
+    for a, b in zip(res1, res2):
+        assert _ids(a) == _ids(b)
+    # hit path needs strictly fewer sequential phases
+    assert m2["phases"] < m1["phases"]
+
+
+def test_engine_matches_oracle(world):
+    plan = fig1_plan()
+    eng = GraphEngine(world["espec"], plan, use_cache=False)
+    roots = np.array([0, 1, 2, 3], np.int32)
+    res, _, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    hs = HostStore(world["store"])
+    hop = plan.hops[0]
+    for i, r in enumerate(roots):
+        want = onehop_oracle(
+            hs, hop.direction, hop.edge_label, hop.pr, hop.pe, hop.pl, int(r), hop.params
+        )
+        assert _ids(res[i]) == want
+
+
+def test_multihop_common_watchlists(world):
+    plan = common_watchlist_plan()
+    eng = GraphEngine(world["espec"], plan, use_cache=False)
+    roots = np.array([5, 6], np.int32)  # listings
+    res, _, metrics = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    # reference: manual two-hop via oracle
+    hs = HostStore(world["store"])
+    h1, h2 = plan.hops
+    for i, r in enumerate(roots):
+        wls = onehop_oracle(hs, h1.direction, h1.edge_label, h1.pr, h1.pe, h1.pl, int(r), h1.params)
+        want = set()
+        for w in wls:
+            want |= onehop_oracle(hs, h2.direction, h2.edge_label, h2.pr, h2.pe, h2.pl, int(w), h2.params)
+        # post filter: drop leaves with same ListingId as root (i.e. the root)
+        want -= {int(r)}
+        assert _ids(res[i]) == want
+
+
+def test_rewrite_removes_phase(world):
+    plan = common_watchlist_plan()
+    rw = rewrite_plan(plan, unique_props=frozenset({P_LISTING_ID}))
+    assert rw.post_filter == ("id_neq",)
+    roots = np.array([5, 6], np.int32)
+    e1 = GraphEngine(world["espec"], plan, use_cache=False)
+    e2 = GraphEngine(world["espec"], rw, use_cache=False)
+    r1, _, m1 = e1.run(world["store"], world["cache"], world["ttable"], roots)
+    r2, _, m2 = e2.run(world["store"], world["cache"], world["ttable"], roots)
+    for a, b in zip(r1, r2):
+        assert _ids(a) == _ids(b)  # rewrite preserves semantics
+    assert m2["phases"] == m1["phases"] - 1
+
+
+def test_final_count_and_values(world):
+    plan = fig1_plan()._replace(final=FINAL_COUNT)
+    eng = GraphEngine(world["espec"], plan, use_cache=False)
+    roots = np.array([0], np.int32)
+    res, _, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    planv = fig1_plan()._replace(final=FINAL_VALUES, final_prop=P_LISTING_ID)
+    engv = GraphEngine(world["espec"], planv, use_cache=False)
+    resv, _, _ = engv.run(world["store"], world["cache"], world["ttable"], roots)
+    assert int(res[0]) == int((resv[0] >= 0).sum())
+    got = resv[0][resv[0] >= 0]
+    assert all(v >= 1000 for v in got.tolist())
+
+
+def test_disabled_template_never_hits(world):
+    import jax.numpy as jnp
+
+    ttable = world["ttable"]._replace(read_enabled=jnp.zeros(2, bool))
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0], np.int32)
+    _, misses, _ = eng.run(world["store"], world["cache"], ttable, roots)
+    pop = CachePopulator(world["espec"], TPL_META)
+    pop.queue.push(misses)
+    cache = pop.drain(world["store"], world["store"], world["cache"], ttable)
+    _, _, m = eng.run(world["store"], cache, ttable, roots)
+    assert m["hits"] == 0  # reads disabled => no hits, and population skipped

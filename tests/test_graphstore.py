@@ -1,0 +1,121 @@
+"""Unit tests for the slotted CSR graph store."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import MISSING, build_world, L_WATCHLIST, L_LISTING
+from repro.graphstore import (
+    StoreSpec,
+    apply_mutations,
+    compact,
+    empty_store,
+    gather_in,
+    gather_out,
+    ingest,
+    make_mutation_batch,
+)
+from repro.graphstore.txn import commit_with_conflict_check
+
+
+def small():
+    spec = StoreSpec(v_cap=32, e_cap=128, n_vprops=2, n_eprops=1, recent_cap=16)
+    vl = [0, 1, 1, 1]
+    vp = np.full((4, 2), MISSING)
+    store = ingest(spec, vl, vp, [0, 0, 0], [1, 2, 3], [0, 0, 0], np.ones((3, 1)))
+    return spec, store
+
+
+def test_gather_out_basic():
+    spec, store = small()
+    eids, dst, mask, trunc = gather_out(spec, store, jnp.array([0, 1]), 8)
+    assert sorted(np.asarray(dst[0])[np.asarray(mask[0])].tolist()) == [1, 2, 3]
+    assert np.asarray(mask[1]).sum() == 0
+    assert not np.asarray(trunc).any()
+
+
+def test_gather_in_basic():
+    spec, store = small()
+    eids, src, mask, _ = gather_in(spec, store, jnp.array([2]), 8)
+    assert np.asarray(src[0])[np.asarray(mask[0])].tolist() == [0]
+
+
+def test_supernode_truncation_flag():
+    spec, store = small()
+    _, _, _, trunc = gather_out(spec, store, jnp.array([0]), 2)
+    assert bool(np.asarray(trunc)[0])
+
+
+def test_recent_region_visible_before_compaction():
+    spec, store = small()
+    mb = make_mutation_batch(spec, new_edges=[(1, 3, 0, [1])])
+    store2, applied = apply_mutations(spec, store, mb)
+    assert int(store2.csr_len) == 3  # CSR not rebuilt yet
+    _, dst, mask, _ = gather_out(spec, store2, jnp.array([1]), 8)
+    assert np.asarray(dst[0])[np.asarray(mask[0])].tolist() == [3]
+    store3 = compact(spec, store2)
+    _, dst, mask, _ = gather_out(spec, store3, jnp.array([1]), 8)
+    assert np.asarray(dst[0])[np.asarray(mask[0])].tolist() == [3]
+    assert int(store3.csr_len) == int(store3.e_len)
+
+
+def test_delete_edge_and_vertex_masked():
+    spec, store = small()
+    mb = make_mutation_batch(spec, del_edges=[0], del_vertices=[3])
+    store2, _ = apply_mutations(spec, store, mb)
+    _, dst, mask, _ = gather_out(spec, store2, jnp.array([0]), 8)
+    assert sorted(np.asarray(dst[0])[np.asarray(mask[0])].tolist()) == [2]
+
+
+def test_version_bumps_on_touch():
+    spec, store = small()
+    v0 = int(store.version)
+    mb = make_mutation_batch(spec, set_vprops=[(2, 0, 7)])
+    store2, applied = apply_mutations(spec, store, mb)
+    assert int(store2.version) == v0 + 1
+    assert int(store2.vversion[2]) == v0 + 1
+    assert int(store2.vversion[1]) == int(store.vversion[1])
+    assert int(applied.sv_old[0]) == MISSING
+
+
+def test_preimage_snapshots():
+    spec, store = small()
+    mb = make_mutation_batch(spec, del_edges=[1], set_eprops=[(2, 0, 0)])
+    store2, ap = apply_mutations(spec, store, mb)
+    assert int(ap.de_src[0]) == 0 and int(ap.de_dst[0]) == 2
+    assert int(ap.se_old[0]) == 1  # IsActive was 1
+    assert int(store2.eprops[2, 0]) == 0
+
+
+def test_occ_commit_conflict():
+    spec, store = small()
+    mb = make_mutation_batch(spec, set_vprops=[(1, 0, 5)])
+    store2, _ = apply_mutations(spec, store, mb)  # bumps v1
+    read_set = jnp.array([1, 2])
+    mask = jnp.array([True, True])
+    bump = lambda s: s._replace(version=s.version + 1)
+    merged, ok = commit_with_conflict_check(
+        spec, store2, store.version, read_set, mask, bump
+    )
+    assert not bool(ok)  # v1 written after our read version
+    merged, ok = commit_with_conflict_check(
+        spec, store2, store2.version, read_set, mask, bump
+    )
+    assert bool(ok)
+    assert int(merged.version) == int(store2.version) + 1
+
+
+def test_new_vertex_then_edge_same_batch():
+    spec, store = small()
+    mb = make_mutation_batch(
+        spec, new_vertices=[(1, [0, MISSING])], new_edges=[(0, 4, 0, [1])]
+    )
+    store2, ap = apply_mutations(spec, store, mb)
+    assert int(ap.nv_vid[0]) == 4
+    _, dst, mask, _ = gather_out(spec, store2, jnp.array([0]), 8)
+    assert 4 in np.asarray(dst[0])[np.asarray(mask[0])].tolist()
+
+
+def test_build_world_compiles():
+    spec, store = build_world()
+    assert int(store.v_len) == 16
+    assert int(store.e_len) > 0

@@ -1,0 +1,149 @@
+"""Write-around / write-through invalidation — the paper's Examples 1-5."""
+
+import numpy as np
+
+from conftest import (
+    E_INCLUDES,
+    L_LISTING,
+    MISSING,
+    P_ISACTIVE,
+    P_STATUS,
+    fig1_plan,
+)
+from repro.core import GraphEngine, run_grw_tx
+from repro.core.oracle import HostStore, onehop_oracle
+from repro.core.population import CachePopulator
+from repro.graphstore import make_mutation_batch
+from conftest import TPL_META
+
+
+def _ids(row):
+    return set(row[row >= 0].tolist())
+
+
+def _warm(world, roots):
+    """Run + populate so the cache is hot for fig1 over ``roots``."""
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    pop = CachePopulator(world["espec"], TPL_META)
+    _, misses, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    pop.queue.push(misses)
+    cache = pop.drain(world["store"], world["store"], world["cache"], world["ttable"])
+    _, _, m = eng.run(world["store"], cache, world["ttable"], roots)
+    assert m["hits"] == len(roots)
+    return eng, cache
+
+
+def _check_consistent(world, eng, store, cache, roots):
+    """Post-mutation results must equal the oracle regardless of hits."""
+    res, _, _ = eng.run(store, cache, world["ttable"], roots)
+    hs = HostStore(store)
+    hop = fig1_plan().hops[0]
+    for i, r in enumerate(roots):
+        want = onehop_oracle(
+            hs, hop.direction, hop.edge_label, hop.pr, hop.pe, hop.pl, int(r), hop.params
+        )
+        assert _ids(res[i]) == want, f"root {r}: {_ids(res[i])} != {want}"
+
+
+def test_example2_delete_leaf_vertex(world, policy="write-around"):
+    roots = np.array([0, 1], np.int32)
+    eng, cache = _warm(world, roots)
+    mb = make_mutation_batch(world["spec"], del_vertices=[6])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb, policy=policy
+    )
+    _check_consistent(world, eng, store2, cache2, roots)
+
+
+def test_example3_update_leaf_status(world):
+    roots = np.array([0, 1, 2, 3], np.int32)
+    eng, cache = _warm(world, roots)
+    mb = make_mutation_batch(world["spec"], set_vprops=[(7, P_STATUS, 1)])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb
+    )
+    _check_consistent(world, eng, store2, cache2, roots)
+
+
+def test_example4_add_edge(world):
+    roots = np.array([0], np.int32)
+    eng, cache = _warm(world, roots)
+    mb = make_mutation_batch(world["spec"], new_edges=[(0, 9, E_INCLUDES, [1])])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb
+    )
+    _check_consistent(world, eng, store2, cache2, roots)
+
+
+def test_example5_update_edge_isactive(world):
+    roots = np.array([0, 1], np.int32)
+    eng, cache = _warm(world, roots)
+    eid = int(np.asarray(world["store"].esrc[:16]).tolist().index(0))
+    mb = make_mutation_batch(
+        world["spec"],
+        set_eprops=[(eid, P_ISACTIVE, 0)],
+    )
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb
+    )
+    assert m["impacted_keys"] >= 0
+    _check_consistent(world, eng, store2, cache2, roots)
+
+
+def test_example1_delete_root_vertex(world):
+    roots = np.array([0, 1], np.int32)
+    eng, cache = _warm(world, roots)
+    mb = make_mutation_batch(world["spec"], del_vertices=[0])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb
+    )
+    assert m["impacted_keys"] >= 1  # the root's entry was swept
+    _check_consistent(world, eng, store2, cache2, roots)
+
+
+def test_unreferenced_prop_impacts_nothing(world):
+    roots = np.array([0, 1], np.int32)
+    eng, cache = _warm(world, roots)
+    # ListingId is not referenced by any template predicate
+    mb = make_mutation_batch(world["spec"], set_vprops=[(7, 1, 9999)])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb
+    )
+    assert m["impacted_keys"] == 0
+    _, _, mm = eng.run(store2, cache2, world["ttable"], roots)
+    assert mm["hits"] == len(roots)  # entries survived
+
+
+def test_write_through_keeps_entries(world):
+    roots = np.array([0], np.int32)
+    eng, cache = _warm(world, roots)
+    mb = make_mutation_batch(world["spec"], new_edges=[(0, 11, E_INCLUDES, [1])])
+    store2, cache2, m = run_grw_tx(
+        world["espec"], world["store"], cache, world["ttable"], mb, policy="write-through"
+    )
+    res, _, mm = eng.run(store2, cache2, world["ttable"], roots)
+    _check_consistent(world, eng, store2, cache2, roots)
+    # write-through should usually retain hits (entry updated in place);
+    # fallback-to-delete is allowed only for full/multi-chunk entries
+    hs = HostStore(store2)
+    hop = fig1_plan().hops[0]
+    want = onehop_oracle(hs, hop.direction, hop.edge_label, hop.pr, hop.pe, hop.pl, 0, hop.params)
+    if len(want) < world["cspec"].max_leaves:
+        assert mm["hits"] == 1
+
+
+def test_write_through_examples_all_mutation_kinds(world):
+    roots = np.array([0, 1, 2, 3], np.int32)
+    eng, cache = _warm(world, roots)
+    store = world["store"]
+    muts = [
+        make_mutation_batch(world["spec"], set_vprops=[(8, P_STATUS, 1)]),
+        make_mutation_batch(world["spec"], del_vertices=[9]),
+        make_mutation_batch(world["spec"], new_edges=[(2, 10, E_INCLUDES, [1])]),
+        make_mutation_batch(world["spec"], set_eprops=[(0, P_ISACTIVE, 0)]),
+    ]
+    for mb in muts:
+        store, cache, _ = run_grw_tx(
+            world["espec"], store, cache, world["ttable"], mb, policy="write-through"
+        )
+        _check_consistent(world, eng, store, cache, roots)

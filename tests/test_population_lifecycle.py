@@ -1,0 +1,115 @@
+"""Async population OCC semantics + SC lifecycle two-phase workflows."""
+
+import numpy as np
+
+from conftest import MISSING, P_STATUS, TEMPLATES, TPL_META, fig1_plan
+from repro.core import CacheSpec, GraphEngine, cache_stats, empty_cache, make_template_table
+from repro.core.lifecycle import GraphQP, ServiceCoordinator, TemplateState
+from repro.core.population import CachePopulator
+from repro.graphstore import apply_mutations, make_mutation_batch
+
+
+def _neighbor_of(world, root):
+    """Any vertex adjacent to ``root`` (guaranteed in the CP read set)."""
+    esrc = np.asarray(world["store"].esrc[: int(world["store"].e_len)])
+    edst = np.asarray(world["store"].edst[: int(world["store"].e_len)])
+    return int(edst[esrc == root][0])
+
+
+def test_populate_conflict_aborts_and_retries(world):
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0], np.int32)
+    _, misses, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    pop = CachePopulator(world["espec"], TPL_META, max_retries=3)
+    pop.queue.push(misses)
+    # interleave a conflicting write between CP read and CP commit:
+    # store_exec = old snapshot; store_commit = post-write state
+    leaf = _neighbor_of(world, 0)
+    mb = make_mutation_batch(world["spec"], set_vprops=[(leaf, P_STATUS, 1)])
+    store2, _ = apply_mutations(world["spec"], world["store"], mb)
+    cache = pop.drain(world["store"], store2, world["cache"], world["ttable"])
+    assert pop.aborted >= 1 and pop.committed == 0
+    assert cache_stats(cache)["inserts"] == 0  # no stale entry installed
+    # retry against the *current* snapshot commits cleanly
+    cache = pop.drain(store2, store2, cache, world["ttable"])
+    assert pop.committed == 1
+    # and the retried entry matches the post-write world
+    res, _, m = eng.run(store2, cache, world["ttable"], roots)
+    assert m["hits"] == 1
+
+
+def test_populate_retry_budget_discards(world):
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0], np.int32)
+    _, misses, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    pop = CachePopulator(world["espec"], TPL_META, max_retries=2)
+    pop.queue.push(misses)
+    store, cache = world["store"], world["cache"]
+    leaf = _neighbor_of(world, 0)
+    for i in range(3):
+        # keep a conflicting write in flight every round
+        mb = make_mutation_batch(world["spec"], set_vprops=[(leaf, P_STATUS, i % 2)])
+        store2, _ = apply_mutations(world["spec"], store, mb)
+        cache = pop.drain(store, store2, cache, world["ttable"])
+        store = store2
+        if len(pop.queue) == 0:
+            break
+    assert pop.queue.discarded == 1  # §4: bounded retries then discard
+    assert pop.committed == 0
+
+
+def test_queue_dedupes_inflight_misses(world):
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0], np.int32)
+    _, misses, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    pop = CachePopulator(world["espec"], TPL_META)
+    pop.queue.push(misses)
+    pop.queue.push(misses)  # same miss seen twice before population
+    assert len(pop.queue) == 1
+
+
+def test_lifecycle_two_phase_with_drops():
+    qps = [GraphQP(f"qp{i}") for i in range(5)]
+    sc = ServiceCoordinator(qps, seed=7, drop_prob=0.4)
+    sc.register(0)
+    sc.enable(0)
+    assert sc.states[0] == TemplateState.ENABLED
+    assert sc.messages_dropped > 0  # retries actually happened
+    assert sc.check_safety()
+    for qp in qps:
+        assert 0 in qp.read_active and 0 in qp.write_active
+
+
+def test_lifecycle_disable_clears_entries(world):
+    # warm one entry
+    eng = GraphEngine(world["espec"], fig1_plan(), use_cache=True)
+    roots = np.array([0], np.int32)
+    _, misses, _ = eng.run(world["store"], world["cache"], world["ttable"], roots)
+    pop = CachePopulator(world["espec"], TPL_META)
+    pop.queue.push(misses)
+    cache = pop.drain(world["store"], world["store"], world["cache"], world["ttable"])
+    assert cache_stats(cache)["occupancy"] == 1
+    sc, qp = world["sc"], world["qp"]
+    cache = sc.disable_and_remove(0, cache, world["cspec"])
+    assert sc.states[0] == TemplateState.REMOVED
+    assert cache_stats(cache)["occupancy"] == 0
+    ttable = qp.ttable_masks(world["ttable"], len(TEMPLATES))
+    _, _, m = eng.run(world["store"], cache, ttable, roots)
+    assert m["hits"] == 0
+
+
+def test_lifecycle_phase_order_never_violates_safety():
+    # drive many enables/disables with message loss; safety must hold at
+    # every observable point (we check after each workflow; the workflow
+    # itself is atomic in the sim because _request_all retries to completion)
+    qps = [GraphQP(f"qp{i}") for i in range(3)]
+    sc = ServiceCoordinator(qps, seed=3, drop_prob=0.5)
+    cspec = CacheSpec(capacity=64, probes=2, max_leaves=2, max_chunks=1)
+    cache = empty_cache(cspec)
+    for t in range(4):
+        sc.register(t)
+        sc.enable(t)
+        assert sc.check_safety()
+    for t in range(2):
+        cache = sc.disable_and_remove(t, cache, cspec)
+        assert sc.check_safety()

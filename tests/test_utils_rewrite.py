@@ -1,0 +1,69 @@
+"""Fast unit tests: tensor utils, query-rewrite rules, hashing."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import MISSING, P_LISTING_ID, common_watchlist_plan, fig1_plan
+from repro.core import FINAL_IDS, FINAL_VALUES, rewrite_plan
+from repro.core.rewrite import rewrite_savings
+from repro.utils import compact_masked, dedup_masked, hash_rows
+
+
+def test_compact_masked_1d():
+    vals = jnp.array([5, 6, 7, 8])
+    mask = jnp.array([True, False, True, False])
+    out, om = compact_masked(vals, mask, 3)
+    assert out[:2].tolist() == [5, 7] and om.tolist() == [True, True, False]
+
+
+def test_compact_masked_batched_truncates():
+    vals = jnp.arange(12).reshape(2, 6)
+    mask = jnp.ones((2, 6), bool)
+    out, om = compact_masked(vals, mask, 4)
+    assert out.shape == (2, 4)
+    assert out[1].tolist() == [6, 7, 8, 9]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=12))
+def test_dedup_masked_property(xs):
+    vals = jnp.asarray(xs, jnp.int32)
+    mask = jnp.ones(len(xs), bool)
+    m2 = dedup_masked(vals, mask)
+    kept = [int(v) for v, m in zip(xs, np.asarray(m2)) if m]
+    # keeps exactly the first occurrence of each value, order-preserving
+    seen, want = set(), []
+    for v in xs:
+        if v not in seen:
+            seen.add(v)
+            want.append(v)
+    assert kept == want
+
+
+def test_hash_rows_determinism_and_seed_independence():
+    a = hash_rows([jnp.arange(8), jnp.arange(8) * 3], 1)
+    b = hash_rows([jnp.arange(8), jnp.arange(8) * 3], 1)
+    c = hash_rows([jnp.arange(8), jnp.arange(8) * 3], 2)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (np.asarray(a) != np.asarray(c)).any()
+
+
+def test_rewrite_rule1_and_savings():
+    plan = common_watchlist_plan()
+    rw = rewrite_plan(plan, unique_props=frozenset({P_LISTING_ID}))
+    assert rw.post_filter == ("id_neq",)
+    assert rewrite_savings(plan, rw)["phases_saved"] == 1
+
+
+def test_rewrite_rule2_values_to_ids():
+    plan = fig1_plan()._replace(final=FINAL_VALUES, final_prop=P_LISTING_ID)
+    rw = rewrite_plan(plan, unique_props=frozenset({P_LISTING_ID}))
+    assert rw.final == FINAL_IDS and rw.final_prop == -1
+
+
+def test_rewrite_noop_without_unique_declaration():
+    plan = common_watchlist_plan()
+    rw = rewrite_plan(plan, unique_props=frozenset())
+    assert rw.post_filter == plan.post_filter
