@@ -191,6 +191,65 @@ def pct(a, q):
     return float(np.percentile(np.array(a) * 1e3, q)) if len(a) else float("nan")
 
 
+def hop_pipeline(batch=512, hops=2, reps=5, seed=0):
+    """Old (host-orchestrated) vs fused device hop pipeline on the cached
+    eCommerce workload: hops/sec and host-sync counts per path.
+
+    Warm procedure: run the plan once through each engine (jit compile),
+    push the misses through the CP populator until the cache serves the
+    whole frontier, then time ``reps`` repeats of the same cached batch —
+    the paper's steady-state read path, where the engine overhead (not the
+    storage gathers) dominates.
+    """
+    world = build_world(seed=seed)
+    plans = query_plans()
+    # first cached plan with at least `hops` hops (falls back to the
+    # deepest available; multi-hop plans exercise the merge path hardest)
+    eligible = [p for p in plans if len(p[1].hops) >= hops]
+    name, plan, label, _, _ = (
+        eligible[0] if eligible else max(plans, key=lambda p: len(p[1].hops))
+    )
+    n_hops = len(plan.hops)
+    lo, hi = world.vertex_range(label)
+    rng = np.random.default_rng(seed)
+    roots = rng.integers(lo, hi, batch).astype(np.int32)
+    cache = empty_cache(world.espec.cache)
+    pop = CachePopulator(world.espec, TPL_META)
+    engines = {
+        "fused": GraphEngine(world.espec, plan, use_cache=True, fused=True),
+        "host": GraphEngine(world.espec, plan, use_cache=True, fused=False),
+    }
+    # compile + warm the cache (drain until the miss stream dries up)
+    for _ in range(6):
+        _, misses, m = engines["fused"].run(world.store, cache, world.ttable, roots)
+        pop.queue.push(misses)
+        cache = pop.drain(world.store, world.store, cache, world.ttable, k=4096)
+        if m["misses"] == 0:
+            break
+    out = {"batch": batch, "n_hops": n_hops, "plan": name, "reps": reps}
+    for tag, eng in engines.items():
+        eng.run(world.store, cache, world.ttable, roots)  # compile outside timing
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _, _, m = eng.run(world.store, cache, world.ttable, roots)
+        dt = time.perf_counter() - t0
+        out[f"{tag}_hops_per_sec"] = n_hops * batch * reps / dt
+        out[f"{tag}_ms_per_batch"] = dt / reps * 1e3
+        out[f"{tag}_host_syncs"] = m["host_syncs"]
+        out[f"{tag}_host_syncs_per_hop"] = m["host_syncs"] / n_hops
+        out[f"{tag}_hit_rate"] = m["hits"] / max(m["cache_reads"], 1)
+    out["speedup"] = out["fused_hops_per_sec"] / out["host_hops_per_sec"]
+    print(
+        f"hop_pipeline: batch={batch} hops={n_hops} "
+        f"fused={out['fused_hops_per_sec']:.0f} hops/s "
+        f"host={out['host_hops_per_sec']:.0f} hops/s "
+        f"speedup={out['speedup']:.2f}x "
+        f"syncs/hop fused={out['fused_host_syncs_per_hop']:.2f} "
+        f"host={out['host_host_syncs_per_hop']:.2f}"
+    )
+    return out
+
+
 def main(n_ops=300, seed=0):
     world = build_world(seed=seed)
     rows = []

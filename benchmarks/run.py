@@ -8,8 +8,12 @@ run CPU-friendly; pass --full for the EXPERIMENTS.md-scale runs.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _timed(name, fn, *a, **kw):
@@ -17,6 +21,20 @@ def _timed(name, fn, *a, **kw):
     out = fn(*a, **kw)
     dt = time.perf_counter() - t0
     return name, dt, out
+
+
+def _bench_hop_pipeline(batch=512):
+    """Old vs fused hop pipeline; persists BENCH_hop_pipeline.json at the
+    repo root so the perf trajectory is tracked across PRs."""
+    from benchmarks import bench_latency
+
+    out = bench_latency.hop_pipeline(batch=batch)
+    path = os.path.join(REPO_ROOT, "BENCH_hop_pipeline.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return out
 
 
 def main() -> None:
@@ -30,6 +48,8 @@ def main() -> None:
     from benchmarks import roofline
 
     benches = {
+        # fused vs host-orchestrated hop pipeline (BENCH_hop_pipeline.json)
+        "hop_pipeline": lambda: _bench_hop_pipeline(batch=512),
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

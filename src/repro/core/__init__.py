@@ -46,6 +46,7 @@ from repro.core.cache import (
     CacheState,
     cache_delete,
     cache_insert,
+    cache_insert_sequential,
     cache_lookup,
     cache_stats,
     empty_cache,

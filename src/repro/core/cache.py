@@ -13,10 +13,18 @@ Physical design (the FDB-subspace analogue):
   chunking) — chunk i of a key lives at an independent hash. Results larger
   than ``max_chunks * max_leaves`` are not cached (counted), mirroring the
   paper's supernode discussion.
-- Inserts walk the batch sequentially (fori_loop): the insert path is the
-  *write* path which the paper deliberately keeps off the read path, so
-  serializing it costs reads nothing. Eviction policy: overwrite the last
-  probe slot (documented FIFO-within-window; a cache may always drop).
+- Inserts hash all B x max_chunks chunk keys at once and commit them with a
+  batched scatter (``cache_insert``). Intra-batch probe-window collisions
+  are resolved by batch-order priority rounds inside a ``while_loop`` so the
+  result is *byte-identical* to walking the batch sequentially — duplicate
+  keys resolve last-writer-wins, and eviction keeps the documented
+  last-probe-slot semantics. The common case (no overlapping windows)
+  commits the whole batch in a single round. The original fori_loop walk is
+  kept as ``cache_insert_sequential``, the reference the equivalence tests
+  compare against.
+- The read-path probe can run through the Pallas ``cache_probe`` kernel
+  (``CacheSpec.use_pallas`` / the ``use_pallas`` argument of
+  ``cache_lookup``); the jnp probe remains the fallback and reference.
 
 Strong-consistency note: a fingerprint collision inside a probe window could
 alias two different parameter vectors of the same (template, root). With 32b
@@ -37,12 +45,18 @@ from repro.utils import NULL_ID, hash_rows
 _SEED_SLOT = 0x51ED5EED
 _SEED_FP = 0xF1A9F00D
 
+# cap on virtual rows (B * max_chunks) per vectorized-insert slab: bounds the
+# O(N^2) collision masks at ~16MB while keeping one-round commits for every
+# realistic CP batch
+_INSERT_SLAB = 2048
+
 
 class CacheSpec(NamedTuple):
     capacity: int = 4096  # power of two
     probes: int = 8
     max_leaves: int = 32  # leaf ids per slot (one FDB value chunk)
     max_chunks: int = 2  # continuation chunks per key
+    use_pallas: bool = False  # route read-path probes through the TPU kernel
 
 
 class CacheState(NamedTuple):
@@ -91,9 +105,14 @@ def _key_cols(tpl_id, root, params, chunk):
 
 
 def _probe(spec: CacheSpec, cache: CacheState, tpl_id, root, params, chunk):
-    """Find the slot holding (tpl, root, params, chunk). Returns (found, slot)."""
+    """Find the slot holding (tpl, root, params, chunk). Returns (found, slot).
+
+    ``chunk`` may be a scalar or an array broadcastable to ``root``'s shape
+    (the vectorized insert probes every (row, chunk) key at once).
+    """
     h = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_SLOT)
     fp = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_FP)
+    ch = jnp.broadcast_to(jnp.asarray(chunk, jnp.int32), jnp.shape(root))
     base = (h & jnp.uint32(spec.capacity - 1)).astype(jnp.int32)
     offs = jnp.arange(spec.probes, dtype=jnp.int32)
     slots = (base[..., None] + offs) & (spec.capacity - 1)  # [..., P]
@@ -102,7 +121,7 @@ def _probe(spec: CacheSpec, cache: CacheState, tpl_id, root, params, chunk):
         & (cache.tpl[slots] == jnp.asarray(tpl_id, jnp.int32)[..., None])
         & (cache.root[slots] == jnp.asarray(root, jnp.int32)[..., None])
         & (cache.fp[slots] == fp[..., None])
-        & (cache.chunk[slots] == chunk)
+        & (cache.chunk[slots] == ch[..., None])
     )
     found = jnp.any(match, axis=-1)
     first = jnp.argmax(match, axis=-1)
@@ -110,38 +129,113 @@ def _probe(spec: CacheSpec, cache: CacheState, tpl_id, root, params, chunk):
     return found, slot, slots, fp
 
 
-def cache_lookup(spec: CacheSpec, cache: CacheState, tpl_id, root, params):
-    """Batched read-path lookup (§3.1).
+def _probe_pallas(spec: CacheSpec, cache: CacheState, tpl_id, root, params, chunk):
+    """Pallas-kernel read probe: byte-identical to ``_probe``'s (found, slot).
 
-    Returns ``(hit [B], leaves [B, max_chunks*max_leaves], lmask, version)``.
-    A hit requires chunk 0 plus every continuation chunk implied by
-    ``total_len`` to be present (a partially-evicted chain is a miss).
-    Stats are *not* updated here (pure read); the engine accumulates them.
+    The kernel matches on (valid, tpl, root, fp); the chunk index is folded
+    into the tpl channel (``tpl * max_chunks + chunk``) so the extra equality
+    the jnp path performs on ``cache.chunk`` is preserved exactly. Never-used
+    slots carry tpl = -1, whose folded value is negative and cannot collide
+    with a real (tpl >= 0) query key.
+    """
+    from repro.kernels.cache_probe.ops import cache_probe
+
+    h = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_SLOT)
+    fp = hash_rows(_key_cols(tpl_id, root, params, chunk), _SEED_FP)
+    C = spec.max_chunks
+    tpl_b = jnp.broadcast_to(jnp.asarray(tpl_id, jnp.int32), jnp.shape(root))
+    ch = jnp.broadcast_to(jnp.asarray(chunk, jnp.int32), jnp.shape(root))
+    c_tpl_eff = cache.tpl * C + cache.chunk
+    found, slot = cache_probe(
+        c_tpl_eff, cache.root, cache.fp, cache.valid,
+        tpl_b * C + ch, jnp.asarray(root, jnp.int32), h, fp,
+        probes=spec.probes,
+    )
+    return found, slot
+
+
+def cache_lookup_lean(spec: CacheSpec, cache: CacheState, tpl_id, root, params,
+                      use_pallas: bool | None = None):
+    """Chain lookup returning ``(hit, leaves_raw, count, version)``.
+
+    ``leaves_raw`` [B, max_chunks*max_leaves] holds the cached values
+    left-packed: positions ``[0, count)`` are valid, the tail is whatever
+    the slots carry — the caller must consume only the counted prefix.
+    This is the fused hop pipeline's probe: validity is O(B) (a count per
+    row) instead of the O(B*RW) mask+select the classic ``cache_lookup``
+    materializes. A hit requires chunk 0 plus every continuation chunk
+    implied by ``total_len`` (a partially-evicted chain is a miss). Stats
+    are *not* updated here (pure read); the engine accumulates them.
+
+    ``use_pallas`` routes the per-chunk probes through the Pallas
+    ``cache_probe`` kernel (``None`` defers to ``spec.use_pallas``); the jnp
+    probe is the fallback and reference — both return identical results.
     """
     L, C = spec.max_leaves, spec.max_chunks
-    founds, slots = [], []
-    for c in range(C):
+    if use_pallas is None:
+        use_pallas = spec.use_pallas
+
+    def probe_chunk(c):
+        if use_pallas:
+            return _probe_pallas(spec, cache, tpl_id, root, params, c)
         f, s, _, _ = _probe(spec, cache, tpl_id, root, params, c)
-        founds.append(f)
-        slots.append(s)
-    found0 = founds[0]
-    slot0 = slots[0]
+        return f, s
+
+    found0, slot0 = probe_chunk(0)
     tlen = jnp.where(found0, cache.total_len[jnp.clip(slot0, 0)], 0)
     need = jnp.clip((tlen + L - 1) // L, 1, C)  # chunks required
+    B = jnp.shape(found0)
+    leaves0 = cache.vals[jnp.clip(slot0, 0)]
     ok = found0
-    for c in range(1, C):
-        ok &= (need <= c) | founds[c]
-    # chain consistency: continuation chunks must carry the same total_len
-    for c in range(1, C):
-        same = cache.total_len[jnp.clip(slots[c], 0)] == tlen
-        ok &= (need <= c) | same
-    leaves = jnp.concatenate(
-        [cache.vals[jnp.clip(slots[c], 0)] for c in range(C)], axis=-1
-    )
-    pos = jnp.arange(L * C, dtype=jnp.int32)
-    lmask = ok[..., None] & (pos < tlen[..., None])
-    leaves = jnp.where(lmask, leaves, NULL_ID)
+    if C > 1:
+        # continuation chunks only matter for rows whose result spills past
+        # chunk 0; when no row does (the common small-result case), skip
+        # those probes and value gathers entirely.
+        def probe_rest(_):
+            fs, ls, tl = [], [], []
+            for c in range(1, C):
+                f, s = probe_chunk(c)
+                fs.append(f)
+                ls.append(cache.vals[jnp.clip(s, 0)])
+                tl.append(cache.total_len[jnp.clip(s, 0)])
+            return tuple(fs) + tuple(ls) + tuple(tl)
+
+        def skip_rest(_):
+            fs = (jnp.zeros(B, bool),) * (C - 1)
+            ls = (jnp.full(B + (L,), NULL_ID, jnp.int32),) * (C - 1)
+            tl = (jnp.zeros(B, jnp.int32),) * (C - 1)
+            return fs + ls + tl
+
+        rest = jax.lax.cond(jnp.any(need > 1), probe_rest, skip_rest, None)
+        founds = (found0,) + rest[: C - 1]
+        leaves_parts = (leaves0,) + rest[C - 1 : 2 * (C - 1)]
+        tlens = rest[2 * (C - 1) :]
+        for c in range(1, C):
+            ok &= (need <= c) | founds[c]
+            # chain consistency: continuation chunks carry the same total_len
+            ok &= (need <= c) | (tlens[c - 1] == tlen)
+        leaves_raw = jnp.concatenate(leaves_parts, axis=-1)
+    else:
+        leaves_raw = leaves0
     version = jnp.where(ok, cache.version[jnp.clip(slot0, 0)], -1)
+    count = jnp.where(ok, tlen, 0)
+    return ok, leaves_raw, count, version
+
+
+def cache_lookup(spec: CacheSpec, cache: CacheState, tpl_id, root, params,
+                 use_pallas: bool | None = None):
+    """Batched read-path lookup (§3.1).
+
+    Returns ``(hit [B], leaves [B, max_chunks*max_leaves], lmask, version)``
+    with invalid positions masked to NULL_ID. See ``cache_lookup_lean`` for
+    the count-based variant the fused engine uses.
+    """
+    ok, leaves_raw, count, version = cache_lookup_lean(
+        spec, cache, tpl_id, root, params, use_pallas
+    )
+    pos = jnp.arange(spec.max_leaves * spec.max_chunks, dtype=jnp.int32)
+    lmask = pos < count[..., None]
+    leaves = jnp.where(lmask, leaves_raw, NULL_ID)
     return ok, leaves, lmask, version
 
 
@@ -156,11 +250,148 @@ def cache_insert(
     commit_version,
     mask,
 ):
-    """Write-path insert of B results (CP population / write-through).
+    """Vectorized write-path insert of B results (CP population /
+    write-through) — byte-identical to ``cache_insert_sequential``.
 
     ``leaves``: int32 [B, >= max_chunks*max_leaves] compacted leaf ids.
-    Sequential over the batch (see module docstring). Oversize results are
-    skipped and counted.
+    Oversize results are skipped and counted.
+
+    All B x max_chunks chunk keys are hashed at once; each (row, chunk) is a
+    *virtual row* whose priority is its sequential execution order. Rounds of
+    a ``while_loop`` commit every virtual row none of whose earlier-priority
+    window-overlapping peers is still pending, so each committed row sees
+    exactly the cache state its sequential turn would have seen (matching
+    slots reused last-writer-wins, first-empty placement, last-probe-slot
+    eviction). Window overlap is the only cross-row hazard — slot validity
+    only ever grows during an insert batch — so the common no-collision case
+    commits everything in one round of pure batched scatters.
+
+    Collision detection builds O(N^2) pairwise masks over the N = B*C
+    virtual rows; batches are slabbed to at most ``_INSERT_SLAB`` virtual
+    rows to bound that memory. Slabbing preserves the sequential contract
+    exactly: inserting slab 2 into the state slab 1 produced *is* the
+    sequential order.
+    """
+    L, C = spec.max_leaves, spec.max_chunks
+    P, cap = spec.probes, spec.capacity
+    B = leaves.shape[0]
+    max_b = max(1, _INSERT_SLAB // C)
+    if B > max_b:
+        for lo in range(0, B, max_b):
+            hi = min(lo + max_b, B)
+            cache = cache_insert(
+                spec, cache,
+                jnp.broadcast_to(jnp.asarray(tpl_id, jnp.int32), (B,))[lo:hi],
+                jnp.asarray(root)[lo:hi], jnp.asarray(params)[lo:hi],
+                leaves[lo:hi], jnp.asarray(lens)[lo:hi],
+                jnp.asarray(commit_version)[lo:hi], jnp.asarray(mask)[lo:hi],
+            )
+        return cache
+    width = leaves.shape[1]
+    assert width >= L, "leaves row narrower than one chunk"
+    if width < L * C:  # pad so the chunk reshape stays in range
+        pad = jnp.full((B, L * C - width), NULL_ID, leaves.dtype)
+        leaves = jnp.concatenate([leaves, pad], axis=1)
+    elif width > L * C:
+        leaves = leaves[:, : L * C]
+
+    tpl_id = jnp.broadcast_to(jnp.asarray(tpl_id, jnp.int32), (B,))
+    root = jnp.asarray(root, jnp.int32)
+    lens = jnp.asarray(lens, jnp.int32)
+    oversize = lens > L * C
+    do = jnp.asarray(mask, bool) & ~oversize
+    tlen = jnp.minimum(lens, L * C)
+    nchunks = jnp.clip((tlen + L - 1) // L, 1, C)
+
+    # ---- virtual rows: order o = b * C + c (sequential execution order) ----
+    N = B * C
+    rep = lambda x: jnp.repeat(x, C, axis=0)  # row-major expand over chunks
+    tpl_v, root_v, tlen_v = rep(tpl_id), rep(root), rep(tlen)
+    params_v = rep(jnp.asarray(params, jnp.int32))
+    ver_v = rep(jnp.asarray(commit_version, jnp.int32))
+    chunk_v = jnp.tile(jnp.arange(C, dtype=jnp.int32), B)
+    active = rep(do) & (chunk_v < rep(nchunks))
+    segs = leaves.astype(jnp.int32).reshape(N, L)
+    seg_pos = chunk_v[:, None] * L + jnp.arange(L, dtype=jnp.int32)[None, :]
+    segs = jnp.where(seg_pos < tlen_v[:, None], segs, NULL_ID)
+
+    # ---- hash all N chunk keys at once ----
+    h = hash_rows(_key_cols(tpl_v, root_v, params_v, chunk_v), _SEED_SLOT)
+    fp_v = hash_rows(_key_cols(tpl_v, root_v, params_v, chunk_v), _SEED_FP)
+    base = (h & jnp.uint32(cap - 1)).astype(jnp.int32)
+
+    # probe windows [base, base + P) mod cap overlap iff the circular
+    # distance between bases is < P in either direction
+    d = jnp.mod(base[None, :] - base[:, None], cap)
+    overlap = (d < P) | (d > cap - P)
+    order = jnp.arange(N)
+    earlier = order[None, :] < order[:, None]  # earlier[i, j]: j before i
+    offs = jnp.arange(P, dtype=jnp.int32)
+
+    def cond(state):
+        _, committed, _ = state
+        return jnp.any(active & ~committed)
+
+    def body(state):
+        cache, committed, n_evict = state
+        pending = active & ~committed
+        blocked = jnp.any(overlap & earlier & pending[None, :], axis=1)
+        ready = pending & ~blocked
+        slots = (base[:, None] + offs) & (cap - 1)  # [N, P]
+        match = (
+            cache.valid[slots]
+            & (cache.tpl[slots] == tpl_v[:, None])
+            & (cache.root[slots] == root_v[:, None])
+            & (cache.fp[slots] == fp_v[:, None])
+            & (cache.chunk[slots] == chunk_v[:, None])
+        )
+        found = jnp.any(match, axis=-1)
+        mslot = jnp.take_along_axis(slots, jnp.argmax(match, -1)[:, None], -1)[:, 0]
+        empty = ~cache.valid[slots]
+        has_empty = jnp.any(empty, axis=-1)
+        first_empty = jnp.take_along_axis(slots, jnp.argmax(empty, -1)[:, None], -1)[:, 0]
+        # reuse matching slot, else first empty, else evict last probe slot
+        target = jnp.where(found, mslot, jnp.where(has_empty, first_empty, slots[:, -1]))
+        evict = ~found & ~has_empty & cache.valid[target]
+        t = jnp.where(ready, target, cap)  # OOB -> drop
+        cache = cache._replace(
+            tpl=cache.tpl.at[t].set(tpl_v, mode="drop"),
+            root=cache.root.at[t].set(root_v, mode="drop"),
+            fp=cache.fp.at[t].set(fp_v, mode="drop"),
+            chunk=cache.chunk.at[t].set(chunk_v, mode="drop"),
+            total_len=cache.total_len.at[t].set(tlen_v, mode="drop"),
+            vals=cache.vals.at[t].set(segs, mode="drop"),
+            version=cache.version.at[t].set(ver_v, mode="drop"),
+            valid=cache.valid.at[t].set(True, mode="drop"),
+        )
+        n_evict = n_evict + jnp.sum((ready & evict).astype(jnp.int32))
+        return cache, committed | ready, n_evict
+
+    cache, _, n_evict = jax.lax.while_loop(
+        cond, body, (cache, jnp.zeros((N,), bool), jnp.int32(0))
+    )
+    return cache._replace(
+        n_evict=cache.n_evict + n_evict,
+        n_insert=cache.n_insert + jnp.sum(do.astype(jnp.int32)),
+        n_oversize=cache.n_oversize
+        + jnp.sum((jnp.asarray(mask, bool) & oversize).astype(jnp.int32)),
+    )
+
+
+def cache_insert_sequential(
+    spec: CacheSpec,
+    cache: CacheState,
+    tpl_id,
+    root,
+    params,
+    leaves,
+    lens,
+    commit_version,
+    mask,
+):
+    """Reference insert: walks the batch with a fori_loop (the original write
+    path). Kept as the oracle the vectorized ``cache_insert`` is tested
+    against byte-for-byte; prefer ``cache_insert`` everywhere else.
     """
     L, C = spec.max_leaves, spec.max_chunks
     B = leaves.shape[0]
@@ -211,7 +442,7 @@ def cache_insert(
             n_oversize=cache.n_oversize + jnp.where(mask[i] & oversize[i], 1, 0),
         )
 
-    assert width >= L * C or width >= L, "leaves row narrower than one chunk"
+    assert width >= L, "leaves row narrower than one chunk"
     if width < L * C:  # pad so dynamic_slice stays in range
         pad = jnp.full((B, L * C - width), NULL_ID, leaves.dtype)
         leaves = jnp.concatenate([leaves, pad], axis=1)

@@ -7,11 +7,38 @@ the cache, execute *only the misses* against the storage manager, enqueue
 misses for asynchronous population, and feed the union of leaf sets to the
 next hop.
 
-The engine is split into jitted device steps (probe / exec / final) and a
-thin host orchestrator (`GraphEngine.run`) that routes hit/miss rows — the
-same shape as a Graph-QP node: the cache hit path genuinely skips the
-storage gathers, which is where the paper's latency win comes from. Miss
-batches are padded to power-of-two buckets so the jit cache stays small.
+Execution pipeline
+------------------
+The default path (``GraphEngine.run`` with ``fused=True``) executes a gR-Tx
+batch as **one jitted device program per (plan, batch-bucket)**: every hop
+fuses the cache probe (``cache_lookup_lean`` — raw rows + O(B) validity
+counts), a masked miss-execution (``onehop_exec`` runs over the occupied
+frontier prefix with hit rows short-circuited behind a ``lax.cond`` that
+skips the storage gathers entirely when the whole frontier hits), and an
+on-device dedup/compact frontier merge (``segmented_dedup_merge``, which
+exploits the left-packed per-slot results so merge cost tracks frontier
+*occupancy*; ``sort_dedup_masked`` is the sort-based general-mask variant,
+used by the distributed serve step). Results, per-hop compact miss arrays,
+metrics, and the read version come back in a **single device→host transfer
+per batch** (``metrics["host_syncs"]``), so a 3-hop gR-Tx pays one sync
+instead of ~6 — the prerequisite for pipelining hops across shards.
+Batches are padded to power-of-two buckets so the jit cache stays small.
+
+Tradeoff: when *any* row of a hop misses, the fused path executes the
+storage gathers over the whole occupied frontier with hit rows masked
+(jit shapes cannot depend on the miss count), whereas the host path
+compacts the k misses into a small bucket first. The fused default
+therefore wins on the high-hit-rate steady state the paper targets (and
+on accelerators, where masked lanes are cheap) but can do more device
+work than ``fused=False`` on miss-heavy CPU workloads.
+
+The legacy host-orchestrated path (``fused=False``) keeps the original
+split — jitted probe / exec / final steps glued by host-side boolean
+routing and a Python per-row frontier merge. It is retained as the
+behavioural reference: the fused pipeline is tested byte-identical against
+it (results, miss records, and metrics), and it remains the fallback for
+debugging device-side issues. Both paths produce identical results; only
+``host_syncs`` differs.
 """
 
 from __future__ import annotations
@@ -22,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import CacheSpec, CacheState, cache_lookup
+from repro.core.cache import CacheSpec, CacheState, cache_lookup, cache_lookup_lean
 from repro.core.keys import PARAM_LEN
 from repro.core.templates import (
     DIR_BOTH,
@@ -35,7 +62,13 @@ from repro.core.templates import (
 )
 from repro.graphstore.store import GraphStore, StoreSpec, gather_in, gather_out
 from repro.graphstore.mutations import MutationBatch, apply_mutations
-from repro.utils import NULL_ID, compact_masked, dedup_masked, take_along0
+from repro.utils import (
+    NULL_ID,
+    compact_masked,
+    dedup_masked,
+    segmented_dedup_merge,
+    take_along0,
+)
 
 FINAL_IDS, FINAL_COUNT, FINAL_VALUES = 0, 1, 2
 
@@ -117,7 +150,11 @@ def onehop_exec(
         trunc |= t
     eids = jnp.concatenate(eids_parts, axis=1)
     leaf = jnp.concatenate(leaf_parts, axis=1)
-    mask = jnp.concatenate(mask_parts, axis=1)
+    # gate the observed-edge mask by rmask so per-row stats only count rows
+    # this call was actually asked to execute (padded / hit-short-circuited
+    # rows must not contribute phantom scans)
+    scanned_mask = jnp.concatenate(mask_parts, axis=1) & rmask[:, None]
+    mask = scanned_mask
     n_edges_scanned = jnp.sum(mask.astype(jnp.int32))
 
     elab = take_along0(store.elabel, eids)
@@ -142,7 +179,7 @@ def onehop_exec(
         # whose state this execution *observed*, including filtered-out
         # leaves (their property writes can change the result too)
         "scanned": leaf,
-        "scanned_mask": jnp.concatenate(mask_parts, axis=1),
+        "scanned_mask": scanned_mask,
     }
     return leaves, lmask, n_true, trunc & rmask, stats
 
@@ -157,18 +194,27 @@ class MissRecord(NamedTuple):
 
 
 class GraphEngine:
-    """One Graph-QP: pre-jitted probe/exec/final closures for one plan."""
+    """One Graph-QP: pre-jitted device programs for one plan.
+
+    ``fused=True`` (default): one jitted program per batch bucket executes
+    the whole plan — probe, masked miss-exec, on-device frontier merge — and
+    all hops, with a single device→host transfer for the batch.
+    ``fused=False``: the legacy host-orchestrated probe/exec/final steps.
+    """
 
     _BUCKETS = (8, 32, 128, 512, 2048, 8192)
 
-    def __init__(self, espec: EngineSpec, plan: QueryPlan, use_cache: bool = True):
+    def __init__(self, espec: EngineSpec, plan: QueryPlan, use_cache: bool = True,
+                 fused: bool = True):
         assert espec.result_width >= 1
         self.espec = espec
         self.plan = plan
         self.use_cache = use_cache
+        self.fused = fused
         self._probe_fns = {}
         self._exec_fns = {}
         self._final_fn = None
+        self._fused_fns = {}
 
     # ---------------- jitted step builders ----------------
     def _probe(self, hop_idx: int):
@@ -235,6 +281,161 @@ class GraphEngine:
             self._final_fn = final
         return self._final_fn
 
+    # ---------------- fused device pipeline ----------------
+    def _bucket_for(self, k: int) -> int:
+        for b in self._BUCKETS:
+            if b >= k:
+                return b
+        return 1 << int(np.ceil(np.log2(max(k, 1))))
+
+    def _fused(self, bucket: int):
+        """One jitted program: every hop's probe + masked miss-exec + merge,
+        the final clause, per-hop compact miss arrays, and device metrics."""
+        if bucket not in self._fused_fns:
+            espec, plan, use_cache = self.espec, self.plan, self.use_cache
+            F, RW = espec.frontier, espec.result_width
+
+            @jax.jit
+            def fused(store: GraphStore, cache: CacheState, ttable: TemplateTable,
+                      roots, bvalid):
+                Bb = roots.shape[0]
+                frontier = jnp.full((Bb, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
+                fmask = jnp.zeros((Bb, F), bool).at[:, 0].set(bvalid)
+                z = jnp.int32(0)
+                m = {
+                    "phases": jnp.int32(1),  # root index lookup (request 1)
+                    "requests": jnp.sum(bvalid.astype(jnp.int32)),
+                    "hits": z, "misses": z, "truncated": z,
+                    "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
+                }
+                miss_roots, miss_counts = [], []
+                # the occupied frontier is always a left-packed prefix, so
+                # each hop only probes/executes the A slots that can be
+                # live (1 for the root hop, then min(F, A*RW)) instead of
+                # the full F-wide frontier
+                A = 1
+                for hop in plan.hops:
+                    roots_flat = frontier[:, :A].reshape(-1)
+                    rmask_flat = fmask[:, :A].reshape(-1)
+                    BF = roots_flat.shape[0]
+                    params = jnp.broadcast_to(
+                        jnp.asarray(hop.params, jnp.int32), (BF, PARAM_LEN)
+                    )
+                    cacheable = hop.tpl_idx >= 0 and use_cache
+                    if cacheable:
+                        # lean probe: raw cached rows + O(BF) validity counts
+                        # (no per-element mask/select on the hit path)
+                        hit, leaves_c, cnt_c, _ = cache_lookup_lean(
+                            espec.cache, cache, hop.tpl_idx, roots_flat, params
+                        )
+                        hit = hit & rmask_flat & ttable.read_enabled[hop.tpl_idx]
+                        cnt_c = jnp.where(hit, cnt_c, 0)
+                        n_read = jnp.sum(rmask_flat.astype(jnp.int32))
+                        m["phases"] = m["phases"] + 1  # one cache get round-trip
+                        m["requests"] = m["requests"] + n_read
+                        m["cache_reads"] = m["cache_reads"] + n_read
+                        m["hits"] = m["hits"] + jnp.sum(hit.astype(jnp.int32))
+                    else:
+                        hit = jnp.zeros((BF,), bool)
+                        leaves_c = cnt_c = None
+                    miss_mask = rmask_flat & ~hit
+                    k = jnp.sum(miss_mask.astype(jnp.int32))
+
+                    # (vals, counts) describe the hop's per-row results
+                    # left-packed: everything the miss path touches — the
+                    # storage gathers, hit/miss select, and miss-record
+                    # compaction — lives behind the cond, so an all-hit
+                    # frontier pays none of it.
+                    def run_exec(args, hop=hop):
+                        roots_f, miss_m = args
+                        leaves_e, lmask_e, n_true, trunc, stats = onehop_exec(
+                            espec, store, hop.direction, hop.edge_label,
+                            hop.pr, hop.pe, hop.pl, roots_f,
+                            jnp.broadcast_to(
+                                jnp.asarray(hop.params, jnp.int32),
+                                (roots_f.shape[0], PARAM_LEN),
+                            ),
+                            miss_m,
+                        )
+                        cnt_e = jnp.where(miss_m, jnp.minimum(n_true, RW), 0)
+                        if cacheable:
+                            vals = jnp.where(hit[:, None], leaves_c, leaves_e)
+                            cnt = jnp.where(hit, cnt_c, cnt_e)
+                            rec = miss_m & ~trunc & (n_true <= RW)
+                            mr, _ = compact_masked(roots_f, rec, BF)
+                            nrec = jnp.sum(rec.astype(jnp.int32))
+                        else:
+                            vals, cnt = leaves_e, cnt_e
+                            mr = jnp.full((BF,), NULL_ID, jnp.int32)
+                            nrec = jnp.int32(0)
+                        return (vals, cnt, mr, nrec,
+                                jnp.sum(trunc.astype(jnp.int32)),
+                                stats["edges_scanned"], stats["leaf_fetches"])
+
+                    def skip_exec(args):
+                        # the all-hit short circuit: no storage gathers at all
+                        if cacheable:
+                            vals, cnt = leaves_c, cnt_c
+                        else:
+                            vals = jnp.full((BF, RW), NULL_ID, jnp.int32)
+                            cnt = jnp.zeros((BF,), jnp.int32)
+                        return (vals, cnt,
+                                jnp.full((BF,), NULL_ID, jnp.int32),
+                                jnp.int32(0), jnp.int32(0),
+                                jnp.int32(0), jnp.int32(0))
+
+                    vals, cnt, mr, nrec, trunc_n, es, lf = jax.lax.cond(
+                        k > 0, run_exec, skip_exec, (roots_flat, miss_mask)
+                    )
+                    m["phases"] = m["phases"] + 2 * (k > 0)  # edge read + leaf fetches
+                    m["requests"] = m["requests"] + k + lf
+                    m["leaf_fetches"] = m["leaf_fetches"] + lf
+                    m["edges_scanned"] = m["edges_scanned"] + es
+                    m["misses"] = m["misses"] + k
+                    m["truncated"] = m["truncated"] + trunc_n
+                    if cacheable:
+                        miss_roots.append(mr)
+                        miss_counts.append(nrec)
+                    # next frontier: on-device dedup/compact merge. Per-slot
+                    # results are left-packed, so the count per segment fully
+                    # describes validity and the merge cost tracks frontier
+                    # *occupancy* (1-2 rounds typical) rather than its
+                    # F*result_width capacity; matches the host merge
+                    # exactly.
+                    frontier, fmask = segmented_dedup_merge(
+                        vals.reshape(Bb, A, RW), cnt.reshape(Bb, A), F
+                    )
+                    A = min(F, A * RW)
+
+                leaves, lmask = frontier, fmask
+                if plan.post_filter is not None:
+                    kind = plan.post_filter[0]
+                    if kind == "id_neq":
+                        lmask = lmask & (leaves != roots[:, None])
+                    elif kind == "prop_neq_root":
+                        pid = plan.post_filter[1]
+                        lp = take_along0(store.vprops, leaves)[..., pid]
+                        rp = take_along0(store.vprops, roots)[..., pid]
+                        lmask = lmask & (lp != rp[:, None])
+                if plan.final == FINAL_COUNT:
+                    result = jnp.sum(lmask.astype(jnp.int32), axis=1)
+                elif plan.final == FINAL_VALUES:
+                    vals = take_along0(store.vprops, leaves)[..., plan.final_prop]
+                    result = jnp.where(lmask, vals, NULL_ID)
+                else:
+                    result = jnp.where(lmask, leaves, NULL_ID)
+                if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
+                    m["phases"] = m["phases"] + 1  # un-rewritten property fetch
+                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+                if plan.final == FINAL_VALUES:
+                    m["phases"] = m["phases"] + 1  # valueMap fetch
+                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+                m["phases"] = m["phases"] + plan.extra_phases
+                return result, tuple(miss_roots), tuple(miss_counts), m, store.version
+
+            self._fused_fns[bucket] = fused
+        return self._fused_fns[bucket]
+
     # ---------------- host orchestration ----------------
     def run(
         self,
@@ -249,8 +450,48 @@ class GraphEngine:
         array shape depends on the final clause. ``metrics["phases"]`` is the
         number of *sequential* storage round-trips the batch needed (the
         paper's n+2 → 2 effect); ``metrics["requests"]`` the total storage
-        requests issued.
+        requests issued; ``metrics["host_syncs"]`` the number of blocking
+        device→host transfer points the batch paid (1 on the fused path).
         """
+        if self.fused:
+            return self._run_fused(store, cache, ttable, roots)
+        return self._run_host(store, cache, ttable, roots)
+
+    def _run_fused(self, store, cache, ttable, roots):
+        B = len(roots)
+        bucket = self._bucket_for(B)
+        proots = np.zeros(bucket, np.int32)
+        proots[:B] = roots
+        bvalid = np.zeros(bucket, bool)
+        bvalid[:B] = True
+        out = self._fused(bucket)(
+            store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid)
+        )
+        # the batch's single device->host synchronization point
+        result, miss_roots, miss_counts, m, version = jax.device_get(out)
+        metrics = {k: int(v) for k, v in m.items()}
+        metrics["host_syncs"] = 1
+        read_version = int(version)
+        misses: list[MissRecord] = []
+        ci = 0
+        for hop in self.plan.hops:
+            if hop.tpl_idx >= 0 and self.use_cache:
+                cnt = int(miss_counts[ci])
+                mroots = miss_roots[ci]
+                ci += 1
+                params = np.asarray(hop.params, np.int32)
+                for r in mroots[:cnt]:
+                    misses.append(MissRecord(hop.tpl_idx, int(r), params, read_version))
+        return np.asarray(result)[:B], misses, metrics
+
+    def _run_host(
+        self,
+        store: GraphStore,
+        cache: CacheState,
+        ttable: TemplateTable,
+        roots: np.ndarray,
+    ):
+        """Legacy host-orchestrated path (reference; ``fused=False``)."""
         espec = self.espec
         B = len(roots)
         F = espec.frontier
@@ -272,6 +513,7 @@ class GraphEngine:
             "leaf_fetches": 0,
             "edges_scanned": 0,
             "cache_reads": 0,
+            "host_syncs": 1,  # int(store.version) above
         }
 
         for hop_idx, hop in enumerate(self.plan.hops):
@@ -289,6 +531,7 @@ class GraphEngine:
                 hit = np.asarray(hit)
                 leaves_all[hit] = np.asarray(leaves_c)[hit]
                 lmask_all[hit] = np.asarray(lmask_c)[hit]
+                metrics["host_syncs"] += 1  # probe results block for routing
                 metrics["phases"] += 1  # one cache get round-trip
                 metrics["requests"] += int(rmask_flat.sum())
                 metrics["cache_reads"] += int(rmask_flat.sum())
@@ -300,7 +543,7 @@ class GraphEngine:
             miss_idx = np.nonzero(miss_mask)[0]
             k = len(miss_idx)
             if k > 0:
-                bucket = next(b for b in self._BUCKETS if b >= k)
+                bucket = self._bucket_for(k)
                 mroots = np.full(bucket, 0, np.int32)
                 mroots[:k] = roots_flat[miss_idx]
                 mvalid = np.zeros(bucket, bool)
@@ -308,6 +551,7 @@ class GraphEngine:
                 leaves_e, lmask_e, n_true, trunc, stats = self._exec(hop_idx, bucket)(
                     store, jnp.asarray(mroots), jnp.asarray(mvalid)
                 )
+                metrics["host_syncs"] += 1  # exec results block for the merge
                 leaves_e = np.asarray(leaves_e)[:k]
                 lmask_e = np.asarray(lmask_e)[:k]
                 n_true = np.asarray(n_true)[:k]
@@ -337,6 +581,7 @@ class GraphEngine:
         result = self._final()(
             store, jnp.asarray(roots), jnp.asarray(frontier), jnp.asarray(fmask)
         )
+        metrics["host_syncs"] += 1  # final result materialization
         if self.plan.post_filter is not None and self.plan.post_filter[0] != "id_neq":
             metrics["phases"] += 1  # property fetch for the un-rewritten filter
             metrics["requests"] += int(fmask.sum())
@@ -370,9 +615,10 @@ def run_gr_tx_batch(
     plan: QueryPlan,
     roots: np.ndarray,
     use_cache: bool = True,
+    fused: bool = True,
 ):
     """One-shot convenience wrapper (tests / examples)."""
-    return GraphEngine(espec, plan, use_cache).run(store, cache, ttable, roots)
+    return GraphEngine(espec, plan, use_cache, fused=fused).run(store, cache, ttable, roots)
 
 
 def build_grw_step(espec: EngineSpec, policy: str = "write-around"):

@@ -167,7 +167,14 @@ class CachePopulator:
         return self._jitted[key]
 
     def drain(self, store_exec, store_commit, cache, ttable, k: int = 128):
-        """Process up to k queued misses. Returns the new cache."""
+        """Process up to k queued misses. Returns the new cache.
+
+        CP batches are packed with vectorized numpy slicing (no per-row
+        Python re-packing). Batches need no dedup pass: ``MissQueue.push``
+        holds each in-flight (tpl, root, params) key exactly once until it
+        is done or discarded, and duplicate keys *within* one jitted insert
+        are resolved last-writer-wins by the vectorized ``cache_insert``.
+        """
         batch = self.queue.drain(k)
         if not batch:
             return cache
@@ -176,18 +183,27 @@ class CachePopulator:
             by_tpl.setdefault(rec.tpl_idx, []).append((rec, attempts))
         for t, items in by_tpl.items():
             n = len(items)
-            bucket = next(b for b in self._BUCKETS if b >= n) if n <= self._BUCKETS[-1] else self._BUCKETS[-1]
+            roots_all = np.fromiter((rec.root for rec, _ in items), np.int32, n)
+            params_all = np.stack(
+                [np.asarray(rec.params, np.int32) for rec, _ in items]
+            ).reshape(n, PARAM_LEN)
+            vers_all = np.fromiter((rec.read_version for rec, _ in items), np.int32, n)
+            bucket = (
+                next(b for b in self._BUCKETS if b >= n)
+                if n <= self._BUCKETS[-1]
+                else self._BUCKETS[-1]
+            )
             for lo in range(0, n, bucket):
                 chunk = items[lo : lo + bucket]
+                nb = len(chunk)
                 roots = np.zeros(bucket, np.int32)
                 params = np.zeros((bucket, PARAM_LEN), np.int32)
                 vers = np.zeros(bucket, np.int32)
                 m = np.zeros(bucket, bool)
-                for j, (rec, _a) in enumerate(chunk):
-                    roots[j] = rec.root
-                    params[j] = rec.params
-                    vers[j] = rec.read_version
-                    m[j] = True
+                roots[:nb] = roots_all[lo : lo + nb]
+                params[:nb] = params_all[lo : lo + nb]
+                vers[:nb] = vers_all[lo : lo + nb]
+                m[:nb] = True
                 fn = self._fn(t, bucket)
                 cache, ok, conflicted = fn(
                     store_exec=store_exec,

@@ -34,7 +34,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.utils import NULL_ID, hash_rows
+from repro.utils import NULL_ID, hash_rows, sort_dedup_masked
 
 
 @dataclass(frozen=True)
@@ -188,15 +188,14 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
             )
             l_ok = ((leaf_prop == cfg.leaf_val) & e_ok.reshape(-1) & kept2).reshape(n * cap, D)
 
-        # compact executed results to max_leaves
-        idx = jnp.cumsum(l_ok, axis=1) - 1
-        dest = jnp.where(l_ok, jnp.minimum(idx, cfg.max_leaves - 1), cfg.max_leaves)
-        rows = jnp.arange(n * cap)[:, None]
-        exec_vals = jnp.full((n * cap, cfg.max_leaves), NULL_ID, jnp.int32)
-        exec_vals = exec_vals.at[rows, dest].set(leaf, mode="drop")
+        # dedup + compact executed results to max_leaves with the same
+        # sort-based device merge the engine's fused hop pipeline uses
+        # (set semantics per Definition 2.1; overflow beyond max_leaves is
+        # dropped instead of overwriting the last slot)
+        exec_vals, exec_mask = sort_dedup_masked(leaf, l_ok, cfg.max_leaves)
 
         merged = jnp.where(hit[:, None], cached_vals, exec_vals)
-        mlen = jnp.where(hit, cached_len, jnp.sum(l_ok, axis=1))
+        mlen = jnp.where(hit, cached_len, jnp.sum(exec_mask.astype(jnp.int32), axis=1))
         width = jnp.arange(cfg.max_leaves)[None, :]
         merged = jnp.where(width < mlen[:, None], merged, NULL_ID)
 

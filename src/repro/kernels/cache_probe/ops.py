@@ -1,18 +1,40 @@
-"""jit'd public wrapper for cache_probe."""
+"""jit'd public wrapper for cache_probe.
+
+Handles arbitrary batch sizes by padding B up to a whole number of kernel
+blocks (padded rows probe with an impossible key and are sliced off), so the
+engine's fused hop pipeline can probe any frontier width. ``interpret=None``
+resolves at trace time: compiled on TPU, interpreter elsewhere (CPU tests).
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.cache_probe.kernel import cache_probe_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("probes", "block_b", "interpret"))
 def cache_probe(c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, *, probes=8,
-                block_b=256, interpret=True):
-    return cache_probe_pallas(
+                block_b=256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B = tpl.shape[0]
+    if B <= block_b:
+        Bp, blk = B, B
+    else:
+        Bp = -(-B // block_b) * block_b
+        blk = block_b
+    if Bp != B:
+        pad = Bp - B
+        pad_i32 = lambda x: jnp.concatenate([x, jnp.full((pad,), -1, jnp.int32)])
+        pad_u32 = lambda x: jnp.concatenate([x, jnp.zeros((pad,), jnp.uint32)])
+        tpl, root = pad_i32(tpl), pad_i32(root)
+        h, fp = pad_u32(h), pad_u32(fp)
+    hit, slot = cache_probe_pallas(
         c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp, probes=probes,
-        block_b=block_b, interpret=interpret,
+        block_b=blk, interpret=interpret,
     )
+    return hit[:B], slot[:B]

@@ -7,6 +7,8 @@ from repro.utils.helpers import (
     dedup_masked,
     hash_mix,
     hash_rows,
+    segmented_dedup_merge,
+    sort_dedup_masked,
     take_along0,
 )
 
@@ -17,5 +19,7 @@ __all__ = [
     "dedup_masked",
     "hash_mix",
     "hash_rows",
+    "segmented_dedup_merge",
+    "sort_dedup_masked",
     "take_along0",
 ]

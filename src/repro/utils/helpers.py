@@ -9,6 +9,7 @@ DESIGN.md §2.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # Sentinel for a missing property value (paper: a predicate on a missing
@@ -81,6 +82,102 @@ def compact_masked(vals, mask, out_width: int, fill=NULL_ID):
     n = jnp.minimum(jnp.sum(mask, -1), out_width)
     omask = jnp.arange(out_width) < n[..., None]
     return out, omask
+
+
+def sort_dedup_masked(vals, mask, out_width: int, fill=NULL_ID):
+    """Sort-based per-row dedup + order-preserving compaction (device).
+
+    Semantically identical to the host-side frontier merge: keep the first
+    occurrence of each distinct masked value in *original* order, compact
+    left, truncate to ``out_width``, pad with ``fill``. Unlike
+    ``dedup_masked`` this is O(W log W) per row (a stable sort + an adjacent
+    compare) instead of O(W^2), so it scales to frontier-merge widths
+    (F * result_width) inside one jitted hop program.
+    """
+    mask = mask.astype(bool)
+    big = jnp.int32(2**31 - 1)  # sorts after every valid id
+    keyed = jnp.where(mask, vals, big)
+    order = jnp.argsort(keyed, axis=-1, stable=True)
+    sv = jnp.take_along_axis(keyed, order, axis=-1)
+    first = jnp.concatenate(
+        [jnp.ones(sv.shape[:-1] + (1,), bool), sv[..., 1:] != sv[..., :-1]],
+        axis=-1,
+    )
+    keep_sorted = first & (sv != big)
+    inv = jnp.argsort(order, axis=-1)  # invert the permutation
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return compact_masked(vals, keep, out_width, fill)
+
+
+def segmented_dedup_merge(vals, counts, out_width: int, fill=NULL_ID):
+    """Frontier merge specialized for *left-packed* segments (device).
+
+    ``vals``: [B, S, W] where each segment row holds ``counts[b, s]`` valid
+    entries left-packed at offsets [0, counts). Equivalent to running
+    ``sort_dedup_masked`` on the flattened [B, S*W] row with the prefix
+    masks — first occurrence kept, original order, truncated to
+    ``out_width`` — but touches only ``out_width``-sized windows per round:
+    global ranks are mapped to (segment, offset) by binary search over the
+    per-segment prefix sums, so there is no full-width sort, scatter, or
+    cumsum. Cost per round is O(B·F·(F + log S)); rows finish in
+    ceil(n_valid / F) rounds, which the cached hop pipeline keeps at 1-2.
+    """
+    B, S, W = vals.shape
+    F = out_width
+    counts = jnp.asarray(counts, jnp.int32)
+    cum = jnp.cumsum(counts, axis=1)  # [B, S] tiny
+    n_valid = cum[:, -1]
+    vflat = vals.reshape(B, S * W)
+    rows = jnp.arange(B)[:, None]
+    tril = jnp.tril(jnp.ones((F, F), bool), k=-1)
+    nwin = -(-(S * W) // F)
+    n_steps = max(S.bit_length() + 1, 1)
+
+    def rank_positions(targets):  # 1-based ranks [B, F] -> flat positions
+        lo = jnp.zeros(targets.shape, jnp.int32)
+        hi = jnp.full(targets.shape, S - 1, jnp.int32)
+
+        def step(_, lohi):  # first segment s with cum[s] >= target
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            ge = cum[rows, mid] >= targets
+            return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+        seg, _ = jax.lax.fori_loop(0, n_steps, step, (lo, hi))
+        seg = jnp.clip(seg, 0, S - 1)
+        prev = jnp.where(seg > 0, cum[rows, jnp.maximum(seg - 1, 0)], 0)
+        return seg * W + (targets - 1 - prev)
+
+    def cond(state):
+        win, _, acc_n = state
+        return (win < nwin) & jnp.any((acc_n < F) & (win * F < n_valid))
+
+    def body(state):
+        win, acc_vals, acc_n = state
+        targets = win * F + 1 + jnp.arange(F, dtype=jnp.int32)[None, :]
+        wm = targets <= n_valid[:, None]
+        pos = rank_positions(jnp.minimum(targets, jnp.maximum(n_valid[:, None], 1)))
+        wv = jnp.where(wm, vflat[rows, jnp.clip(pos, 0, S * W - 1)], fill)
+        dup_acc = jnp.any(
+            (wv[:, :, None] == acc_vals[:, None, :])
+            & (jnp.arange(F)[None, None, :] < acc_n[:, None, None]),
+            axis=2,
+        )
+        dup_win = jnp.any((wv[:, :, None] == wv[:, None, :]) & tril[None], axis=2)
+        keep = wm & ~dup_acc & ~dup_win
+        dest = acc_n[:, None] + jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+        dest = jnp.where(keep & (dest < F), dest, F)  # OOB -> drop
+        acc_vals = acc_vals.at[rows, dest].set(wv, mode="drop")
+        acc_n = jnp.minimum(acc_n + jnp.sum(keep.astype(jnp.int32), axis=1), F)
+        return win + 1, acc_vals, acc_n
+
+    acc_vals = jnp.full((B, F), fill, vals.dtype)
+    acc_n = jnp.zeros((B,), jnp.int32)
+    _, acc_vals, acc_n = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), acc_vals, acc_n)
+    )
+    omask = jnp.arange(F)[None, :] < acc_n[:, None]
+    return jnp.where(omask, acc_vals, fill), omask
 
 
 def dedup_masked(vals, mask):

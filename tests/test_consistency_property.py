@@ -10,6 +10,9 @@ compare against the pure-python oracle.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dep (requirements-test.txt)
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,288 @@
+"""Equivalence of the fused device hop pipeline with the legacy
+host-orchestrated path, of the vectorized cache insert with the sequential
+reference, and of the Pallas cache probe with its jnp oracle.
+
+These are the guarantees that let the fused path be the default: everything
+the engine returns — results, miss records, metrics — must be byte-identical
+between the two execution strategies (only ``host_syncs`` may differ, by
+design), and the cache write path must be indistinguishable from walking the
+batch sequentially even under intra-batch collisions and evictions.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (
+    MISSING,
+    P_LISTING_ID,
+    TPL_META,
+    build_world,
+    common_watchlist_plan,
+    enabled_ttable,
+    fig1_plan,
+)
+from repro.core import (
+    CacheSpec,
+    EngineSpec,
+    FINAL_COUNT,
+    FINAL_VALUES,
+    GraphEngine,
+    cache_insert,
+    cache_lookup,
+    empty_cache,
+    rewrite_plan,
+)
+from repro.core.cache import cache_insert_sequential
+from repro.core.keys import PARAM_LEN
+from repro.core.population import CachePopulator
+from repro.kernels.cache_probe.ops import cache_probe
+from repro.kernels.cache_probe.ref import cache_probe_ref
+from repro.utils import segmented_dedup_merge, sort_dedup_masked
+
+
+def _assert_runs_equal(out_fused, out_host, ctx=""):
+    rf, mf, metf = out_fused
+    rh, mh, meth = out_host
+    assert np.array_equal(rf, rh), f"{ctx}: results differ"
+    assert len(mf) == len(mh), f"{ctx}: miss counts differ"
+    for a, b in zip(mf, mh):
+        assert a.tpl_idx == b.tpl_idx and a.root == b.root, ctx
+        assert np.array_equal(a.params, b.params), ctx
+        assert a.read_version == b.read_version, ctx
+    # host_syncs differs by design: 1 fused vs 2 + per-hop on the host path
+    kf = {k: v for k, v in metf.items() if k != "host_syncs"}
+    kh = {k: v for k, v in meth.items() if k != "host_syncs"}
+    assert kf == kh, f"{ctx}: metrics differ: {kf} vs {kh}"
+    assert metf["host_syncs"] == 1, ctx
+    assert meth["host_syncs"] > metf["host_syncs"], ctx
+
+
+def _engines(world, plan, use_cache=True):
+    return (
+        GraphEngine(world["espec"], plan, use_cache=use_cache, fused=True),
+        GraphEngine(world["espec"], plan, use_cache=use_cache, fused=False),
+    )
+
+
+@pytest.mark.parametrize("use_cache", [True, False])
+def test_fused_matches_host_cold_and_warm(world, use_cache):
+    plan = fig1_plan()
+    ef, eh = _engines(world, plan, use_cache)
+    roots = np.array([0, 1, 2, 3], np.int32)
+    args = (world["store"], world["cache"], world["ttable"], roots)
+    out_f, out_h = ef.run(*args), eh.run(*args)
+    _assert_runs_equal(out_f, out_h, f"cold use_cache={use_cache}")
+    # warm the cache from the fused path's miss records and compare again
+    pop = CachePopulator(world["espec"], TPL_META)
+    pop.queue.push(out_f[1])
+    cache = pop.drain(world["store"], world["store"], world["cache"], world["ttable"])
+    warm = (world["store"], cache, world["ttable"], roots)
+    out_f2, out_h2 = ef.run(*warm), eh.run(*warm)
+    _assert_runs_equal(out_f2, out_h2, f"warm use_cache={use_cache}")
+    if use_cache:
+        assert out_f2[2]["hits"] == 4 and out_f2[2]["misses"] == 0
+
+
+def test_fused_matches_host_multihop_and_finals(world):
+    roots2 = np.array([5, 6], np.int32)
+    plans = [
+        ("two-hop prop_neq", common_watchlist_plan(), roots2),
+        (
+            "two-hop id_neq rewrite",
+            rewrite_plan(common_watchlist_plan(), unique_props=frozenset({P_LISTING_ID})),
+            roots2,
+        ),
+        ("count", fig1_plan()._replace(final=FINAL_COUNT), np.array([0, 2], np.int32)),
+        (
+            "values",
+            fig1_plan()._replace(final=FINAL_VALUES, final_prop=P_LISTING_ID),
+            np.array([1, 3], np.int32),
+        ),
+    ]
+    for name, plan, roots in plans:
+        ef, eh = _engines(world, plan)
+        args = (world["store"], world["cache"], world["ttable"], roots)
+        _assert_runs_equal(ef.run(*args), eh.run(*args), name)
+
+
+def test_fused_matches_host_random_worlds():
+    """Property-style sweep: random worlds + random roots, both paths."""
+    for seed in range(4):
+        spec, store = build_world(n_watchlists=5, n_listings=14, seed=seed)
+        cspec = CacheSpec(capacity=512, probes=4, max_leaves=8, max_chunks=2)
+        espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=16)
+        ttable, _, _ = enabled_ttable()
+        cache = empty_cache(cspec)
+        rng = np.random.default_rng(seed)
+        roots = rng.integers(0, 19, rng.integers(1, 7)).astype(np.int32)
+        plan = common_watchlist_plan() if seed % 2 else fig1_plan()
+        ef = GraphEngine(espec, plan, use_cache=True, fused=True)
+        eh = GraphEngine(espec, plan, use_cache=True, fused=False)
+        out_f = ef.run(store, cache, ttable, roots)
+        out_h = eh.run(store, cache, ttable, roots)
+        _assert_runs_equal(out_f, out_h, f"seed={seed}")
+        # warm pass over the same roots
+        pop = CachePopulator(espec, TPL_META)
+        pop.queue.push(out_f[1])
+        cache = pop.drain(store, store, cache, ttable)
+        _assert_runs_equal(
+            ef.run(store, cache, ttable, roots),
+            eh.run(store, cache, ttable, roots),
+            f"seed={seed} warm",
+        )
+
+
+# ------------------------------------------------------- vectorized insert
+def _rand_insert_batch(rng, B, cspec, nroots=8):
+    L, C = cspec.max_leaves, cspec.max_chunks
+    tpl = rng.integers(0, 2, B).astype(np.int32)
+    root = rng.integers(0, nroots, B).astype(np.int32)  # forces duplicate keys
+    params = rng.integers(0, 3, (B, PARAM_LEN)).astype(np.int32)
+    lens = rng.integers(0, L * C + 3, B).astype(np.int32)  # includes oversize
+    leaves = rng.integers(0, 100, (B, L * C)).astype(np.int32)
+    ver = rng.integers(1, 5, B).astype(np.int32)
+    mask = rng.random(B) < 0.9
+    return tuple(map(jnp.asarray, (tpl, root, params, leaves, lens, ver, mask)))
+
+
+def test_vectorized_insert_matches_sequential():
+    """Byte-identical final CacheState (values, metadata, AND stats) under
+    duplicate keys, probe-window collisions, chunked values, oversize skips,
+    and eviction pressure — the full sequential-semantics contract."""
+    rng = np.random.default_rng(7)
+    for trial in range(12):
+        cap = int(rng.choice([8, 16, 64]))  # tiny capacities force evictions
+        cspec = CacheSpec(
+            capacity=cap,
+            probes=int(rng.choice([2, 4])),
+            max_leaves=4,
+            max_chunks=int(rng.choice([1, 2, 3])),
+        )
+        c_vec = c_seq = empty_cache(cspec)
+        for _ in range(3):  # stacked batches interact through the table
+            batch = _rand_insert_batch(rng, int(rng.integers(1, 20)), cspec)
+            c_vec = cache_insert(cspec, c_vec, *batch)
+            c_seq = cache_insert_sequential(cspec, c_seq, *batch)
+        for f in c_vec._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(c_vec, f)),
+                np.asarray(getattr(c_seq, f)),
+                err_msg=f"trial {trial}: field {f}",
+            )
+
+
+def test_vectorized_insert_duplicate_keys_last_writer_wins():
+    cspec = CacheSpec(capacity=64, probes=4, max_leaves=4, max_chunks=1)
+    cache = empty_cache(cspec)
+    B = 3
+    tpl = jnp.zeros(B, jnp.int32)
+    root = jnp.full((B,), 9, jnp.int32)  # same key three times
+    params = jnp.zeros((B, PARAM_LEN), jnp.int32)
+    leaves = jnp.arange(B * 4, dtype=jnp.int32).reshape(B, 4) * 10
+    cache = cache_insert(
+        cspec, cache, tpl, root, params, leaves,
+        jnp.full((B,), 2, jnp.int32), jnp.arange(B, dtype=jnp.int32), jnp.ones(B, bool),
+    )
+    hit, vals, lmask, ver = cache_lookup(cspec, cache, tpl[:1], root[:1], params[:1])
+    assert bool(hit[0])
+    got = np.asarray(vals[0])[np.asarray(lmask[0])]
+    assert got.tolist() == [80, 90]  # the last row's leaves
+    assert int(ver[0]) == 2  # and its commit version
+
+
+# ------------------------------------------------------- pallas cache probe
+def test_cache_probe_pallas_matches_ref_interpret():
+    """The Pallas kernel must agree with ref.py under interpret=True,
+    including at batch sizes that are not a multiple of the block."""
+    rng = np.random.default_rng(3)
+    for C, B, probes in [(256, 32, 4), (512, 37, 8), (1024, 300, 8)]:
+        c_tpl = rng.integers(-1, 3, C).astype(np.int32)
+        c_root = rng.integers(0, 64, C).astype(np.int32)
+        c_fp = rng.integers(0, 2**32, C, dtype=np.uint32)
+        c_valid = rng.random(C) < 0.5
+        tpl = rng.integers(0, 3, B).astype(np.int32)
+        root = rng.integers(0, 64, B).astype(np.int32)
+        h = rng.integers(0, 2**32, B, dtype=np.uint32)
+        fp = rng.integers(0, 2**32, B, dtype=np.uint32)
+        planted = {}  # base slot -> query index (later plants overwrite)
+        for i in range(0, B, 2):  # plant real hits in the base slot
+            s = int(h[i] % C)
+            c_tpl[s], c_root[s], c_fp[s], c_valid[s] = tpl[i], root[i], fp[i], True
+            planted[s] = i
+        args = tuple(map(jnp.asarray, (c_tpl, c_root, c_fp, c_valid, tpl, root, h, fp)))
+        got_hit, got_slot = cache_probe(*args, probes=probes, interpret=True)
+        ref_hit, ref_slot = cache_probe_ref(*args, probes=probes)
+        np.testing.assert_array_equal(np.asarray(got_hit), np.asarray(ref_hit))
+        np.testing.assert_array_equal(np.asarray(got_slot), np.asarray(ref_slot))
+        surviving = list(planted.values())  # not overwritten by a later plant
+        assert np.asarray(got_hit)[surviving].all()
+
+
+def test_cache_lookup_pallas_matches_jnp(world):
+    """End-to-end: a populated cache reads identically through the Pallas
+    probe and the jnp fallback (chunked entries included)."""
+    cspec = world["cspec"]
+    rng = np.random.default_rng(5)
+    B = 21
+    tpl = rng.integers(0, 2, B).astype(np.int32)
+    root = rng.integers(0, 16, B).astype(np.int32)
+    params = rng.integers(0, 3, (B, PARAM_LEN)).astype(np.int32)
+    lens = rng.integers(0, 2 * cspec.max_leaves, B).astype(np.int32)
+    leaves = rng.integers(0, 64, (B, 2 * cspec.max_leaves)).astype(np.int32)
+    cache = cache_insert(
+        cspec, world["cache"], *map(jnp.asarray, (tpl, root, params, leaves, lens)),
+        jnp.ones(B, jnp.int32), jnp.ones(B, bool),
+    )
+    jn = cache_lookup(cspec, cache, jnp.asarray(tpl), jnp.asarray(root),
+                      jnp.asarray(params), use_pallas=False)
+    pl = cache_lookup(cspec, cache, jnp.asarray(tpl), jnp.asarray(root),
+                      jnp.asarray(params), use_pallas=True)
+    for a, b, name in zip(jn, pl, ("hit", "leaves", "lmask", "version")):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    assert np.asarray(jn[0]).any()
+
+
+def _host_dedup(vals_row, width):
+    seen, want = set(), []
+    for v in vals_row.tolist():
+        if v not in seen:
+            seen.add(v)
+            want.append(v)
+    return want[:width]
+
+
+def test_sort_dedup_matches_host_merge():
+    """The sort-based device merge equals the legacy host-side semantics:
+    first occurrence kept, original order, truncated to the output width."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        B = int(rng.integers(1, 6))
+        W = int(rng.integers(1, 40))
+        width = int(rng.integers(1, 10))
+        vals = rng.integers(0, 12, (B, W)).astype(np.int32)
+        mask = rng.random((B, W)) < 0.6
+        dv, dm = sort_dedup_masked(jnp.asarray(vals), jnp.asarray(mask), width)
+        for b in range(B):
+            want = _host_dedup(vals[b][mask[b]], width)
+            got = np.asarray(dv[b])[np.asarray(dm[b])].tolist()
+            assert got == want
+
+
+def test_segmented_dedup_merge_matches_host_merge():
+    """The occupancy-driven merge (left-packed segments, the fused engine's
+    frontier shape) also matches the host semantics exactly."""
+    rng = np.random.default_rng(13)
+    for _ in range(20):
+        B = int(rng.integers(1, 6))
+        S = int(rng.integers(1, 6))
+        W = int(rng.integers(1, 9))
+        width = int(rng.integers(1, 10))
+        counts = rng.integers(0, W + 1, (B, S)).astype(np.int32)
+        vals = rng.integers(0, 10, (B, S, W)).astype(np.int32)
+        mask = np.arange(W)[None, None, :] < counts[:, :, None]
+        dv, dm = segmented_dedup_merge(jnp.asarray(vals), jnp.asarray(counts), width)
+        for b in range(B):
+            want = _host_dedup(vals[b].reshape(-1)[mask[b].reshape(-1)], width)
+            got = np.asarray(dv[b])[np.asarray(dm[b])].tolist()
+            assert got == want

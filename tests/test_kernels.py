@@ -5,8 +5,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+# hypothesis is an optional test dep (requirements-test.txt); only the
+# property tests need it — the kernel sweeps must keep running without it.
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -66,28 +74,36 @@ def test_onehop_gather_sweep(V, E, B, max_deg):
     np.testing.assert_array_equal(np.asarray(got_l), np.asarray(ref_l))
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 10_000))
-def test_onehop_gather_property(seed):
-    rng = np.random.default_rng(seed)
-    V, B, max_deg = 32, 8, 8
-    E = V * max_deg  # capacity for every window
-    deg = rng.integers(0, max_deg, V).astype(np.int32)
-    start = np.concatenate([[0], np.cumsum(deg)[:-1]]).astype(np.int32)
-    dst = rng.integers(0, V, E).astype(np.int32)
-    eprop = rng.integers(0, 2, E).astype(np.int32)
-    vprop = rng.integers(0, 2, V).astype(np.int32)
-    roots = rng.integers(0, V, B).astype(np.int32)
-    args = tuple(map(jnp.asarray, (start, deg, dst, eprop, vprop, roots)))
-    got_l, got_m = onehop_gather(*args, max_deg=max_deg, edge_val=1, leaf_val=0, block_b=8)
-    # semantic property: per root, the masked set equals the brute-force set
-    for i, r in enumerate(roots):
-        want = set()
-        for e in range(start[r], start[r] + deg[r]):
-            if eprop[e] == 1 and vprop[dst[e]] == 0:
-                want.add(int(dst[e]))
-        got = set(np.asarray(got_l[i])[np.asarray(got_m[i])].tolist())
-        assert got == want
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_onehop_gather_property(seed):
+        rng = np.random.default_rng(seed)
+        V, B, max_deg = 32, 8, 8
+        E = V * max_deg  # capacity for every window
+        deg = rng.integers(0, max_deg, V).astype(np.int32)
+        start = np.concatenate([[0], np.cumsum(deg)[:-1]]).astype(np.int32)
+        dst = rng.integers(0, V, E).astype(np.int32)
+        eprop = rng.integers(0, 2, E).astype(np.int32)
+        vprop = rng.integers(0, 2, V).astype(np.int32)
+        roots = rng.integers(0, V, B).astype(np.int32)
+        args = tuple(map(jnp.asarray, (start, deg, dst, eprop, vprop, roots)))
+        got_l, got_m = onehop_gather(*args, max_deg=max_deg, edge_val=1, leaf_val=0, block_b=8)
+        # semantic property: per root, the masked set equals the brute-force set
+        for i, r in enumerate(roots):
+            want = set()
+            for e in range(start[r], start[r] + deg[r]):
+                if eprop[e] == 1 and vprop[dst[e]] == 0:
+                    want.add(int(dst[e]))
+            got = set(np.asarray(got_l[i])[np.asarray(got_m[i])].tolist())
+            assert got == want
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_onehop_gather_property():
+        pass
 
 
 # ------------------------------------------------------------ embedding bag
