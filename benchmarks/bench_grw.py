@@ -1,0 +1,152 @@
+"""Sharded vs single-host gRW-Tx commit throughput (BENCH_grw_invalidation.json).
+
+Measures mutations/sec of the gRW-Tx write step — apply the mutation batch +
+identify and delete the impacted cache entries — on the same warmed world:
+
+- ``host``:    the single-host jitted commit (``get_grw_step``), which runs
+  the mutation listener over every masked lane and probes the cache for all
+  of them (the pre-runtime behaviour, unchanged).
+- ``sharded``: ``ShardedTxnRuntime.grw_step`` on a virtual CPU device mesh —
+  phase A round-robins the batch's change sections across shards and derives
+  a *compacted* impacted-key op stream (only real ops survive), phase B
+  routes each op to the shard owning its root and applies it against the
+  local cache shard.
+
+Both post-states are asserted logically identical before timing. Run via
+``benchmarks/run.py --only grw_invalidation`` (which sets XLA_FLAGS for the
+device mesh before jax initializes) or directly:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_grw --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+N_SHARDS = 8
+
+if __name__ == "__main__" and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_SHARDS}"
+    ).strip()
+
+import numpy as np  # noqa: E402
+
+
+def _warm(world, rt, n_rounds=30, batch=16):
+    """Warm the single-host cache and the sharded cache from the *same*
+    miss stream, so the two write steps start from identical entries."""
+    from benchmarks.workload import TPL_META, query_plans
+    from repro.core import GraphEngine, empty_cache
+    from repro.core.population import CachePopulator
+
+    cache_h = empty_cache(world.espec.cache)
+    cache_s = rt.empty_cache()
+    pop_h = CachePopulator(world.espec, TPL_META)
+    pop_s = rt.populator(TPL_META)
+    plans = query_plans()
+    engines = {n: GraphEngine(world.espec, p, True) for (n, p, _, _, _) in plans}
+    for _ in range(n_rounds):
+        name, plan, label, w, cls = plans[int(world.rng.integers(0, len(plans)))]
+        lo, hi = world.vertex_range(label)
+        roots = np.array([world.zipf_pick(lo, hi) for _ in range(batch)], np.int32)
+        _, misses, _ = engines[name].run(world.store, cache_h, world.ttable, roots)
+        pop_h.queue.push(misses)
+        pop_s.queue.push(misses)
+        cache_h = pop_h.drain(world.store, world.store, cache_h, world.ttable, 512)
+        cache_s = pop_s.drain(world.store, world.store, cache_s, world.ttable, 512)
+    return cache_h, cache_s
+
+
+def main(batch_sv=256, batch_de=32, iters=6, seed=7, json_path=None):
+    import jax
+
+    from benchmarks.workload import build_world
+    from repro.core import cache_entries, get_grw_step
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.graphstore import make_mutation_batch
+
+    n_dev = len(jax.devices())
+    assert n_dev >= N_SHARDS, (
+        f"need {N_SHARDS} devices (XLA_FLAGS=--xla_force_host_platform_"
+        f"device_count={N_SHARDS}), got {n_dev}"
+    )
+    world = build_world(seed=seed, cache_capacity=1 << 15)
+    espec, store, ttable = world.espec, world.store, world.ttable
+    mesh = flat_mesh(N_SHARDS)
+    rt = ShardedTxnRuntime(
+        espec, mesh, ops_cap=4096, sweep_cap=512, ops_route_cap=2048
+    )
+    cache_h, cache_s = _warm(world, rt)
+    occupancy = len(cache_entries(espec.cache, cache_h))
+    assert cache_entries(espec.cache, cache_h) == cache_entries(espec.cache, cache_s)
+
+    # the measured commit: listing-Status writes (Algorithm 2's expensive
+    # DeleteKeysForLeaf reverse traversals) + includes-edge deletes
+    rng = np.random.default_rng(seed)
+    l0, l1 = world.vertex_range(1)
+    svs = [(int(rng.integers(l0, l1)), 0, int(rng.integers(0, 2)))
+           for _ in range(batch_sv)]
+    dels = [int(e) for e in rng.choice(world.includes_eids, batch_de, replace=False)]
+    mb = make_mutation_batch(
+        world.spec, set_vprops=svs, del_edges=dels,
+        caps=(8, 32, max(32, batch_de), 8, max(32, batch_sv), 32),
+    )
+    n_muts = batch_sv + batch_de
+
+    host_step = get_grw_step(espec)
+    shard_step = rt.grw_step()
+
+    # compile + correctness: identical store, logically identical cache
+    out_h = host_step(store, cache_h, ttable, mb)
+    out_s = shard_step(store, cache_s, ttable, mb)
+    jax.block_until_ready((out_h, out_s))
+    assert int(out_s[3]) == 0, f"op-stream overflow: {int(out_s[3])}"
+    for f in out_h[0]._fields:
+        assert np.array_equal(
+            np.asarray(getattr(out_h[0], f)), np.asarray(getattr(out_s[0], f))
+        ), f"store field {f} diverged"
+    assert cache_entries(espec.cache, out_h[1]) == cache_entries(espec.cache, out_s[1]), (
+        "cache post-states diverged"
+    )
+
+    res = {}
+    for name, fn, cc in (("host", host_step, cache_h), ("sharded", shard_step, cache_s)):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(store, cc, ttable, mb)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / iters
+        res[name] = dict(ms_per_commit=round(dt * 1e3, 1),
+                         mutations_per_s=round(n_muts / dt, 1))
+        print(f"{name}: {dt * 1e3:.1f} ms/commit, {n_muts / dt:.0f} mutations/s")
+
+    speedup = res["sharded"]["mutations_per_s"] / res["host"]["mutations_per_s"]
+    out = dict(
+        batch_mutations=n_muts, n_shards=N_SHARDS,
+        cache_capacity=espec.cache.capacity, cache_occupancy=occupancy,
+        impacted_keys=int(out_s[2]), post_states_equal=True,
+        host=res["host"], sharded=res["sharded"],
+        speedup=round(speedup, 2),
+    )
+    print(f"speedup: {speedup:.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {json_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--iters", type=int, default=6)
+    args = ap.parse_args()
+    main(iters=args.iters, json_path=args.json)

@@ -14,6 +14,10 @@ import sys
 import time
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# self-sufficient invocation: python benchmarks/run.py [...]
+for _p in (REPO_ROOT, os.path.join(REPO_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def _timed(name, fn, *a, **kw):
@@ -21,6 +25,34 @@ def _timed(name, fn, *a, **kw):
     out = fn(*a, **kw)
     dt = time.perf_counter() - t0
     return name, dt, out
+
+
+def _bench_grw_invalidation():
+    """Sharded vs single-host gRW-Tx commit throughput; persists
+    BENCH_grw_invalidation.json at the repo root. Runs in a subprocess so
+    XLA can create the virtual device mesh before jax initializes."""
+    import subprocess
+
+    from benchmarks import bench_grw
+
+    path = os.path.join(REPO_ROOT, "BENCH_grw_invalidation.json")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={bench_grw.N_SHARDS}"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT,
+                    env.get("PYTHONPATH")) if p
+    )
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_grw", "--json", path],
+        check=True, env=env, cwd=REPO_ROOT,
+    )
+    with open(path) as f:
+        out = json.load(f)
+    print(f"wrote {path}")
+    return out
 
 
 def _bench_hop_pipeline(batch=512):
@@ -50,6 +82,8 @@ def main() -> None:
     benches = {
         # fused vs host-orchestrated hop pipeline (BENCH_hop_pipeline.json)
         "hop_pipeline": lambda: _bench_hop_pipeline(batch=512),
+        # sharded vs host gRW-Tx commit (BENCH_grw_invalidation.json)
+        "grw_invalidation": _bench_grw_invalidation,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

@@ -45,6 +45,7 @@ from repro.core.cache import (
     CacheSpec,
     CacheState,
     cache_delete,
+    cache_entries,
     cache_insert,
     cache_insert_sequential,
     cache_lookup,
@@ -52,6 +53,16 @@ from repro.core.cache import (
     empty_cache,
     sweep_root,
     sweep_template,
+)
+from repro.core.runtime import (
+    BUCKETS,
+    bucket_for,
+    bucketize,
+    decode_miss_records,
+    get_grw_step,
+    make_fused_plan_fn,
+    make_hop_kernel,
+    pad_roots,
 )
 from repro.core.engine import (
     FINAL_COUNT,

@@ -485,6 +485,35 @@ def sweep_template(spec: CacheSpec, cache: CacheState, tpl_id):
     return cache._replace(valid=cache.valid & ~kill, n_delete=cache.n_delete + n)
 
 
+def cache_entries(spec: CacheSpec, cache: CacheState) -> list:
+    """Canonical host-side dump of the logical cache contents.
+
+    Returns a sorted list of per-slot tuples ``(tpl, root, fp, chunk,
+    total_len, version, leaves)`` for every valid slot, with each chunk's
+    leaf row trimmed to its occupied prefix. The dump is *layout-free*: the
+    fingerprint is capacity-independent, so a single-host table and a
+    sharded table (n blocks of capacity/n) holding the same logical entries
+    dump identically — this is how the byte-identity tests compare gRW-Tx
+    post-states across runtimes.
+    """
+    import numpy as np
+
+    L = spec.max_leaves
+    valid = np.asarray(cache.valid)
+    tpl, root = np.asarray(cache.tpl), np.asarray(cache.root)
+    fp, chunk = np.asarray(cache.fp), np.asarray(cache.chunk)
+    tlen, ver = np.asarray(cache.total_len), np.asarray(cache.version)
+    vals = np.asarray(cache.vals)
+    out = []
+    for s in np.nonzero(valid)[0]:
+        seg = int(min(L, max(int(tlen[s]) - int(chunk[s]) * L, 0)))
+        out.append((
+            int(tpl[s]), int(root[s]), int(fp[s]), int(chunk[s]),
+            int(tlen[s]), int(ver[s]), tuple(vals[s, :seg].tolist()),
+        ))
+    return sorted(out)
+
+
 def cache_stats(cache: CacheState) -> dict:
     occ = jnp.sum(cache.valid.astype(jnp.int32))
     return {

@@ -17,12 +17,16 @@ frontier prefix with hit rows short-circuited behind a ``lax.cond`` that
 skips the storage gathers entirely when the whole frontier hits), and an
 on-device dedup/compact frontier merge (``segmented_dedup_merge``, which
 exploits the left-packed per-slot results so merge cost tracks frontier
-*occupancy*; ``sort_dedup_masked`` is the sort-based general-mask variant,
-used by the distributed serve step). Results, per-hop compact miss arrays,
-metrics, and the read version come back in a **single device→host transfer
-per batch** (``metrics["host_syncs"]``), so a 3-hop gR-Tx pays one sync
-instead of ~6 — the prerequisite for pipelining hops across shards.
-Batches are padded to power-of-two buckets so the jit cache stays small.
+*occupancy*). Results, per-hop compact miss arrays, metrics, and the read
+version come back in a **single device→host transfer per batch**
+(``metrics["host_syncs"]``), so a 3-hop gR-Tx pays one sync instead of ~6.
+
+The pipeline itself lives in the shared transaction runtime
+(``repro.core.runtime``): ``GraphEngine`` jits ``make_fused_plan_fn``
+directly, and the sharded serve tier (``repro.distributed.graph_serve``)
+runs the identical per-hop kernels inside ``shard_map`` with root routing
+between them — the single-host engine is the 1-shard special case of that
+runtime, and the two are tested byte-identical.
 
 Tradeoff: when *any* row of a hop misses, the fused path executes the
 storage gathers over the whole occupied frontier with hit rows masked
@@ -43,34 +47,39 @@ debugging device-side issues. Both paths produce identical results; only
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache import CacheSpec, CacheState, cache_lookup, cache_lookup_lean
+from repro.core.cache import CacheSpec, CacheState, cache_lookup
 from repro.core.keys import PARAM_LEN
-from repro.core.templates import (
-    DIR_BOTH,
-    DIR_IN,
-    DIR_OUT,
-    MAX_CONDS,
-    PredSpec,
-    TemplateTable,
-    evaluate_pred,
+from repro.core.runtime import (
+    BUCKETS,
+    FINAL_COUNT,
+    FINAL_IDS,
+    FINAL_VALUES,
+    MissRecord,
+    bucket_for,
+    decode_miss_records,
+    finalize_frontier,
+    get_grw_step,
+    host_compact_dedup as _host_compact_dedup,
+    make_fused_plan_fn,
+    onehop_exec,
+    pad_roots,
 )
-from repro.graphstore.store import GraphStore, StoreSpec, gather_in, gather_out
-from repro.graphstore.mutations import MutationBatch, apply_mutations
-from repro.utils import (
-    NULL_ID,
-    compact_masked,
-    dedup_masked,
-    segmented_dedup_merge,
-    take_along0,
-)
+from repro.core.templates import PredSpec, TemplateTable
+from repro.graphstore.store import GraphStore, StoreSpec
+from repro.graphstore.mutations import MutationBatch
+from repro.utils import NULL_ID
 
-FINAL_IDS, FINAL_COUNT, FINAL_VALUES = 0, 1, 2
+__all__ = [
+    "FINAL_IDS", "FINAL_COUNT", "FINAL_VALUES", "EngineSpec", "Hop",
+    "QueryPlan", "MissRecord", "GraphEngine", "onehop_exec",
+    "run_gr_tx_batch", "build_grw_step", "run_grw_tx",
+]
 
 
 class EngineSpec(NamedTuple):
@@ -112,87 +121,6 @@ class QueryPlan(NamedTuple):
     extra_phases: int = 0
 
 
-def onehop_exec(
-    espec: EngineSpec,
-    store: GraphStore,
-    direction: int,
-    edge_label: int,
-    pr: PredSpec,
-    pe: PredSpec,
-    pl: PredSpec,
-    roots: jax.Array,  # int32 [B]
-    params: jax.Array,  # int32 [B, PARAM_LEN]
-    rmask: jax.Array,  # bool [B]
-):
-    """Execute one one-hop sub-query instance per root (the cache-miss path).
-
-    Returns (leaves [B, RW], lmask, n_true [B], truncated [B], stats) where
-    RW = espec.result_width. ``n_true`` is the un-truncated cardinality and
-    ``truncated`` flags supernode rows whose adjacency exceeded the gather
-    window — neither is cacheable when truncated.
-    """
-    sspec = espec.store
-    pe_bound = params[:, :MAX_CONDS]
-    pl_bound = params[:, MAX_CONDS:]
-
-    rlab = take_along0(store.vlabel, roots)
-    rprops = take_along0(store.vprops, roots)
-    r_ok = evaluate_pred(pr, rlab, rprops) & rmask
-
-    eids_parts, leaf_parts, mask_parts, trunc = [], [], [], jnp.zeros_like(r_ok)
-    if direction in (DIR_OUT, DIR_BOTH):
-        e, o, m, t = gather_out(sspec, store, roots, espec.max_deg)
-        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
-        trunc |= t
-    if direction in (DIR_IN, DIR_BOTH):
-        e, o, m, t = gather_in(sspec, store, roots, espec.max_deg)
-        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
-        trunc |= t
-    eids = jnp.concatenate(eids_parts, axis=1)
-    leaf = jnp.concatenate(leaf_parts, axis=1)
-    # gate the observed-edge mask by rmask so per-row stats only count rows
-    # this call was actually asked to execute (padded / hit-short-circuited
-    # rows must not contribute phantom scans)
-    scanned_mask = jnp.concatenate(mask_parts, axis=1) & rmask[:, None]
-    mask = scanned_mask
-    n_edges_scanned = jnp.sum(mask.astype(jnp.int32))
-
-    elab = take_along0(store.elabel, eids)
-    ep = take_along0(store.eprops, eids)
-    e_ok = (edge_label < 0) | (elab == edge_label)
-    e_ok &= evaluate_pred(pe, elab, ep, bound_vals=pe_bound[:, None, :])
-    mask &= e_ok
-    n_leaf_fetches = jnp.sum(mask.astype(jnp.int32))  # the paper's "n"
-
-    llab = take_along0(store.vlabel, leaf)
-    lp = take_along0(store.vprops, leaf)
-    l_ok = evaluate_pred(pl, llab, lp, bound_vals=pl_bound[:, None, :])
-    mask &= l_ok & r_ok[:, None]
-
-    mask = dedup_masked(leaf, mask)  # set semantics (Definition 2.1)
-    n_true = jnp.sum(mask.astype(jnp.int32), axis=1)
-    leaves, lmask = compact_masked(leaf, mask, espec.result_width)
-    stats = {
-        "edges_scanned": n_edges_scanned,
-        "leaf_fetches": n_leaf_fetches,
-        # full read-conflict set for OCC population commits: every vertex
-        # whose state this execution *observed*, including filtered-out
-        # leaves (their property writes can change the result too)
-        "scanned": leaf,
-        "scanned_mask": scanned_mask,
-    }
-    return leaves, lmask, n_true, trunc & rmask, stats
-
-
-class MissRecord(NamedTuple):
-    """Host-side record of one cache miss awaiting async population."""
-
-    tpl_idx: int
-    root: int
-    params: np.ndarray  # int32 [PARAM_LEN]
-    read_version: int
-
-
 class GraphEngine:
     """One Graph-QP: pre-jitted device programs for one plan.
 
@@ -202,7 +130,7 @@ class GraphEngine:
     ``fused=False``: the legacy host-orchestrated probe/exec/final steps.
     """
 
-    _BUCKETS = (8, 32, 128, 512, 2048, 8192)
+    _BUCKETS = BUCKETS
 
     def __init__(self, espec: EngineSpec, plan: QueryPlan, use_cache: bool = True,
                  fused: bool = True):
@@ -214,7 +142,8 @@ class GraphEngine:
         self._probe_fns = {}
         self._exec_fns = {}
         self._final_fn = None
-        self._fused_fns = {}
+        # one jitted program; jax re-specializes per batch bucket
+        self._fused_fn = jax.jit(make_fused_plan_fn(espec, plan, use_cache))
 
     # ---------------- jitted step builders ----------------
     def _probe(self, hop_idx: int):
@@ -258,183 +187,17 @@ class GraphEngine:
 
     def _final(self):
         if self._final_fn is None:
-            plan, espec = self.plan, self.espec
+            plan = self.plan
 
             @jax.jit
             def final(store: GraphStore, q_roots, leaves, lmask):
-                if plan.post_filter is not None:
-                    kind = plan.post_filter[0]
-                    if kind == "id_neq":
-                        lmask = lmask & (leaves != q_roots[:, None])
-                    elif kind == "prop_neq_root":
-                        pid = plan.post_filter[1]
-                        lp = take_along0(store.vprops, leaves)[..., pid]
-                        rp = take_along0(store.vprops, q_roots)[..., pid]
-                        lmask = lmask & (lp != rp[:, None])
-                if plan.final == FINAL_COUNT:
-                    return jnp.sum(lmask.astype(jnp.int32), axis=1)
-                if plan.final == FINAL_VALUES:
-                    vals = take_along0(store.vprops, leaves)[..., plan.final_prop]
-                    return jnp.where(lmask, vals, NULL_ID)
-                return jnp.where(lmask, leaves, NULL_ID)
+                return finalize_frontier(plan, store, q_roots, leaves, lmask)
 
             self._final_fn = final
         return self._final_fn
 
-    # ---------------- fused device pipeline ----------------
     def _bucket_for(self, k: int) -> int:
-        for b in self._BUCKETS:
-            if b >= k:
-                return b
-        return 1 << int(np.ceil(np.log2(max(k, 1))))
-
-    def _fused(self, bucket: int):
-        """One jitted program: every hop's probe + masked miss-exec + merge,
-        the final clause, per-hop compact miss arrays, and device metrics."""
-        if bucket not in self._fused_fns:
-            espec, plan, use_cache = self.espec, self.plan, self.use_cache
-            F, RW = espec.frontier, espec.result_width
-
-            @jax.jit
-            def fused(store: GraphStore, cache: CacheState, ttable: TemplateTable,
-                      roots, bvalid):
-                Bb = roots.shape[0]
-                frontier = jnp.full((Bb, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
-                fmask = jnp.zeros((Bb, F), bool).at[:, 0].set(bvalid)
-                z = jnp.int32(0)
-                m = {
-                    "phases": jnp.int32(1),  # root index lookup (request 1)
-                    "requests": jnp.sum(bvalid.astype(jnp.int32)),
-                    "hits": z, "misses": z, "truncated": z,
-                    "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
-                }
-                miss_roots, miss_counts = [], []
-                # the occupied frontier is always a left-packed prefix, so
-                # each hop only probes/executes the A slots that can be
-                # live (1 for the root hop, then min(F, A*RW)) instead of
-                # the full F-wide frontier
-                A = 1
-                for hop in plan.hops:
-                    roots_flat = frontier[:, :A].reshape(-1)
-                    rmask_flat = fmask[:, :A].reshape(-1)
-                    BF = roots_flat.shape[0]
-                    params = jnp.broadcast_to(
-                        jnp.asarray(hop.params, jnp.int32), (BF, PARAM_LEN)
-                    )
-                    cacheable = hop.tpl_idx >= 0 and use_cache
-                    if cacheable:
-                        # lean probe: raw cached rows + O(BF) validity counts
-                        # (no per-element mask/select on the hit path)
-                        hit, leaves_c, cnt_c, _ = cache_lookup_lean(
-                            espec.cache, cache, hop.tpl_idx, roots_flat, params
-                        )
-                        hit = hit & rmask_flat & ttable.read_enabled[hop.tpl_idx]
-                        cnt_c = jnp.where(hit, cnt_c, 0)
-                        n_read = jnp.sum(rmask_flat.astype(jnp.int32))
-                        m["phases"] = m["phases"] + 1  # one cache get round-trip
-                        m["requests"] = m["requests"] + n_read
-                        m["cache_reads"] = m["cache_reads"] + n_read
-                        m["hits"] = m["hits"] + jnp.sum(hit.astype(jnp.int32))
-                    else:
-                        hit = jnp.zeros((BF,), bool)
-                        leaves_c = cnt_c = None
-                    miss_mask = rmask_flat & ~hit
-                    k = jnp.sum(miss_mask.astype(jnp.int32))
-
-                    # (vals, counts) describe the hop's per-row results
-                    # left-packed: everything the miss path touches — the
-                    # storage gathers, hit/miss select, and miss-record
-                    # compaction — lives behind the cond, so an all-hit
-                    # frontier pays none of it.
-                    def run_exec(args, hop=hop):
-                        roots_f, miss_m = args
-                        leaves_e, lmask_e, n_true, trunc, stats = onehop_exec(
-                            espec, store, hop.direction, hop.edge_label,
-                            hop.pr, hop.pe, hop.pl, roots_f,
-                            jnp.broadcast_to(
-                                jnp.asarray(hop.params, jnp.int32),
-                                (roots_f.shape[0], PARAM_LEN),
-                            ),
-                            miss_m,
-                        )
-                        cnt_e = jnp.where(miss_m, jnp.minimum(n_true, RW), 0)
-                        if cacheable:
-                            vals = jnp.where(hit[:, None], leaves_c, leaves_e)
-                            cnt = jnp.where(hit, cnt_c, cnt_e)
-                            rec = miss_m & ~trunc & (n_true <= RW)
-                            mr, _ = compact_masked(roots_f, rec, BF)
-                            nrec = jnp.sum(rec.astype(jnp.int32))
-                        else:
-                            vals, cnt = leaves_e, cnt_e
-                            mr = jnp.full((BF,), NULL_ID, jnp.int32)
-                            nrec = jnp.int32(0)
-                        return (vals, cnt, mr, nrec,
-                                jnp.sum(trunc.astype(jnp.int32)),
-                                stats["edges_scanned"], stats["leaf_fetches"])
-
-                    def skip_exec(args):
-                        # the all-hit short circuit: no storage gathers at all
-                        if cacheable:
-                            vals, cnt = leaves_c, cnt_c
-                        else:
-                            vals = jnp.full((BF, RW), NULL_ID, jnp.int32)
-                            cnt = jnp.zeros((BF,), jnp.int32)
-                        return (vals, cnt,
-                                jnp.full((BF,), NULL_ID, jnp.int32),
-                                jnp.int32(0), jnp.int32(0),
-                                jnp.int32(0), jnp.int32(0))
-
-                    vals, cnt, mr, nrec, trunc_n, es, lf = jax.lax.cond(
-                        k > 0, run_exec, skip_exec, (roots_flat, miss_mask)
-                    )
-                    m["phases"] = m["phases"] + 2 * (k > 0)  # edge read + leaf fetches
-                    m["requests"] = m["requests"] + k + lf
-                    m["leaf_fetches"] = m["leaf_fetches"] + lf
-                    m["edges_scanned"] = m["edges_scanned"] + es
-                    m["misses"] = m["misses"] + k
-                    m["truncated"] = m["truncated"] + trunc_n
-                    if cacheable:
-                        miss_roots.append(mr)
-                        miss_counts.append(nrec)
-                    # next frontier: on-device dedup/compact merge. Per-slot
-                    # results are left-packed, so the count per segment fully
-                    # describes validity and the merge cost tracks frontier
-                    # *occupancy* (1-2 rounds typical) rather than its
-                    # F*result_width capacity; matches the host merge
-                    # exactly.
-                    frontier, fmask = segmented_dedup_merge(
-                        vals.reshape(Bb, A, RW), cnt.reshape(Bb, A), F
-                    )
-                    A = min(F, A * RW)
-
-                leaves, lmask = frontier, fmask
-                if plan.post_filter is not None:
-                    kind = plan.post_filter[0]
-                    if kind == "id_neq":
-                        lmask = lmask & (leaves != roots[:, None])
-                    elif kind == "prop_neq_root":
-                        pid = plan.post_filter[1]
-                        lp = take_along0(store.vprops, leaves)[..., pid]
-                        rp = take_along0(store.vprops, roots)[..., pid]
-                        lmask = lmask & (lp != rp[:, None])
-                if plan.final == FINAL_COUNT:
-                    result = jnp.sum(lmask.astype(jnp.int32), axis=1)
-                elif plan.final == FINAL_VALUES:
-                    vals = take_along0(store.vprops, leaves)[..., plan.final_prop]
-                    result = jnp.where(lmask, vals, NULL_ID)
-                else:
-                    result = jnp.where(lmask, leaves, NULL_ID)
-                if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
-                    m["phases"] = m["phases"] + 1  # un-rewritten property fetch
-                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
-                if plan.final == FINAL_VALUES:
-                    m["phases"] = m["phases"] + 1  # valueMap fetch
-                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
-                m["phases"] = m["phases"] + plan.extra_phases
-                return result, tuple(miss_roots), tuple(miss_counts), m, store.version
-
-            self._fused_fns[bucket] = fused
-        return self._fused_fns[bucket]
+        return bucket_for(k, self._BUCKETS)
 
     # ---------------- host orchestration ----------------
     def run(
@@ -460,28 +223,17 @@ class GraphEngine:
     def _run_fused(self, store, cache, ttable, roots):
         B = len(roots)
         bucket = self._bucket_for(B)
-        proots = np.zeros(bucket, np.int32)
-        proots[:B] = roots
-        bvalid = np.zeros(bucket, bool)
-        bvalid[:B] = True
-        out = self._fused(bucket)(
+        proots, bvalid = pad_roots(roots, bucket)
+        out = self._fused_fn(
             store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid)
         )
         # the batch's single device->host synchronization point
         result, miss_roots, miss_counts, m, version = jax.device_get(out)
         metrics = {k: int(v) for k, v in m.items()}
         metrics["host_syncs"] = 1
-        read_version = int(version)
-        misses: list[MissRecord] = []
-        ci = 0
-        for hop in self.plan.hops:
-            if hop.tpl_idx >= 0 and self.use_cache:
-                cnt = int(miss_counts[ci])
-                mroots = miss_roots[ci]
-                ci += 1
-                params = np.asarray(hop.params, np.int32)
-                for r in mroots[:cnt]:
-                    misses.append(MissRecord(hop.tpl_idx, int(r), params, read_version))
+        misses = decode_miss_records(
+            self.plan, self.use_cache, miss_roots, miss_counts, int(version)
+        )
         return np.asarray(result)[:B], misses, metrics
 
     def _run_host(
@@ -592,21 +344,6 @@ class GraphEngine:
         return np.asarray(result), misses, metrics
 
 
-def _host_compact_dedup(vals: np.ndarray, mask: np.ndarray, width: int):
-    """Host-side per-row dedup + compaction (frontier merge between hops)."""
-    B = vals.shape[0]
-    out = np.full((B, width), NULL_ID, np.int32)
-    omask = np.zeros((B, width), bool)
-    for b in range(B):
-        row = vals[b][mask[b]]
-        if row.size:
-            _, first = np.unique(row, return_index=True)
-            row = row[np.sort(first)][:width]
-            out[b, : len(row)] = row
-            omask[b, : len(row)] = True
-    return out, omask
-
-
 def run_gr_tx_batch(
     espec: EngineSpec,
     store: GraphStore,
@@ -622,26 +359,13 @@ def run_gr_tx_batch(
 
 
 def build_grw_step(espec: EngineSpec, policy: str = "write-around"):
-    """Build the jitted gRW-Tx commit: apply mutations + maintain the cache.
+    """The jitted gRW-Tx commit: apply mutations + maintain the cache.
 
-    Both the graph writes and the cache deletions happen in one functional
-    state transition — the tensor analogue of FDB buffering both in one
-    transaction commit (§4).
+    Cached by ``(espec, policy)`` in the shared runtime, so calling this (or
+    ``run_grw_tx``) repeatedly reuses one compiled program instead of
+    re-tracing per invocation. See ``repro.core.runtime.get_grw_step``.
     """
-    from repro.core.invalidation import invalidate_write_around, write_through_update
-
-    @jax.jit
-    def step(store: GraphStore, cache: CacheState, ttable: TemplateTable, batch: MutationBatch):
-        store2, applied = apply_mutations(espec.store, store, batch)
-        before = cache.n_delete
-        if policy == "write-around":
-            cache2 = invalidate_write_around(espec, store, store2, cache, ttable, applied)
-        else:
-            cache2 = write_through_update(espec, store, store2, cache, ttable, applied)
-        impacted = cache2.n_delete - before
-        return store2, cache2, impacted
-
-    return step
+    return get_grw_step(espec, policy)
 
 
 def run_grw_tx(

@@ -12,9 +12,31 @@ mutations × all registered templates, entirely as tensor ops:
 implemented in the paper — we implement it as a beyond-paper feature):
 instead of deleting impacted entries it appends/removes single vertex ids
 in place, falling back to deletion for multi-chunk or full entries.
+
+The drivers are written against a *sink*: the mutation listener derives the
+impacted ``(template, root, params)`` keys and hands them to the sink, which
+decides what to do with them.
+
+- ``_ApplySink`` applies maintenance immediately to a cache pytree — the
+  single-host path, byte-identical to the pre-runtime sequential behaviour.
+- ``_CollectSink`` materializes the impacted keys as a flat tensor **op
+  stream** instead (``derive_cache_ops``). The sharded runtime derives ops
+  from its slice of the mutation batch, compacts the (mostly-masked) stream,
+  routes each op to the shard owning its root, and applies it against the
+  local cache shard (``repro.distributed.graph_serve``). Each op carries an
+  ``order`` key (emission call serial × row-major position) so an
+  order-preserving apply can reconstruct the exact sequential semantics
+  after cross-shard routing.
+
+Deletes are idempotent and inserts never happen during maintenance, so
+exact-key deletes and root sweeps commute freely; only write-through value
+edits on the same key are order-sensitive (hence the ``order`` column and
+``apply_op_stream``'s sorted sequential walk).
 """
 
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +56,140 @@ from repro.core.templates import (
 from repro.graphstore.store import GraphStore, gather_in, gather_out
 from repro.graphstore.mutations import AppliedMutations
 from repro.utils import NULL_ID, PROP_MISSING, compact_masked, take_along0
+
+# op kinds of the collected maintenance stream (root sweeps travel in their
+# own, much smaller stream — a sweep is a mask over the whole cache shard)
+OP_DELETE, OP_VAL_ADD, OP_VAL_REMOVE = 0, 1, 2
+
+# order = serial * _ORDER_STRIDE + *global* row-major position within the
+# emission (global mutation row × gather width + lane), so a routed/merged
+# stream sorts back into exactly the single-host application order. A policy
+# run makes ~16 emissions per template, so int32 holds the product for up to
+# 32 registered templates × 4M-position emissions (global section cap ×
+# reverse-gather width); both bounds are asserted at trace time via the
+# static ``bound`` each emission passes to the sink.
+_ORDER_STRIDE = 1 << 22
+
+
+class CacheOpStream(NamedTuple):
+    """Flat tensor stream of exact-key maintenance ops (phase A output)."""
+
+    kind: jax.Array  # int32 [M]  OP_DELETE / OP_VAL_ADD / OP_VAL_REMOVE
+    tpl: jax.Array  # int32 [M]
+    root: jax.Array  # int32 [M]
+    params: jax.Array  # int32 [M, PARAM_LEN]
+    vid: jax.Array  # int32 [M]  leaf id for value ops (NULL_ID otherwise)
+    order: jax.Array  # int32 [M]  global sequential-application order key
+    ok: jax.Array  # bool  [M]
+
+
+class SweepStream(NamedTuple):
+    """Flat tensor stream of (template, root) range sweeps (Algorithm 6)."""
+
+    tpl: jax.Array  # int32 [S]
+    root: jax.Array  # int32 [S]
+    ok: jax.Array  # bool  [S]
+
+
+class _ApplySink:
+    """Applies maintenance ops to a cache immediately (single-host path).
+
+    Call sites and batching match the pre-runtime code exactly, so the
+    resulting cache — including its stats counters — is byte-identical.
+    """
+
+    def __init__(self, espec, cache: CacheState):
+        self.cspec = espec.cache
+        self.cache = cache
+
+    def delete(self, t, root, params, ok, order, bound):
+        self.cache = cache_delete(
+            self.cspec, self.cache, jnp.full(jnp.shape(root), t), root, params, ok
+        )
+
+    def value(self, t, root, params, vid, ok, delta, order, bound):
+        self.cache = _value_update(
+            self.cspec, self.cache, t, root, params, vid, ok, delta
+        )
+
+    def sweep(self, t, roots, ok, order, bound):
+        self.cache = sweep_root(
+            self.cspec, self.cache, jnp.full(roots.shape, t), roots, ok
+        )
+
+
+class _CollectSink:
+    """Collects maintenance ops as flat tensors instead of applying them."""
+
+    def __init__(self):
+        self._ops = []
+        self._sweeps = []
+        self._serial = 0
+
+    def _order(self, pos, bound):
+        # ``bound`` is the static maximum position this emission can hold
+        # (global section cap × gather width)
+        assert bound <= _ORDER_STRIDE, (
+            f"emission positions up to {bound} overflow the op-order stride"
+        )
+        assert (self._serial + 1) * _ORDER_STRIDE < 2**31, (
+            "too many emissions for int32 op-order keys"
+        )
+        o = jnp.int32(self._serial) * _ORDER_STRIDE + pos.astype(jnp.int32)
+        self._serial += 1
+        return o
+
+    def _push(self, kind, t, root, params, vid, ok, order, bound):
+        root = jnp.asarray(root, jnp.int32).reshape(-1)
+        self._ops.append((
+            jnp.full(root.shape, kind, jnp.int32),
+            jnp.full(root.shape, t, jnp.int32),
+            root,
+            jnp.asarray(params, jnp.int32).reshape(-1, PARAM_LEN),
+            jnp.asarray(vid, jnp.int32).reshape(-1),
+            self._order(order.reshape(-1), bound),
+            jnp.asarray(ok, bool).reshape(-1),
+        ))
+
+    def delete(self, t, root, params, ok, order, bound):
+        self._push(
+            OP_DELETE, t, root, params, jnp.full(jnp.shape(root), NULL_ID), ok,
+            order, bound,
+        )
+
+    def value(self, t, root, params, vid, ok, delta, order, bound):
+        kind = OP_VAL_ADD if delta > 0 else OP_VAL_REMOVE
+        self._push(kind, t, root, params, vid, ok, order, bound)
+
+    def sweep(self, t, roots, ok, order, bound):
+        self._sweeps.append((
+            jnp.full(roots.shape, t, jnp.int32),
+            jnp.asarray(roots, jnp.int32),
+            jnp.asarray(ok, bool),
+        ))
+        self._serial += 1
+
+    def streams(self):
+        if not self._ops:  # no registered templates: empty streams
+            z = lambda *s: jnp.zeros(s, jnp.int32)
+            ops = CacheOpStream(
+                z(0), z(0), z(0), z(0, PARAM_LEN), z(0), z(0), jnp.zeros((0,), bool)
+            )
+        else:
+            cat = lambda i: jnp.concatenate([op[i] for op in self._ops], axis=0)
+            ops = CacheOpStream(*(cat(i) for i in range(7)))
+        if not self._sweeps:
+            sw = SweepStream(
+                jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((0,), bool),
+            )
+        else:
+            sw = SweepStream(
+                jnp.concatenate([s[0] for s in self._sweeps]),
+                jnp.concatenate([s[1] for s in self._sweeps]),
+                jnp.concatenate([s[2] for s in self._sweeps]),
+            )
+        return ops, sw
 
 
 def _pred_row(stacked: PredSpec, t: int) -> PredSpec:
@@ -62,7 +218,7 @@ def _prop_in_pred(pred: PredSpec, pid):
 
 def _handle_edge_change(
     espec,
-    cache: CacheState,
+    sink,
     ttable: TemplateTable,
     t: int,
     store_ep: GraphStore,
@@ -71,15 +227,18 @@ def _handle_edge_change(
     src,
     dst,
     active,
+    rows,
+    rbound,
     value_delta=None,
 ):
     """Algorithm 8 over a batch of edges. ``store_ep`` supplies endpoint
     labels/properties (pre- or post-state per the caller's change type).
 
     ``value_delta``: None -> write-around (delete keys); +1 -> write-through
-    append leaf; -1 -> write-through remove leaf.
+    append leaf; -1 -> write-through remove leaf. ``rows`` carries the
+    *global* mutation-row index of each edge (the sink's ordering key) and
+    ``rbound`` its static exclusive upper bound.
     """
-    cspec = espec.cache
     pe = _pred_row(ttable.pe, t)
     pr = _pred_row(ttable.pr, t)
     pl = _pred_row(ttable.pl, t)
@@ -107,15 +266,14 @@ def _handle_edge_change(
         wl = extract_wildcards(pl, lprops)
         params = jnp.concatenate([we, wl], axis=-1)
         if value_delta is None:
-            cache = cache_delete(cspec, cache, jnp.full(R.shape, t), R, params, ok)
+            sink.delete(t, R, params, ok, rows, rbound)
         else:
-            cache = _value_update(cspec, cache, t, R, params, L, ok, value_delta)
-    return cache
+            sink.value(t, R, params, L, ok, value_delta, rows, rbound)
 
 
 def _delete_keys_for_leaf(
     espec,
-    cache: CacheState,
+    sink,
     ttable: TemplateTable,
     t: int,
     store_trav: GraphStore,
@@ -123,11 +281,12 @@ def _delete_keys_for_leaf(
     leaf_label,
     leaf_props,
     active,
+    rows,
+    rbound,
     value_delta=None,
 ):
     """Algorithm 7 over a batch of leaves: reverse-traverse to each possible
     root and delete (or write-through update) the corresponding keys."""
-    cspec = espec.cache
     pe = _pred_row(ttable.pe, t)
     pr = _pred_row(ttable.pr, t)
     pl = _pred_row(ttable.pl, t)
@@ -160,63 +319,113 @@ def _delete_keys_for_leaf(
             [we, jnp.broadcast_to(wl[:, None, :], we.shape)], axis=-1
         )
         K, W = roots.shape
+        order = rows[:, None] * W + jnp.arange(W, dtype=jnp.int32)[None, :]
         flat = lambda x: x.reshape((K * W,) + x.shape[2:])
         if value_delta is None:
-            cache = cache_delete(
-                cspec, cache, jnp.full((K * W,), t), flat(roots), flat(params), flat(ok)
-            )
+            sink.delete(t, flat(roots), flat(params), flat(ok), flat(order),
+                        rbound * W)
         else:
             leaf_b = jnp.broadcast_to(leaf_vid[:, None], (K, W))
-            cache = _value_update(
-                cspec, cache, t, flat(roots), flat(params), flat(leaf_b), flat(ok), value_delta
+            sink.value(
+                t, flat(roots), flat(params), flat(leaf_b), flat(ok), value_delta,
+                flat(order), rbound * W,
             )
-    return cache
+
+
+def _value_row(cspec: CacheSpec, cache: CacheState, t, root, params, vid, mask, add: bool):
+    """Write-through in-place value edit of one entry: append (add=True) or
+    remove ``vid`` from its leaf list. Single-chunk entries only; multi-chunk
+    or full entries fall back to write-around deletion."""
+    L = cspec.max_leaves
+    found, slot, _, _ = _probe(cspec, cache, t, root, params, 0)
+    s = jnp.clip(slot, 0)
+    tlen = cache.total_len[s]
+    single = tlen <= L
+    do = mask & found
+    row = cache.vals[s]
+    present = jnp.any((row == vid) & (jnp.arange(L) < tlen))
+    if add:
+        new_row = row.at[jnp.clip(tlen, 0, L - 1)].set(vid)
+        new_len = tlen + 1
+        write = do & single & ~present & (tlen < L)
+        # full entry (or multi-chunk chain): fall back to write-around
+        kill = do & (~single | ((tlen >= L) & ~present))
+    else:
+        keep = (row != vid) & (jnp.arange(L) < tlen)
+        new_row, _ = compact_masked(row, keep, L)
+        new_len = jnp.sum(keep.astype(jnp.int32))
+        write = do & single & present
+        kill = do & ~single
+    tgt = jnp.where(write, s, cspec.capacity)
+    cache = cache._replace(
+        vals=cache.vals.at[tgt].set(jnp.where(write, new_row, row), mode="drop"),
+        total_len=cache.total_len.at[tgt].set(
+            jnp.where(write, new_len, tlen), mode="drop"
+        ),
+    )
+    kt = jnp.where(kill, s, cspec.capacity)
+    return cache._replace(
+        valid=cache.valid.at[kt].set(False, mode="drop"),
+        n_delete=cache.n_delete + jnp.where(kill, 1, 0),
+    )
 
 
 def _value_update(cspec: CacheSpec, cache: CacheState, t, root, params, vid, mask, delta):
-    """Write-through in-place value edit: append (delta=+1) or remove
-    (delta=-1) ``vid`` from the entry's leaf list. Single-chunk entries only;
-    multi-chunk or full entries fall back to write-around deletion. Walks the
-    batch sequentially (write path)."""
-    L = cspec.max_leaves
+    """Write-through value edit over a batch, walked sequentially (write
+    path). See ``_value_row`` for the per-entry semantics."""
     K = root.shape[0]
     tpl = jnp.full((K,), t, jnp.int32)
 
     def body(i, cache):
-        found, slot, _, _ = _probe(cspec, cache, tpl[i], root[i], params[i], 0)
-        s = jnp.clip(slot, 0)
-        tlen = cache.total_len[s]
-        single = tlen <= L
-        do = mask[i] & found
-        row = cache.vals[s]
-        present = jnp.any((row == vid[i]) & (jnp.arange(L) < tlen))
-        if delta > 0:
-            new_row = row.at[jnp.clip(tlen, 0, L - 1)].set(vid[i])
-            new_len = tlen + 1
-            write = do & single & ~present & (tlen < L)
-            # full entry (or multi-chunk chain): fall back to write-around
-            kill = do & (~single | ((tlen >= L) & ~present))
-        else:
-            keep = (row != vid[i]) & (jnp.arange(L) < tlen)
-            new_row, _ = compact_masked(row, keep, L)
-            new_len = jnp.sum(keep.astype(jnp.int32))
-            write = do & single & present
-            kill = do & ~single
-        tgt = jnp.where(write, s, cspec.capacity)
-        cache = cache._replace(
-            vals=cache.vals.at[tgt].set(jnp.where(write, new_row, row), mode="drop"),
-            total_len=cache.total_len.at[tgt].set(
-                jnp.where(write, new_len, tlen), mode="drop"
-            ),
+        return _value_row(
+            cspec, cache, tpl[i], root[i], params[i], vid[i], mask[i], delta > 0
         )
-        kt = jnp.where(kill, s, cspec.capacity)
-        cache = cache._replace(
-            valid=cache.valid.at[kt].set(False, mode="drop"),
-            n_delete=cache.n_delete + jnp.where(kill, 1, 0),
-        )
-        return cache
 
     return jax.lax.fori_loop(0, K, body, cache)
+
+
+def apply_op_stream(cspec: CacheSpec, cache: CacheState, ops: CacheOpStream):
+    """Order-preserving sequential application of an exact-key op stream.
+
+    Rows are walked in ``order``-sorted sequence, so a routed/merged stream
+    reproduces the single-host emission order exactly — required for
+    write-through value edits, which do not commute with deletes on the same
+    key. Masked rows are no-ops.
+    """
+    perm = jnp.argsort(jnp.where(ops.ok, ops.order, jnp.int32(2**31 - 1)), stable=True)
+    kind, tpl, root = ops.kind[perm], ops.tpl[perm], ops.root[perm]
+    params, vid, ok = ops.params[perm], ops.vid[perm], ops.ok[perm]
+
+    def body(i, cache):
+        branches = [
+            # cache_delete is shape-polymorphic: a 0-d row deletes all
+            # chunks and counts exactly like the batched path
+            lambda c: cache_delete(cspec, c, tpl[i], root[i], params[i], ok[i]),
+            lambda c: _value_row(cspec, c, tpl[i], root[i], params[i], vid[i], ok[i], True),
+            lambda c: _value_row(cspec, c, tpl[i], root[i], params[i], vid[i], ok[i], False),
+        ]
+        return jax.lax.switch(jnp.clip(kind[i], 0, 2), branches, cache)
+
+    return jax.lax.fori_loop(0, root.shape[0], body, cache)
+
+
+def apply_op_stream_batched(cspec: CacheSpec, cache: CacheState, ops: CacheOpStream):
+    """Vectorized application of a pure-delete op stream (write-around).
+
+    Deletes are idempotent and commute, so the whole stream collapses into
+    one batched ``cache_delete``. Value ops must use ``apply_op_stream``.
+    """
+    return cache_delete(
+        cspec, cache, ops.tpl, ops.root, ops.params,
+        ops.ok & (ops.kind == OP_DELETE),
+    )
+
+
+def apply_sweeps(cspec: CacheSpec, cache: CacheState, sweeps: SweepStream):
+    """Apply a (template, root) sweep stream (Algorithm 6). Sweeps commute
+    with every other maintenance op — no inserts happen during maintenance,
+    so a swept entry can never be resurrected."""
+    return sweep_root(cspec, cache, sweeps.tpl, sweeps.root, sweeps.ok)
 
 
 def _sec(mask_len, ids):
@@ -224,17 +433,37 @@ def _sec(mask_len, ids):
 
 
 def _run_policy(
-    espec, store_pre, store_post, cache, ttable, applied: AppliedMutations, *, through: bool
+    espec, store_pre, store_post, sink, ttable, applied: AppliedMutations, *,
+    through: bool, row_offset=0, row_stride: int = 1,
 ):
+    """Drive Algorithms 1–4 over every (mutation, template) pair into ``sink``.
+
+    ``row_offset``/``row_stride`` recover each section row's *global* batch
+    index when the caller hands in a strided slice of the mutation batch
+    (the sharded runtime's round-robin phase A; ``row_offset`` may be a
+    traced ``axis_index`` < ``row_stride``); the default (0, 1) is the
+    identity for the single-host path. The global indices feed the sink's
+    op-ordering keys, so a cross-shard op stream sorts back into exactly
+    this loop's sequential application order.
+    """
     b = applied.batch
     T = int(ttable.direction.shape[0])
     nv = espec.store.n_vprops
+
+    def rows_of(ids):
+        rows = (
+            jnp.asarray(row_offset, jnp.int32)
+            + row_stride * jnp.arange(ids.shape[0], dtype=jnp.int32)
+        )
+        return rows, row_stride * ids.shape[0]  # (global rows, static bound)
 
     ne_m = _sec(b.ne_n, b.ne_src)
     de_m = _sec(b.de_n, b.de_eid)
     se_m = _sec(b.se_n, b.se_eid)
     sv_m = _sec(b.sv_n, b.sv_vid)
     dv_m = _sec(b.dv_n, b.dv_vid)
+    ne_r, de_r = rows_of(b.ne_src), rows_of(b.de_eid)
+    se_r, sv_r, dv_r = rows_of(b.se_eid), rows_of(b.sv_vid), rows_of(b.dv_vid)
 
     # edge-prop change = delete old edge + add new edge (Example 5)
     pid_col = jnp.clip(b.se_pid, 0, espec.store.n_eprops - 1)
@@ -260,29 +489,29 @@ def _run_policy(
         pl = _pred_row(ttable.pl, t)
 
         # --- Algorithm 3: add edges (post state) / delete edges (pre state)
-        cache = _handle_edge_change(
-            espec, cache, ttable, t, store_post,
-            b.ne_label, b.ne_props, b.ne_src, b.ne_dst, ne_m & wen,
+        _handle_edge_change(
+            espec, sink, ttable, t, store_post,
+            b.ne_label, b.ne_props, b.ne_src, b.ne_dst, ne_m & wen, *ne_r,
             value_delta=add_d,
         )
-        cache = _handle_edge_change(
-            espec, cache, ttable, t, store_pre,
+        _handle_edge_change(
+            espec, sink, ttable, t, store_pre,
             applied.de_label, applied.de_props, applied.de_src, applied.de_dst,
-            de_m & wen, value_delta=del_d,
+            de_m & wen, *de_r, value_delta=del_d,
         )
 
         # --- Algorithm 4: edge property change (only templates whose P^e
         # references the property)
         in_pe = _prop_in_pred(_pred_row(ttable.pe, t), b.se_pid)
-        cache = _handle_edge_change(
-            espec, cache, ttable, t, store_pre,
+        _handle_edge_change(
+            espec, sink, ttable, t, store_pre,
             applied.se_label, se_old_props, applied.se_src, applied.se_dst,
-            se_m & wen & in_pe, value_delta=del_d,
+            se_m & wen & in_pe, *se_r, value_delta=del_d,
         )
-        cache = _handle_edge_change(
-            espec, cache, ttable, t, store_post,
+        _handle_edge_change(
+            espec, sink, ttable, t, store_post,
             applied.se_label, applied.se_props, applied.se_src, applied.se_dst,
-            se_m & wen & in_pe, value_delta=add_d,
+            se_m & wen & in_pe, *se_r, value_delta=add_d,
         )
 
         # --- Algorithm 2: vertex property change
@@ -290,44 +519,55 @@ def _run_policy(
         r_hit = evaluate_pred(pr, sv_lab, sv_pre) | evaluate_pred(pr, sv_lab, sv_post)
         # root-side changes clear the whole (template, root) range — both
         # policies delete (write-through has no cheaper option, §3.2)
-        cache = sweep_root(
-            espec.cache, cache, jnp.full(b.sv_vid.shape, t), b.sv_vid,
-            sv_m & wen & in_pr & r_hit,
-        )
+        sink.sweep(t, b.sv_vid, sv_m & wen & in_pr & r_hit, *sv_r)
         in_pl = _prop_in_pred(pl, b.sv_pid)
-        cache = _delete_keys_for_leaf(
-            espec, cache, ttable, t, store_post, b.sv_vid, sv_lab, sv_pre,
-            sv_m & wen & in_pl, value_delta=del_d,
+        _delete_keys_for_leaf(
+            espec, sink, ttable, t, store_post, b.sv_vid, sv_lab, sv_pre,
+            sv_m & wen & in_pl, *sv_r, value_delta=del_d,
         )
-        cache = _delete_keys_for_leaf(
-            espec, cache, ttable, t, store_post, b.sv_vid, sv_lab, sv_post,
-            sv_m & wen & in_pl, value_delta=add_d,
+        _delete_keys_for_leaf(
+            espec, sink, ttable, t, store_post, b.sv_vid, sv_lab, sv_post,
+            sv_m & wen & in_pl, *sv_r, value_delta=add_d,
         )
 
         # --- Algorithm 1: delete vertex (pre state)
         r_ok = evaluate_pred(pr, dv_lab, dv_props)
-        cache = sweep_root(
-            espec.cache, cache, jnp.full(b.dv_vid.shape, t), b.dv_vid,
-            dv_m & wen & r_ok,
+        sink.sweep(t, b.dv_vid, dv_m & wen & r_ok, *dv_r)
+        _delete_keys_for_leaf(
+            espec, sink, ttable, t, store_pre, b.dv_vid, dv_lab, dv_props,
+            dv_m & wen, *dv_r, value_delta=del_d,
         )
-        cache = _delete_keys_for_leaf(
-            espec, cache, ttable, t, store_pre, b.dv_vid, dv_lab, dv_props,
-            dv_m & wen, value_delta=del_d,
-        )
-    return cache
 
 
 def invalidate_write_around(espec, store_pre, store_post, cache, ttable, applied):
     """Write-around policy (§4): delete every impacted cache entry, in the
     same commit as the graph writes."""
-    return _run_policy(
-        espec, store_pre, store_post, cache, ttable, applied, through=False
-    )
+    sink = _ApplySink(espec, cache)
+    _run_policy(espec, store_pre, store_post, sink, ttable, applied, through=False)
+    return sink.cache
 
 
 def write_through_update(espec, store_pre, store_post, cache, ttable, applied):
     """Write-through policy (§3.2, lazy variant): update impacted entries in
     place where possible, delete where not."""
-    return _run_policy(
-        espec, store_pre, store_post, cache, ttable, applied, through=True
+    sink = _ApplySink(espec, cache)
+    _run_policy(espec, store_pre, store_post, sink, ttable, applied, through=True)
+    return sink.cache
+
+
+def derive_cache_ops(
+    espec, store_pre, store_post, ttable, applied, *, through: bool,
+    row_offset=0, row_stride: int = 1,
+):
+    """Phase A of the sharded write path: run the mutation listener without
+    touching any cache, returning the impacted keys as tensor streams
+    ``(CacheOpStream, SweepStream)`` ready to be compacted and routed to the
+    shards owning their roots. ``row_offset``/``row_stride`` recover global
+    mutation-row indices for the op-ordering keys when ``applied`` is a
+    round-robin slice (see ``shard_mutation_rows``)."""
+    sink = _CollectSink()
+    _run_policy(
+        espec, store_pre, store_post, sink, ttable, applied, through=through,
+        row_offset=row_offset, row_stride=row_stride,
     )
+    return sink.streams()

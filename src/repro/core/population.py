@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runtime
 from repro.core.cache import CacheSpec, CacheState, cache_insert
 from repro.core.engine import EngineSpec, MissRecord, onehop_exec
 from repro.core.keys import PARAM_LEN
@@ -114,8 +115,9 @@ def populate_step(
     # filtered-out neighbor can change the result as well)
     read_set = jnp.concatenate([roots[:, None], stats["scanned"]], axis=1)
     read_mask = jnp.concatenate([mask[:, None], stats["scanned_mask"]], axis=1)
-    ver = take_along0(store_commit.vversion, read_set)
-    conflict = jnp.any(read_mask & (ver > cp_read_version), axis=1)
+    conflict = conflicts(
+        espec.store, store_commit, cp_read_version, read_set, read_mask, axis=1
+    )
     # the write itself must also be enabled for this template (lifecycle) —
     # reads may only be served for enabled templates, but populating while
     # installed-for-writes is safe and matches §4.1 Phase 2.
@@ -139,31 +141,40 @@ class CachePopulator:
     """Host orchestrator: drains a MissQueue and runs CP transactions.
 
     ``templates_meta[t] = (direction, edge_label)`` — static per template.
+    ``step_builder(tpl_idx, bucket)`` optionally supplies the jitted CP step
+    (same signature as ``populate_step`` minus the static args); the sharded
+    runtime uses this to run population inside ``shard_map`` against the
+    co-partitioned cache shards while reusing this orchestrator unchanged.
     """
 
-    _BUCKETS = (8, 32, 128, 512)
+    _BUCKETS = runtime.BUCKETS[:4]
 
-    def __init__(self, espec: EngineSpec, templates_meta, max_retries: int = 3):
+    def __init__(self, espec: EngineSpec, templates_meta, max_retries: int = 3,
+                 step_builder=None):
         self.espec = espec
         self.meta = templates_meta
         self.queue = MissQueue(max_retries=max_retries)
         self._jitted = {}
+        self._step_builder = step_builder
         self.committed = 0
         self.aborted = 0
 
     def _fn(self, tpl_idx: int, bucket: int):
         key = (tpl_idx, bucket)
         if key not in self._jitted:
-            espec = self.espec
-            direction, edge_label = self.meta[tpl_idx]
-            import functools
+            if self._step_builder is not None:
+                self._jitted[key] = self._step_builder(tpl_idx, bucket)
+            else:
+                espec = self.espec
+                direction, edge_label = self.meta[tpl_idx]
+                import functools
 
-            self._jitted[key] = jax.jit(
-                functools.partial(
-                    populate_step, espec, tpl_idx=tpl_idx, direction=direction,
-                    edge_label=edge_label,
+                self._jitted[key] = jax.jit(
+                    functools.partial(
+                        populate_step, espec, tpl_idx=tpl_idx, direction=direction,
+                        edge_label=edge_label,
+                    )
                 )
-            )
         return self._jitted[key]
 
     def drain(self, store_exec, store_commit, cache, ttable, k: int = 128):
@@ -188,11 +199,7 @@ class CachePopulator:
                 [np.asarray(rec.params, np.int32) for rec, _ in items]
             ).reshape(n, PARAM_LEN)
             vers_all = np.fromiter((rec.read_version for rec, _ in items), np.int32, n)
-            bucket = (
-                next(b for b in self._BUCKETS if b >= n)
-                if n <= self._BUCKETS[-1]
-                else self._BUCKETS[-1]
-            )
+            bucket = runtime.bucket_for(n, self._BUCKETS, clamp=True)
             for lo in range(0, n, bucket):
                 chunk = items[lo : lo + bucket]
                 nb = len(chunk)

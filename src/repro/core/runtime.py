@@ -1,0 +1,489 @@
+"""The shared transaction-runtime substrate.
+
+Both entry points of the system compile against this module: the
+single-host ``GraphEngine`` (core/engine.py) and the sharded serve tier
+(distributed/graph_serve.py). It owns everything that used to be duplicated
+between them:
+
+- ``onehop_exec``          — one one-hop sub-query instance per root (the
+                             cache-miss path; Definition 2.1 semantics).
+- ``make_hop_kernel``      — one hop of the fused gR-Tx pipeline: lean cache
+                             probe + ``lax.cond``-gated masked miss
+                             execution over a flat root frontier. The
+                             sharded runtime runs this same kernel at the
+                             *owner* shard after routing; the single-host
+                             engine runs it in place.
+- ``make_fused_plan_fn``   — the whole-plan fused pipeline (PR 2): all hops,
+                             on-device frontier merges, final clause, device
+                             metrics. The single-host engine jits this
+                             directly; it is byte-identical to running the
+                             hop kernels inside ``shard_map`` on a 1-shard
+                             mesh.
+- bucketing / padding      — ``BUCKETS`` / ``bucket_for`` / ``pad_roots``
+                             (previously copied between ``GraphEngine`` and
+                             ``CachePopulator``) and the MoE-style routing
+                             primitives ``route_plan`` / ``route_scatter`` /
+                             ``bucketize`` (previously private to
+                             ``graph_serve``). ``bucketize`` surfaces an
+                             *overflow count* — valid items dropped because
+                             a peer bucket filled up — so serving tiers can
+                             alert on silent truncation.
+- ``get_grw_step``         — the jitted gRW-Tx commit (apply mutations +
+                             cache maintenance in one functional state
+                             transition), cached by ``(espec, policy)`` so
+                             repeated ``run_grw_tx`` calls never re-trace.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import cache_lookup_lean
+from repro.core.keys import PARAM_LEN
+from repro.core.templates import (
+    DIR_BOTH,
+    DIR_IN,
+    DIR_OUT,
+    MAX_CONDS,
+    evaluate_pred,
+)
+from repro.graphstore.store import gather_in, gather_out
+from repro.utils import (
+    NULL_ID,
+    compact_masked,
+    dedup_masked,
+    segmented_dedup_merge,
+    take_along0,
+)
+
+# final-clause codes of a QueryPlan
+FINAL_IDS, FINAL_COUNT, FINAL_VALUES = 0, 1, 2
+
+# batch buckets: gR-Tx batches are padded to the next bucket so the jit
+# cache stays small. ``CachePopulator`` uses the prefix ``BUCKETS[:4]``.
+BUCKETS = (8, 32, 128, 512, 2048, 8192)
+
+
+def bucket_for(k: int, buckets=BUCKETS, clamp: bool = False) -> int:
+    """Smallest bucket >= k; next power of two (or, clamped, the largest
+    bucket — the caller then chunks) beyond the table."""
+    for b in buckets:
+        if b >= k:
+            return b
+    if clamp:
+        return buckets[-1]
+    return 1 << int(np.ceil(np.log2(max(k, 1))))
+
+
+def pad_roots(roots: np.ndarray, bucket: int):
+    """Pad a host root batch to ``bucket``: (roots [bucket], valid [bucket])."""
+    B = len(roots)
+    proots = np.zeros(bucket, np.int32)
+    proots[:B] = roots
+    bvalid = np.zeros(bucket, bool)
+    bvalid[:B] = True
+    return proots, bvalid
+
+
+# ------------------------------------------------------------------ routing
+def route_plan(dest: jax.Array, n: int, cap: int):
+    """Slot assignment for routing M items into [n, cap] peer buckets.
+
+    Returns (slot [M] — each input's peer*cap+rank, or OOB when dropped,
+    kept [M], overflow — the count of *valid* (0 <= dest < n) items dropped
+    because their peer bucket overflowed ``cap``). Items with a dest outside
+    [0, n) are dropped silently (padding), not counted as overflow.
+    """
+    M = dest.shape[0]
+    order = jnp.argsort(dest)
+    sd = dest[order]
+    offs = jnp.searchsorted(sd, jnp.arange(n, dtype=dest.dtype), side="left")
+    rank = jnp.arange(M) - offs[jnp.clip(sd, 0, n - 1)]
+    keep_sorted = (rank < cap) & (sd >= 0) & (sd < n)
+    slot_sorted = jnp.where(keep_sorted, sd * cap + rank, n * cap)
+    slot = jnp.full((M,), n * cap, jnp.int32)
+    slot = slot.at[order].set(slot_sorted.astype(jnp.int32), mode="drop")
+    kept = slot < n * cap
+    overflow = jnp.sum(((dest >= 0) & (dest < n) & ~kept).astype(jnp.int32))
+    return slot, kept, overflow
+
+
+def route_scatter(vals: jax.Array, slot: jax.Array, n: int, cap: int, fill=NULL_ID):
+    """Place ``vals`` into the [n, cap] send buckets of a ``route_plan``."""
+    buckets = jnp.full((n * cap,) + vals.shape[1:], fill, vals.dtype)
+    return buckets.at[slot].set(vals, mode="drop").reshape((n, cap) + vals.shape[1:])
+
+
+def bucketize(vals, dest, n, cap, fill=NULL_ID):
+    """Route ``vals`` into [n, cap] peer buckets (MoE-dispatch style).
+
+    Returns (buckets [n, cap], slot, kept, overflow); see ``route_plan``.
+    """
+    slot, kept, overflow = route_plan(dest, n, cap)
+    return route_scatter(vals, slot, n, cap, fill), slot, kept, overflow
+
+
+def compact_rows(mask: jax.Array, cap: int, arrays, fills):
+    """Order-preserving row compaction of parallel arrays to ``cap`` rows.
+
+    Returns (compacted arrays, n kept, overflow — masked rows dropped past
+    ``cap``). Used to shrink the mostly-masked cache-maintenance op stream
+    before it is routed between shards. One index scatter over the M-row
+    stream builds a gather map, so each of the k columns costs only a
+    ``cap``-row gather instead of its own M-row scatter.
+    """
+    mask = mask.astype(bool)
+    M = mask.shape[0]
+    idx = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    dest = jnp.where(mask, idx, cap)
+    sel = jnp.full((cap,), M, jnp.int32).at[dest].set(
+        jnp.arange(M, dtype=jnp.int32), mode="drop"
+    )
+    live = sel < M
+    selc = jnp.clip(sel, 0, M - 1)
+    outs = []
+    for a, fill in zip(arrays, fills):
+        got = a[selc]
+        m = live.reshape((cap,) + (1,) * (a.ndim - 1))
+        outs.append(jnp.where(m, got, jnp.asarray(fill, a.dtype)))
+    total = jnp.sum(mask.astype(jnp.int32))
+    n = jnp.minimum(total, cap)
+    return outs, n, total - n
+
+
+# --------------------------------------------------------------- miss exec
+def onehop_exec(
+    espec,
+    store,
+    direction: int,
+    edge_label: int,
+    pr,
+    pe,
+    pl,
+    roots: jax.Array,  # int32 [B]
+    params: jax.Array,  # int32 [B, PARAM_LEN]
+    rmask: jax.Array,  # bool [B]
+):
+    """Execute one one-hop sub-query instance per root (the cache-miss path).
+
+    Returns (leaves [B, RW], lmask, n_true [B], truncated [B], stats) where
+    RW = espec.result_width. ``n_true`` is the un-truncated cardinality and
+    ``truncated`` flags supernode rows whose adjacency exceeded the gather
+    window — neither is cacheable when truncated.
+    """
+    sspec = espec.store
+    pe_bound = params[:, :MAX_CONDS]
+    pl_bound = params[:, MAX_CONDS:]
+
+    rlab = take_along0(store.vlabel, roots)
+    rprops = take_along0(store.vprops, roots)
+    r_ok = evaluate_pred(pr, rlab, rprops) & rmask
+
+    eids_parts, leaf_parts, mask_parts, trunc = [], [], [], jnp.zeros_like(r_ok)
+    if direction in (DIR_OUT, DIR_BOTH):
+        e, o, m, t = gather_out(sspec, store, roots, espec.max_deg)
+        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        trunc |= t
+    if direction in (DIR_IN, DIR_BOTH):
+        e, o, m, t = gather_in(sspec, store, roots, espec.max_deg)
+        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        trunc |= t
+    eids = jnp.concatenate(eids_parts, axis=1)
+    leaf = jnp.concatenate(leaf_parts, axis=1)
+    # gate the observed-edge mask by rmask so per-row stats only count rows
+    # this call was actually asked to execute (padded / hit-short-circuited
+    # rows must not contribute phantom scans)
+    scanned_mask = jnp.concatenate(mask_parts, axis=1) & rmask[:, None]
+    mask = scanned_mask
+    n_edges_scanned = jnp.sum(mask.astype(jnp.int32))
+
+    elab = take_along0(store.elabel, eids)
+    ep = take_along0(store.eprops, eids)
+    e_ok = (edge_label < 0) | (elab == edge_label)
+    e_ok &= evaluate_pred(pe, elab, ep, bound_vals=pe_bound[:, None, :])
+    mask &= e_ok
+    n_leaf_fetches = jnp.sum(mask.astype(jnp.int32))  # the paper's "n"
+
+    llab = take_along0(store.vlabel, leaf)
+    lp = take_along0(store.vprops, leaf)
+    l_ok = evaluate_pred(pl, llab, lp, bound_vals=pl_bound[:, None, :])
+    mask &= l_ok & r_ok[:, None]
+
+    mask = dedup_masked(leaf, mask)  # set semantics (Definition 2.1)
+    n_true = jnp.sum(mask.astype(jnp.int32), axis=1)
+    leaves, lmask = compact_masked(leaf, mask, espec.result_width)
+    stats = {
+        "edges_scanned": n_edges_scanned,
+        "leaf_fetches": n_leaf_fetches,
+        # full read-conflict set for OCC population commits: every vertex
+        # whose state this execution *observed*, including filtered-out
+        # leaves (their property writes can change the result too)
+        "scanned": leaf,
+        "scanned_mask": scanned_mask,
+    }
+    return leaves, lmask, n_true, trunc & rmask, stats
+
+
+class MissRecord(NamedTuple):
+    """Host-side record of one cache miss awaiting async population."""
+
+    tpl_idx: int
+    root: int
+    params: np.ndarray  # int32 [PARAM_LEN]
+    read_version: int
+
+
+# ----------------------------------------------------------- fused pipeline
+def make_hop_kernel(espec, hop, use_cache: bool):
+    """One hop of the fused pipeline over a flat root frontier.
+
+    Returns ``kernel(store, cache, ttable, roots_flat, rmask_flat) ->
+    (vals [BF, RW], cnt [BF], miss_roots [BF], n_miss_records, stats)``.
+    ``(vals, cnt)`` are the hop's per-row results left-packed; everything
+    the miss path touches — the storage gathers, hit/miss select, and
+    miss-record compaction — lives behind a ``lax.cond``, so an all-hit
+    frontier pays none of it. The sharded serve tier calls this kernel at
+    the root's *owner* shard against the local cache shard; the single-host
+    engine calls it in place. ``stats`` carries the device-side metric
+    deltas (k = misses, n_read, hits, trunc, edges, leaves).
+    """
+    RW = espec.result_width
+    cacheable = hop.tpl_idx >= 0 and use_cache
+
+    def kernel(store, cache, ttable, roots_flat, rmask_flat):
+        BF = roots_flat.shape[0]
+        params = jnp.broadcast_to(
+            jnp.asarray(hop.params, jnp.int32), (BF, PARAM_LEN)
+        )
+        if cacheable:
+            # lean probe: raw cached rows + O(BF) validity counts
+            # (no per-element mask/select on the hit path)
+            hit, leaves_c, cnt_c, _ = cache_lookup_lean(
+                espec.cache, cache, hop.tpl_idx, roots_flat, params
+            )
+            hit = hit & rmask_flat & ttable.read_enabled[hop.tpl_idx]
+            cnt_c = jnp.where(hit, cnt_c, 0)
+            n_read = jnp.sum(rmask_flat.astype(jnp.int32))
+            n_hit = jnp.sum(hit.astype(jnp.int32))
+        else:
+            hit = jnp.zeros((BF,), bool)
+            leaves_c = cnt_c = None
+            n_read = n_hit = jnp.int32(0)
+        miss_mask = rmask_flat & ~hit
+        k = jnp.sum(miss_mask.astype(jnp.int32))
+
+        def run_exec(args, hop=hop):
+            roots_f, miss_m = args
+            leaves_e, lmask_e, n_true, trunc, stats = onehop_exec(
+                espec, store, hop.direction, hop.edge_label,
+                hop.pr, hop.pe, hop.pl, roots_f,
+                jnp.broadcast_to(
+                    jnp.asarray(hop.params, jnp.int32),
+                    (roots_f.shape[0], PARAM_LEN),
+                ),
+                miss_m,
+            )
+            cnt_e = jnp.where(miss_m, jnp.minimum(n_true, RW), 0)
+            if cacheable:
+                vals = jnp.where(hit[:, None], leaves_c, leaves_e)
+                cnt = jnp.where(hit, cnt_c, cnt_e)
+                rec = miss_m & ~trunc & (n_true <= RW)
+                mr, _ = compact_masked(roots_f, rec, BF)
+                nrec = jnp.sum(rec.astype(jnp.int32))
+            else:
+                vals, cnt = leaves_e, cnt_e
+                mr = jnp.full((BF,), NULL_ID, jnp.int32)
+                nrec = jnp.int32(0)
+            return (vals, cnt, mr, nrec,
+                    jnp.sum(trunc.astype(jnp.int32)),
+                    stats["edges_scanned"], stats["leaf_fetches"])
+
+        def skip_exec(args):
+            # the all-hit short circuit: no storage gathers at all
+            if cacheable:
+                vals, cnt = leaves_c, cnt_c
+            else:
+                vals = jnp.full((BF, RW), NULL_ID, jnp.int32)
+                cnt = jnp.zeros((BF,), jnp.int32)
+            return (vals, cnt,
+                    jnp.full((BF,), NULL_ID, jnp.int32),
+                    jnp.int32(0), jnp.int32(0),
+                    jnp.int32(0), jnp.int32(0))
+
+        vals, cnt, mr, nrec, trunc_n, es, lf = jax.lax.cond(
+            k > 0, run_exec, skip_exec, (roots_flat, miss_mask)
+        )
+        stats = {
+            "k": k, "n_read": n_read, "hits": n_hit,
+            "trunc": trunc_n, "edges": es, "leaves": lf,
+        }
+        return vals, cnt, mr, nrec, stats
+
+    return kernel
+
+
+def finalize_frontier(plan, store, q_roots, leaves, lmask):
+    """Apply a plan's post filter + final clause to the final frontier."""
+    if plan.post_filter is not None:
+        kind = plan.post_filter[0]
+        if kind == "id_neq":
+            lmask = lmask & (leaves != q_roots[:, None])
+        elif kind == "prop_neq_root":
+            pid = plan.post_filter[1]
+            lp = take_along0(store.vprops, leaves)[..., pid]
+            rp = take_along0(store.vprops, q_roots)[..., pid]
+            lmask = lmask & (lp != rp[:, None])
+    if plan.final == FINAL_COUNT:
+        return jnp.sum(lmask.astype(jnp.int32), axis=1)
+    if plan.final == FINAL_VALUES:
+        vals = take_along0(store.vprops, leaves)[..., plan.final_prop]
+        return jnp.where(lmask, vals, NULL_ID)
+    return jnp.where(lmask, leaves, NULL_ID)
+
+
+def make_fused_plan_fn(espec, plan, use_cache: bool):
+    """The whole-plan fused device program: every hop's probe + masked
+    miss-exec + merge, the final clause, per-hop compact miss arrays, and
+    device metrics. Shape-polymorphic over the batch dimension (the caller
+    pads to a ``BUCKETS`` bucket and jits)."""
+    F, RW = espec.frontier, espec.result_width
+    kernels = [make_hop_kernel(espec, hop, use_cache) for hop in plan.hops]
+
+    def fused(store, cache, ttable, roots, bvalid):
+        Bb = roots.shape[0]
+        frontier = jnp.full((Bb, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
+        fmask = jnp.zeros((Bb, F), bool).at[:, 0].set(bvalid)
+        z = jnp.int32(0)
+        m = {
+            "phases": jnp.int32(1),  # root index lookup (request 1)
+            "requests": jnp.sum(bvalid.astype(jnp.int32)),
+            "hits": z, "misses": z, "truncated": z,
+            "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
+        }
+        miss_roots, miss_counts = [], []
+        # the occupied frontier is always a left-packed prefix, so each hop
+        # only probes/executes the A slots that can be live (1 for the root
+        # hop, then min(F, A*RW)) instead of the full F-wide frontier
+        A = 1
+        for hop, kernel in zip(plan.hops, kernels):
+            roots_flat = frontier[:, :A].reshape(-1)
+            rmask_flat = fmask[:, :A].reshape(-1)
+            cacheable = hop.tpl_idx >= 0 and use_cache
+            vals, cnt, mr, nrec, hs = kernel(
+                store, cache, ttable, roots_flat, rmask_flat
+            )
+            if cacheable:
+                m["phases"] = m["phases"] + 1  # one cache get round-trip
+                m["requests"] = m["requests"] + hs["n_read"]
+                m["cache_reads"] = m["cache_reads"] + hs["n_read"]
+                m["hits"] = m["hits"] + hs["hits"]
+                miss_roots.append(mr)
+                miss_counts.append(nrec)
+            k = hs["k"]
+            m["phases"] = m["phases"] + 2 * (k > 0)  # edge read + leaf fetches
+            m["requests"] = m["requests"] + k + hs["leaves"]
+            m["leaf_fetches"] = m["leaf_fetches"] + hs["leaves"]
+            m["edges_scanned"] = m["edges_scanned"] + hs["edges"]
+            m["misses"] = m["misses"] + k
+            m["truncated"] = m["truncated"] + hs["trunc"]
+            # next frontier: on-device dedup/compact merge over the
+            # left-packed per-slot results (cost tracks occupancy)
+            frontier, fmask = segmented_dedup_merge(
+                vals.reshape(Bb, A, RW), cnt.reshape(Bb, A), F
+            )
+            A = min(F, A * RW)
+
+        result = finalize_frontier(plan, store, roots, frontier, fmask)
+        if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
+            m["phases"] = m["phases"] + 1  # un-rewritten property fetch
+            m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+        if plan.final == FINAL_VALUES:
+            m["phases"] = m["phases"] + 1  # valueMap fetch
+            m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+        m["phases"] = m["phases"] + plan.extra_phases
+        return result, tuple(miss_roots), tuple(miss_counts), m, store.version
+
+    return fused
+
+
+def decode_miss_records(plan, use_cache, miss_roots, miss_counts, read_version):
+    """Turn per-hop compact device miss arrays into host ``MissRecord``s.
+
+    Each hop entry may hold several independently-counted segments (one per
+    shard on the sharded runtime; a single segment on the single-host path):
+    ``miss_roots[i]`` reshapes to [segments, L] with ``miss_counts[i]`` of
+    shape [segments].
+    """
+    misses: list[MissRecord] = []
+    ci = 0
+    for hop in plan.hops:
+        if hop.tpl_idx >= 0 and use_cache:
+            counts = np.asarray(miss_counts[ci]).reshape(-1)
+            segs = np.asarray(miss_roots[ci]).reshape(len(counts), -1)
+            ci += 1
+            params = np.asarray(hop.params, np.int32)
+            for seg, cnt in zip(segs, counts):
+                for r in seg[: int(cnt)]:
+                    misses.append(
+                        MissRecord(hop.tpl_idx, int(r), params, read_version)
+                    )
+    return misses
+
+
+def host_compact_dedup(vals: np.ndarray, mask: np.ndarray, width: int):
+    """Host-side per-row dedup + compaction (frontier merge between hops)."""
+    B = vals.shape[0]
+    out = np.full((B, width), NULL_ID, np.int32)
+    omask = np.zeros((B, width), bool)
+    for b in range(B):
+        row = vals[b][mask[b]]
+        if row.size:
+            _, first = np.unique(row, return_index=True)
+            row = row[np.sort(first)][:width]
+            out[b, : len(row)] = row
+            omask[b, : len(row)] = True
+    return out, omask
+
+
+# ---------------------------------------------------------------- gRW step
+_GRW_STEPS: dict = {}
+
+
+def get_grw_step(espec, policy: str = "write-around"):
+    """The jitted gRW-Tx commit: apply mutations + maintain the cache.
+
+    Both the graph writes and the cache deletions happen in one functional
+    state transition — the tensor analogue of FDB buffering both in one
+    transaction commit (§4). The step is cached by ``(espec, policy)`` so
+    repeated ``run_grw_tx`` calls reuse one compiled program instead of
+    re-tracing per invocation.
+    """
+    key = (espec, policy)
+    if key not in _GRW_STEPS:
+        from repro.core.invalidation import (
+            invalidate_write_around,
+            write_through_update,
+        )
+        from repro.graphstore.mutations import apply_mutations
+
+        @jax.jit
+        def step(store, cache, ttable, batch):
+            store2, applied = apply_mutations(espec.store, store, batch)
+            before = cache.n_delete
+            if policy == "write-around":
+                cache2 = invalidate_write_around(
+                    espec, store, store2, cache, ttable, applied
+                )
+            else:
+                cache2 = write_through_update(
+                    espec, store, store2, cache, ttable, applied
+                )
+            impacted = cache2.n_delete - before
+            return store2, cache2, impacted
+
+        _GRW_STEPS[key] = step
+    return _GRW_STEPS[key]

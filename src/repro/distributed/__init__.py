@@ -1,10 +1,12 @@
 """Distribution utilities: mesh-aware sharding rules, collectives helpers,
-fault tolerance and elasticity (see repro.distributed.fault)."""
+fault tolerance and elasticity (see repro.distributed.fault), and the
+sharded transaction runtime (graph_serve.ShardedTxnRuntime)."""
 
 from repro.distributed.sharding import (
     active_mesh,
     add_data_axis,
     constrain,
+    flat_mesh,
     maybe_spec,
     set_mesh,
     tree_shardings,
@@ -14,7 +16,18 @@ __all__ = [
     "set_mesh",
     "active_mesh",
     "constrain",
+    "flat_mesh",
     "maybe_spec",
     "add_data_axis",
     "tree_shardings",
+    "ShardedTxnRuntime",
 ]
+
+
+def __getattr__(name):
+    # lazy: graph_serve pulls in the whole core engine stack
+    if name == "ShardedTxnRuntime":
+        from repro.distributed.graph_serve import ShardedTxnRuntime
+
+        return ShardedTxnRuntime
+    raise AttributeError(name)

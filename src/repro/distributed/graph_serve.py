@@ -1,25 +1,49 @@
 """Distributed graph-query serving — the paper's production architecture
 mapped onto a TPU mesh with shard_map.
 
-Layout: vertices are range-partitioned over all mesh axes (shard s owns
-[s*Vloc, (s+1)*Vloc)); each shard holds its vertices' outgoing edges in a
-local CSR block and the *co-partitioned cache shard* for keys rooted at its
-vertices (a hop's cache probe is always local to the root's owner).
+Two tiers live here:
 
-``serve_step`` processes a global batch of one-hop gR-Txs (one registered
-template instance, the paper's SQ1 shape):
+``ShardedTxnRuntime`` — the sharded instantiation of the shared transaction
+runtime (``repro.core.runtime``). Vertex *ownership* is range-partitioned
+over the mesh (shard s owns vertex slots [s*Vloc, (s+1)*Vloc)) and the
+one-hop result cache is **co-partitioned with it**: the cache shard for a
+key lives on the shard owning the key's root vertex, so a probe is always
+local to the owner. The storage tier is a replicated read snapshot per
+shard (the FDB-storage-replica analogue); a gRW-Tx commit applies the
+mutation batch to every replica identically inside the same jitted step.
 
-  round 1:  route each root to its owner            (all_to_all #1)
-            probe the local cache shard; misses run the local CSR gather +
-            edge-predicate filter
-  round 2:  leaf property fetch — leaf ids route to *their* owners for the
-            P^l evaluation                           (all_to_all #2, #3)
-  return:   results route back to the querying shard (all_to_all #4)
+- gR-Txs (``serve_step`` / ``run_gr_tx_batch``): arbitrary multi-hop
+  ``QueryPlan``s — not just the single SQ1 template shape — execute the PR 2
+  fused probe→miss-exec→frontier-merge pipeline *inside* ``shard_map``. Per
+  hop, frontier roots are routed to their owner shards (all_to_all), the
+  owner runs the shared hop kernel (local cache probe + ``lax.cond``-gated
+  miss execution), and the left-packed results route back to the querying
+  shard for the on-device ``segmented_dedup_merge``. Results, per-hop miss
+  arrays, and psum'd metrics come back in one device→host transfer,
+  byte-identical to the single-host fused engine.
 
-A cache hit skips rounds 2's traffic entirely, which is exactly the paper's
-"n+2 requests -> 2" effect in collective form: the §Roofline collective
-term of this step is what the cache attacks. The write/invalidate path
-reuses the single-host core (gRW-Txs are batch, throughput-oriented).
+- gRW-Txs (``run_grw_tx``): the write path is sharded in two phases inside
+  one jitted step. Phase A round-robins the mutation batch's change sections
+  across shards (``shard_mutation_rows``) and runs the mutation listener
+  (Algorithms 1–9) as *op derivation* (``derive_cache_ops``) — each shard
+  reverse-traverses only its slice. The resulting impacted-key op stream is
+  compacted (only real ops survive, unlike the single-host path which
+  probes every masked lane) and routed to the shards owning the roots,
+  which apply it against their local cache shard — batched for write-around
+  (deletes commute), order-restored sequential for write-through. Root
+  sweeps are all_gathered and applied locally. Store and cache post-states
+  are logically identical to the single-host commit.
+
+- CP population: ``populator()`` returns the standard ``CachePopulator``
+  wired with a shard_map step that inserts each entry at its owner shard.
+
+Every routing round reports an **overflow count** (valid items dropped
+because a peer bucket or op-stream capacity filled up) in the step metrics;
+an overflow means silently degraded results/maintenance and should alarm.
+
+``build_serve_step`` below is the original fixed-template (SQ1-shape)
+serving cell, kept for the capacity-planning/roofline tooling and as the
+collective-cost reference; new code should target ``ShardedTxnRuntime``.
 """
 
 from __future__ import annotations
@@ -34,7 +58,450 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.utils import NULL_ID, hash_rows, sort_dedup_masked
+from repro.core.cache import CacheState, empty_cache
+from repro.core.invalidation import (
+    CacheOpStream,
+    SweepStream,
+    apply_op_stream,
+    apply_op_stream_batched,
+    apply_sweeps,
+    derive_cache_ops,
+)
+from repro.core.runtime import (
+    bucket_for,
+    bucketize,
+    compact_rows,
+    decode_miss_records,
+    finalize_frontier,
+    make_hop_kernel,
+    pad_roots,
+    route_plan,
+    route_scatter,
+    FINAL_VALUES,
+)
+from repro.graphstore.mutations import apply_mutations, shard_mutation_rows
+from repro.utils import NULL_ID, hash_rows, segmented_dedup_merge, sort_dedup_masked
+
+_STAT_FIELDS = ("n_hit", "n_miss", "n_insert", "n_evict", "n_delete", "n_oversize")
+_ADDITIVE_METRICS = (
+    "requests", "hits", "misses", "truncated", "leaf_fetches",
+    "edges_scanned", "cache_reads", "route_overflow",
+)
+
+
+def _plan_key(plan):
+    """Structural hash key for a QueryPlan: equal-but-distinct plan objects
+    (hops hold numpy params, so plans aren't hashable) share one compiled
+    serve step instead of re-tracing per object identity."""
+    def pred(p):
+        return tuple(np.asarray(getattr(p, f)).tobytes() for f in p._fields)
+
+    hops = tuple(
+        (h.direction, h.edge_label, h.tpl_idx,
+         np.asarray(h.params, np.int32).tobytes(),
+         pred(h.pr), pred(h.pe), pred(h.pl))
+        for h in plan.hops
+    )
+    return (hops, plan.final, plan.final_prop, plan.post_filter, plan.extra_phases)
+
+
+def _replicate_stats(before: CacheState, after: CacheState, axes):
+    """Rebuild the cache's 0-d stats counters as replicated global values:
+    input stats are replicated, so each shard adds the psum of all local
+    deltas — every shard then stores the same global counter."""
+    reps = {}
+    for f in _STAT_FIELDS:
+        b, a = getattr(before, f), getattr(after, f)
+        reps[f] = b + jax.lax.psum(a - b, axes)
+    return after._replace(**reps)
+
+
+class ShardedTxnRuntime:
+    """One transaction runtime spread over a device mesh.
+
+    ``espec`` is the *global* spec: ``espec.cache.capacity`` is the fleet
+    cache capacity, sharded into ``n`` co-partitioned blocks of
+    ``capacity // n`` slots (each a power of two); ``espec.store.v_cap``
+    range-partitions vertex ownership. On a 1-device mesh every collective
+    degenerates and the runtime is the single-host engine.
+
+    ``route_cap_factor`` / ``ops_route_cap`` bound per-peer routing buckets;
+    ``None`` sizes them for the worst case (no overflow possible). Smaller
+    values trade memory/traffic for a nonzero ``route_overflow`` risk,
+    which the step metrics surface.
+    """
+
+    def __init__(self, espec, mesh: Mesh, *, use_cache: bool = True,
+                 route_cap_factor: int | None = None,
+                 ops_cap: int = 4096, sweep_cap: int = 512,
+                 ops_route_cap: int | None = None):
+        self.axes = tuple(mesh.axis_names)
+        self.n = int(np.prod([mesh.shape[a] for a in self.axes]))
+        n = self.n
+        assert n & (n - 1) == 0, "shard count must be a power of two"
+        C = espec.cache.capacity
+        Cloc = C // n
+        assert C % n == 0 and Cloc & (Cloc - 1) == 0, (
+            "global cache capacity must shard into power-of-two blocks"
+        )
+        assert espec.store.v_cap % n == 0, "v_cap must divide over shards"
+        self.mesh = mesh
+        self.espec = espec
+        self.lspec = espec._replace(cache=espec.cache._replace(capacity=Cloc))
+        self.Vloc = espec.store.v_cap // n
+        self.use_cache = use_cache
+        self.route_cap_factor = route_cap_factor
+        self.ops_cap = ops_cap
+        self.sweep_cap = sweep_cap
+        self.ops_route_cap = ops_route_cap if ops_route_cap is not None else ops_cap
+        self._gr_fns: dict = {}
+        self._grw_fns: dict = {}
+        self._pop_fns: dict = {}
+
+    # ------------------------------------------------------------ sharding
+    def cache_sharding(self):
+        s1 = NamedSharding(self.mesh, P(self.axes))
+        s2 = NamedSharding(self.mesh, P(self.axes, None))
+        s0 = NamedSharding(self.mesh, P())
+        return CacheState(
+            tpl=s1, root=s1, fp=s1, chunk=s1, total_len=s1, vals=s2,
+            version=s1, valid=s1,
+            n_hit=s0, n_miss=s0, n_insert=s0, n_evict=s0, n_delete=s0,
+            n_oversize=s0,
+        )
+
+    def _cache_specs(self):
+        a = self.axes
+        return CacheState(
+            tpl=P(a), root=P(a), fp=P(a), chunk=P(a), total_len=P(a),
+            vals=P(a, None), version=P(a), valid=P(a),
+            n_hit=P(), n_miss=P(), n_insert=P(), n_evict=P(), n_delete=P(),
+            n_oversize=P(),
+        )
+
+    def empty_cache(self) -> CacheState:
+        """Global-capacity empty cache, device_put over the mesh: block s of
+        every slot array is shard s's local cache (all blocks empty)."""
+        return jax.device_put(empty_cache(self.espec.cache), self.cache_sharding())
+
+    def shard_cache(self, cache: CacheState) -> CacheState:
+        """Lay an existing global CacheState out over the mesh. Note the
+        slot *layout* is reinterpreted (each block probes with the local
+        capacity), so only caches whose entries were inserted through this
+        runtime probe correctly — use ``empty_cache`` + population for new
+        state."""
+        return jax.device_put(cache, self.cache_sharding())
+
+    # --------------------------------------------------------- gR-Tx path
+    def _hop_route_caps(self, plan, Bloc):
+        """Per-hop per-peer routing capacity (worst case unless bounded)."""
+        caps, A = [], 1
+        F, RW = self.espec.frontier, self.espec.result_width
+        for _ in plan.hops:
+            rows = Bloc * A
+            if self.route_cap_factor is None:
+                caps.append(max(1, rows))
+            else:
+                caps.append(max(1, -(-self.route_cap_factor * rows // self.n)))
+            A = min(F, A * RW)
+        return caps
+
+    def _gr(self, plan, bucket: int):
+        key = (_plan_key(plan), bucket)
+        if key not in self._gr_fns:
+            espec, n, axes, Vloc = self.lspec, self.n, self.axes, self.Vloc
+            F, RW = espec.frontier, espec.result_width
+            use_cache = self.use_cache
+            assert bucket % n == 0, "global batch bucket must divide over shards"
+            Bloc = bucket // n
+            caps = self._hop_route_caps(plan, Bloc)
+            kernels = [make_hop_kernel(espec, hop, use_cache) for hop in plan.hops]
+
+            # NOTE: the metric bookkeeping below mirrors
+            # runtime.make_fused_plan_fn line for line (with psums where the
+            # single host reads a batch-global quantity); the byte-identity
+            # tests pin the two together, so change them in lockstep.
+            def local_step(store, cache, ttable, roots, bvalid):
+                frontier = jnp.full((Bloc, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
+                fmask = jnp.zeros((Bloc, F), bool).at[:, 0].set(bvalid)
+                z = jnp.int32(0)
+                m = {
+                    "phases": jnp.int32(1),  # root index lookup (request 1)
+                    "requests": jnp.sum(bvalid.astype(jnp.int32)),
+                    "hits": z, "misses": z, "truncated": z,
+                    "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
+                    "route_overflow": z,
+                }
+                miss_roots, miss_counts = [], []
+                A = 1
+                for hop, kernel, cap in zip(plan.hops, kernels, caps):
+                    roots_flat = frontier[:, :A].reshape(-1)
+                    rmask_flat = fmask[:, :A].reshape(-1)
+                    # ---- route frontier roots to their owner shards ----
+                    # ownership clamps to the last shard for ids past v_cap,
+                    # so even an out-of-range root is processed (and comes
+                    # back empty) exactly like on the single host; negative
+                    # ids are indistinguishable from frontier padding
+                    rvals = jnp.where(rmask_flat, roots_flat, NULL_ID)
+                    owner = jnp.where(
+                        rmask_flat & (roots_flat >= 0),
+                        jnp.clip(roots_flat // Vloc, 0, n - 1), -1,
+                    )
+                    send, slot, kept, ovf = bucketize(rvals, owner, n, cap)
+                    m["route_overflow"] = m["route_overflow"] + ovf
+                    recv = jax.lax.all_to_all(
+                        send, axes, split_axis=0, concat_axis=0, tiled=True
+                    )
+                    q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
+                    qmask = q != NULL_ID
+                    # ---- owner-local probe + cond-gated miss execution ----
+                    vals, cnt, mr, nrec, hs = kernel(store, cache, ttable, q, qmask)
+                    cacheable = hop.tpl_idx >= 0 and use_cache
+                    if cacheable:
+                        m["phases"] = m["phases"] + 1  # one cache get round-trip
+                        m["requests"] = m["requests"] + hs["n_read"]
+                        m["cache_reads"] = m["cache_reads"] + hs["n_read"]
+                        m["hits"] = m["hits"] + hs["hits"]
+                        miss_roots.append(mr)
+                        miss_counts.append(nrec[None])
+                    # phases are structural (identical on every shard), so
+                    # the miss gate uses the *global* miss count
+                    k_g = jax.lax.psum(hs["k"], axes)
+                    m["phases"] = m["phases"] + 2 * (k_g > 0)
+                    m["requests"] = m["requests"] + hs["k"] + hs["leaves"]
+                    m["leaf_fetches"] = m["leaf_fetches"] + hs["leaves"]
+                    m["edges_scanned"] = m["edges_scanned"] + hs["edges"]
+                    m["misses"] = m["misses"] + hs["k"]
+                    m["truncated"] = m["truncated"] + hs["trunc"]
+                    # ---- route the left-packed results home ----
+                    back_v = jax.lax.all_to_all(
+                        vals.reshape(n, cap, RW), axes,
+                        split_axis=0, concat_axis=0, tiled=True,
+                    ).reshape(n * cap, RW)
+                    back_c = jax.lax.all_to_all(
+                        cnt.reshape(n, cap), axes,
+                        split_axis=0, concat_axis=0, tiled=True,
+                    ).reshape(-1)
+                    sl = jnp.clip(slot, 0, n * cap - 1)
+                    vals_home = jnp.where(kept[:, None], back_v[sl], NULL_ID)
+                    cnt_home = jnp.where(kept, back_c[sl], 0)
+                    # ---- home-shard frontier merge (identical to 1-host) ----
+                    frontier, fmask = segmented_dedup_merge(
+                        vals_home.reshape(Bloc, A, RW), cnt_home.reshape(Bloc, A), F
+                    )
+                    A = min(F, A * RW)
+
+                result = finalize_frontier(plan, store, roots, frontier, fmask)
+                if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
+                    m["phases"] = m["phases"] + 1  # un-rewritten property fetch
+                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+                if plan.final == FINAL_VALUES:
+                    m["phases"] = m["phases"] + 1  # valueMap fetch
+                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
+                m["phases"] = m["phases"] + plan.extra_phases
+                for key_ in _ADDITIVE_METRICS:
+                    m[key_] = jax.lax.psum(m[key_], axes)
+                return (
+                    result, tuple(miss_roots), tuple(miss_counts), m,
+                    store.version,
+                )
+
+            sm = shard_map(
+                local_step,
+                mesh=self.mesh,
+                in_specs=(P(), self._cache_specs(), P(), P(self.axes), P(self.axes)),
+                out_specs=(P(self.axes), P(self.axes), P(self.axes), P(), P()),
+                check_rep=False,
+            )
+            self._gr_fns[key] = jax.jit(sm)
+        return self._gr_fns[key]
+
+    def serve_step(self, plan, global_batch: int):
+        """The jitted serving step for one ``QueryPlan`` (any hop count) —
+        ``step(store, cache, ttable, roots [global_batch], bvalid) ->
+        (results, miss_roots, miss_counts, metrics, read_version)``."""
+        return self._gr(plan, global_batch)
+
+    def run_gr_tx_batch(self, store, cache, ttable, plan, roots):
+        """Host wrapper: pad, execute, decode misses. Same contract as
+        ``GraphEngine.run`` — one blocking device→host transfer."""
+        B = len(roots)
+        bucket = max(bucket_for(B), self.n)
+        proots, bvalid = pad_roots(roots, bucket)
+        out = self._gr(plan, bucket)(
+            store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid)
+        )
+        result, miss_roots, miss_counts, m, version = jax.device_get(out)
+        metrics = {k: int(v) for k, v in m.items()}
+        metrics["host_syncs"] = 1
+        misses = decode_miss_records(
+            plan, self.use_cache, miss_roots, miss_counts, int(version)
+        )
+        return np.asarray(result)[:B], misses, metrics
+
+    # -------------------------------------------------------- gRW-Tx path
+    def _grw(self, policy: str):
+        if policy not in self._grw_fns:
+            espec, lcspec = self.espec, self.lspec.cache
+            n, axes, Vloc = self.n, self.axes, self.Vloc
+            through = policy != "write-around"
+            ops_cap, sweep_cap = self.ops_cap, self.sweep_cap
+            ops_route_cap = self.ops_route_cap
+
+            def local_grw(store, cache, ttable, batch):
+                me = jax.lax.axis_index(axes)
+                # every replica applies the same commit (deterministic)
+                store2, applied = apply_mutations(espec.store, store, batch)
+                # phase A: derive impacted keys from this shard's slice of
+                # the mutation batch (round-robin rows)
+                part = shard_mutation_rows(applied, n, me)
+                ops, sweeps = derive_cache_ops(
+                    espec, store, store2, ttable, part, through=through,
+                    row_offset=me, row_stride=n,
+                )
+                # compact: only real ops are routed/applied — the single-host
+                # path instead probes every masked lane of the stream
+                (okind, otpl, oroot, oparams, ovid, oorder), _, ovf_c = compact_rows(
+                    ops.ok, ops_cap,
+                    (ops.kind, ops.tpl, ops.root, ops.params, ops.vid, ops.order),
+                    (0, -1, NULL_ID, 0, NULL_ID, 0),
+                )
+                # phase B: route each op to the shard owning its root, whose
+                # local cache block holds the impacted entry
+                dest = jnp.where(
+                    oroot != NULL_ID, jnp.clip(oroot // Vloc, 0, n - 1), -1
+                )
+                slot, kept, ovf_r = route_plan(dest, n, ops_route_cap)
+
+                def a2a(x, fill):
+                    return jax.lax.all_to_all(
+                        route_scatter(x, slot, n, ops_route_cap, fill), axes,
+                        split_axis=0, concat_axis=0, tiled=True,
+                    ).reshape((n * ops_route_cap,) + x.shape[1:])
+
+                rroot = a2a(oroot, NULL_ID)
+                rops = CacheOpStream(
+                    kind=a2a(okind, 0), tpl=a2a(otpl, -1), root=rroot,
+                    params=a2a(oparams, 0), vid=a2a(ovid, NULL_ID),
+                    order=a2a(oorder, 0), ok=rroot != NULL_ID,
+                )
+                # sweeps: tiny stream; share globally, apply to the local
+                # block (a sweep is a mask over the whole shard)
+                (stpl, sroot), _, ovf_s = compact_rows(
+                    sweeps.ok, sweep_cap, (sweeps.tpl, sweeps.root), (-1, NULL_ID)
+                )
+                g = jax.lax.all_gather(
+                    jnp.stack([stpl, sroot], axis=1), axes, axis=0, tiled=True
+                )
+                gsw = SweepStream(tpl=g[:, 0], root=g[:, 1], ok=g[:, 1] != NULL_ID)
+
+                # impacted counts *distinct logical keys removed*: chunk-0
+                # occupancy delta. Counting raw ops would over-count a key
+                # hit by several routed ops (the single-host sequential call
+                # sites see it already gone), and counting all slots would
+                # over-count multi-chunk chains.
+                head = lambda c: jnp.sum((c.valid & (c.chunk == 0)).astype(jnp.int32))
+                occ0 = head(cache)
+                cache2 = apply_sweeps(lcspec, cache, gsw)
+                if through:
+                    # value edits are order-sensitive: sorted sequential walk
+                    cache2 = apply_op_stream(lcspec, cache2, rops)
+                else:
+                    # deletes commute: one batched pass
+                    cache2 = apply_op_stream_batched(lcspec, cache2, rops)
+                occ_delta = occ0 - head(cache2)
+                cache2 = cache2._replace(n_delete=cache.n_delete + occ_delta)
+                impacted = jax.lax.psum(occ_delta, axes)
+                cache2 = _replicate_stats(cache, cache2, axes)
+                overflow = jax.lax.psum(ovf_c + ovf_r + ovf_s, axes)
+                return store2, cache2, impacted, overflow
+
+            sm = shard_map(
+                local_grw,
+                mesh=self.mesh,
+                in_specs=(P(), self._cache_specs(), P(), P()),
+                out_specs=(P(), self._cache_specs(), P(), P()),
+                check_rep=False,
+            )
+            self._grw_fns[policy] = jax.jit(sm)
+        return self._grw_fns[policy]
+
+    def grw_step(self, policy: str = "write-around"):
+        """The jitted sharded gRW-Tx commit (cached per policy):
+        ``step(store, cache, ttable, batch) -> (store', cache', impacted,
+        route_overflow)``."""
+        return self._grw(policy)
+
+    def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around"):
+        """Host wrapper mirroring ``repro.core.engine.run_grw_tx``."""
+        store2, cache2, impacted, overflow = self._grw(policy)(
+            store, cache, ttable, batch
+        )
+        return store2, cache2, {
+            "impacted_keys": int(impacted), "op_overflow": int(overflow),
+        }
+
+    # ------------------------------------------------------ CP population
+    def populator(self, templates_meta, max_retries: int = 3):
+        """A ``CachePopulator`` whose CP transactions insert each entry at
+        its owner shard (inside shard_map), draining the same MissQueue."""
+        from repro.core.population import CachePopulator
+
+        return CachePopulator(
+            self.espec, templates_meta, max_retries=max_retries,
+            step_builder=functools.partial(self._pop, templates_meta),
+        )
+
+    def _pop(self, templates_meta, tpl_idx: int, bucket: int):
+        key = (tpl_idx, bucket)
+        if key not in self._pop_fns:
+            from repro.core.population import populate_step
+
+            lspec, n, axes, Vloc = self.lspec, self.n, self.axes, self.Vloc
+            direction, edge_label = templates_meta[tpl_idx]
+
+            def local_pop(store_exec, store_commit, cache, ttable, roots,
+                          params, mask, read_versions):
+                me = jax.lax.axis_index(axes)
+                owned = mask & (roots >= 0) & (
+                    jnp.clip(roots // Vloc, 0, n - 1) == me
+                )
+                cache2, ok, ab = populate_step(
+                    lspec, store_exec, store_commit, cache, ttable, tpl_idx,
+                    direction, edge_label, roots, params, owned, read_versions,
+                )
+                ok = jax.lax.psum(ok.astype(jnp.int32), axes) > 0
+                ab = jax.lax.psum(ab.astype(jnp.int32), axes) > 0
+                cache2 = _replicate_stats(cache, cache2, axes)
+                return cache2, ok, ab
+
+            sm = shard_map(
+                local_pop,
+                mesh=self.mesh,
+                in_specs=(P(), P(), self._cache_specs(), P(), P(), P(), P(), P()),
+                out_specs=(self._cache_specs(), P(), P()),
+                check_rep=False,
+            )
+            jitted = jax.jit(sm)
+
+            # shard_map's wrapper is positional-only; CachePopulator.drain
+            # calls its step with keyword arguments, so keep this adapter
+            def step(store_exec, store_commit, cache, ttable, roots, params,
+                     mask, read_versions):
+                return jitted(
+                    store_exec, store_commit, cache, ttable, roots, params,
+                    mask, read_versions,
+                )
+
+            self._pop_fns[key] = step
+        return self._pop_fns[key]
+
+
+# ======================================================================
+# The original fixed-template serving cell (paper's SQ1 shape), kept for
+# capacity planning, the roofline dry-runs, and as the collective-cost
+# reference. New serving code should target ``ShardedTxnRuntime``.
+# ======================================================================
 
 
 @dataclass(frozen=True)
@@ -99,32 +566,14 @@ def state_shardings(cfg: GraphServeConfig, mesh: Mesh):
     )
 
 
-def _bucketize(vals, dest, n, cap, fill=NULL_ID):
-    """Route ``vals`` into [n, cap] peer buckets (MoE-dispatch style).
-
-    Returns (buckets [n, cap], slot [M] — each input's (peer*cap+rank) or
-    OOB when dropped, kept mask)."""
-    M = vals.shape[0]
-    order = jnp.argsort(dest)
-    sd, sv = dest[order], vals[order]
-    offs = jnp.searchsorted(sd, jnp.arange(n, dtype=dest.dtype), side="left")
-    rank = jnp.arange(M) - offs[jnp.clip(sd, 0, n - 1)]
-    keep = (rank < cap) & (sd >= 0) & (sd < n)
-    slot_sorted = jnp.where(keep, sd * cap + rank, n * cap)
-    buckets = jnp.full((n * cap,), fill, vals.dtype)
-    buckets = buckets.at[slot_sorted].set(sv, mode="drop").reshape(n, cap)
-    # map back to input order
-    slot = jnp.full((M,), n * cap, jnp.int32)
-    slot = slot.at[order].set(slot_sorted.astype(jnp.int32), mode="drop")
-    return buckets, slot, slot < n * cap
-
-
 def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
                      global_batch: int = 8192):
     """Returns a jit-able ``step(state_dict, roots) -> (results, stats)``.
 
     roots: int32 [global_batch] sharded over all axes; results
-    [global_batch, max_leaves] (NULL_ID padded).
+    [global_batch, max_leaves] (NULL_ID padded). ``stats["route_overflow"]``
+    counts valid items silently dropped by a full routing bucket in either
+    round — nonzero means degraded results and should alarm.
     """
     axes = tuple(mesh.axis_names)
     n = int(np.prod([mesh.shape[a] for a in axes]))
@@ -141,7 +590,7 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
         me = jax.lax.axis_index(axes)
         # ---- round 1: route roots to owners --------------------------------
         owner = roots // Vloc
-        send, slot1, kept1 = _bucketize(roots, owner, n, cap)
+        send, slot1, kept1, ovf1 = bucketize(roots, owner, n, cap)
         recv = jax.lax.all_to_all(send, axes, split_axis=0, concat_axis=0, tiled=True)
         q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
         qvalid = q >= 0
@@ -168,6 +617,7 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
         leaf = dst[pos]  # [n*cap, D] global leaf ids
         e_ok = within & (eprop[pos] == cfg.edge_val) & qvalid[:, None] & ~hit[:, None]
 
+        ovf2 = jnp.int32(0)
         if ldprop is not None:
             # §Perf: denormalized leaf property rides on the edge record —
             # the remote round-2 fetch disappears entirely.
@@ -176,7 +626,7 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
             # ---- round 2: leaf property fetch at the leaves' owners --------
             lflat = jnp.where(e_ok.reshape(-1), leaf.reshape(-1), -1)
             lowner = jnp.where(lflat >= 0, lflat // Vloc, -1)
-            send2, slot2, kept2 = _bucketize(lflat, lowner, n, cap2)
+            send2, slot2, kept2, ovf2 = bucketize(lflat, lowner, n, cap2)
             recv2 = jax.lax.all_to_all(send2, axes, split_axis=0, concat_axis=0, tiled=True)
             rloc = jnp.clip(recv2.reshape(-1) - me * Vloc, 0, Vloc - 1)
             props = jnp.where(recv2.reshape(-1) >= 0, vprop[rloc], NULL_ID)
@@ -213,6 +663,7 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
             route_dropped=jax.lax.psum(
                 jnp.sum((~kept1).astype(jnp.int32)), axes
             ),
+            route_overflow=jax.lax.psum(ovf1 + ovf2, axes),
         )
         return results, stats
 
@@ -226,7 +677,10 @@ def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = Tru
         local_step,
         mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs=(P(axes, None), dict(hits=P(), processed=P(), route_dropped=P())),
+        out_specs=(
+            P(axes, None),
+            dict(hits=P(), processed=P(), route_dropped=P(), route_overflow=P()),
+        ),
         check_rep=False,
     )
 

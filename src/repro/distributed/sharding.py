@@ -19,6 +19,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _MESH: Optional[Mesh] = None
 
 
+def flat_mesh(n: Optional[int] = None, axis: str = "shard") -> Mesh:
+    """A 1-axis mesh over ``n`` devices (default: all local devices) — the
+    canonical layout for the sharded transaction runtime, whose vertex
+    ownership and cache blocks partition over a single flattened axis."""
+    devs = jax.devices()
+    n = len(devs) if n is None else n
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])
+
+
 def set_mesh(mesh: Optional[Mesh]):
     """Install the process-wide mesh used by ``constrain``/``tree_shardings``."""
     global _MESH

@@ -136,6 +136,63 @@ def _sec_mask(ids, n):
     return jnp.arange(ids.shape[0]) < n
 
 
+def shard_mutation_rows(applied: AppliedMutations, n: int, me) -> AppliedMutations:
+    """Round-robin slice of every change section for shard ``me`` of ``n``.
+
+    The sharded write path's phase A: each shard runs the mutation listener
+    over rows ``me, me+n, me+2n, ...`` of every section (both the batch
+    arrays and the listener's pre-image snapshots), so the impact-derivation
+    work — the expensive reverse traversals of Algorithm 7 — is split across
+    the mesh instead of replicated. Section live counts are recomputed for
+    the slice. Local row ``j`` of shard ``me`` is global row ``me + n*j``
+    (``row_offset``/``row_stride`` of ``derive_cache_ops``), which keeps the
+    cross-shard op stream totally ordered. ``me`` may be a traced
+    ``axis_index`` — slicing is gather-based, shapes stay static.
+    """
+    me = jnp.asarray(me, jnp.int32)
+
+    def sl(count, *arrs):
+        K = arrs[0].shape[0]
+        idx = me + n * jnp.arange(-(-K // n), dtype=jnp.int32)
+        out = [take_along0(a, idx) for a in arrs]
+        local_n = jnp.sum((idx < count).astype(jnp.int32))
+        return [local_n] + out
+
+    b = applied.batch
+    nv_n, nv_label, nv_props, nv_vid = sl(b.nv_n, b.nv_label, b.nv_props, applied.nv_vid)
+    ne_n, ne_src, ne_dst, ne_label, ne_props, ne_eid = sl(
+        b.ne_n, b.ne_src, b.ne_dst, b.ne_label, b.ne_props, applied.ne_eid
+    )
+    de_n, de_eid, de_src, de_dst, de_label, de_props = sl(
+        b.de_n, b.de_eid, applied.de_src, applied.de_dst, applied.de_label,
+        applied.de_props,
+    )
+    dv_n, dv_vid = sl(b.dv_n, b.dv_vid)
+    sv_n, sv_vid, sv_pid, sv_val, sv_old = sl(
+        b.sv_n, b.sv_vid, b.sv_pid, b.sv_val, applied.sv_old
+    )
+    se_n, se_eid, se_pid, se_val, se_old, se_src, se_dst, se_label, se_props = sl(
+        b.se_n, b.se_eid, b.se_pid, b.se_val, applied.se_old, applied.se_src,
+        applied.se_dst, applied.se_label, applied.se_props,
+    )
+    batch = MutationBatch(
+        nv_label=nv_label, nv_props=nv_props, nv_n=nv_n,
+        ne_src=ne_src, ne_dst=ne_dst, ne_label=ne_label, ne_props=ne_props,
+        ne_n=ne_n,
+        de_eid=de_eid, de_n=de_n,
+        dv_vid=dv_vid, dv_n=dv_n,
+        sv_vid=sv_vid, sv_pid=sv_pid, sv_val=sv_val, sv_n=sv_n,
+        se_eid=se_eid, se_pid=se_pid, se_val=se_val, se_n=se_n,
+    )
+    return AppliedMutations(
+        batch=batch, ne_eid=ne_eid, nv_vid=nv_vid,
+        de_src=de_src, de_dst=de_dst, de_label=de_label, de_props=de_props,
+        sv_old=sv_old, se_old=se_old, se_src=se_src, se_dst=se_dst,
+        se_label=se_label, se_props=se_props,
+        commit_version=applied.commit_version,
+    )
+
+
 def apply_mutations(
     spec: StoreSpec, store: GraphStore, batch: MutationBatch
 ) -> tuple[GraphStore, AppliedMutations]:

@@ -26,10 +26,16 @@ def conflicts(
     read_version,
     read_set,
     read_mask,
+    axis=None,
 ):
-    """True iff any vertex in ``read_set`` was written after ``read_version``."""
+    """True iff any vertex in ``read_set`` was written after ``read_version``.
+
+    ``axis=None`` collapses the whole read set to one verdict (a single
+    transaction); ``axis=1`` checks a [B, W] batch of per-transaction read
+    sets independently (the CP population path, single-host and sharded).
+    """
     ver = take_along0(store.vversion, read_set)
-    return jnp.any(read_mask & (ver > read_version))
+    return jnp.any(read_mask & (ver > read_version), axis=axis)
 
 
 def commit_with_conflict_check(

@@ -110,3 +110,19 @@ def test_disabled_template_never_hits(world):
     cache = pop.drain(world["store"], world["store"], world["cache"], ttable)
     _, _, m = eng.run(world["store"], cache, ttable, roots)
     assert m["hits"] == 0  # reads disabled => no hits, and population skipped
+
+
+def test_grw_step_cached_by_espec_and_policy(world):
+    """``build_grw_step`` must return one shared compiled step per
+    (espec, policy) — ``run_grw_tx`` used to re-trace on every call."""
+    from repro.core import build_grw_step
+
+    espec = world["espec"]
+    assert build_grw_step(espec) is build_grw_step(espec)
+    assert build_grw_step(espec, "write-through") is build_grw_step(
+        espec, "write-through"
+    )
+    assert build_grw_step(espec) is not build_grw_step(espec, "write-through")
+    # a different spec gets its own step
+    espec2 = espec._replace(max_deg=espec.max_deg // 2)
+    assert build_grw_step(espec2) is not build_grw_step(espec)

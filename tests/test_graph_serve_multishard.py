@@ -49,6 +49,19 @@ SCRIPT = textwrap.dedent(
     got = sorted(set(int(x) for x in np.asarray(res[0]) if x >= 0))
     assert got == [3], got     # edge prop==1 AND leaf prop==0 -> only leaf 3
     assert int(stats["processed"]) >= 1
+    # ample routing capacity: nothing may be silently dropped
+    assert int(stats["route_overflow"]) == 0, stats
+
+    # a starved routing bucket (cap 1 per peer, 2 queued roots per shard)
+    # must surface its drops in route_overflow instead of hiding them
+    import dataclasses
+    tiny = dataclasses.replace(cfg, route_cap_factor=1)
+    step2 = jax.jit(build_serve_step(tiny, mesh, use_cache=True, global_batch=8))
+    _, stats2 = step2(state, roots)
+    # 4 roots dropped in round 1 (2 queued per shard, bucket cap 1) plus 4
+    # leaf fetches dropped in round 2 (4 surviving root copies x 2
+    # qualifying edges against leaf-owner bucket cap 2)
+    assert int(stats2["route_overflow"]) == 8, stats2
     print("MULTISHARD_OK")
     """
 )

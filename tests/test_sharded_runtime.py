@@ -1,0 +1,218 @@
+"""Byte-identity of the sharded transaction runtime with the single-host
+engine, on an 8-virtual-device CPU mesh.
+
+The sharded runtime executes the same fused hop kernels inside shard_map —
+per-hop root routing to owner shards, co-partitioned cache probes, and a
+two-phase sharded gRW-Tx commit. Everything observable must match the
+single-host ``fused=True`` engine: multi-hop gR-Tx results and metrics
+byte-for-byte, miss-record sets, CP-population outcomes, and gRW-Tx
+post-states (store arrays exactly; cache contents logically — the sharded
+layout hashes into per-shard blocks, so equality is over ``cache_entries``).
+
+Runs in subprocesses so XLA_FLAGS can create the host devices before jax
+initializes (same pattern as test_graph_serve_multishard).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from conftest import (
+        build_world, enabled_ttable, fig1_plan, common_watchlist_plan, TPL_META,
+    )
+    from repro.core import (
+        CacheSpec, EngineSpec, GraphEngine, cache_entries, empty_cache,
+        run_grw_tx,
+    )
+    from repro.core.population import CachePopulator
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.graphstore import make_mutation_batch
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+
+    def miss_key(ms):
+        return sorted(
+            (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+            for m in ms
+        )
+
+    def check_gr(rt, plan, roots, cache_h, cache_s, eng):
+        res_h, miss_h, met_h = eng.run(store, cache_h, ttable, roots)
+        res_s, miss_s, met_s = rt.run_gr_tx_batch(store, cache_s, ttable, plan, roots)
+        assert np.array_equal(res_h, res_s), (res_h, res_s)
+        assert met_s.pop("route_overflow") == 0
+        assert met_h == met_s, (met_h, met_s)
+        assert miss_key(miss_h) == miss_key(miss_s)
+        return miss_h, miss_s, met_h
+    """
+)
+
+TWO_HOP = PRELUDE + textwrap.dedent(
+    """
+    mesh = flat_mesh(8)
+    rt = ShardedTxnRuntime(espec, mesh)
+    plan = common_watchlist_plan()  # 2-hop + post filter
+    eng = GraphEngine(espec, plan, True, fused=True)
+    roots = np.array([5, 6, 7, 8, 9], np.int32)
+    cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+
+    # cold: all misses execute at the owner shards
+    miss_h, miss_s, met = check_gr(rt, plan, roots, cache_h, cache_s, eng)
+    assert met["misses"] > 0
+
+    # populate both runtimes from the same miss stream
+    pop_h = CachePopulator(espec, TPL_META); pop_h.queue.push(miss_h)
+    cache_h = pop_h.drain(store, store, cache_h, ttable)
+    pop_s = rt.populator(TPL_META); pop_s.queue.push(miss_s)
+    cache_s = pop_s.drain(store, store, cache_s, ttable)
+    assert (pop_h.committed, pop_h.aborted) == (pop_s.committed, pop_s.aborted)
+    assert cache_entries(cspec, cache_h) == cache_entries(cspec, cache_s)
+
+    # warm: hits are served from the co-partitioned cache shards
+    _, _, met2 = check_gr(rt, plan, roots, cache_h, cache_s, eng)
+    assert met2["hits"] > 0 and met2["phases"] < met["phases"]
+
+    # sharded gRW-Tx: store arrays byte-identical, cache logically identical
+    mb = make_mutation_batch(
+        spec, set_vprops=[(7, 0, 1), (8, 0, 0)], del_edges=[2],
+        new_edges=[(0, 11, 0, [1])], del_vertices=[9],
+    )
+    for policy in ("write-around", "write-through"):
+        st_h, ch_h, m_h = run_grw_tx(espec, store, cache_h, ttable, mb, policy=policy)
+        st_s, ch_s, m_s = rt.run_grw_tx(store, cache_s, ttable, mb, policy=policy)
+        assert m_s["op_overflow"] == 0
+        for f in st_h._fields:
+            assert np.array_equal(
+                np.asarray(getattr(st_h, f)), np.asarray(getattr(st_s, f))
+            ), f"{policy}: store field {f}"
+        assert cache_entries(cspec, ch_h) == cache_entries(cspec, ch_s), policy
+
+    print("SHARDED_IDENTITY_OK")
+    """
+)
+
+ONE_SHARD = PRELUDE + textwrap.dedent(
+    """
+    # the single-host engine is the 1-shard special case: every collective
+    # degenerates and the runtime must still match exactly
+    mesh = flat_mesh(1)
+    rt = ShardedTxnRuntime(espec, mesh)
+    plan = fig1_plan()
+    eng = GraphEngine(espec, plan, True, fused=True)
+    roots = np.array([0, 1, 2, 3], np.int32)
+    cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+    miss_h, miss_s, _ = check_gr(rt, plan, roots, cache_h, cache_s, eng)
+    mb = make_mutation_batch(spec, set_vprops=[(7, 0, 1)])
+    st_h, ch_h, _ = run_grw_tx(espec, store, cache_h, ttable, mb)
+    st_s, ch_s, m_s = rt.run_grw_tx(store, cache_s, ttable, mb)
+    assert m_s["op_overflow"] == 0
+    for f in st_h._fields:
+        assert np.array_equal(
+            np.asarray(getattr(st_h, f)), np.asarray(getattr(st_s, f))
+        ), f
+    assert cache_entries(cspec, ch_h) == cache_entries(cspec, ch_s)
+    print("ONE_SHARD_OK")
+    """
+)
+
+OVERFLOW = PRELUDE + textwrap.dedent(
+    """
+    # a too-small per-peer routing bucket must *surface* dropped roots in
+    # the metrics instead of silently degrading
+    mesh = flat_mesh(8)
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=1)
+    plan = fig1_plan()
+    roots = np.full(16, 1, np.int32)  # every shard routes to one owner
+    cache_s = rt.empty_cache()
+    _, _, met = rt.run_gr_tx_batch(store, cache_s, ttable, plan, roots)
+    assert met["route_overflow"] > 0, met
+    print("OVERFLOW_OK")
+    """
+)
+
+
+def _run(script, token):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=1200,
+    )
+    assert token in out.stdout, out.stdout + out.stderr
+
+
+def test_op_stream_order_keys_are_global():
+    """Round-robin batch slicing must emit ops with the same *global* order
+    keys the unsliced listener produces — the invariant that lets the
+    routed write-through stream sort back into the exact single-host
+    application order (a shard-local key would invert ops whose rows share
+    a round-robin round but differ in gather lane)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from conftest import build_world, enabled_ttable
+    from repro.core import CacheSpec, EngineSpec
+    from repro.core.invalidation import derive_cache_ops
+    from repro.graphstore import make_mutation_batch
+    from repro.graphstore.mutations import apply_mutations, shard_mutation_rows
+
+    spec, store = build_world()
+    espec = EngineSpec(
+        store=spec, cache=CacheSpec(capacity=1024, probes=8, max_leaves=16),
+        max_deg=32, frontier=32,
+    )
+    ttable, _, _ = enabled_ttable()
+    mb = make_mutation_batch(
+        spec, set_vprops=[(6, 0, 1), (7, 0, 0), (8, 0, 1), (10, 0, 0)],
+        del_edges=[1, 3], new_edges=[(0, 11, 0, [1])],
+    )
+    store2, applied = apply_mutations(spec, store, mb)
+
+    def op_set(applied_slice, off, stride):
+        ops, _ = derive_cache_ops(
+            espec, store, store2, ttable, applied_slice, through=True,
+            row_offset=off, row_stride=stride,
+        )
+        ok = np.asarray(ops.ok)
+        cols = [np.asarray(c)[ok] for c in
+                (ops.order, ops.kind, ops.tpl, ops.root, ops.vid)]
+        return set(zip(*(c.tolist() for c in cols)))
+
+    full = op_set(applied, 0, 1)
+    n = 2
+    sharded = set()
+    for me in range(n):
+        part = op_set(shard_mutation_rows(applied, n, jnp.int32(me)), me, n)
+        assert part <= full, "shard emitted an order key the full run lacks"
+        assert not (part & sharded), "shards emitted overlapping ops"
+        sharded |= part
+    assert sharded == full
+
+
+def test_sharded_runtime_matches_single_host():
+    _run(TWO_HOP, "SHARDED_IDENTITY_OK")
+
+
+def test_one_shard_special_case():
+    _run(ONE_SHARD, "ONE_SHARD_OK")
+
+
+def test_route_overflow_is_surfaced():
+    _run(OVERFLOW, "OVERFLOW_OK")

@@ -1,0 +1,115 @@
+"""Property: write-through-updated entries converge to fresh re-population.
+
+After an arbitrary mutation batch commits under the write-through policy,
+every cache entry that *survived* (was updated in place rather than deleted)
+must hold exactly the leaf set a fresh CP re-population of the same key
+would produce against the post-mutation store — in-place maintenance may
+never be observably different from delete + repopulate (§3.2's correctness
+bar for the policy the paper designed but did not implement).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from conftest import (
+    E_INCLUDES,
+    L_LISTING,
+    P_STATUS,
+    TPL_META,
+    build_world,
+    enabled_ttable,
+    fig1_plan,
+)
+from repro.core import (
+    CacheSpec,
+    EngineSpec,
+    GraphEngine,
+    cache_lookup,
+    empty_cache,
+    run_grw_tx,
+)
+from repro.core.population import CachePopulator, populate_step
+from repro.graphstore import make_mutation_batch
+
+
+def _ids(leaves, lmask):
+    return set(np.asarray(leaves)[np.asarray(lmask)].tolist())
+
+
+def _random_batch(rng, spec, store, n_listings, lo_listing):
+    """A random mixed mutation batch over live graph elements."""
+    e_len = int(store.e_len)
+    listings = lambda k: rng.integers(lo_listing, lo_listing + n_listings, k)
+    new_edges = [
+        (int(rng.integers(0, 4)), int(v), E_INCLUDES, [int(rng.integers(0, 2))])
+        for v in listings(rng.integers(0, 3))
+    ]
+    del_edges = [int(e) for e in rng.choice(e_len, rng.integers(0, 3), replace=False)]
+    set_vprops = [
+        (int(v), P_STATUS, int(rng.integers(0, 2)))
+        for v in listings(rng.integers(0, 4))
+    ]
+    del_vertices = [int(v) for v in listings(rng.integers(0, 2))]
+    return make_mutation_batch(
+        spec, new_edges=new_edges, del_edges=del_edges,
+        set_vprops=set_vprops, del_vertices=del_vertices,
+    )
+
+
+def test_write_through_entries_equal_fresh_repopulation():
+    for seed in range(4):
+        spec, store = build_world(n_watchlists=5, n_listings=14, seed=seed)
+        cspec = CacheSpec(capacity=1024, probes=8, max_leaves=8, max_chunks=2)
+        espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=16)
+        ttable, _, _ = enabled_ttable()
+        rng = np.random.default_rng(100 + seed)
+
+        # warm the cache for every watch-list root of the fig1 template
+        plan = fig1_plan()
+        eng = GraphEngine(espec, plan, use_cache=True)
+        roots = np.arange(5, dtype=np.int32)
+        _, misses, _ = eng.run(store, empty_cache(cspec), ttable, roots)
+        pop = CachePopulator(espec, TPL_META)
+        pop.queue.push(misses)
+        cache = pop.drain(store, store, empty_cache(cspec), ttable)
+        keys = sorted({(m.tpl_idx, m.root, tuple(m.params.tolist())) for m in misses})
+        assert keys, "warm produced no cacheable keys"
+
+        # one random write-through commit
+        mb = _random_batch(rng, spec, store, 14, 5)
+        store2, cache_wt, _ = run_grw_tx(
+            espec, store, cache, ttable, mb, policy="write-through"
+        )
+
+        # freshly re-populate the same keys against the post-mutation store
+        k_roots = jnp.asarray([k[1] for k in keys], jnp.int32)
+        k_params = jnp.asarray([k[2] for k in keys], jnp.int32)
+        hop = plan.hops[0]
+        cache_re, _, _ = populate_step(
+            espec, store2, store2, empty_cache(cspec), ttable,
+            tpl_idx=0, direction=hop.direction, edge_label=hop.edge_label,
+            roots=k_roots, params=k_params,
+            mask=jnp.ones(len(keys), bool),
+            read_versions=jnp.full(len(keys), int(store2.version), jnp.int32),
+        )
+
+        checked = 0
+        for i, (tpl, root, params) in enumerate(keys):
+            hit_wt, lv_wt, lm_wt, _ = cache_lookup(
+                cspec, cache_wt, tpl, k_roots[i : i + 1], k_params[i : i + 1]
+            )
+            if not bool(hit_wt[0]):
+                continue  # deleted (sweep / fallback) — repopulation's job
+            hit_re, lv_re, lm_re, _ = cache_lookup(
+                cspec, cache_re, tpl, k_roots[i : i + 1], k_params[i : i + 1]
+            )
+            assert bool(hit_re[0]), (
+                f"seed {seed}: write-through kept ({tpl}, {root}) but fresh "
+                "execution cannot cache it"
+            )
+            got, want = _ids(lv_wt[0], lm_wt[0]), _ids(lv_re[0], lm_re[0])
+            assert got == want, f"seed {seed} key ({tpl}, {root}): {got} != {want}"
+            # set semantics: the in-place edit must not have grown dups
+            assert int(jnp.sum(lm_wt[0])) == len(got)
+            checked += 1
+        assert checked > 0, f"seed {seed}: no surviving entries were checked"
