@@ -3,14 +3,17 @@
 Measures mutations/sec of the gRW-Tx write step — apply the mutation batch +
 identify and delete the impacted cache entries — on the same warmed world:
 
-- ``host``:    the single-host jitted commit (``get_grw_step``), which runs
-  the mutation listener over every masked lane and probes the cache for all
-  of them (the pre-runtime behaviour, unchanged).
-- ``sharded``: ``ShardedTxnRuntime.grw_step`` on a virtual CPU device mesh —
-  phase A round-robins the batch's change sections across shards and derives
-  a *compacted* impacted-key op stream (only real ops survive), phase B
-  routes each op to the shard owning its root and applies it against the
-  local cache shard.
+- ``host``:    the single-host jitted commit (``get_grw_step``). Since the
+  op-stream-compaction backport this baseline derives the impacted keys as
+  tensor streams and applies only the compacted real ops (it used to probe
+  the cache for every masked lane of every emission), so the sharded
+  speedup below is measured against the *fixed* baseline.
+- ``sharded``: ``ShardedTxnRuntime.grw_step`` on the replicated-snapshot
+  store tier of a virtual CPU device mesh — phase A round-robins the
+  batch's change sections across shards and derives a compacted
+  impacted-key op stream, phase B routes each op to the shard owning its
+  root and applies it against the local cache shard. (The partitioned
+  storage tier's commit is benchmarked in bench_partitioned.py.)
 
 Both post-states are asserted logically identical before timing. Run via
 ``benchmarks/run.py --only grw_invalidation`` (which sets XLA_FLAGS for the
@@ -81,7 +84,8 @@ def main(batch_sv=256, batch_de=32, iters=6, seed=7, json_path=None):
     espec, store, ttable = world.espec, world.store, world.ttable
     mesh = flat_mesh(N_SHARDS)
     rt = ShardedTxnRuntime(
-        espec, mesh, ops_cap=4096, sweep_cap=512, ops_route_cap=2048
+        espec, mesh, store_tier="replicated", ops_cap=4096, sweep_cap=512,
+        ops_route_cap=2048,
     )
     cache_h, cache_s = _warm(world, rt)
     occupancy = len(cache_entries(espec.cache, cache_h))
@@ -107,6 +111,7 @@ def main(batch_sv=256, batch_de=32, iters=6, seed=7, json_path=None):
     out_h = host_step(store, cache_h, ttable, mb)
     out_s = shard_step(store, cache_s, ttable, mb)
     jax.block_until_ready((out_h, out_s))
+    assert int(out_h[3]) == 0, f"host op-stream overflow: {int(out_h[3])}"
     assert int(out_s[3]) == 0, f"op-stream overflow: {int(out_s[3])}"
     for f in out_h[0]._fields:
         assert np.array_equal(

@@ -44,7 +44,8 @@ def main(n_writes=150, seed=1):
         if mb is None:
             per_kind[wk].append(0)
             continue
-        store, cache, impacted = grw(store, cache, world.ttable, mb)
+        store, cache, impacted, ovf = grw(store, cache, world.ttable, mb)
+        assert int(ovf) == 0, "maintenance op stream overflowed its cap"
         per_kind[wk].append(int(impacted))
     print("write_type,n,mean,p50,p95,p99,max")
     rows = []

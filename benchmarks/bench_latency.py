@@ -88,10 +88,11 @@ class Runner:
         if mb is None:
             return 1e-5, 0  # predicate no-op
         t0 = time.perf_counter()
-        self.store, self.cache, impacted = self.grw(
+        self.store, self.cache, impacted, ovf = self.grw(
             self.store, self.cache, self.world.ttable, mb
         )
         impacted = int(impacted)
+        assert int(ovf) == 0, "maintenance op stream overflowed its cap"
         return time.perf_counter() - t0, impacted
 
     def run_populate(self, k=64):

@@ -27,32 +27,51 @@ def _timed(name, fn, *a, **kw):
     return name, dt, out
 
 
-def _bench_grw_invalidation():
-    """Sharded vs single-host gRW-Tx commit throughput; persists
-    BENCH_grw_invalidation.json at the repo root. Runs in a subprocess so
-    XLA can create the virtual device mesh before jax initializes."""
+def _bench_subprocess(module: str, out_name: str, n_shards: int):
+    """Run a mesh benchmark in a subprocess so XLA can create the virtual
+    device mesh before jax initializes; persists its JSON at the repo root."""
     import subprocess
 
-    from benchmarks import bench_grw
-
-    path = os.path.join(REPO_ROOT, "BENCH_grw_invalidation.json")
+    path = os.path.join(REPO_ROOT, out_name)
     env = dict(os.environ)
     env["XLA_FLAGS"] = (
         env.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={bench_grw.N_SHARDS}"
+        + f" --xla_force_host_platform_device_count={n_shards}"
     ).strip()
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT,
                     env.get("PYTHONPATH")) if p
     )
     subprocess.run(
-        [sys.executable, "-m", "benchmarks.bench_grw", "--json", path],
+        [sys.executable, "-m", module, "--json", path],
         check=True, env=env, cwd=REPO_ROOT,
     )
     with open(path) as f:
         out = json.load(f)
     print(f"wrote {path}")
     return out
+
+
+def _bench_grw_invalidation():
+    """Sharded vs single-host gRW-Tx commit throughput
+    (BENCH_grw_invalidation.json)."""
+    from benchmarks import bench_grw
+
+    return _bench_subprocess(
+        "benchmarks.bench_grw", "BENCH_grw_invalidation.json",
+        bench_grw.N_SHARDS,
+    )
+
+
+def _bench_partitioned_store():
+    """Partitioned dual-CSR tier vs replicated snapshots: memory, gR/gRW
+    throughput, measured route skew (BENCH_partitioned_store.json)."""
+    from benchmarks import bench_partitioned
+
+    return _bench_subprocess(
+        "benchmarks.bench_partitioned", "BENCH_partitioned_store.json",
+        bench_partitioned.N_SHARDS,
+    )
 
 
 def _bench_hop_pipeline(batch=512):
@@ -84,6 +103,9 @@ def main() -> None:
         "hop_pipeline": lambda: _bench_hop_pipeline(batch=512),
         # sharded vs host gRW-Tx commit (BENCH_grw_invalidation.json)
         "grw_invalidation": _bench_grw_invalidation,
+        # partitioned storage tier: memory / throughput / route skew
+        # (BENCH_partitioned_store.json)
+        "partitioned_store": _bench_partitioned_store,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

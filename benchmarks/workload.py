@@ -260,3 +260,40 @@ MIXES = {
     "W_hat": dict(read_frac=0.62, load=0.85),  # batch-write window
     "R_low": dict(read_frac=0.94, load=0.35),  # low load
 }
+
+
+# ----------------------------------------------------------- route skew
+def measure_route_skew(world: World, n_shards: int = 8, batch: int = 512,
+                       n_batches: int = 200) -> dict:
+    """Measure real per-owner routing skew of the production query mix.
+
+    The sharded runtime routes each hop's frontier roots to their owner
+    shards into per-peer buckets of ``route_cap_factor * rows / n`` slots;
+    ``None`` sizes buckets for the worst case (every root on one owner).
+    This measures what the Zipfian workload actually needs: for each query
+    batch, the max per-owner share of the root frontier as a multiple of
+    the uniform share (``batch / n``). The p99.9 of that multiplier is the
+    cap factor that bounds the overflow rate at ~0.1%% of batches;
+    ``DEFAULT_ROUTE_CAP_FACTOR`` in ``repro.distributed.graph_serve`` ships
+    the ceiling of the measured value.
+    """
+    plans = query_plans()
+    weights = np.array([w for (_, _, _, w, _) in plans])
+    weights /= weights.sum()
+    factors = []
+    for _ in range(n_batches):
+        _, _, label, _, _ = plans[int(world.rng.choice(len(plans), p=weights))]
+        lo, hi = world.vertex_range(label)
+        roots = np.array([world.zipf_pick(lo, hi) for _ in range(batch)])
+        owners = np.mod(roots, n_shards)  # interleaved ownership
+        counts = np.bincount(owners, minlength=n_shards)
+        factors.append(counts.max() / (batch / n_shards))
+    f = np.array(factors)
+    return dict(
+        n_shards=n_shards, batch=batch, n_batches=n_batches,
+        mean=round(float(f.mean()), 3), p50=round(float(np.percentile(f, 50)), 3),
+        p99=round(float(np.percentile(f, 99)), 3),
+        p999=round(float(np.percentile(f, 99.9)), 3),
+        max=round(float(f.max()), 3),
+        recommended_cap_factor=int(np.ceil(np.percentile(f, 99.9))),
+    )

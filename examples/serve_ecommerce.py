@@ -59,7 +59,7 @@ def main():
                 wk = kinds[int(world.rng.choice(len(kinds), p=wweights))]
                 _, mb = make_write(world, wk)
                 if mb is not None:
-                    store, cache, _ = grw(store, cache, world.ttable, mb)
+                    store, cache, _, _ = grw(store, cache, world.ttable, mb)
             if i % 10 == 9:
                 cache = pop.drain(store, store, cache, world.ttable, 256)
         lat_ms = np.array(lat) * 1e3

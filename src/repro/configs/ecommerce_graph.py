@@ -31,9 +31,5 @@ SHAPES = {
     "serve_peak": dict(kind="graph_serve", batch=8192, use_cache=True),
     "serve_low": dict(kind="graph_serve", batch=1024, use_cache=True),
     "serve_nocache": dict(kind="graph_serve", batch=8192, use_cache=False),
-    # §Perf hillclimb variant: leaf predicate-props denormalized onto edges
-    "serve_peak_denorm": dict(
-        kind="graph_serve", batch=8192, use_cache=True, denormalize=True
-    ),
 }
 SKIPS = {}

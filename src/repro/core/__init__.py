@@ -56,12 +56,15 @@ from repro.core.cache import (
 )
 from repro.core.runtime import (
     BUCKETS,
+    LocalPlanTier,
     bucket_for,
     bucketize,
     decode_miss_records,
     get_grw_step,
     make_fused_plan_fn,
     make_hop_kernel,
+    make_plan_fn,
+    onehop_exec_view,
     pad_roots,
 )
 from repro.core.engine import (

@@ -22,11 +22,14 @@ version come back in a **single device→host transfer per batch**
 (``metrics["host_syncs"]``), so a 3-hop gR-Tx pays one sync instead of ~6.
 
 The pipeline itself lives in the shared transaction runtime
-(``repro.core.runtime``): ``GraphEngine`` jits ``make_fused_plan_fn``
-directly, and the sharded serve tier (``repro.distributed.graph_serve``)
-runs the identical per-hop kernels inside ``shard_map`` with root routing
-between them — the single-host engine is the 1-shard special case of that
-runtime, and the two are tested byte-identical.
+(``repro.core.runtime``): both engines are instantiations of one hop driver
+(``make_plan_fn``) over tier hooks — ``GraphEngine`` jits the identity-hook
+``make_fused_plan_fn``, and the sharded serve tier
+(``repro.distributed.graph_serve``) runs the same driver inside
+``shard_map`` with owner routing between hops and (by default) the
+partitioned dual-CSR storage tier under the miss path. The single-host
+engine is the 1-shard special case of that runtime, and the two are tested
+byte-identical on either storage tier.
 
 Tradeoff: when *any* row of a hop misses, the fused path executes the
 storage gathers over the whole occupied frontier with hit rows masked
@@ -358,14 +361,17 @@ def run_gr_tx_batch(
     return GraphEngine(espec, plan, use_cache, fused=fused).run(store, cache, ttable, roots)
 
 
-def build_grw_step(espec: EngineSpec, policy: str = "write-around"):
-    """The jitted gRW-Tx commit: apply mutations + maintain the cache.
+def build_grw_step(espec: EngineSpec, policy: str = "write-around", **caps):
+    """The jitted gRW-Tx commit: apply mutations + maintain the cache, with
+    the op-stream-compacted maintenance phase (the sharded write path's
+    design, backported). ``step(store, cache, ttable, batch) -> (store',
+    cache', impacted, op_overflow)``.
 
-    Cached by ``(espec, policy)`` in the shared runtime, so calling this (or
-    ``run_grw_tx``) repeatedly reuses one compiled program instead of
-    re-tracing per invocation. See ``repro.core.runtime.get_grw_step``.
+    Cached by ``(espec, policy, caps)`` in the shared runtime, so calling
+    this (or ``run_grw_tx``) repeatedly reuses one compiled program instead
+    of re-tracing per invocation. See ``repro.core.runtime.get_grw_step``.
     """
-    return get_grw_step(espec, policy)
+    return get_grw_step(espec, policy, **caps)
 
 
 def run_grw_tx(
@@ -378,5 +384,7 @@ def run_grw_tx(
 ):
     """One-shot gRW-Tx (tests / examples). Returns (store', cache', metrics)."""
     step = build_grw_step(espec, policy)
-    store2, cache2, impacted = step(store, cache, ttable, batch)
-    return store2, cache2, {"impacted_keys": int(impacted)}
+    store2, cache2, impacted, overflow = step(store, cache, ttable, batch)
+    return store2, cache2, {
+        "impacted_keys": int(impacted), "op_overflow": int(overflow),
+    }

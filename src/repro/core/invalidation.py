@@ -53,7 +53,7 @@ from repro.core.templates import (
     evaluate_pred,
     extract_wildcards,
 )
-from repro.graphstore.store import GraphStore, gather_in, gather_out
+from repro.graphstore.store import GlobalStoreView, GraphStore
 from repro.graphstore.mutations import AppliedMutations
 from repro.utils import NULL_ID, PROP_MISSING, compact_masked, take_along0
 
@@ -221,7 +221,7 @@ def _handle_edge_change(
     sink,
     ttable: TemplateTable,
     t: int,
-    store_ep: GraphStore,
+    view_ep,
     elabel,
     eprops,
     src,
@@ -231,13 +231,18 @@ def _handle_edge_change(
     rbound,
     value_delta=None,
 ):
-    """Algorithm 8 over a batch of edges. ``store_ep`` supplies endpoint
+    """Algorithm 8 over a batch of edges. ``view_ep`` supplies endpoint
     labels/properties (pre- or post-state per the caller's change type).
 
     ``value_delta``: None -> write-around (delete keys); +1 -> write-through
     append leaf; -1 -> write-through remove leaf. ``rows`` carries the
     *global* mutation-row index of each edge (the sink's ordering key) and
     ``rbound`` its static exclusive upper bound.
+
+    On a sharded view, each emission side is gated to the shard *owning its
+    root side* (R = src at the src-owner, R = dst at the dst-owner), so the
+    union over shards is exactly the single-host emission set and every
+    emitted op already sits at the shard whose cache block holds the key.
     """
     pe = _pred_row(ttable.pe, t)
     pr = _pred_row(ttable.pr, t)
@@ -252,10 +257,10 @@ def _handle_edge_change(
     use_rl = (direction == DIR_OUT) | (direction == DIR_BOTH)  # R=src, L=dst
     use_lr = (direction == DIR_IN) | (direction == DIR_BOTH)  # R=dst, L=src
     for R, L, use in ((src, dst, use_rl), (dst, src, use_lr)):
-        rlab = take_along0(store_ep.vlabel, R)
-        rprops = take_along0(store_ep.vprops, R)
-        llab = take_along0(store_ep.vlabel, L)
-        lprops = take_along0(store_ep.vprops, L)
+        rlab = take_along0(view_ep.vlabel, R)
+        rprops = take_along0(view_ep.vprops, R)
+        llab = take_along0(view_ep.vlabel, L)
+        lprops = take_along0(view_ep.vprops, L)
         ok = (
             e_ok
             & use
@@ -263,6 +268,8 @@ def _handle_edge_change(
             & evaluate_pred(pr, rlab, rprops)
             & evaluate_pred(pl, llab, lprops)
         )
+        if view_ep.own is not None:
+            ok &= view_ep.own(R)
         wl = extract_wildcards(pl, lprops)
         params = jnp.concatenate([we, wl], axis=-1)
         if value_delta is None:
@@ -276,7 +283,7 @@ def _delete_keys_for_leaf(
     sink,
     ttable: TemplateTable,
     t: int,
-    store_trav: GraphStore,
+    view_trav,
     leaf_vid,
     leaf_label,
     leaf_props,
@@ -286,7 +293,13 @@ def _delete_keys_for_leaf(
     value_delta=None,
 ):
     """Algorithm 7 over a batch of leaves: reverse-traverse to each possible
-    root and delete (or write-through update) the corresponding keys."""
+    root and delete (or write-through update) the corresponding keys.
+
+    On a sharded view the reverse traversal runs at the *leaf's owner* —
+    the shard whose in/out blocks hold exactly the edges arriving at /
+    leaving the leaf — and emissions are gated to it; the produced roots
+    belong to arbitrary shards, so these are the ops phase B must route.
+    """
     pe = _pred_row(ttable.pe, t)
     pr = _pred_row(ttable.pr, t)
     pl = _pred_row(ttable.pl, t)
@@ -295,6 +308,8 @@ def _delete_keys_for_leaf(
 
     act = active & _has_all_wildcards(pl, leaf_props)
     act &= evaluate_pred(pl, leaf_label, leaf_props)
+    if view_trav.own is not None:
+        act &= view_trav.own(leaf_vid)
     wl = extract_wildcards(pl, leaf_props)  # [K, MAXC]
 
     # reverse query: template OUT -> roots via the leaf's incoming edges;
@@ -302,18 +317,16 @@ def _delete_keys_for_leaf(
     use_in = (direction == DIR_OUT) | (direction == DIR_BOTH)
     use_out = (direction == DIR_IN) | (direction == DIR_BOTH)
     sides = (
-        (gather_in(espec.store, store_trav, leaf_vid, espec.max_deg), use_in),
-        (gather_out(espec.store, store_trav, leaf_vid, espec.max_deg), use_out),
+        (view_trav.adjacency(leaf_vid, espec.max_deg, incoming=True), use_in),
+        (view_trav.adjacency(leaf_vid, espec.max_deg, incoming=False), use_out),
     )
-    for (eids, roots, emask, _trunc), use in sides:
-        elab = take_along0(store_trav.elabel, eids)
-        ep = take_along0(store_trav.eprops, eids)
+    for (roots, emask, _trunc, elab, ep), use in sides:
         ok = emask & act[:, None] & use
         ok &= (elab_t < 0) | (elab == elab_t)
         ok &= _has_all_wildcards(pe, ep) & evaluate_pred(pe, elab, ep)
         we = extract_wildcards(pe, ep)  # [K, W, MAXC]
-        rlab = take_along0(store_trav.vlabel, roots)
-        rprops = take_along0(store_trav.vprops, roots)
+        rlab = take_along0(view_trav.vlabel, roots)
+        rprops = take_along0(view_trav.vprops, roots)
         ok &= evaluate_pred(pr, rlab, rprops)
         params = jnp.concatenate(
             [we, jnp.broadcast_to(wl[:, None, :], we.shape)], axis=-1
@@ -409,6 +422,116 @@ def apply_op_stream(cspec: CacheSpec, cache: CacheState, ops: CacheOpStream):
     return jax.lax.fori_loop(0, root.shape[0], body, cache)
 
 
+def _value_update_batched(cspec: CacheSpec, cache: CacheState, tpl, root,
+                          params, vid, mask, add: bool):
+    """Write-through value edit over a batch of *distinct-key* rows.
+
+    Vectorized ``_value_row``: probes every row against the same pre-state,
+    then commits all edits in one scatter. Distinct keys touch distinct
+    slots (a slot matches exactly one key), so the batched scatters cannot
+    collide and each row sees exactly the state its sequential turn would
+    have seen. Rows sharing a key must be serialized by the caller
+    (``apply_op_stream_segmented``'s rank rounds).
+    """
+    L = cspec.max_leaves
+    found, slot, _, _ = _probe(cspec, cache, tpl, root, params, 0)
+    s = jnp.clip(slot, 0)
+    tlen = cache.total_len[s]
+    single = tlen <= L
+    do = mask & found
+    row = cache.vals[s]  # [B, L]
+    lane = jnp.arange(L, dtype=jnp.int32)[None, :]
+    present = jnp.any((row == vid[:, None]) & (lane < tlen[:, None]), axis=1)
+    if add:
+        new_row = jnp.where(
+            lane == jnp.clip(tlen, 0, L - 1)[:, None], vid[:, None], row
+        )
+        new_len = tlen + 1
+        write = do & single & ~present & (tlen < L)
+        # full entry (or multi-chunk chain): fall back to write-around
+        kill = do & (~single | ((tlen >= L) & ~present))
+    else:
+        keep = (row != vid[:, None]) & (lane < tlen[:, None])
+        new_row, _ = compact_masked(row, keep, L)
+        new_len = jnp.sum(keep.astype(jnp.int32), axis=1)
+        write = do & single & present
+        kill = do & ~single
+    tgt = jnp.where(write, s, cspec.capacity)
+    cache = cache._replace(
+        vals=cache.vals.at[tgt].set(
+            jnp.where(write[:, None], new_row, row), mode="drop"
+        ),
+        total_len=cache.total_len.at[tgt].set(
+            jnp.where(write, new_len, tlen), mode="drop"
+        ),
+    )
+    kt = jnp.where(kill, s, cspec.capacity)
+    return cache._replace(
+        valid=cache.valid.at[kt].set(False, mode="drop"),
+        n_delete=cache.n_delete + jnp.sum(kill.astype(jnp.int32)),
+    )
+
+
+def apply_op_stream_segmented(cspec: CacheSpec, cache: CacheState, ops: CacheOpStream):
+    """Key-segmented application of an exact-key op stream — byte-identical
+    to ``apply_op_stream``'s sequential walk, vectorized across keys.
+
+    Ops on *distinct* keys commute (deletes are idempotent, value edits
+    touch only their own entry's slot), so only same-key runs need order.
+    The stream is lexicographically sorted by (key, order); round ``r``
+    applies the r-th op of every key as three batched passes (deletes,
+    value-adds, value-removes — all distinct keys, hence disjoint slots).
+    The loop runs ``max ops per key`` rounds instead of ``len(stream)``
+    sequential iterations; per-op probe outcomes — and therefore the
+    resulting cache, including stats — match the sequential walk exactly,
+    because an op's own key's earlier ops are applied in earlier rounds and
+    other keys' ops can never change its probe result.
+    """
+    M = ops.root.shape[0]
+    if M == 0:
+        return cache
+    big = jnp.int32(2**31 - 1)
+
+    # lexicographic stable sort, least-significant key first: order, then
+    # params columns, root, tpl, and finally validity (masked rows last)
+    idx = jnp.argsort(jnp.where(ops.ok, ops.order, big), stable=True)
+    for col in [ops.params[:, c] for c in range(PARAM_LEN - 1, -1, -1)] + [
+        ops.root, ops.tpl, (~ops.ok).astype(jnp.int32)
+    ]:
+        idx = idx[jnp.argsort(col[idx], stable=True)]
+
+    kind, tpl, root = ops.kind[idx], ops.tpl[idx], ops.root[idx]
+    params, vid, ok = ops.params[idx], ops.vid[idx], ops.ok[idx]
+
+    same = (
+        (tpl[1:] == tpl[:-1])
+        & (root[1:] == root[:-1])
+        & jnp.all(params[1:] == params[:-1], axis=1)
+        & ok[1:] & ok[:-1]
+    )
+    boundary = jnp.concatenate([jnp.ones((1,), bool), ~same])
+    pos = jnp.arange(M, dtype=jnp.int32)
+    group_start = jax.lax.cummax(jnp.where(boundary, pos, 0), axis=0)
+    rank = pos - group_start
+    n_rounds = jnp.max(jnp.where(ok, rank, -1)) + 1
+
+    def body(r, cache):
+        sel = ok & (rank == r)
+        cache = cache_delete(
+            cspec, cache, tpl, root, params, sel & (kind == OP_DELETE)
+        )
+        cache = _value_update_batched(
+            cspec, cache, tpl, root, params, vid, sel & (kind == OP_VAL_ADD), True
+        )
+        cache = _value_update_batched(
+            cspec, cache, tpl, root, params, vid, sel & (kind == OP_VAL_REMOVE),
+            False,
+        )
+        return cache
+
+    return jax.lax.fori_loop(0, n_rounds, body, cache)
+
+
 def apply_op_stream_batched(cspec: CacheSpec, cache: CacheState, ops: CacheOpStream):
     """Vectorized application of a pure-delete op stream (write-around).
 
@@ -433,20 +556,30 @@ def _sec(mask_len, ids):
 
 
 def _run_policy(
-    espec, store_pre, store_post, sink, ttable, applied: AppliedMutations, *,
+    espec, view_pre, view_post, sink, ttable, applied: AppliedMutations, *,
     through: bool, row_offset=0, row_stride: int = 1,
 ):
     """Drive Algorithms 1–4 over every (mutation, template) pair into ``sink``.
 
+    ``view_pre``/``view_post`` are storage views of the pre-/post-commit
+    states: the full store on a single host (``GlobalStoreView``), one
+    shard's owner-local blocks on the partitioned tier
+    (``partition.BlockStoreView``). A sharded view gates every emission by
+    ownership — reverse traversals at the leaf's owner, edge-change
+    emissions at the root side's owner, sweeps at the swept root's owner —
+    so the union over shards reproduces the single-host emission set with
+    each op derived where its storage lives.
+
     ``row_offset``/``row_stride`` recover each section row's *global* batch
     index when the caller hands in a strided slice of the mutation batch
-    (the sharded runtime's round-robin phase A; ``row_offset`` may be a
+    (the replicated tier's round-robin phase A; ``row_offset`` may be a
     traced ``axis_index`` < ``row_stride``); the default (0, 1) is the
-    identity for the single-host path. The global indices feed the sink's
-    op-ordering keys, so a cross-shard op stream sorts back into exactly
-    this loop's sequential application order.
+    identity for the single-host and ownership-masked paths. The global
+    indices feed the sink's op-ordering keys, so a cross-shard op stream
+    sorts back into exactly this loop's sequential application order.
     """
     b = applied.batch
+    own = view_post.own
     T = int(ttable.direction.shape[0])
     nv = espec.store.n_vprops
 
@@ -472,13 +605,16 @@ def _run_policy(
     ].set(applied.se_old)
 
     # vertex-prop pre/post rows
-    sv_post = take_along0(store_post.vprops, b.sv_vid)
+    sv_post = take_along0(view_post.vprops, b.sv_vid)
     vpid_col = jnp.clip(b.sv_pid, 0, nv - 1)
     sv_pre = sv_post.at[jnp.arange(b.sv_vid.shape[0]), vpid_col].set(applied.sv_old)
-    sv_lab = take_along0(store_post.vlabel, b.sv_vid)
+    sv_lab = take_along0(view_post.vlabel, b.sv_vid)
 
-    dv_lab = take_along0(store_pre.vlabel, b.dv_vid)
-    dv_props = take_along0(store_pre.vprops, b.dv_vid)
+    dv_lab = take_along0(view_pre.vlabel, b.dv_vid)
+    dv_props = take_along0(view_pre.vprops, b.dv_vid)
+
+    sv_own = own(b.sv_vid) if own is not None else True
+    dv_own = own(b.dv_vid) if own is not None else True
 
     add_d = +1 if through else None
     del_d = -1 if through else None
@@ -490,12 +626,12 @@ def _run_policy(
 
         # --- Algorithm 3: add edges (post state) / delete edges (pre state)
         _handle_edge_change(
-            espec, sink, ttable, t, store_post,
+            espec, sink, ttable, t, view_post,
             b.ne_label, b.ne_props, b.ne_src, b.ne_dst, ne_m & wen, *ne_r,
             value_delta=add_d,
         )
         _handle_edge_change(
-            espec, sink, ttable, t, store_pre,
+            espec, sink, ttable, t, view_pre,
             applied.de_label, applied.de_props, applied.de_src, applied.de_dst,
             de_m & wen, *de_r, value_delta=del_d,
         )
@@ -504,12 +640,12 @@ def _run_policy(
         # references the property)
         in_pe = _prop_in_pred(_pred_row(ttable.pe, t), b.se_pid)
         _handle_edge_change(
-            espec, sink, ttable, t, store_pre,
+            espec, sink, ttable, t, view_pre,
             applied.se_label, se_old_props, applied.se_src, applied.se_dst,
             se_m & wen & in_pe, *se_r, value_delta=del_d,
         )
         _handle_edge_change(
-            espec, sink, ttable, t, store_post,
+            espec, sink, ttable, t, view_post,
             applied.se_label, applied.se_props, applied.se_src, applied.se_dst,
             se_m & wen & in_pe, *se_r, value_delta=add_d,
         )
@@ -518,23 +654,24 @@ def _run_policy(
         in_pr = _prop_in_pred(pr, b.sv_pid)
         r_hit = evaluate_pred(pr, sv_lab, sv_pre) | evaluate_pred(pr, sv_lab, sv_post)
         # root-side changes clear the whole (template, root) range — both
-        # policies delete (write-through has no cheaper option, §3.2)
-        sink.sweep(t, b.sv_vid, sv_m & wen & in_pr & r_hit, *sv_r)
+        # policies delete (write-through has no cheaper option, §3.2).
+        # Sweeps are emitted at (and only at) the swept root's owner.
+        sink.sweep(t, b.sv_vid, sv_m & wen & in_pr & r_hit & sv_own, *sv_r)
         in_pl = _prop_in_pred(pl, b.sv_pid)
         _delete_keys_for_leaf(
-            espec, sink, ttable, t, store_post, b.sv_vid, sv_lab, sv_pre,
+            espec, sink, ttable, t, view_post, b.sv_vid, sv_lab, sv_pre,
             sv_m & wen & in_pl, *sv_r, value_delta=del_d,
         )
         _delete_keys_for_leaf(
-            espec, sink, ttable, t, store_post, b.sv_vid, sv_lab, sv_post,
+            espec, sink, ttable, t, view_post, b.sv_vid, sv_lab, sv_post,
             sv_m & wen & in_pl, *sv_r, value_delta=add_d,
         )
 
         # --- Algorithm 1: delete vertex (pre state)
         r_ok = evaluate_pred(pr, dv_lab, dv_props)
-        sink.sweep(t, b.dv_vid, dv_m & wen & r_ok, *dv_r)
+        sink.sweep(t, b.dv_vid, dv_m & wen & r_ok & dv_own, *dv_r)
         _delete_keys_for_leaf(
-            espec, sink, ttable, t, store_pre, b.dv_vid, dv_lab, dv_props,
+            espec, sink, ttable, t, view_pre, b.dv_vid, dv_lab, dv_props,
             dv_m & wen, *dv_r, value_delta=del_d,
         )
 
@@ -543,7 +680,11 @@ def invalidate_write_around(espec, store_pre, store_post, cache, ttable, applied
     """Write-around policy (§4): delete every impacted cache entry, in the
     same commit as the graph writes."""
     sink = _ApplySink(espec, cache)
-    _run_policy(espec, store_pre, store_post, sink, ttable, applied, through=False)
+    _run_policy(
+        espec, GlobalStoreView(espec.store, store_pre),
+        GlobalStoreView(espec.store, store_post), sink, ttable, applied,
+        through=False,
+    )
     return sink.cache
 
 
@@ -551,7 +692,11 @@ def write_through_update(espec, store_pre, store_post, cache, ttable, applied):
     """Write-through policy (§3.2, lazy variant): update impacted entries in
     place where possible, delete where not."""
     sink = _ApplySink(espec, cache)
-    _run_policy(espec, store_pre, store_post, sink, ttable, applied, through=True)
+    _run_policy(
+        espec, GlobalStoreView(espec.store, store_pre),
+        GlobalStoreView(espec.store, store_post), sink, ttable, applied,
+        through=True,
+    )
     return sink.cache
 
 
@@ -565,9 +710,24 @@ def derive_cache_ops(
     shards owning their roots. ``row_offset``/``row_stride`` recover global
     mutation-row indices for the op-ordering keys when ``applied`` is a
     round-robin slice (see ``shard_mutation_rows``)."""
+    return derive_cache_ops_views(
+        espec, GlobalStoreView(espec.store, store_pre),
+        GlobalStoreView(espec.store, store_post), ttable, applied,
+        through=through, row_offset=row_offset, row_stride=row_stride,
+    )
+
+
+def derive_cache_ops_views(
+    espec, view_pre, view_post, ttable, applied, *, through: bool,
+    row_offset=0, row_stride: int = 1,
+):
+    """``derive_cache_ops`` over storage views — the partitioned tier's
+    phase A: each shard passes its ``BlockStoreView``s and derives exactly
+    the ops whose storage (reverse traversals, root-side ownership) lives
+    locally, with globally consistent op-order keys."""
     sink = _CollectSink()
     _run_policy(
-        espec, store_pre, store_post, sink, ttable, applied, through=through,
+        espec, view_pre, view_post, sink, ttable, applied, through=through,
         row_offset=row_offset, row_stride=row_stride,
     )
     return sink.streams()

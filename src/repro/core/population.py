@@ -24,10 +24,11 @@ import numpy as np
 
 from repro.core import runtime
 from repro.core.cache import CacheSpec, CacheState, cache_insert
-from repro.core.engine import EngineSpec, MissRecord, onehop_exec
+from repro.core.engine import EngineSpec, MissRecord
 from repro.core.keys import PARAM_LEN
+from repro.core.runtime import onehop_exec_view
 from repro.core.templates import TemplateTable, PredSpec
-from repro.graphstore.store import GraphStore
+from repro.graphstore.store import GlobalStoreView, GraphStore
 from repro.graphstore.txn import conflicts
 from repro.utils import take_along0
 
@@ -92,6 +93,7 @@ def populate_step(
     params,
     mask,
     read_versions,
+    exec_view=None,
 ):
     """One CP transaction batch for one template (jit this with static
     espec/tpl_idx/direction/edge_label via functools.partial).
@@ -100,12 +102,20 @@ def populate_step(
     against ``store_commit`` (current state at commit time): entries whose
     read set was written in between abort. Returns (cache', committed[B],
     aborted[B]).
+
+    ``exec_view`` overrides the miss-execution storage view (the
+    partitioned tier passes a ``BlockStoreView`` over owner-local blocks);
+    ``store_exec``/``store_commit`` then only supply ``.version`` /
+    ``.vversion`` (a ``PartitionedGraphStore`` satisfies both).
     """
     pr = _tpl_row(ttable.pr, tpl_idx)
     pe = _tpl_row(ttable.pe, tpl_idx)
     pl = _tpl_row(ttable.pl, tpl_idx)
-    leaves, lmask, n_true, trunc, stats = onehop_exec(
-        espec, store_exec, direction, edge_label, pr, pe, pl, roots, params, mask
+    view = exec_view if exec_view is not None else GlobalStoreView(
+        espec.store, store_exec
+    )
+    leaves, lmask, n_true, trunc, stats = onehop_exec_view(
+        espec, view, direction, edge_label, pr, pe, pl, roots, params, mask
     )
     cacheable = mask & ~trunc & (n_true <= espec.result_width)
     cp_read_version = store_exec.version

@@ -51,7 +51,7 @@ from repro.core.templates import (
     MAX_CONDS,
     evaluate_pred,
 )
-from repro.graphstore.store import gather_in, gather_out
+from repro.graphstore.store import GlobalStoreView
 from repro.utils import (
     NULL_ID,
     compact_masked,
@@ -156,9 +156,9 @@ def compact_rows(mask: jax.Array, cap: int, arrays, fills):
 
 
 # --------------------------------------------------------------- miss exec
-def onehop_exec(
+def onehop_exec_view(
     espec,
-    store,
+    view,
     direction: int,
     edge_label: int,
     pr,
@@ -168,31 +168,37 @@ def onehop_exec(
     params: jax.Array,  # int32 [B, PARAM_LEN]
     rmask: jax.Array,  # bool [B]
 ):
-    """Execute one one-hop sub-query instance per root (the cache-miss path).
+    """Execute one one-hop sub-query instance per root (the cache-miss path)
+    against a storage ``view`` — the full replicated store
+    (``GlobalStoreView``) or one shard's owner-local blocks
+    (``partition.BlockStoreView``). Both views yield identical values for
+    the same logical store, so this one function *is* both engines' miss
+    path.
 
     Returns (leaves [B, RW], lmask, n_true [B], truncated [B], stats) where
     RW = espec.result_width. ``n_true`` is the un-truncated cardinality and
     ``truncated`` flags supernode rows whose adjacency exceeded the gather
     window — neither is cacheable when truncated.
     """
-    sspec = espec.store
     pe_bound = params[:, :MAX_CONDS]
     pl_bound = params[:, MAX_CONDS:]
 
-    rlab = take_along0(store.vlabel, roots)
-    rprops = take_along0(store.vprops, roots)
+    rlab = take_along0(view.vlabel, roots)
+    rprops = take_along0(view.vprops, roots)
     r_ok = evaluate_pred(pr, rlab, rprops) & rmask
 
-    eids_parts, leaf_parts, mask_parts, trunc = [], [], [], jnp.zeros_like(r_ok)
+    leaf_parts, mask_parts, el_parts, ep_parts = [], [], [], []
+    trunc = jnp.zeros_like(r_ok)
     if direction in (DIR_OUT, DIR_BOTH):
-        e, o, m, t = gather_out(sspec, store, roots, espec.max_deg)
-        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        o, m, t, el, epr = view.adjacency(roots, espec.max_deg, incoming=False)
+        leaf_parts.append(o), mask_parts.append(m)
+        el_parts.append(el), ep_parts.append(epr)
         trunc |= t
     if direction in (DIR_IN, DIR_BOTH):
-        e, o, m, t = gather_in(sspec, store, roots, espec.max_deg)
-        eids_parts.append(e), leaf_parts.append(o), mask_parts.append(m)
+        o, m, t, el, epr = view.adjacency(roots, espec.max_deg, incoming=True)
+        leaf_parts.append(o), mask_parts.append(m)
+        el_parts.append(el), ep_parts.append(epr)
         trunc |= t
-    eids = jnp.concatenate(eids_parts, axis=1)
     leaf = jnp.concatenate(leaf_parts, axis=1)
     # gate the observed-edge mask by rmask so per-row stats only count rows
     # this call was actually asked to execute (padded / hit-short-circuited
@@ -201,15 +207,15 @@ def onehop_exec(
     mask = scanned_mask
     n_edges_scanned = jnp.sum(mask.astype(jnp.int32))
 
-    elab = take_along0(store.elabel, eids)
-    ep = take_along0(store.eprops, eids)
+    elab = jnp.concatenate(el_parts, axis=1)
+    ep = jnp.concatenate(ep_parts, axis=1)
     e_ok = (edge_label < 0) | (elab == edge_label)
     e_ok &= evaluate_pred(pe, elab, ep, bound_vals=pe_bound[:, None, :])
     mask &= e_ok
     n_leaf_fetches = jnp.sum(mask.astype(jnp.int32))  # the paper's "n"
 
-    llab = take_along0(store.vlabel, leaf)
-    lp = take_along0(store.vprops, leaf)
+    llab = take_along0(view.vlabel, leaf)
+    lp = take_along0(view.vprops, leaf)
     l_ok = evaluate_pred(pl, llab, lp, bound_vals=pl_bound[:, None, :])
     mask &= l_ok & r_ok[:, None]
 
@@ -228,6 +234,25 @@ def onehop_exec(
     return leaves, lmask, n_true, trunc & rmask, stats
 
 
+def onehop_exec(
+    espec,
+    store,
+    direction: int,
+    edge_label: int,
+    pr,
+    pe,
+    pl,
+    roots: jax.Array,
+    params: jax.Array,
+    rmask: jax.Array,
+):
+    """``onehop_exec_view`` against a full ``GraphStore`` (single-host)."""
+    return onehop_exec_view(
+        espec, GlobalStoreView(espec.store, store), direction, edge_label,
+        pr, pe, pl, roots, params, rmask,
+    )
+
+
 class MissRecord(NamedTuple):
     """Host-side record of one cache miss awaiting async population."""
 
@@ -238,7 +263,7 @@ class MissRecord(NamedTuple):
 
 
 # ----------------------------------------------------------- fused pipeline
-def make_hop_kernel(espec, hop, use_cache: bool):
+def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None):
     """One hop of the fused pipeline over a flat root frontier.
 
     Returns ``kernel(store, cache, ttable, roots_flat, rmask_flat) ->
@@ -250,9 +275,19 @@ def make_hop_kernel(espec, hop, use_cache: bool):
     the root's *owner* shard against the local cache shard; the single-host
     engine calls it in place. ``stats`` carries the device-side metric
     deltas (k = misses, n_read, hits, trunc, edges, leaves).
+
+    ``exec_fn(store, roots, params, rmask)`` is the storage hook for the
+    miss path (default: ``onehop_exec`` over a full ``GraphStore``; the
+    partitioned tier supplies an owner-local block executor).
     """
     RW = espec.result_width
     cacheable = hop.tpl_idx >= 0 and use_cache
+    if exec_fn is None:
+        def exec_fn(store, roots_f, params, miss_m, hop=hop):
+            return onehop_exec(
+                espec, store, hop.direction, hop.edge_label,
+                hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
+            )
 
     def kernel(store, cache, ttable, roots_flat, rmask_flat):
         BF = roots_flat.shape[0]
@@ -278,9 +313,8 @@ def make_hop_kernel(espec, hop, use_cache: bool):
 
         def run_exec(args, hop=hop):
             roots_f, miss_m = args
-            leaves_e, lmask_e, n_true, trunc, stats = onehop_exec(
-                espec, store, hop.direction, hop.edge_label,
-                hop.pr, hop.pe, hop.pl, roots_f,
+            leaves_e, lmask_e, n_true, trunc, stats = exec_fn(
+                store, roots_f,
                 jnp.broadcast_to(
                     jnp.asarray(hop.params, jnp.int32),
                     (roots_f.shape[0], PARAM_LEN),
@@ -345,13 +379,55 @@ def finalize_frontier(plan, store, q_roots, leaves, lmask):
     return jnp.where(lmask, leaves, NULL_ID)
 
 
-def make_fused_plan_fn(espec, plan, use_cache: bool):
-    """The whole-plan fused device program: every hop's probe + masked
-    miss-exec + merge, the final clause, per-hop compact miss arrays, and
-    device metrics. Shape-polymorphic over the batch dimension (the caller
-    pads to a ``BUCKETS`` bucket and jits)."""
+class LocalPlanTier:
+    """The single-host instantiation of the shared hop driver: no routing,
+    no collectives, storage is the full ``GraphStore``. Every hook is the
+    identity, so ``make_plan_fn(..., LocalPlanTier())`` traces exactly the
+    program the pre-driver fused pipeline traced."""
+
+    routed = False
+
+    def exec_fn(self, hop):
+        return None  # default: onehop_exec over the full store
+
+    def route(self, hop_idx, A, roots_flat, rmask_flat):
+        return roots_flat, rmask_flat, None, jnp.int32(0)
+
+    def unroute(self, ctx, vals, cnt):
+        return vals, cnt
+
+    def psum(self, x):
+        return x
+
+    def pack_count(self, nrec):
+        return nrec
+
+    def reduce_metrics(self, m):
+        return m
+
+
+def make_plan_fn(espec, plan, use_cache: bool, tier):
+    """The ROADMAP's shared hop driver: the whole-plan device program —
+    every hop's probe + masked miss-exec + frontier merge, the final clause,
+    per-hop compact miss arrays, and device metrics — parameterized by a
+    ``tier`` of route/storage hooks so the single-host engine and the
+    sharded serve tier are structurally one function instead of
+    hand-mirrored loops.
+
+    Tier hooks: ``exec_fn(hop)`` supplies the miss-path storage executor
+    (None → full-store ``onehop_exec``); ``route``/``unroute`` move frontier
+    roots to their owners and results home (identity on a single host,
+    all_to_all on a mesh); ``psum`` reduces batch-global quantities (the
+    miss-phase gate must fire on *any* shard's miss); ``pack_count`` shapes
+    per-hop miss counts (the sharded tier emits one segment per shard);
+    ``reduce_metrics`` globalizes additive metrics. Shape-polymorphic over
+    the batch dimension (the caller pads to a ``BUCKETS`` bucket and jits).
+    """
     F, RW = espec.frontier, espec.result_width
-    kernels = [make_hop_kernel(espec, hop, use_cache) for hop in plan.hops]
+    kernels = [
+        make_hop_kernel(espec, hop, use_cache, tier.exec_fn(hop))
+        for hop in plan.hops
+    ]
 
     def fused(store, cache, ttable, roots, bvalid):
         Bb = roots.shape[0]
@@ -364,34 +440,43 @@ def make_fused_plan_fn(espec, plan, use_cache: bool):
             "hits": z, "misses": z, "truncated": z,
             "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
         }
+        if tier.routed:
+            m["route_overflow"] = z
         miss_roots, miss_counts = [], []
         # the occupied frontier is always a left-packed prefix, so each hop
         # only probes/executes the A slots that can be live (1 for the root
         # hop, then min(F, A*RW)) instead of the full F-wide frontier
         A = 1
-        for hop, kernel in zip(plan.hops, kernels):
+        for hop_idx, (hop, kernel) in enumerate(zip(plan.hops, kernels)):
             roots_flat = frontier[:, :A].reshape(-1)
             rmask_flat = fmask[:, :A].reshape(-1)
+            # ---- route frontier roots to their owner shards (identity on
+            # a single host) ----
+            q, qmask, ctx, ovf = tier.route(hop_idx, A, roots_flat, rmask_flat)
+            if tier.routed:
+                m["route_overflow"] = m["route_overflow"] + ovf
             cacheable = hop.tpl_idx >= 0 and use_cache
-            vals, cnt, mr, nrec, hs = kernel(
-                store, cache, ttable, roots_flat, rmask_flat
-            )
+            # ---- owner-local probe + cond-gated miss execution ----
+            vals, cnt, mr, nrec, hs = kernel(store, cache, ttable, q, qmask)
             if cacheable:
                 m["phases"] = m["phases"] + 1  # one cache get round-trip
                 m["requests"] = m["requests"] + hs["n_read"]
                 m["cache_reads"] = m["cache_reads"] + hs["n_read"]
                 m["hits"] = m["hits"] + hs["hits"]
                 miss_roots.append(mr)
-                miss_counts.append(nrec)
-            k = hs["k"]
-            m["phases"] = m["phases"] + 2 * (k > 0)  # edge read + leaf fetches
-            m["requests"] = m["requests"] + k + hs["leaves"]
+                miss_counts.append(tier.pack_count(nrec))
+            # phases are structural (identical on every shard), so the miss
+            # gate uses the *global* miss count
+            k_g = tier.psum(hs["k"])
+            m["phases"] = m["phases"] + 2 * (k_g > 0)  # edge read + leaf fetch
+            m["requests"] = m["requests"] + hs["k"] + hs["leaves"]
             m["leaf_fetches"] = m["leaf_fetches"] + hs["leaves"]
             m["edges_scanned"] = m["edges_scanned"] + hs["edges"]
-            m["misses"] = m["misses"] + k
+            m["misses"] = m["misses"] + hs["k"]
             m["truncated"] = m["truncated"] + hs["trunc"]
-            # next frontier: on-device dedup/compact merge over the
-            # left-packed per-slot results (cost tracks occupancy)
+            # ---- route the left-packed results home, then the home-shard
+            # on-device dedup/compact merge (cost tracks occupancy) ----
+            vals, cnt = tier.unroute(ctx, vals, cnt)
             frontier, fmask = segmented_dedup_merge(
                 vals.reshape(Bb, A, RW), cnt.reshape(Bb, A), F
             )
@@ -405,9 +490,16 @@ def make_fused_plan_fn(espec, plan, use_cache: bool):
             m["phases"] = m["phases"] + 1  # valueMap fetch
             m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
         m["phases"] = m["phases"] + plan.extra_phases
+        m = tier.reduce_metrics(m)
         return result, tuple(miss_roots), tuple(miss_counts), m, store.version
 
     return fused
+
+
+def make_fused_plan_fn(espec, plan, use_cache: bool):
+    """The single-host whole-plan fused device program (PR 2), now an
+    instantiation of the shared hop driver with identity hooks."""
+    return make_plan_fn(espec, plan, use_cache, LocalPlanTier())
 
 
 def decode_miss_records(plan, use_cache, miss_roots, miss_counts, read_version):
@@ -453,37 +545,79 @@ def host_compact_dedup(vals: np.ndarray, mask: np.ndarray, width: int):
 _GRW_STEPS: dict = {}
 
 
-def get_grw_step(espec, policy: str = "write-around"):
+def get_grw_step(espec, policy: str = "write-around", *, ops_cap: int = 4096,
+                 sweep_cap: int = 512):
     """The jitted gRW-Tx commit: apply mutations + maintain the cache.
 
-    Both the graph writes and the cache deletions happen in one functional
+    Both the graph writes and the cache maintenance happen in one functional
     state transition — the tensor analogue of FDB buffering both in one
-    transaction commit (§4). The step is cached by ``(espec, policy)`` so
-    repeated ``run_grw_tx`` calls reuse one compiled program instead of
-    re-tracing per invocation.
+    transaction commit (§4). The step is cached by ``(espec, policy,
+    caps)`` so repeated ``run_grw_tx`` calls reuse one compiled program.
+
+    The maintenance phase uses the sharded write path's *op-stream
+    compaction* (backported): the mutation listener derives the impacted
+    keys as tensor streams, the mostly-masked stream is compacted to
+    ``ops_cap`` real ops, and only those are applied against the cache —
+    the pre-compaction path instead probed the hash table for every masked
+    lane of every emission (O(mutations x templates x gather-width) probes;
+    the old gRW benchmark baseline). Sweeps and exact-key ops commute as
+    applied (sweeps first, ops in emission order per key), reproducing the
+    sequential listener semantics; ``repro.core.invalidation``'s sink-based
+    appliers remain the behavioural reference the equivalence tests pin.
+
+    Returns ``(store', cache', impacted, op_overflow)``; ``impacted``
+    counts distinct logical cache entries removed (chunk-0 occupancy delta)
+    and a nonzero ``op_overflow`` means real maintenance ops were dropped
+    by the compaction caps — raise ``ops_cap``/``sweep_cap``.
     """
-    key = (espec, policy)
+    key = (espec, policy, ops_cap, sweep_cap)
     if key not in _GRW_STEPS:
         from repro.core.invalidation import (
-            invalidate_write_around,
-            write_through_update,
+            CacheOpStream,
+            SweepStream,
+            apply_op_stream_batched,
+            apply_op_stream_segmented,
+            apply_sweeps,
+            derive_cache_ops,
         )
         from repro.graphstore.mutations import apply_mutations
+
+        through = policy != "write-around"
+        cspec = espec.cache
 
         @jax.jit
         def step(store, cache, ttable, batch):
             store2, applied = apply_mutations(espec.store, store, batch)
-            before = cache.n_delete
-            if policy == "write-around":
-                cache2 = invalidate_write_around(
-                    espec, store, store2, cache, ttable, applied
-                )
+            ops, sweeps = derive_cache_ops(
+                espec, store, store2, ttable, applied, through=through
+            )
+            (okind, otpl, oroot, oparams, ovid, oorder), n_ops, ovf_o = compact_rows(
+                ops.ok, ops_cap,
+                (ops.kind, ops.tpl, ops.root, ops.params, ops.vid, ops.order),
+                (0, -1, NULL_ID, 0, NULL_ID, 0),
+            )
+            cops = CacheOpStream(
+                kind=okind, tpl=otpl, root=oroot, params=oparams, vid=ovid,
+                order=oorder, ok=jnp.arange(ops_cap) < n_ops,
+            )
+            (stpl, sroot), n_sw, ovf_s = compact_rows(
+                sweeps.ok, sweep_cap, (sweeps.tpl, sweeps.root), (-1, NULL_ID)
+            )
+            gsw = SweepStream(
+                tpl=stpl, root=sroot, ok=jnp.arange(sweep_cap) < n_sw
+            )
+            head = lambda c: jnp.sum((c.valid & (c.chunk == 0)).astype(jnp.int32))
+            occ0 = head(cache)
+            cache2 = apply_sweeps(cspec, cache, gsw)
+            if through:
+                # value edits are order-sensitive per key; distinct keys
+                # commute — the segmented apply vectorizes across them
+                cache2 = apply_op_stream_segmented(cspec, cache2, cops)
             else:
-                cache2 = write_through_update(
-                    espec, store, store2, cache, ttable, applied
-                )
-            impacted = cache2.n_delete - before
-            return store2, cache2, impacted
+                cache2 = apply_op_stream_batched(cspec, cache2, cops)
+            impacted = occ0 - head(cache2)
+            cache2 = cache2._replace(n_delete=cache.n_delete + impacted)
+            return store2, cache2, impacted, ovf_o + ovf_s
 
         _GRW_STEPS[key] = step
     return _GRW_STEPS[key]

@@ -1,56 +1,74 @@
 """Distributed graph-query serving — the paper's production architecture
 mapped onto a TPU mesh with shard_map.
 
-Two tiers live here:
+``ShardedTxnRuntime`` is the sharded instantiation of the shared transaction
+runtime (``repro.core.runtime``). Vertex *ownership* is interleaved over the
+mesh (shard ``v % n`` owns vertex ``v`` — round-robin striping; see
+``partition.owner_of`` for why range partitioning forces worst-case routing
+buckets) and the one-hop result cache is **co-partitioned with it**: the
+cache shard for a key lives on the shard owning the key's root vertex, so a
+probe is always local to the owner.
 
-``ShardedTxnRuntime`` — the sharded instantiation of the shared transaction
-runtime (``repro.core.runtime``). Vertex *ownership* is range-partitioned
-over the mesh (shard s owns vertex slots [s*Vloc, (s+1)*Vloc)) and the
-one-hop result cache is **co-partitioned with it**: the cache shard for a
-key lives on the shard owning the key's root vertex, so a probe is always
-local to the owner. The storage tier is a replicated read snapshot per
-shard (the FDB-storage-replica analogue); a gRW-Tx commit applies the
-mutation batch to every replica identically inside the same jitted step.
+Two storage tiers back it:
+
+- ``store_tier="partitioned"`` (default) — the ``PartitionedGraphStore``
+  dual-CSR tier: each shard holds only the out-CSR block of the edges it
+  src-owns and the in-CSR block of the edges it dst-owns (plus the small
+  replicated vertex-attribute tier), so per-shard store bytes are O(E/n)
+  instead of O(E). A hop's miss execution — in *either* direction — reads
+  purely owner-local arrays after root routing.
+- ``store_tier="replicated"`` — the PR 3 design: a full read-snapshot
+  ``GraphStore`` replica per shard. Kept as the memory/throughput baseline
+  the partitioned tier is benchmarked against.
 
 - gR-Txs (``serve_step`` / ``run_gr_tx_batch``): arbitrary multi-hop
-  ``QueryPlan``s — not just the single SQ1 template shape — execute the PR 2
-  fused probe→miss-exec→frontier-merge pipeline *inside* ``shard_map``. Per
-  hop, frontier roots are routed to their owner shards (all_to_all), the
-  owner runs the shared hop kernel (local cache probe + ``lax.cond``-gated
-  miss execution), and the left-packed results route back to the querying
-  shard for the on-device ``segmented_dedup_merge``. Results, per-hop miss
-  arrays, and psum'd metrics come back in one device→host transfer,
-  byte-identical to the single-host fused engine.
+  ``QueryPlan``s execute the fused probe→miss-exec→frontier-merge pipeline
+  *inside* ``shard_map`` via the shared hop driver (``runtime.make_plan_fn``)
+  with a mesh tier: per hop, frontier roots are routed to their owner shards
+  (all_to_all), the owner runs the shared hop kernel against its local cache
+  block and local storage, and the left-packed results route back to the
+  querying shard for the on-device ``segmented_dedup_merge``. Results,
+  per-hop miss arrays, and psum'd metrics come back in one device→host
+  transfer, byte-identical to the single-host fused engine.
 
-- gRW-Txs (``run_grw_tx``): the write path is sharded in two phases inside
-  one jitted step. Phase A round-robins the mutation batch's change sections
-  across shards (``shard_mutation_rows``) and runs the mutation listener
-  (Algorithms 1–9) as *op derivation* (``derive_cache_ops``) — each shard
-  reverse-traverses only its slice. The resulting impacted-key op stream is
-  compacted (only real ops survive, unlike the single-host path which
-  probes every masked lane) and routed to the shards owning the roots,
-  which apply it against their local cache shard — batched for write-around
-  (deletes commute), order-restored sequential for write-through. Root
-  sweeps are all_gathered and applied locally. Store and cache post-states
-  are logically identical to the single-host commit.
+- gRW-Txs (``run_grw_tx``): two phases inside one jitted step. On the
+  partitioned tier, phase A applies the commit to owner-local storage
+  (``apply_mutations_partitioned``) and runs the mutation listener
+  (Algorithms 1–9) as *ownership-masked op derivation*: reverse traversals
+  happen at the leaf's owner against its local blocks, edge-change emissions
+  at the root side's owner, sweeps at the swept root's owner — the union
+  over shards is exactly the single-host emission set. Phase B compacts the
+  op stream (only real ops survive) and routes each op to the shard owning
+  its root, which applies it against the local cache block — batched for
+  write-around (deletes commute), key-segmented vectorized for
+  write-through (``apply_op_stream_segmented``; same-key runs stay ordered,
+  distinct keys apply in parallel rounds). On the replicated tier, phase A
+  round-robins the batch rows instead (every shard can traverse the full
+  replica). Store and cache post-states are byte-/logically identical to
+  the single-host commit.
 
 - CP population: ``populator()`` returns the standard ``CachePopulator``
-  wired with a shard_map step that inserts each entry at its owner shard.
+  wired with a shard_map step that executes each miss at its owner shard
+  (against owner-local blocks on the partitioned tier) and inserts at the
+  owner's cache block.
 
 Every routing round reports an **overflow count** (valid items dropped
 because a peer bucket or op-stream capacity filled up) in the step metrics;
 an overflow means silently degraded results/maintenance and should alarm.
+``DEFAULT_ROUTE_CAP_FACTOR`` holds the measured production default (see
+``benchmarks/workload.measure_route_skew``); pass ``route_cap_factor=None``
+for worst-case no-drop buckets (the byte-identity tests do).
 
-``build_serve_step`` below is the original fixed-template (SQ1-shape)
-serving cell, kept for the capacity-planning/roofline tooling and as the
-collective-cost reference; new code should target ``ShardedTxnRuntime``.
+``GraphServeConfig`` (bottom) is the capacity-planning description of the
+production deployment; ``config_cell`` lowers it onto the runtime for the
+roofline/dry-run tooling. The legacy fixed-template ``build_serve_step``
+serving cell was retired in favour of ``ShardedTxnRuntime.serve_step``.
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,31 +80,50 @@ from repro.core.cache import CacheState, empty_cache
 from repro.core.invalidation import (
     CacheOpStream,
     SweepStream,
-    apply_op_stream,
     apply_op_stream_batched,
+    apply_op_stream_segmented,
     apply_sweeps,
     derive_cache_ops,
+    derive_cache_ops_views,
 )
 from repro.core.runtime import (
     bucket_for,
     bucketize,
     compact_rows,
     decode_miss_records,
-    finalize_frontier,
-    make_hop_kernel,
+    make_plan_fn,
+    onehop_exec_view,
     pad_roots,
     route_plan,
     route_scatter,
-    FINAL_VALUES,
 )
 from repro.graphstore.mutations import apply_mutations, shard_mutation_rows
-from repro.utils import NULL_ID, hash_rows, segmented_dedup_merge, sort_dedup_masked
+from repro.graphstore.partition import (
+    BlockStoreView,
+    EdgeBlock,
+    PartitionedGraphStore,
+    abstract_partitioned_store,
+    apply_mutations_partitioned,
+    default_pspec,
+    owner_of,
+    partition_store,
+    store_bytes_report,
+)
+from repro.utils import NULL_ID
 
 _STAT_FIELDS = ("n_hit", "n_miss", "n_insert", "n_evict", "n_delete", "n_oversize")
 _ADDITIVE_METRICS = (
     "requests", "hits", "misses", "truncated", "leaf_fetches",
     "edges_scanned", "cache_reads", "route_overflow",
 )
+
+# Measured default per-peer routing capacity multiplier: sized from the
+# Zipfian (a=1.3) eCommerce workload's owner skew on an 8-shard mesh, where
+# the p99.9 per-owner share of a routed frontier stays under 3.4x the
+# uniform share (benchmarks/workload.measure_route_skew; recorded in
+# BENCH_partitioned_store.json). 4x makes the measured overflow rate 0 on
+# the production mix while bounding bucket memory at 4/n of the worst case.
+DEFAULT_ROUTE_CAP_FACTOR = 4
 
 
 def _plan_key(plan):
@@ -116,25 +153,110 @@ def _replicate_stats(before: CacheState, after: CacheState, axes):
     return after._replace(**reps)
 
 
+class _MeshTier:
+    """The sharded instantiation of the shared hop driver's hooks: per-hop
+    owner routing over ``all_to_all``, psum'd batch-global gates, and (on
+    the partitioned store tier) owner-local block execution."""
+
+    routed = True
+
+    def __init__(self, rt: "ShardedTxnRuntime", caps):
+        self.rt = rt
+        self.caps = caps
+        self.axes, self.n = rt.axes, rt.n
+
+    def exec_fn(self, hop):
+        if self.rt.pspec is None:
+            return None  # replicated snapshot: the default full-store exec
+        pspec, espec, axes = self.rt.pspec, self.rt.lspec, self.axes
+
+        def exec_fn(store, roots_f, params, miss_m, hop=hop):
+            me = jax.lax.axis_index(axes)
+            view = BlockStoreView(pspec, store, me)
+            return onehop_exec_view(
+                espec, view, hop.direction, hop.edge_label,
+                hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
+            )
+
+        return exec_fn
+
+    def route(self, hop_idx, A, roots_flat, rmask_flat):
+        # interleaved ownership maps any id (even past v_cap) to exactly
+        # one shard, where an out-of-range root is processed and comes back
+        # empty exactly like on the single host; negative ids are
+        # indistinguishable from frontier padding
+        n, cap = self.n, self.caps[hop_idx]
+        rvals = jnp.where(rmask_flat, roots_flat, NULL_ID)
+        owner = jnp.where(
+            rmask_flat & (roots_flat >= 0), owner_of(roots_flat, n), -1
+        )
+        send, slot, kept, ovf = bucketize(rvals, owner, n, cap)
+        recv = jax.lax.all_to_all(
+            send, self.axes, split_axis=0, concat_axis=0, tiled=True
+        )
+        q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
+        return q, q != NULL_ID, (slot, kept, cap), ovf
+
+    def unroute(self, ctx, vals, cnt):
+        slot, kept, cap = ctx
+        n, axes = self.n, self.axes
+        RW = vals.shape[-1]
+        back_v = jax.lax.all_to_all(
+            vals.reshape(n, cap, RW), axes,
+            split_axis=0, concat_axis=0, tiled=True,
+        ).reshape(n * cap, RW)
+        back_c = jax.lax.all_to_all(
+            cnt.reshape(n, cap), axes,
+            split_axis=0, concat_axis=0, tiled=True,
+        ).reshape(-1)
+        sl = jnp.clip(slot, 0, n * cap - 1)
+        return (
+            jnp.where(kept[:, None], back_v[sl], NULL_ID),
+            jnp.where(kept, back_c[sl], 0),
+        )
+
+    def psum(self, x):
+        return jax.lax.psum(x, self.axes)
+
+    def pack_count(self, nrec):
+        return nrec[None]  # one independently-counted miss segment per shard
+
+    def reduce_metrics(self, m):
+        for k in _ADDITIVE_METRICS:
+            m[k] = jax.lax.psum(m[k], self.axes)
+        return m
+
+
 class ShardedTxnRuntime:
     """One transaction runtime spread over a device mesh.
 
     ``espec`` is the *global* spec: ``espec.cache.capacity`` is the fleet
     cache capacity, sharded into ``n`` co-partitioned blocks of
-    ``capacity // n`` slots (each a power of two); ``espec.store.v_cap``
-    range-partitions vertex ownership. On a 1-device mesh every collective
-    degenerates and the runtime is the single-host engine.
+    ``capacity // n`` slots (each a power of two); vertex ownership is
+    interleaved (``partition.owner_of``). On a 1-device mesh every
+    collective degenerates and the runtime is the single-host engine.
+
+    ``store_tier`` selects the storage layout: ``"partitioned"`` (default)
+    keeps only owner-local dual-CSR edge blocks per shard (O(E/n) bytes;
+    build state with ``partition_store``); ``"replicated"`` keeps a full
+    ``GraphStore`` snapshot per shard (the PR 3 baseline).
 
     ``route_cap_factor`` / ``ops_route_cap`` bound per-peer routing buckets;
-    ``None`` sizes them for the worst case (no overflow possible). Smaller
+    the default is the measured-skew production cap
+    (``DEFAULT_ROUTE_CAP_FACTOR``) — ``None`` sizes them for the worst case
+    (no overflow possible, byte-identity-test configuration). Smaller
     values trade memory/traffic for a nonzero ``route_overflow`` risk,
     which the step metrics surface.
     """
 
     def __init__(self, espec, mesh: Mesh, *, use_cache: bool = True,
-                 route_cap_factor: int | None = None,
+                 store_tier: str = "partitioned",
+                 route_cap_factor: int | None = DEFAULT_ROUTE_CAP_FACTOR,
                  ops_cap: int = 4096, sweep_cap: int = 512,
-                 ops_route_cap: int | None = None):
+                 ops_route_cap: int | None = None,
+                 blk_slack: float = 2.0, e_blk_cap: int | None = None,
+                 recent_blk_cap: int | None = None):
+        assert store_tier in ("partitioned", "replicated"), store_tier
         self.axes = tuple(mesh.axis_names)
         self.n = int(np.prod([mesh.shape[a] for a in self.axes]))
         n = self.n
@@ -148,8 +270,20 @@ class ShardedTxnRuntime:
         self.mesh = mesh
         self.espec = espec
         self.lspec = espec._replace(cache=espec.cache._replace(capacity=Cloc))
-        self.Vloc = espec.store.v_cap // n
         self.use_cache = use_cache
+        self.store_tier = store_tier
+        if store_tier == "partitioned":
+            pspec = default_pspec(
+                espec.store, n, slack=blk_slack, recent_blk_cap=recent_blk_cap
+            )
+            if e_blk_cap is not None:
+                pspec = pspec._replace(
+                    e_blk_cap=e_blk_cap,
+                    recent_blk_cap=min(pspec.recent_blk_cap, e_blk_cap),
+                )
+            self.pspec = pspec
+        else:
+            self.pspec = None
         self.route_cap_factor = route_cap_factor
         self.ops_cap = ops_cap
         self.sweep_cap = sweep_cap
@@ -179,6 +313,40 @@ class ShardedTxnRuntime:
             n_oversize=P(),
         )
 
+    def _store_specs(self):
+        """shard_map PartitionSpecs for the storage tier."""
+        if self.pspec is None:
+            return P()  # replicated snapshot
+        a = self.axes
+        blk = EdgeBlock(
+            key=P(a), other=P(a), label=P(a), alive=P(a), props=P(a),
+            geid=P(a), indptr=P(a), blk_len=P(a), csr_len=P(a),
+        )
+        return PartitionedGraphStore(
+            vlabel=P(), valive=P(), vprops=P(), vversion=P(),
+            out=blk, inc=blk, v_len=P(), e_len=P(), version=P(),
+        )
+
+    def store_sharding(self):
+        """NamedShardings laying the storage tier over the mesh."""
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self._store_specs(),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def partition_store(self, store) -> PartitionedGraphStore:
+        """Partition a full ``GraphStore`` into this runtime's owner-local
+        blocks and lay it over the mesh (partitioned tier only)."""
+        assert self.pspec is not None, "replicated tier keeps full snapshots"
+        return jax.device_put(
+            partition_store(self.pspec, store), self.store_sharding()
+        )
+
+    def store_bytes(self, pstore=None) -> dict:
+        """Per-shard bytes vs the replicated snapshot (partitioned tier)."""
+        assert self.pspec is not None
+        return store_bytes_report(self.pspec, pstore)
+
     def empty_cache(self) -> CacheState:
         """Global-capacity empty cache, device_put over the mesh: block s of
         every slot array is shard s's local cache (all blocks empty)."""
@@ -206,114 +374,28 @@ class ShardedTxnRuntime:
             A = min(F, A * RW)
         return caps
 
+    def _gr_fn(self, plan, bucket: int):
+        """The un-jitted shard_map serving program (AOT lowering hook)."""
+        n = self.n
+        assert bucket % n == 0, "global batch bucket must divide over shards"
+        Bloc = bucket // n
+        caps = self._hop_route_caps(plan, Bloc)
+        fused = make_plan_fn(self.lspec, plan, self.use_cache, _MeshTier(self, caps))
+        return shard_map(
+            fused,
+            mesh=self.mesh,
+            in_specs=(
+                self._store_specs(), self._cache_specs(), P(),
+                P(self.axes), P(self.axes),
+            ),
+            out_specs=(P(self.axes), P(self.axes), P(self.axes), P(), P()),
+            check_rep=False,
+        )
+
     def _gr(self, plan, bucket: int):
         key = (_plan_key(plan), bucket)
         if key not in self._gr_fns:
-            espec, n, axes, Vloc = self.lspec, self.n, self.axes, self.Vloc
-            F, RW = espec.frontier, espec.result_width
-            use_cache = self.use_cache
-            assert bucket % n == 0, "global batch bucket must divide over shards"
-            Bloc = bucket // n
-            caps = self._hop_route_caps(plan, Bloc)
-            kernels = [make_hop_kernel(espec, hop, use_cache) for hop in plan.hops]
-
-            # NOTE: the metric bookkeeping below mirrors
-            # runtime.make_fused_plan_fn line for line (with psums where the
-            # single host reads a batch-global quantity); the byte-identity
-            # tests pin the two together, so change them in lockstep.
-            def local_step(store, cache, ttable, roots, bvalid):
-                frontier = jnp.full((Bloc, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
-                fmask = jnp.zeros((Bloc, F), bool).at[:, 0].set(bvalid)
-                z = jnp.int32(0)
-                m = {
-                    "phases": jnp.int32(1),  # root index lookup (request 1)
-                    "requests": jnp.sum(bvalid.astype(jnp.int32)),
-                    "hits": z, "misses": z, "truncated": z,
-                    "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
-                    "route_overflow": z,
-                }
-                miss_roots, miss_counts = [], []
-                A = 1
-                for hop, kernel, cap in zip(plan.hops, kernels, caps):
-                    roots_flat = frontier[:, :A].reshape(-1)
-                    rmask_flat = fmask[:, :A].reshape(-1)
-                    # ---- route frontier roots to their owner shards ----
-                    # ownership clamps to the last shard for ids past v_cap,
-                    # so even an out-of-range root is processed (and comes
-                    # back empty) exactly like on the single host; negative
-                    # ids are indistinguishable from frontier padding
-                    rvals = jnp.where(rmask_flat, roots_flat, NULL_ID)
-                    owner = jnp.where(
-                        rmask_flat & (roots_flat >= 0),
-                        jnp.clip(roots_flat // Vloc, 0, n - 1), -1,
-                    )
-                    send, slot, kept, ovf = bucketize(rvals, owner, n, cap)
-                    m["route_overflow"] = m["route_overflow"] + ovf
-                    recv = jax.lax.all_to_all(
-                        send, axes, split_axis=0, concat_axis=0, tiled=True
-                    )
-                    q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
-                    qmask = q != NULL_ID
-                    # ---- owner-local probe + cond-gated miss execution ----
-                    vals, cnt, mr, nrec, hs = kernel(store, cache, ttable, q, qmask)
-                    cacheable = hop.tpl_idx >= 0 and use_cache
-                    if cacheable:
-                        m["phases"] = m["phases"] + 1  # one cache get round-trip
-                        m["requests"] = m["requests"] + hs["n_read"]
-                        m["cache_reads"] = m["cache_reads"] + hs["n_read"]
-                        m["hits"] = m["hits"] + hs["hits"]
-                        miss_roots.append(mr)
-                        miss_counts.append(nrec[None])
-                    # phases are structural (identical on every shard), so
-                    # the miss gate uses the *global* miss count
-                    k_g = jax.lax.psum(hs["k"], axes)
-                    m["phases"] = m["phases"] + 2 * (k_g > 0)
-                    m["requests"] = m["requests"] + hs["k"] + hs["leaves"]
-                    m["leaf_fetches"] = m["leaf_fetches"] + hs["leaves"]
-                    m["edges_scanned"] = m["edges_scanned"] + hs["edges"]
-                    m["misses"] = m["misses"] + hs["k"]
-                    m["truncated"] = m["truncated"] + hs["trunc"]
-                    # ---- route the left-packed results home ----
-                    back_v = jax.lax.all_to_all(
-                        vals.reshape(n, cap, RW), axes,
-                        split_axis=0, concat_axis=0, tiled=True,
-                    ).reshape(n * cap, RW)
-                    back_c = jax.lax.all_to_all(
-                        cnt.reshape(n, cap), axes,
-                        split_axis=0, concat_axis=0, tiled=True,
-                    ).reshape(-1)
-                    sl = jnp.clip(slot, 0, n * cap - 1)
-                    vals_home = jnp.where(kept[:, None], back_v[sl], NULL_ID)
-                    cnt_home = jnp.where(kept, back_c[sl], 0)
-                    # ---- home-shard frontier merge (identical to 1-host) ----
-                    frontier, fmask = segmented_dedup_merge(
-                        vals_home.reshape(Bloc, A, RW), cnt_home.reshape(Bloc, A), F
-                    )
-                    A = min(F, A * RW)
-
-                result = finalize_frontier(plan, store, roots, frontier, fmask)
-                if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
-                    m["phases"] = m["phases"] + 1  # un-rewritten property fetch
-                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
-                if plan.final == FINAL_VALUES:
-                    m["phases"] = m["phases"] + 1  # valueMap fetch
-                    m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
-                m["phases"] = m["phases"] + plan.extra_phases
-                for key_ in _ADDITIVE_METRICS:
-                    m[key_] = jax.lax.psum(m[key_], axes)
-                return (
-                    result, tuple(miss_roots), tuple(miss_counts), m,
-                    store.version,
-                )
-
-            sm = shard_map(
-                local_step,
-                mesh=self.mesh,
-                in_specs=(P(), self._cache_specs(), P(), P(self.axes), P(self.axes)),
-                out_specs=(P(self.axes), P(self.axes), P(self.axes), P(), P()),
-                check_rep=False,
-            )
-            self._gr_fns[key] = jax.jit(sm)
+            self._gr_fns[key] = jax.jit(self._gr_fn(plan, bucket))
         return self._gr_fns[key]
 
     def serve_step(self, plan, global_batch: int):
@@ -340,87 +422,129 @@ class ShardedTxnRuntime:
         return np.asarray(result)[:B], misses, metrics
 
     # -------------------------------------------------------- gRW-Tx path
+    def _route_and_apply_ops(self, cache, ops, sweeps, through, local_sweeps):
+        """Shared phase B: compact the derived op stream, route each op to
+        the shard owning its root, and apply against the local cache block.
+        ``local_sweeps`` marks sweeps as already owner-local (the
+        partitioned tier's ownership-masked phase A); otherwise they are
+        all_gathered (round-robin phase A emits them anywhere).
+
+        Returns (cache', occupancy_delta, overflow)."""
+        lcspec = self.lspec.cache
+        n, axes = self.n, self.axes
+        ops_cap, sweep_cap = self.ops_cap, self.sweep_cap
+        ops_route_cap = self.ops_route_cap
+
+        # compact: only real ops are routed/applied — the pre-compaction
+        # path instead probed every masked lane of the stream
+        (okind, otpl, oroot, oparams, ovid, oorder), _, ovf_c = compact_rows(
+            ops.ok, ops_cap,
+            (ops.kind, ops.tpl, ops.root, ops.params, ops.vid, ops.order),
+            (0, -1, NULL_ID, 0, NULL_ID, 0),
+        )
+        # route each op to the shard owning its root, whose local cache
+        # block holds the impacted entry
+        dest = jnp.where(oroot != NULL_ID, owner_of(oroot, n), -1)
+        slot, kept, ovf_r = route_plan(dest, n, ops_route_cap)
+
+        def a2a(x, fill):
+            return jax.lax.all_to_all(
+                route_scatter(x, slot, n, ops_route_cap, fill), axes,
+                split_axis=0, concat_axis=0, tiled=True,
+            ).reshape((n * ops_route_cap,) + x.shape[1:])
+
+        rroot = a2a(oroot, NULL_ID)
+        rops = CacheOpStream(
+            kind=a2a(okind, 0), tpl=a2a(otpl, -1), root=rroot,
+            params=a2a(oparams, 0), vid=a2a(ovid, NULL_ID),
+            order=a2a(oorder, 0), ok=rroot != NULL_ID,
+        )
+        (stpl, sroot), _, ovf_s = compact_rows(
+            sweeps.ok, sweep_cap, (sweeps.tpl, sweeps.root), (-1, NULL_ID)
+        )
+        if local_sweeps:
+            # ownership-masked phase A already emitted each sweep at the
+            # shard whose cache block holds the swept root's entries
+            gsw = SweepStream(tpl=stpl, root=sroot, ok=sroot != NULL_ID)
+        else:
+            g = jax.lax.all_gather(
+                jnp.stack([stpl, sroot], axis=1), axes, axis=0, tiled=True
+            )
+            gsw = SweepStream(tpl=g[:, 0], root=g[:, 1], ok=g[:, 1] != NULL_ID)
+
+        # impacted counts *distinct logical keys removed*: chunk-0
+        # occupancy delta. Counting raw ops would over-count a key hit by
+        # several routed ops, and counting all slots would over-count
+        # multi-chunk chains.
+        head = lambda c: jnp.sum((c.valid & (c.chunk == 0)).astype(jnp.int32))
+        occ0 = head(cache)
+        cache2 = apply_sweeps(lcspec, cache, gsw)
+        if through:
+            # value edits are order-sensitive per key; distinct keys
+            # commute — the segmented apply vectorizes across them
+            cache2 = apply_op_stream_segmented(lcspec, cache2, rops)
+        else:
+            # deletes commute: one batched pass
+            cache2 = apply_op_stream_batched(lcspec, cache2, rops)
+        occ_delta = occ0 - head(cache2)
+        cache2 = cache2._replace(n_delete=cache.n_delete + occ_delta)
+        return cache2, occ_delta, ovf_c + ovf_r + ovf_s
+
     def _grw(self, policy: str):
         if policy not in self._grw_fns:
-            espec, lcspec = self.espec, self.lspec.cache
-            n, axes, Vloc = self.n, self.axes, self.Vloc
+            espec = self.espec
+            lspec = self.lspec
+            pspec = self.pspec
+            n, axes = self.n, self.axes
             through = policy != "write-around"
-            ops_cap, sweep_cap = self.ops_cap, self.sweep_cap
-            ops_route_cap = self.ops_route_cap
 
-            def local_grw(store, cache, ttable, batch):
-                me = jax.lax.axis_index(axes)
-                # every replica applies the same commit (deterministic)
-                store2, applied = apply_mutations(espec.store, store, batch)
-                # phase A: derive impacted keys from this shard's slice of
-                # the mutation batch (round-robin rows)
-                part = shard_mutation_rows(applied, n, me)
-                ops, sweeps = derive_cache_ops(
-                    espec, store, store2, ttable, part, through=through,
-                    row_offset=me, row_stride=n,
-                )
-                # compact: only real ops are routed/applied — the single-host
-                # path instead probes every masked lane of the stream
-                (okind, otpl, oroot, oparams, ovid, oorder), _, ovf_c = compact_rows(
-                    ops.ok, ops_cap,
-                    (ops.kind, ops.tpl, ops.root, ops.params, ops.vid, ops.order),
-                    (0, -1, NULL_ID, 0, NULL_ID, 0),
-                )
-                # phase B: route each op to the shard owning its root, whose
-                # local cache block holds the impacted entry
-                dest = jnp.where(
-                    oroot != NULL_ID, jnp.clip(oroot // Vloc, 0, n - 1), -1
-                )
-                slot, kept, ovf_r = route_plan(dest, n, ops_route_cap)
-
-                def a2a(x, fill):
-                    return jax.lax.all_to_all(
-                        route_scatter(x, slot, n, ops_route_cap, fill), axes,
-                        split_axis=0, concat_axis=0, tiled=True,
-                    ).reshape((n * ops_route_cap,) + x.shape[1:])
-
-                rroot = a2a(oroot, NULL_ID)
-                rops = CacheOpStream(
-                    kind=a2a(okind, 0), tpl=a2a(otpl, -1), root=rroot,
-                    params=a2a(oparams, 0), vid=a2a(ovid, NULL_ID),
-                    order=a2a(oorder, 0), ok=rroot != NULL_ID,
-                )
-                # sweeps: tiny stream; share globally, apply to the local
-                # block (a sweep is a mask over the whole shard)
-                (stpl, sroot), _, ovf_s = compact_rows(
-                    sweeps.ok, sweep_cap, (sweeps.tpl, sweeps.root), (-1, NULL_ID)
-                )
-                g = jax.lax.all_gather(
-                    jnp.stack([stpl, sroot], axis=1), axes, axis=0, tiled=True
-                )
-                gsw = SweepStream(tpl=g[:, 0], root=g[:, 1], ok=g[:, 1] != NULL_ID)
-
-                # impacted counts *distinct logical keys removed*: chunk-0
-                # occupancy delta. Counting raw ops would over-count a key
-                # hit by several routed ops (the single-host sequential call
-                # sites see it already gone), and counting all slots would
-                # over-count multi-chunk chains.
-                head = lambda c: jnp.sum((c.valid & (c.chunk == 0)).astype(jnp.int32))
-                occ0 = head(cache)
-                cache2 = apply_sweeps(lcspec, cache, gsw)
-                if through:
-                    # value edits are order-sensitive: sorted sequential walk
-                    cache2 = apply_op_stream(lcspec, cache2, rops)
-                else:
-                    # deletes commute: one batched pass
-                    cache2 = apply_op_stream_batched(lcspec, cache2, rops)
-                occ_delta = occ0 - head(cache2)
-                cache2 = cache2._replace(n_delete=cache.n_delete + occ_delta)
-                impacted = jax.lax.psum(occ_delta, axes)
-                cache2 = _replicate_stats(cache, cache2, axes)
-                overflow = jax.lax.psum(ovf_c + ovf_r + ovf_s, axes)
-                return store2, cache2, impacted, overflow
+            if pspec is not None:
+                def local_grw(store, cache, ttable, batch):
+                    me = jax.lax.axis_index(axes)
+                    # phase A: commit to owner-local storage; the listener
+                    # derives ops where the storage lives (ownership masks)
+                    store2, applied, store_ovf = apply_mutations_partitioned(
+                        pspec, store, batch, me, axes
+                    )
+                    ops, sweeps = derive_cache_ops_views(
+                        lspec, BlockStoreView(pspec, store, me),
+                        BlockStoreView(pspec, store2, me), ttable, applied,
+                        through=through,
+                    )
+                    cache2, occ_delta, ovf = self._route_and_apply_ops(
+                        cache, ops, sweeps, through, local_sweeps=True
+                    )
+                    impacted = jax.lax.psum(occ_delta, axes)
+                    cache2 = _replicate_stats(cache, cache2, axes)
+                    overflow = jax.lax.psum(ovf, axes)
+                    return store2, cache2, impacted, overflow, store_ovf
+            else:
+                def local_grw(store, cache, ttable, batch):
+                    me = jax.lax.axis_index(axes)
+                    # every replica applies the same commit (deterministic)
+                    store2, applied = apply_mutations(espec.store, store, batch)
+                    # phase A: derive impacted keys from this shard's slice
+                    # of the mutation batch (round-robin rows)
+                    part = shard_mutation_rows(applied, n, me)
+                    ops, sweeps = derive_cache_ops(
+                        espec, store, store2, ttable, part, through=through,
+                        row_offset=me, row_stride=n,
+                    )
+                    cache2, occ_delta, ovf = self._route_and_apply_ops(
+                        cache, ops, sweeps, through, local_sweeps=False
+                    )
+                    impacted = jax.lax.psum(occ_delta, axes)
+                    cache2 = _replicate_stats(cache, cache2, axes)
+                    overflow = jax.lax.psum(ovf, axes)
+                    return store2, cache2, impacted, overflow, jnp.int32(0)
 
             sm = shard_map(
                 local_grw,
                 mesh=self.mesh,
-                in_specs=(P(), self._cache_specs(), P(), P()),
-                out_specs=(P(), self._cache_specs(), P(), P()),
+                in_specs=(self._store_specs(), self._cache_specs(), P(), P()),
+                out_specs=(
+                    self._store_specs(), self._cache_specs(), P(), P(), P(),
+                ),
                 check_rep=False,
             )
             self._grw_fns[policy] = jax.jit(sm)
@@ -429,22 +553,25 @@ class ShardedTxnRuntime:
     def grw_step(self, policy: str = "write-around"):
         """The jitted sharded gRW-Tx commit (cached per policy):
         ``step(store, cache, ttable, batch) -> (store', cache', impacted,
-        route_overflow)``."""
+        route_overflow, store_overflow)``."""
         return self._grw(policy)
 
     def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around"):
         """Host wrapper mirroring ``repro.core.engine.run_grw_tx``."""
-        store2, cache2, impacted, overflow = self._grw(policy)(
+        store2, cache2, impacted, overflow, store_ovf = self._grw(policy)(
             store, cache, ttable, batch
         )
         return store2, cache2, {
             "impacted_keys": int(impacted), "op_overflow": int(overflow),
+            "store_append_overflow": int(store_ovf),
         }
 
     # ------------------------------------------------------ CP population
     def populator(self, templates_meta, max_retries: int = 3):
-        """A ``CachePopulator`` whose CP transactions insert each entry at
-        its owner shard (inside shard_map), draining the same MissQueue."""
+        """A ``CachePopulator`` whose CP transactions execute each miss at
+        its owner shard (against owner-local storage on the partitioned
+        tier) and insert at the owner's cache block, draining the same
+        MissQueue."""
         from repro.core.population import CachePopulator
 
         return CachePopulator(
@@ -457,18 +584,22 @@ class ShardedTxnRuntime:
         if key not in self._pop_fns:
             from repro.core.population import populate_step
 
-            lspec, n, axes, Vloc = self.lspec, self.n, self.axes, self.Vloc
+            lspec, n, axes = self.lspec, self.n, self.axes
+            pspec = self.pspec
             direction, edge_label = templates_meta[tpl_idx]
 
             def local_pop(store_exec, store_commit, cache, ttable, roots,
                           params, mask, read_versions):
                 me = jax.lax.axis_index(axes)
-                owned = mask & (roots >= 0) & (
-                    jnp.clip(roots // Vloc, 0, n - 1) == me
+                owned = mask & (roots >= 0) & (owner_of(roots, n) == me)
+                view = (
+                    BlockStoreView(pspec, store_exec, me)
+                    if pspec is not None else None
                 )
                 cache2, ok, ab = populate_step(
                     lspec, store_exec, store_commit, cache, ttable, tpl_idx,
                     direction, edge_label, roots, params, owned, read_versions,
+                    exec_view=view,
                 )
                 ok = jax.lax.psum(ok.astype(jnp.int32), axes) > 0
                 ab = jax.lax.psum(ab.astype(jnp.int32), axes) > 0
@@ -478,7 +609,10 @@ class ShardedTxnRuntime:
             sm = shard_map(
                 local_pop,
                 mesh=self.mesh,
-                in_specs=(P(), P(), self._cache_specs(), P(), P(), P(), P(), P()),
+                in_specs=(
+                    self._store_specs(), self._store_specs(),
+                    self._cache_specs(), P(), P(), P(), P(), P(),
+                ),
                 out_specs=(self._cache_specs(), P(), P()),
                 check_rep=False,
             )
@@ -498,9 +632,8 @@ class ShardedTxnRuntime:
 
 
 # ======================================================================
-# The original fixed-template serving cell (paper's SQ1 shape), kept for
-# capacity planning, the roofline dry-runs, and as the collective-cost
-# reference. New serving code should target ``ShardedTxnRuntime``.
+# Capacity planning: the paper's production deployment described as a
+# config, lowered onto the runtime for the roofline/dry-run tooling.
 # ======================================================================
 
 
@@ -514,184 +647,94 @@ class GraphServeConfig:
     max_deg: int = 64  # per-hop gather window
     max_leaves: int = 64  # cache value width
     cache_slots_total: int = 2**26  # cache capacity across the fleet
-    route_cap_factor: int = 4  # per-peer routing capacity multiplier
+    route_cap_factor: int = DEFAULT_ROUTE_CAP_FACTOR
+    recent_cap: int = 1024  # append-region scan window
     # the served template instance (Figure 1): edge prop0 == 1, leaf prop0 == 0
     edge_prop: int = 0
     edge_val: int = 1
     leaf_prop: int = 0
     leaf_val: int = 0
-    tpl_id: int = 1
-    # §Perf (paper-arch cell): denormalize the leaf predicate property onto
-    # the edge record (JanusGraph vertex-centric-index style). Eliminates
-    # the entire round-2 remote leaf fetch (all_to_all #2/#3 and the remote
-    # vprop reads) at the cost of write amplification: a leaf-prop gRW-Tx
-    # must update every in-edge copy (bounded by the leaf's in-degree; the
-    # same L factor as Table 2's DeleteKeysForLeaf).
-    denormalize_leaf_props: bool = False
 
     def e_total(self) -> int:
         return self.v_total * self.e_per_vertex
 
 
-def abstract_state(cfg: GraphServeConfig, n_shards: int):
-    """ShapeDtypeStructs for the sharded store + cache (dry-run inputs)."""
-    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
-    i32 = jnp.int32
+def config_espec(cfg: GraphServeConfig):
+    """Lower a capacity config to an ``EngineSpec`` for the runtime."""
+    from repro.core.cache import CacheSpec
+    from repro.core.engine import EngineSpec
+    from repro.graphstore.store import StoreSpec
+
+    spec = StoreSpec(
+        v_cap=cfg.v_total, e_cap=cfg.e_total(), n_vprops=cfg.n_vprops,
+        n_eprops=cfg.n_eprops, recent_cap=cfg.recent_cap,
+    )
+    cspec = CacheSpec(
+        capacity=cfg.cache_slots_total, probes=8,
+        max_leaves=cfg.max_leaves, max_chunks=1,
+    )
+    return EngineSpec(
+        store=spec, cache=cspec, max_deg=cfg.max_deg, frontier=cfg.max_leaves
+    )
+
+
+def config_plan_and_ttable(cfg: GraphServeConfig):
+    """The served SQ1-shape template instance (Figure 1) as a runtime
+    ``QueryPlan`` plus its enabled ``TemplateTable``."""
+    from repro.core.engine import Hop, QueryPlan
+    from repro.core.keys import PARAM_LEN
+    from repro.core.lifecycle import GraphQP, ServiceCoordinator
+    from repro.core.templates import (
+        ANY_LABEL, DIR_OUT, MAX_CONDS, OP_EQ, WILDCARD, Template, make_pred,
+        make_template_table,
+    )
+    from repro.utils import PROP_MISSING
+
+    econd = [(cfg.edge_prop, OP_EQ, WILDCARD)]
+    lcond = [(cfg.leaf_prop, OP_EQ, WILDCARD)]
+    tpl = Template(
+        "SQ1", DIR_OUT, (ANY_LABEL, []), (ANY_LABEL, econd), (ANY_LABEL, lcond)
+    )
+    ttable = make_template_table([tpl])
+    qp = GraphQP("qp0")
+    sc = ServiceCoordinator([qp])
+    sc.register(0)
+    sc.enable(0)
+    ttable = qp.ttable_masks(ttable, 1)
+    params = np.full(PARAM_LEN, int(PROP_MISSING), np.int32)
+    params[0] = cfg.edge_val
+    params[MAX_CONDS] = cfg.leaf_val
+    hop = Hop(
+        DIR_OUT, ANY_LABEL, make_pred(ANY_LABEL, []),
+        make_pred(ANY_LABEL, econd), make_pred(ANY_LABEL, lcond), 0, params,
+    )
+    return QueryPlan(hops=(hop,)), ttable
+
+
+def config_cell(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
+                global_batch: int = 8192, blk_slack: float = 1.0):
+    """Build the dry-run cell for a capacity config on the partitioned
+    runtime: ``(step_fn, in_shardings, abstract_args, runtime)`` with the
+    first three ready for
+    ``jax.jit(step_fn, in_shardings=...).lower(*abstract_args)``."""
+    espec = config_espec(cfg)
+    plan, ttable = config_plan_and_ttable(cfg)
+    rt = ShardedTxnRuntime(
+        espec, mesh, use_cache=use_cache, store_tier="partitioned",
+        route_cap_factor=cfg.route_cap_factor, blk_slack=blk_slack,
+    )
+    step = rt._gr_fn(plan, global_batch)
     sds = jax.ShapeDtypeStruct
-    out_extra = {"ldprop": sds((E,), i32)} if cfg.denormalize_leaf_props else {}
-    return dict(
-        deg=sds((V,), i32),
-        start=sds((V,), i32),  # local offset into the owner's edge block
-        dst=sds((E,), i32),
-        eprop=sds((E,), i32),  # the predicate property (IsActive)
-        vprop=sds((V,), i32),  # the leaf predicate property (Status)
-        **out_extra,
-        c_root=sds((C,), i32),
-        c_fp=sds((C,), jnp.uint32),
-        c_len=sds((C,), i32),
-        c_vals=sds((C, cfg.max_leaves), i32),
-        c_valid=sds((C,), jnp.bool_),
+    pstore = abstract_partitioned_store(rt.pspec)
+    cache = jax.eval_shape(lambda: empty_cache(espec.cache))
+    roots = sds((global_batch,), jnp.int32)
+    bvalid = sds((global_batch,), jnp.bool_)
+    repl = NamedSharding(mesh, P())
+    rshard = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+    in_shardings = (
+        rt.store_sharding(),
+        rt.cache_sharding(),
+        jax.tree_util.tree_map(lambda _: repl, ttable),
+        rshard, rshard,
     )
-
-
-def state_shardings(cfg: GraphServeConfig, mesh: Mesh):
-    axes = tuple(mesh.axis_names)
-    s1 = NamedSharding(mesh, P(axes))
-    extra = {"ldprop": s1} if cfg.denormalize_leaf_props else {}
-    return dict(
-        deg=s1, start=s1, dst=s1, eprop=s1, vprop=s1,
-        c_root=s1, c_fp=s1, c_len=s1,
-        c_vals=NamedSharding(mesh, P(axes, None)),
-        c_valid=s1, **extra,
-    )
-
-
-def build_serve_step(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
-                     global_batch: int = 8192):
-    """Returns a jit-able ``step(state_dict, roots) -> (results, stats)``.
-
-    roots: int32 [global_batch] sharded over all axes; results
-    [global_batch, max_leaves] (NULL_ID padded). ``stats["route_overflow"]``
-    counts valid items silently dropped by a full routing bucket in either
-    round — nonzero means degraded results and should alarm.
-    """
-    axes = tuple(mesh.axis_names)
-    n = int(np.prod([mesh.shape[a] for a in axes]))
-    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
-    assert V % n == 0 and E % n == 0 and C % n == 0 and global_batch % n == 0
-    Vloc, Eloc, Cloc = V // n, E // n, C // n
-    Bloc = global_batch // n
-    cap = max(1, cfg.route_cap_factor * Bloc // n)
-    cap2 = max(1, cfg.route_cap_factor * (cap * cfg.max_deg) // n)
-    D = cfg.max_deg
-
-    def local_step(deg, start, dst, eprop, vprop, c_root, c_fp, c_len, c_vals,
-                   c_valid, roots, ldprop=None):
-        me = jax.lax.axis_index(axes)
-        # ---- round 1: route roots to owners --------------------------------
-        owner = roots // Vloc
-        send, slot1, kept1, ovf1 = bucketize(roots, owner, n, cap)
-        recv = jax.lax.all_to_all(send, axes, split_axis=0, concat_axis=0, tiled=True)
-        q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
-        qvalid = q >= 0
-        local = jnp.clip(q - me * Vloc, 0, Vloc - 1)
-
-        # ---- local cache probe --------------------------------------------
-        params = jnp.stack([jnp.full_like(q, cfg.edge_val), jnp.full_like(q, cfg.leaf_val)])
-        h = hash_rows([jnp.full_like(q, cfg.tpl_id), q, params[0], params[1]], 0x51ED5EED)
-        fp = hash_rows([jnp.full_like(q, cfg.tpl_id), q, params[0], params[1]], 0xF1A9F00D)
-        cslot = (h % jnp.uint32(Cloc)).astype(jnp.int32)
-        hit = (
-            qvalid
-            & c_valid[cslot]
-            & (c_root[cslot] == q)
-            & (c_fp[cslot] == fp)
-        ) if use_cache else jnp.zeros_like(qvalid)
-        cached_vals = c_vals[cslot]
-        cached_len = c_len[cslot]
-
-        # ---- miss execution: local CSR gather + edge filter ----------------
-        pos = start[local][:, None] + jnp.arange(D, dtype=jnp.int32)[None, :]
-        within = jnp.arange(D)[None, :] < deg[local][:, None]
-        pos = jnp.clip(pos, 0, Eloc - 1)
-        leaf = dst[pos]  # [n*cap, D] global leaf ids
-        e_ok = within & (eprop[pos] == cfg.edge_val) & qvalid[:, None] & ~hit[:, None]
-
-        ovf2 = jnp.int32(0)
-        if ldprop is not None:
-            # §Perf: denormalized leaf property rides on the edge record —
-            # the remote round-2 fetch disappears entirely.
-            l_ok = (ldprop[pos] == cfg.leaf_val) & e_ok
-        else:
-            # ---- round 2: leaf property fetch at the leaves' owners --------
-            lflat = jnp.where(e_ok.reshape(-1), leaf.reshape(-1), -1)
-            lowner = jnp.where(lflat >= 0, lflat // Vloc, -1)
-            send2, slot2, kept2, ovf2 = bucketize(lflat, lowner, n, cap2)
-            recv2 = jax.lax.all_to_all(send2, axes, split_axis=0, concat_axis=0, tiled=True)
-            rloc = jnp.clip(recv2.reshape(-1) - me * Vloc, 0, Vloc - 1)
-            props = jnp.where(recv2.reshape(-1) >= 0, vprop[rloc], NULL_ID)
-            back2 = jax.lax.all_to_all(
-                props.reshape(n, cap2), axes, split_axis=0, concat_axis=0, tiled=True
-            ).reshape(-1)
-            leaf_prop = jnp.where(
-                kept2, back2[jnp.clip(slot2, 0, n * cap2 - 1)], NULL_ID
-            )
-            l_ok = ((leaf_prop == cfg.leaf_val) & e_ok.reshape(-1) & kept2).reshape(n * cap, D)
-
-        # dedup + compact executed results to max_leaves with the same
-        # sort-based device merge the engine's fused hop pipeline uses
-        # (set semantics per Definition 2.1; overflow beyond max_leaves is
-        # dropped instead of overwriting the last slot)
-        exec_vals, exec_mask = sort_dedup_masked(leaf, l_ok, cfg.max_leaves)
-
-        merged = jnp.where(hit[:, None], cached_vals, exec_vals)
-        mlen = jnp.where(hit, cached_len, jnp.sum(exec_mask.astype(jnp.int32), axis=1))
-        width = jnp.arange(cfg.max_leaves)[None, :]
-        merged = jnp.where(width < mlen[:, None], merged, NULL_ID)
-
-        # ---- route results back to the querying shards ---------------------
-        back = jax.lax.all_to_all(
-            merged.reshape(n, cap, cfg.max_leaves), axes,
-            split_axis=0, concat_axis=0, tiled=True,
-        ).reshape(n * cap, cfg.max_leaves)
-        results = jnp.where(
-            kept1[:, None], back[jnp.clip(slot1, 0, n * cap - 1)], NULL_ID
-        )
-        stats = dict(
-            hits=jax.lax.psum(jnp.sum(hit.astype(jnp.int32)), axes),
-            processed=jax.lax.psum(jnp.sum(qvalid.astype(jnp.int32)), axes),
-            route_dropped=jax.lax.psum(
-                jnp.sum((~kept1).astype(jnp.int32)), axes
-            ),
-            route_overflow=jax.lax.psum(ovf1 + ovf2, axes),
-        )
-        return results, stats
-
-    spec1 = P(axes)
-    denorm = cfg.denormalize_leaf_props
-    in_specs = [spec1] * 5 + [spec1, spec1, spec1, P(axes, None), spec1, P(axes)]
-    if denorm:
-        in_specs.append(spec1)
-
-    sm = shard_map(
-        local_step,
-        mesh=mesh,
-        in_specs=tuple(in_specs),
-        out_specs=(
-            P(axes, None),
-            dict(hits=P(), processed=P(), route_dropped=P(), route_overflow=P()),
-        ),
-        check_rep=False,
-    )
-
-    def step(state, roots):
-        args = [
-            state["deg"], state["start"], state["dst"], state["eprop"],
-            state["vprop"], state["c_root"], state["c_fp"], state["c_len"],
-            state["c_vals"], state["c_valid"], roots,
-        ]
-        if denorm:
-            args.append(state["ldprop"])
-        return sm(*args)
-
-    return step
+    return step, in_shardings, (pstore, cache, ttable, roots, bvalid), rt

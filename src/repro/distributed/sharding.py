@@ -22,7 +22,8 @@ _MESH: Optional[Mesh] = None
 def flat_mesh(n: Optional[int] = None, axis: str = "shard") -> Mesh:
     """A 1-axis mesh over ``n`` devices (default: all local devices) — the
     canonical layout for the sharded transaction runtime, whose vertex
-    ownership and cache blocks partition over a single flattened axis."""
+    ownership, owner-local dual-CSR edge blocks (the partitioned storage
+    tier), and cache blocks all partition over a single flattened axis."""
     devs = jax.devices()
     n = len(devs) if n is None else n
     return jax.make_mesh((n,), (axis,), devices=devs[:n])

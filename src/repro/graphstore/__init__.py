@@ -8,6 +8,7 @@ granularity.
 """
 
 from repro.graphstore.store import (
+    GlobalStoreView,
     GraphStore,
     StoreSpec,
     compact,
@@ -15,6 +16,18 @@ from repro.graphstore.store import (
     gather_in,
     gather_out,
     ingest,
+)
+from repro.graphstore.partition import (
+    BlockStoreView,
+    EdgeBlock,
+    PartitionedGraphStore,
+    PartitionedStoreSpec,
+    apply_mutations_partitioned,
+    default_pspec,
+    local_of,
+    owner_of,
+    partition_store,
+    store_bytes_report,
 )
 from repro.graphstore.mutations import (
     AppliedMutations,
@@ -26,12 +39,23 @@ from repro.graphstore.txn import TxnError, commit_with_conflict_check
 
 __all__ = [
     "GraphStore",
+    "GlobalStoreView",
     "StoreSpec",
     "empty_store",
     "ingest",
     "gather_out",
     "gather_in",
     "compact",
+    "PartitionedStoreSpec",
+    "PartitionedGraphStore",
+    "EdgeBlock",
+    "BlockStoreView",
+    "partition_store",
+    "apply_mutations_partitioned",
+    "default_pspec",
+    "owner_of",
+    "local_of",
+    "store_bytes_report",
     "MutationBatch",
     "AppliedMutations",
     "make_mutation_batch",

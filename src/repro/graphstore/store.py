@@ -201,3 +201,46 @@ def gather_out(spec: StoreSpec, store: GraphStore, roots: jax.Array, max_deg: in
 def gather_in(spec: StoreSpec, store: GraphStore, roots: jax.Array, max_deg: int):
     """Incoming edges of each root. See ``_gather``."""
     return _gather(spec, store, roots, max_deg, incoming=True)
+
+
+class GlobalStoreView:
+    """Storage view of a full (replicated) ``GraphStore``.
+
+    The storage hook consumed by the shared hop driver and the mutation
+    listener (``repro.core.runtime`` / ``repro.core.invalidation``): vertex
+    attribute arrays plus a padded adjacency gather that also resolves each
+    scanned edge's label/properties. The partitioned tier provides the same
+    interface over owner-local blocks (``partition.BlockStoreView``); both
+    views return identical values for identical logical stores, which is the
+    structural basis of the engines' byte-identity.
+
+    ``own`` is ``None``: a single host owns every vertex, and the listener
+    skips ownership gating entirely (keeping its traced graph unchanged).
+    """
+
+    own = None
+
+    def __init__(self, spec: StoreSpec, store: GraphStore):
+        self.spec = spec
+        self.store = store
+
+    @property
+    def vlabel(self):
+        return self.store.vlabel
+
+    @property
+    def vprops(self):
+        return self.store.vprops
+
+    @property
+    def valive(self):
+        return self.store.valive
+
+    def adjacency(self, roots: jax.Array, max_deg: int, *, incoming: bool):
+        """Returns ``(other [B, W], mask, truncated [B], elabel, eprops)``."""
+        eids, other, mask, trunc = _gather(
+            self.spec, self.store, roots, max_deg, incoming=incoming
+        )
+        elab = take_along0(self.store.elabel, eids)
+        ep = take_along0(self.store.eprops, eids)
+        return other, mask, trunc, elab, ep

@@ -1,12 +1,15 @@
-"""Serving driver for the paper's architecture: run the distributed
-one-hop serve step (shard_map, all_to_all routing, co-partitioned cache)
-on a local debug mesh with real data and report hit/drop statistics.
+"""Serving driver for the paper's architecture: run the sharded transaction
+runtime — owner-routed gR-Txs over the partitioned dual-CSR storage tier
+with the co-partitioned cache — on a local debug mesh with real data and
+report hit/overflow statistics plus the storage-tier memory profile.
 
   PYTHONPATH=src python -m repro.launch.serve --shards 4 --batches 10
 
-On a real fleet the same ``build_serve_step`` runs on the production mesh
-(launch/dryrun.py proves it compiles there); this driver exists so the
-serving path can be *executed* and validated end-to-end on a host.
+On a real fleet the same ``ShardedTxnRuntime.serve_step`` compiles on the
+production mesh (``graph_serve.config_cell`` / launch/dryrun.py prove it);
+this driver exists so the serving path can be *executed* and validated
+end-to-end on a host, including the CP population loop draining the served
+misses back into the owner shards' cache blocks.
 """
 
 from __future__ import annotations
@@ -26,6 +29,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--vertices", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store-tier", default="partitioned",
+                    choices=("partitioned", "replicated"))
     args = ap.parse_args(argv)
 
     if args.shards > 1:
@@ -33,58 +38,69 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.shards}"
         ).strip()
-    import jax
     import jax.numpy as jnp
 
-    from repro.distributed.graph_serve import GraphServeConfig, build_serve_step
-    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed.graph_serve import (
+        GraphServeConfig, ShardedTxnRuntime, config_espec,
+        config_plan_and_ttable,
+    )
+    from repro.distributed.sharding import flat_mesh
+    from repro.graphstore.store import ingest
 
     cfg = GraphServeConfig(
         name="serve-local", v_total=args.vertices, e_per_vertex=4,
-        max_deg=16, max_leaves=16, cache_slots_total=4096,
+        max_deg=16, max_leaves=16, cache_slots_total=4096, recent_cap=64,
     )
-    mesh = make_debug_mesh(args.shards, 1)
+    espec = config_espec(cfg)
+    plan, ttable = config_plan_and_ttable(cfg)
     rng = np.random.default_rng(args.seed)
-    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
-    deg = rng.integers(0, cfg.max_deg // 2, V).astype(np.int32)
-    n = args.shards
-    Vloc, Eloc = V // n, E // n
-    start = np.zeros(V, np.int32)
-    dst = np.zeros(E, np.int32)
-    eprop = np.zeros(E, np.int32)
-    for s in range(n):  # per-shard local CSR blocks
-        off = 0
-        for v in range(s * Vloc, (s + 1) * Vloc):
-            start[v] = off
-            d = int(deg[v])
-            if off + d > Eloc:
-                d = Eloc - off
-                deg[v] = d
-            dst[s * Eloc + off : s * Eloc + off + d] = rng.integers(0, V, d)
-            eprop[s * Eloc + off : s * Eloc + off + d] = rng.integers(0, 2, d)
-            off += d
-    vprop = rng.integers(0, 2, V).astype(np.int32)
-    state = dict(
-        deg=jnp.asarray(deg), start=jnp.asarray(start), dst=jnp.asarray(dst),
-        eprop=jnp.asarray(eprop), vprop=jnp.asarray(vprop),
-        c_root=jnp.full((C,), -1, jnp.int32), c_fp=jnp.zeros((C,), jnp.uint32),
-        c_len=jnp.zeros((C,), jnp.int32),
-        c_vals=jnp.full((C, cfg.max_leaves), -1, jnp.int32),
-        c_valid=jnp.zeros((C,), bool),
+    V = cfg.v_total
+    # random graph matching the capacity profile
+    es, ed, ep = [], [], []
+    for v in range(V):
+        for _ in range(int(rng.integers(0, cfg.max_deg // 2))):
+            es.append(v)
+            ed.append(int(rng.integers(0, V)))
+            ep.append([int(rng.integers(0, 2))])
+    vlabels = np.zeros(V, np.int32)
+    vprops = rng.integers(0, 2, (V, cfg.n_vprops)).astype(np.int64)
+    store = ingest(
+        espec.store, vlabels, vprops, es, ed, [0] * len(es), np.array(ep)
     )
-    step = jax.jit(build_serve_step(cfg, mesh, use_cache=True, global_batch=args.batch))
-    total = dict(processed=0, hits=0, route_dropped=0)
+
+    mesh = flat_mesh(args.shards)
+    rt = ShardedTxnRuntime(espec, mesh, store_tier=args.store_tier)
+    if args.store_tier == "partitioned":
+        sstate = rt.partition_store(store)
+        rep = rt.store_bytes()
+        print(
+            f"store tier: {rep['per_shard_bytes']/2**20:.2f} MiB/shard "
+            f"partitioned vs {rep['replicated_per_shard_bytes']/2**20:.2f} "
+            f"MiB/shard replicated (ratio {rep['ratio']:.3f}, "
+            f"ideal 1/n = {rep['ideal_ratio']:.3f})"
+        )
+    else:
+        sstate = store
+    cache = rt.empty_cache()
+    pop = rt.populator({0: (plan.hops[0].direction, plan.hops[0].edge_label)})
+
+    total = dict(requests=0, hits=0, misses=0, route_overflow=0)
     t0 = time.time()
     for b in range(args.batches):
-        roots = jnp.asarray(rng.integers(0, V, args.batch).astype(np.int32))
-        res, stats = step(state, roots)
+        roots = rng.integers(0, V, args.batch).astype(np.int32)
+        res, misses, m = rt.run_gr_tx_batch(sstate, cache, ttable, plan, roots)
         for k in total:
-            total[k] += int(stats[k])
+            total[k] += int(m[k])
+        # CP threads drain the miss queue into the owner shards' blocks
+        pop.queue.push(misses)
+        cache = pop.drain(sstate, sstate, cache, ttable, 512)
     dt = time.time() - t0
+    assert res.shape == (args.batch, espec.result_width)
     print(
-        f"{args.batches} batches x {args.batch} gR-Txs on {n} shards: "
-        f"processed={total['processed']} hits={total['hits']} "
-        f"route_dropped={total['route_dropped']} "
+        f"{args.batches} batches x {args.batch} gR-Txs on {args.shards} "
+        f"shards [{args.store_tier}]: requests={total['requests']} "
+        f"hits={total['hits']} misses={total['misses']} "
+        f"populated={pop.committed} route_overflow={total['route_overflow']} "
         f"({dt/args.batches*1e3:.1f} ms/batch after compile)"
     )
     return total

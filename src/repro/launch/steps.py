@@ -194,21 +194,13 @@ def _rec_cell(mod, shape_name, info, mesh):
 
 # ---------------------------------------------------------------- graph
 def _graph_cell(mod, shape_name, info, mesh):
-    import dataclasses
-
     from repro.distributed import graph_serve as gs
 
     cfg = mod.FULL
-    if info.get("denormalize"):
-        cfg = dataclasses.replace(cfg, denormalize_leaf_props=True)
-    n = int(np.prod(list(mesh.shape.values())))
-    state = gs.abstract_state(cfg, n)
-    sshard = gs.state_shardings(cfg, mesh)
-    B = info["batch"]
-    step = gs.build_serve_step(cfg, mesh, use_cache=info["use_cache"], global_batch=B)
-    roots = jax.ShapeDtypeStruct((B,), jnp.int32)
-    rshard = NamedSharding(mesh, P(tuple(mesh.axis_names)))
-    return step, (sshard, rshard), (state, roots)
+    step, shardings, args, _rt = gs.config_cell(
+        cfg, mesh, use_cache=info["use_cache"], global_batch=info["batch"]
+    )
+    return step, shardings, args
 
 
 def build_cell(arch_id: str, shape_name: str, mesh: Mesh):

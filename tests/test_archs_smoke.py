@@ -95,40 +95,35 @@ def test_recsys_smoke_train_and_serve():
 
 
 def test_graph_serve_smoke_single_shard():
-    """The paper-arch serve step on a 1-device mesh, with a known graph."""
-    from repro.distributed.graph_serve import build_serve_step
+    """The paper-arch serve cell on a 1-device mesh, with a known graph:
+    the capacity config lowered onto the partitioned runtime end to end."""
+    from repro.distributed.graph_serve import (
+        ShardedTxnRuntime, config_espec, config_plan_and_ttable,
+    )
+    from repro.graphstore.store import ingest
     from repro.launch.mesh import make_debug_mesh
 
     mod = configs_pkg.get_arch("ecommerce-graph")
     cfg = mod.SMOKE
     mesh = make_debug_mesh(1, 1)
+    espec = config_espec(cfg)
+    plan, ttable = config_plan_and_ttable(cfg)
     V = cfg.v_total
-    E = cfg.e_total()
     # vertex 0 -> leaves 1, 2, 3 (edge prop 1,1,0), leaf props 0, 1, 0
-    deg = np.zeros(V, np.int32)
-    deg[0] = 3
-    start = np.zeros(V, np.int32)
-    dst = np.zeros(E, np.int32)
-    dst[:3] = [1, 2, 3]
-    eprop = np.zeros(E, np.int32)
-    eprop[:3] = [1, 1, 0]
-    vprop = np.zeros(V, np.int32)
-    vprop[2] = 1
-    C = cfg.cache_slots_total
-    state = dict(
-        deg=jnp.asarray(deg), start=jnp.asarray(start), dst=jnp.asarray(dst),
-        eprop=jnp.asarray(eprop), vprop=jnp.asarray(vprop),
-        c_root=jnp.full((C,), -1, jnp.int32), c_fp=jnp.zeros((C,), jnp.uint32),
-        c_len=jnp.zeros((C,), jnp.int32),
-        c_vals=jnp.full((C, cfg.max_leaves), -1, jnp.int32),
-        c_valid=jnp.zeros((C,), bool),
+    vlabels = np.zeros(V, np.int32)
+    vprops = np.zeros((V, cfg.n_vprops), np.int64)
+    vprops[2, cfg.leaf_prop] = 1
+    store = ingest(
+        espec.store, vlabels, vprops, [0, 0, 0], [1, 2, 3], [0, 0, 0],
+        np.array([[1], [1], [0]]),
     )
-    B = 8
-    step = jax.jit(build_serve_step(cfg, mesh, use_cache=True, global_batch=B))
-    roots = jnp.zeros((B,), jnp.int32)  # all query vertex 0
-    res, stats = step(state, roots)
+    rt = ShardedTxnRuntime(espec, mesh)
+    pstore = rt.partition_store(store)
+    cache = rt.empty_cache()
+    roots = np.zeros(8, np.int32)  # all query vertex 0
+    res, misses, met = rt.run_gr_tx_batch(pstore, cache, ttable, plan, roots)
     # expected leaves: edge prop==1 and leaf prop==0 -> only vertex 1
-    got = set(np.asarray(res[0])[np.asarray(res[0]) >= 0].tolist())
-    assert got == {1}, got
-    assert int(stats["hits"]) == 0
-    assert int(stats["processed"]) >= 1
+    for row in res:
+        assert set(row[row >= 0].tolist()) == {1}, row
+    assert met["hits"] == 0 and met["route_overflow"] == 0
+    assert met["misses"] >= 1 and len(misses) >= 1

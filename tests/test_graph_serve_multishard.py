@@ -1,8 +1,12 @@
-"""Multi-shard correctness of the distributed graph-serving engine.
+"""Multi-shard correctness of the distributed serving tier.
 
-Runs in a subprocess so XLA_FLAGS can create 4 host devices before jax
-initializes; verifies cross-shard routing returns exactly the predicate-
-qualified leaves for roots owned by *remote* shards.
+Runs in a subprocess so XLA_FLAGS can create host devices before jax
+initializes; verifies that cross-shard routing over the *partitioned*
+storage tier returns exactly the predicate-qualified leaves for roots owned
+by *remote* shards, that starved routing buckets surface their drops in
+``route_overflow`` instead of hiding them, and that the measured-skew
+default ``route_cap_factor`` holds the overflow rate at zero across a
+Zipfian batch stream (the production cap SLO).
 """
 
 import os
@@ -17,60 +21,82 @@ SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import numpy as np
-    import jax, jax.numpy as jnp
-    from repro.distributed.graph_serve import GraphServeConfig, build_serve_step
-    from repro.launch.mesh import make_debug_mesh
+    import jax
+    from conftest import build_world, enabled_ttable, fig1_plan
+    from repro.core import CacheSpec, EngineSpec
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import (
+        DEFAULT_ROUTE_CAP_FACTOR, ShardedTxnRuntime,
+    )
+    from repro.graphstore import StoreSpec, ingest
 
-    cfg = GraphServeConfig(name="t", v_total=64, e_per_vertex=4, max_deg=8,
-                           max_leaves=8, cache_slots_total=256)
-    mesh = make_debug_mesh(2, 2)  # 4 shards
-    V, E, C = cfg.v_total, cfg.e_total(), cfg.cache_slots_total
-    n, Vloc, Eloc = 4, V // 4, E // 4
-    deg = np.zeros(V, np.int32); start = np.zeros(V, np.int32)
-    dst = np.zeros(E, np.int32); eprop = np.zeros(E, np.int32)
-    # vertex 17 (shard 1) -> leaves 3, 40, 50 with eprops 1,1,0
-    deg[17] = 3; start[17] = 5
-    base = 1 * Eloc + 5
-    dst[base:base+3] = [3, 40, 50]; eprop[base:base+3] = [1, 1, 0]
-    vprop = np.ones(V, np.int32)  # nothing qualifies (leaf_val=0)...
-    vprop[3] = 0                  # ...except vertex 3
-    vprop[40] = 1
-    state = dict(deg=jnp.asarray(deg), start=jnp.asarray(start),
-                 dst=jnp.asarray(dst), eprop=jnp.asarray(eprop),
-                 vprop=jnp.asarray(vprop),
-                 c_root=jnp.full((C,), -1, jnp.int32),
-                 c_fp=jnp.zeros((C,), jnp.uint32),
-                 c_len=jnp.zeros((C,), jnp.int32),
-                 c_vals=jnp.full((C, cfg.max_leaves), -1, jnp.int32),
-                 c_valid=jnp.zeros((C,), bool))
-    step = jax.jit(build_serve_step(cfg, mesh, use_cache=True, global_batch=8))
-    roots = jnp.asarray(np.array([17] * 8, np.int32))  # all shards query 17
-    res, stats = step(state, roots)
-    got = sorted(set(int(x) for x in np.asarray(res[0]) if x >= 0))
-    assert got == [3], got     # edge prop==1 AND leaf prop==0 -> only leaf 3
-    assert int(stats["processed"]) >= 1
-    # ample routing capacity: nothing may be silently dropped
-    assert int(stats["route_overflow"]) == 0, stats
+    # a known graph: watch-list 17 -> listings {3, 40, 50} with IsActive
+    # 1,1,0 and Status 0,1,0 — only listing 3 qualifies for fig1(ia=1, st=0)
+    spec = StoreSpec(v_cap=64, e_cap=256, n_vprops=2, n_eprops=1, recent_cap=32)
+    vlabels = np.ones(64, np.int32)   # listings by default
+    vlabels[17] = 0                   # the root watch-list
+    vprops = np.full((64, 2), 1, np.int64)
+    vprops[3, 0] = 0
+    vprops[40, 0] = 1
+    vprops[50, 0] = 0
+    es, ed, ep = [17, 17, 17], [3, 40, 50], [[1], [1], [0]]
+    store = ingest(spec, vlabels, vprops, es, ed, [0, 0, 0], np.array(ep))
 
-    # a starved routing bucket (cap 1 per peer, 2 queued roots per shard)
-    # must surface its drops in route_overflow instead of hiding them
-    import dataclasses
-    tiny = dataclasses.replace(cfg, route_cap_factor=1)
-    step2 = jax.jit(build_serve_step(tiny, mesh, use_cache=True, global_batch=8))
-    _, stats2 = step2(state, roots)
-    # 4 roots dropped in round 1 (2 queued per shard, bucket cap 1) plus 4
-    # leaf fetches dropped in round 2 (4 surviving root copies x 2
-    # qualifying edges against leaf-owner bucket cap 2)
-    assert int(stats2["route_overflow"]) == 8, stats2
+    cspec = CacheSpec(capacity=256, probes=8, max_leaves=8, max_chunks=1)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=8, frontier=8)
+    ttable, _, _ = enabled_ttable()
+    mesh = flat_mesh(4)
+    plan = fig1_plan()
+
+    rt = ShardedTxnRuntime(espec, mesh)  # partitioned tier, measured cap
+    pstore = rt.partition_store(store)
+    cache = rt.empty_cache()
+    # every shard's batch slice queries root 17 — owned by shard 17 % 4 = 1,
+    # so three shards route their roots to a remote owner's edge block
+    roots = np.full(8, 17, np.int32)
+    res, _, met = rt.run_gr_tx_batch(pstore, cache, ttable, plan, roots)
+    got = sorted(set(int(x) for x in res[0] if x >= 0))
+    assert got == [3], got
+    for row in res:
+        assert sorted(set(int(x) for x in row if x >= 0)) == [3]
+    assert met["route_overflow"] == 0, met
+
+    # a starved routing bucket (cap factor 1, every root on one owner) must
+    # surface its drops instead of silently degrading
+    tiny = ShardedTxnRuntime(
+        espec, mesh, route_cap_factor=1, e_blk_cap=rt.pspec.e_blk_cap
+    )
+    _, _, met2 = tiny.run_gr_tx_batch(pstore, cache, ttable, plan, roots)
+    assert met2["route_overflow"] > 0, met2
+
+    # overflow-rate SLO: the measured default cap factor absorbs Zipfian
+    # root skew — zero overflow across a batch stream (rate SLO = 0 here;
+    # production alarms on any nonzero route_overflow)
+    rng = np.random.default_rng(0)
+    wl = np.arange(0, 32)  # pretend watch-list id range
+    overflowed = 0
+    for _ in range(20):
+        zipf = np.minimum(rng.zipf(1.3, size=16) - 1, len(wl) - 1)
+        roots = wl[zipf].astype(np.int32)
+        _, _, m = rt.run_gr_tx_batch(pstore, cache, ttable, plan, roots)
+        overflowed += int(m["route_overflow"] > 0)
+    assert overflowed == 0, f"{overflowed}/20 batches overflowed default caps"
+    assert DEFAULT_ROUTE_CAP_FACTOR >= 4  # the measured p99.9 ceiling
+
     print("MULTISHARD_OK")
     """
 )
 
 
 def test_graph_serve_routing_across_shards():
-    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
-        text=True, timeout=600,
+        text=True, timeout=900,
     )
     assert "MULTISHARD_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,217 @@
+"""Byte-identity of the partitioned-storage sharded runtime with the
+single-host engine, on an 8-virtual-device CPU mesh.
+
+The partitioned tier keeps only owner-local dual-CSR edge blocks per shard
+(out-CSR at src-owners, in-CSR at dst-owners) plus the small replicated
+vertex-attribute tier. Everything observable must match the single-host
+``fused=True`` engine: multi-hop gR-Tx results and metrics byte-for-byte in
+*both* hop directions (``DIR_OUT`` and ``DIR_IN``), miss-record sets,
+CP-population outcomes, and gRW-Tx post-states — where the partitioned
+post-store must equal the *partition of the single-host post-store*
+byte-for-byte (including the block recent regions new edges append to), and
+the cache logically (``cache_entries``). Per-shard store bytes are asserted
+a small, O(1/n)-scaling fraction of the replicated snapshot.
+
+Runs in subprocesses so XLA_FLAGS can create the host devices before jax
+initializes (same pattern as test_sharded_runtime).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from conftest import (
+        build_world, enabled_ttable, fig1_plan, common_watchlist_plan,
+        sq1_hop, sq2_hop, TPL_META,
+    )
+    from repro.core import (
+        CacheSpec, EngineSpec, GraphEngine, QueryPlan, cache_entries,
+        empty_cache, run_grw_tx,
+    )
+    from repro.core.population import CachePopulator
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.graphstore import make_mutation_batch
+    from repro.graphstore.partition import (
+        EdgeBlock, PartitionedGraphStore, partition_store,
+    )
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+
+    def miss_key(ms):
+        return sorted(
+            (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+            for m in ms
+        )
+
+    def check_gr(rt, pstore, host_store, plan, roots, cache_h, cache_s, eng):
+        res_h, miss_h, met_h = eng.run(host_store, cache_h, ttable, roots)
+        res_s, miss_s, met_s = rt.run_gr_tx_batch(
+            pstore, cache_s, ttable, plan, roots
+        )
+        assert np.array_equal(res_h, res_s), (res_h, res_s)
+        assert met_s.pop("route_overflow") == 0
+        assert met_h == met_s, (met_h, met_s)
+        assert miss_key(miss_h) == miss_key(miss_s)
+        return miss_h, miss_s, met_h
+
+    def assert_store_partition_equal(pspec, host_store, pstore_s, tag):
+        exp = partition_store(pspec, host_store)
+        got = jax.device_get(pstore_s)
+        for f in PartitionedGraphStore._fields:
+            a, b = getattr(got, f), getattr(exp, f)
+            if isinstance(a, EdgeBlock):
+                for bf in EdgeBlock._fields:
+                    assert np.array_equal(
+                        np.asarray(getattr(a, bf)), np.asarray(getattr(b, bf))
+                    ), f"{tag}: {f}.{bf}"
+            else:
+                assert np.array_equal(np.asarray(a), np.asarray(b)), f"{tag}: {f}"
+    """
+)
+
+BOTH_DIRECTIONS = PRELUDE + textwrap.dedent(
+    """
+    mesh = flat_mesh(8)
+    # identity requires the no-drop routing configuration; the measured
+    # default cap trades memory for a bounded overflow SLO instead.
+    # blk_slack=1.0: uniform-share block capacity (interleaved ownership
+    # keeps this world balanced), so the bytes assertion measures layout,
+    # not headroom.
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    pstore = rt.partition_store(store)
+
+    # per-shard storage: a small fraction of the replicated snapshot. The
+    # sharded portion (edge blocks) scales as O(1/n) — bounded by ~2/n of
+    # the replicated bytes, since each edge lives at exactly two owners
+    # (fleet-wide 2E edge copies instead of nE).
+    rep = rt.store_bytes()
+    n = rep["n_shards"]
+    assert rep["per_shard_bytes"] < 0.5 * rep["replicated_per_shard_bytes"]
+    assert rep["per_shard_block_bytes"] < 2.6 * (
+        rep["replicated_per_shard_bytes"] / n
+    ), rep
+
+    # 2-hop plans in both directions: IN->OUT (the paper's common-watchlist
+    # query) and OUT->IN, plus the 1-hop fig1 shape
+    plans = [
+        ("in_out", common_watchlist_plan()),
+        ("out_in", QueryPlan(hops=(sq1_hop(), sq2_hop()))),
+        ("fig1", fig1_plan()),
+    ]
+    roots = np.array([5, 6, 7, 8, 9], np.int32)
+    for tag, plan in plans:
+        eng = GraphEngine(espec, plan, True, fused=True)
+        cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+
+        # cold: all misses execute at owner shards against local blocks
+        miss_h, miss_s, met = check_gr(
+            rt, pstore, store, plan, roots, cache_h, cache_s, eng
+        )
+        assert met["misses"] > 0, tag
+
+        # populate both runtimes from the same miss stream
+        pop_h = CachePopulator(espec, TPL_META); pop_h.queue.push(miss_h)
+        cache_h = pop_h.drain(store, store, cache_h, ttable)
+        pop_s = rt.populator(TPL_META); pop_s.queue.push(miss_s)
+        cache_s = pop_s.drain(pstore, pstore, cache_s, ttable)
+        assert (pop_h.committed, pop_h.aborted) == (pop_s.committed, pop_s.aborted)
+        assert cache_entries(cspec, cache_h) == cache_entries(cspec, cache_s), tag
+
+        # warm: hits serve from the co-partitioned cache blocks
+        _, _, met2 = check_gr(
+            rt, pstore, store, plan, roots, cache_h, cache_s, eng
+        )
+        assert met2["hits"] > 0 and met2["phases"] < met["phases"], tag
+
+    # gRW-Tx: owner-local apply; partitioned post-store must equal the
+    # partition of the single-host post-store byte-for-byte
+    plan = common_watchlist_plan()
+    eng = GraphEngine(espec, plan, True, fused=True)
+    cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+    miss_h, miss_s, _ = check_gr(rt, pstore, store, plan, roots, cache_h, cache_s, eng)
+    pop_h = CachePopulator(espec, TPL_META); pop_h.queue.push(miss_h)
+    cache_h = pop_h.drain(store, store, cache_h, ttable)
+    pop_s = rt.populator(TPL_META); pop_s.queue.push(miss_s)
+    cache_s = pop_s.drain(pstore, pstore, cache_s, ttable)
+
+    mb = make_mutation_batch(
+        spec, set_vprops=[(7, 0, 1), (8, 0, 0)], del_edges=[2],
+        new_edges=[(0, 11, 0, [1]), (3, 6, 0, [0])], del_vertices=[9],
+    )
+    for policy in ("write-around", "write-through"):
+        st_h, ch_h, m_h = run_grw_tx(espec, store, cache_h, ttable, mb, policy=policy)
+        ps_s, ch_s, m_s = rt.run_grw_tx(pstore, cache_s, ttable, mb, policy=policy)
+        assert m_h["impacted_keys"] == m_s["impacted_keys"], policy
+        assert m_s["op_overflow"] == 0 and m_s["store_append_overflow"] == 0
+        assert_store_partition_equal(rt.pspec, st_h, ps_s, policy)
+        assert cache_entries(cspec, ch_h) == cache_entries(cspec, ch_s), policy
+
+    # reads after the commit exercise the block recent regions (the new
+    # edges) and the invalidated cache — still byte-identical
+    st_h, ch_h, _ = run_grw_tx(espec, store, cache_h, ttable, mb)
+    ps_s, ch_s, _ = rt.run_grw_tx(pstore, cache_s, ttable, mb)
+    roots2 = np.array([0, 3, 5, 6, 7, 11], np.int32)
+    for tag, plan2 in plans:
+        eng2 = GraphEngine(espec, plan2, True, fused=True)
+        check_gr(rt, ps_s, st_h, plan2, roots2, ch_h, ch_s, eng2)
+
+    print("PARTITIONED_IDENTITY_OK")
+    """
+)
+
+ONE_SHARD = PRELUDE + textwrap.dedent(
+    """
+    # the single-host engine is the 1-shard special case: one block pair
+    # holds the whole graph and every collective degenerates
+    mesh = flat_mesh(1)
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=None)
+    pstore = rt.partition_store(store)
+    plan = fig1_plan()
+    eng = GraphEngine(espec, plan, True, fused=True)
+    roots = np.array([0, 1, 2, 3], np.int32)
+    cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+    check_gr(rt, pstore, store, plan, roots, cache_h, cache_s, eng)
+    mb = make_mutation_batch(spec, set_vprops=[(7, 0, 1)])
+    st_h, ch_h, _ = run_grw_tx(espec, store, cache_h, ttable, mb)
+    ps_s, ch_s, m_s = rt.run_grw_tx(pstore, cache_s, ttable, mb)
+    assert m_s["op_overflow"] == 0
+    assert_store_partition_equal(rt.pspec, st_h, ps_s, "one-shard")
+    assert cache_entries(cspec, ch_h) == cache_entries(cspec, ch_s)
+    print("ONE_SHARD_OK")
+    """
+)
+
+
+def _run(script, token):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=1800,
+    )
+    assert token in out.stdout, out.stdout + out.stderr
+
+
+def test_partitioned_runtime_matches_single_host_both_directions():
+    _run(BOTH_DIRECTIONS, "PARTITIONED_IDENTITY_OK")
+
+
+def test_partitioned_one_shard_special_case():
+    _run(ONE_SHARD, "ONE_SHARD_OK")

@@ -1,0 +1,333 @@
+"""The partitioned dual-CSR storage tier, host-level invariants.
+
+Everything here runs on one device: per-shard behaviour is exercised by
+slicing shard-local views out of the global partitioned layout (and, for
+the collective-bearing partitioned commit, a ``vmap`` with a named axis —
+the same program ``shard_map`` runs on the mesh). The full 8-virtual-device
+byte-identity of the partitioned *runtime* lives in
+``test_partitioned_runtime.py`` (sharded CI job).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_world, enabled_ttable, sq1_hop, sq2_hop
+from repro.core import CacheSpec, EngineSpec, empty_cache
+from repro.core.invalidation import (
+    apply_op_stream,
+    apply_op_stream_segmented,
+    derive_cache_ops,
+    derive_cache_ops_views,
+)
+from repro.core.runtime import onehop_exec, onehop_exec_view
+from repro.core.templates import DIR_BOTH, DIR_IN, DIR_OUT
+from repro.graphstore import make_mutation_batch
+from repro.graphstore.mutations import apply_mutations
+from repro.graphstore.partition import (
+    BlockStoreView,
+    EdgeBlock,
+    PartitionedGraphStore,
+    apply_mutations_partitioned,
+    default_pspec,
+    local_shard,
+    partition_store,
+    store_bytes_report,
+)
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, _, _ = enabled_ttable()
+    pspec = default_pspec(spec, N)
+    return dict(
+        spec=spec, store=store, espec=espec, cspec=cspec, ttable=ttable,
+        pspec=pspec, pstore=partition_store(pspec, store),
+    )
+
+
+def _own(pspec, roots, s):
+    return np.mod(np.asarray(roots), pspec.n_shards) == s
+
+
+@pytest.mark.parametrize("direction", [DIR_OUT, DIR_IN, DIR_BOTH])
+def test_block_exec_matches_global(world, direction):
+    """Owner-local miss execution is byte-identical to the full-store path:
+    per owned row all outputs match, and per-batch scan metrics sum over
+    shards to the global count."""
+    espec, store = world["espec"], world["store"]
+    pspec, pstore = world["pspec"], world["pstore"]
+    hop = sq1_hop() if direction != DIR_IN else sq2_hop()
+    hop = hop._replace(direction=direction)
+    roots = np.array([0, 1, 2, 3, 5, 9, 15, 63, -1, 64], np.int32)
+    rmask = np.array([True] * 8 + [False, True])
+    params = jnp.broadcast_to(jnp.asarray(hop.params), (len(roots), 6))
+
+    g_leaves, g_lmask, g_n, g_trunc, g_stats = onehop_exec(
+        espec, store, direction, hop.edge_label, hop.pr, hop.pe, hop.pl,
+        jnp.asarray(roots), params, jnp.asarray(rmask),
+    )
+    edges_sum = leaves_sum = 0
+    for s in range(pspec.n_shards):
+        view = BlockStoreView(pspec, local_shard(pspec, pstore, s), s)
+        own = _own(pspec, roots, s)
+        leaves, lmask, n_true, trunc, stats = onehop_exec_view(
+            espec, view, direction, hop.edge_label, hop.pr, hop.pe, hop.pl,
+            jnp.asarray(roots), params, jnp.asarray(rmask & own),
+        )
+        rows = np.nonzero(rmask & own)[0]
+        assert np.array_equal(np.asarray(leaves)[rows], np.asarray(g_leaves)[rows])
+        assert np.array_equal(np.asarray(lmask)[rows], np.asarray(g_lmask)[rows])
+        assert np.array_equal(np.asarray(n_true)[rows], np.asarray(g_n)[rows])
+        assert np.array_equal(np.asarray(trunc)[rows], np.asarray(g_trunc)[rows])
+        edges_sum += int(stats["edges_scanned"])
+        leaves_sum += int(stats["leaf_fetches"])
+    assert edges_sum == int(g_stats["edges_scanned"])
+    assert leaves_sum == int(g_stats["leaf_fetches"])
+
+
+def test_store_bytes_scale_inverse_in_n(world):
+    """Per-shard bytes of the partitioned tier are a small fraction of the
+    replicated snapshot and scale as O(1/n): dual orientation stores each
+    edge at two owners, so the edge term is ~2x the uniform share (plus the
+    small replicated vertex tier) — far below a full replica per shard."""
+    spec = world["spec"]
+    for n, bound in ((4, 2.6), (8, 2.6)):
+        rep = store_bytes_report(default_pspec(spec, n, slack=1.0))
+        assert rep["per_shard_bytes"] < bound * rep["replicated_per_shard_bytes"] / n
+        assert rep["ratio"] < 1.0  # strictly better than replication
+    r4 = store_bytes_report(default_pspec(spec, 4, slack=1.0))
+    r16 = store_bytes_report(default_pspec(spec, 16, slack=1.0))
+    # quadrupling the mesh cuts per-shard block bytes ~4x (up to the
+    # per-shard CSR indptr/scalar overhead, which shrinks sublinearly)
+    assert abs(r16["per_shard_block_bytes"] * 4 - r4["per_shard_block_bytes"]) < (
+        0.15 * r4["per_shard_block_bytes"]
+    )
+
+
+def _stacked_local(pspec, ps):
+    n, EB, Vloc = pspec.n_shards, pspec.e_blk_cap, pspec.v_loc
+
+    def blk(b):
+        return EdgeBlock(
+            key=b.key.reshape(n, EB), other=b.other.reshape(n, EB),
+            label=b.label.reshape(n, EB), alive=b.alive.reshape(n, EB),
+            props=b.props.reshape(n, EB, -1), geid=b.geid.reshape(n, EB),
+            indptr=b.indptr.reshape(n, Vloc + 1),
+            blk_len=b.blk_len.reshape(n, 1), csr_len=b.csr_len.reshape(n, 1),
+        )
+
+    return ps._replace(out=blk(ps.out), inc=blk(ps.inc))
+
+
+_BLK_AX = EdgeBlock(
+    key=0, other=0, label=0, alive=0, props=0, geid=0, indptr=0,
+    blk_len=0, csr_len=0,
+)
+_PS_AX = PartitionedGraphStore(
+    vlabel=None, valive=None, vprops=None, vversion=None, out=_BLK_AX,
+    inc=_BLK_AX, v_len=None, e_len=None, version=None,
+)
+
+
+def _restack(pspec, ps2):
+    """Undo ``_stacked_local`` on a vmapped output (take shard 0's copy of
+    the replicated leaves after asserting all copies agree)."""
+    n = pspec.n_shards
+
+    def blk(b):
+        return EdgeBlock(
+            key=b.key.reshape(-1), other=b.other.reshape(-1),
+            label=b.label.reshape(-1), alive=b.alive.reshape(-1),
+            props=b.props.reshape(b.props.shape[0] * b.props.shape[1], -1),
+            geid=b.geid.reshape(-1), indptr=b.indptr.reshape(-1),
+            blk_len=b.blk_len.reshape(-1), csr_len=b.csr_len.reshape(-1),
+        )
+
+    for f in ("vlabel", "valive", "vprops", "vversion", "v_len", "e_len", "version"):
+        v = np.asarray(getattr(ps2, f))
+        for s in range(1, n):
+            assert np.array_equal(v[s], v[0]), f"replicated {f} diverged"
+    return PartitionedGraphStore(
+        vlabel=ps2.vlabel[0], valive=ps2.valive[0], vprops=ps2.vprops[0],
+        vversion=ps2.vversion[0], out=blk(ps2.out), inc=blk(ps2.inc),
+        v_len=ps2.v_len[0], e_len=ps2.e_len[0], version=ps2.version[0],
+    )
+
+
+def _mutation_batch(spec):
+    # every section type: new vertex + edges touching it, deletes, prop sets
+    return make_mutation_batch(
+        spec,
+        new_vertices=[(1, [0, 1007])],
+        new_edges=[(0, 11, 0, [1]), (2, 16, 0, [0]), (3, 5, 0, [1])],
+        del_edges=[2, 5],
+        del_vertices=[9],
+        set_vprops=[(7, 0, 1), (8, 0, 0), (12, 1, 4242)],
+        set_eprops=[(1, 0, 0), (4, 0, 1)],
+    )
+
+
+def test_partitioned_apply_matches_single_host(world):
+    """``apply_mutations_partitioned`` (under a named-axis vmap — the same
+    program shard_map runs) must land every section at its owner blocks
+    such that the post-state equals the *partition of the single-host
+    post-state*, and its psum-gathered ``AppliedMutations`` snapshot must
+    be byte-identical to the single-host listener input."""
+    spec, store = world["spec"], world["store"]
+    pspec, pstore = world["pspec"], world["pstore"]
+    mb = _mutation_batch(spec)
+
+    store2, applied_h = apply_mutations(spec, store, mb)
+    fn = jax.vmap(
+        lambda ps, me: apply_mutations_partitioned(pspec, ps, mb, me, "sh"),
+        axis_name="sh", in_axes=(_PS_AX, 0),
+    )
+    ps2_s, applied_s, ovf = fn(
+        _stacked_local(pspec, pstore), jnp.arange(pspec.n_shards)
+    )
+    assert int(ovf[0]) == 0
+    ps2 = _restack(pspec, ps2_s)
+
+    expected = partition_store(pspec, store2)
+    for f in PartitionedGraphStore._fields:
+        a, b = getattr(ps2, f), getattr(expected, f)
+        if isinstance(a, EdgeBlock):
+            for bf in EdgeBlock._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(a, bf)), np.asarray(getattr(b, bf))
+                ), f"{f}.{bf} diverged from partition of single-host post-state"
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b)), f
+
+    for f in applied_h._fields:
+        if f == "batch":
+            continue
+        ah = np.asarray(getattr(applied_h, f))
+        as_ = np.asarray(getattr(applied_s, f))
+        for s in range(pspec.n_shards):
+            assert np.array_equal(as_[s], ah), f"applied.{f} shard {s}"
+
+
+def _op_set(ops):
+    ok = np.asarray(ops.ok)
+    cols = [np.asarray(c)[ok] for c in (ops.order, ops.kind, ops.tpl, ops.root, ops.vid)]
+    params = np.asarray(ops.params)[ok]
+    return set(
+        (*[int(c[i]) for c in cols], tuple(params[i].tolist()))
+        for i in range(len(cols[0]))
+    )
+
+
+def _op_rows(ops):
+    """(order, kind, tpl, root, vid, params) for every live op row."""
+    ok = np.asarray(ops.ok)
+    order = np.asarray(ops.order)[ok]
+    kind, tpl = np.asarray(ops.kind)[ok], np.asarray(ops.tpl)[ok]
+    root, vid = np.asarray(ops.root)[ok], np.asarray(ops.vid)[ok]
+    params = np.asarray(ops.params)[ok]
+    return [
+        (int(order[i]), int(kind[i]), int(tpl[i]), int(root[i]), int(vid[i]),
+         tuple(params[i].tolist()))
+        for i in range(len(order))
+    ]
+
+
+def _key_sequences(rows):
+    """Per-(tpl, root, params) op sequences in order-key order — exactly
+    what the order-restoring apply consumes."""
+    out = {}
+    for (_, kind, tpl, root, vid, params) in sorted(rows):
+        out.setdefault((tpl, root, params), []).append((kind, vid))
+    return out
+
+
+@pytest.mark.parametrize("through", [False, True])
+def test_ownership_masked_listener_partitions_emissions(world, through):
+    """Per-shard ownership-masked derivation over local blocks must emit
+    the single-host op/sweep *multiset* (each emission instance at exactly
+    one shard), with cross-shard order keys that restore the single-host
+    per-key application order — the write-through invariant."""
+    from collections import Counter
+
+    spec, store = world["spec"], world["store"]
+    espec, ttable = world["espec"], world["ttable"]
+    pspec, pstore = world["pspec"], world["pstore"]
+    mb = _mutation_batch(spec)
+    store2, applied = apply_mutations(spec, store, mb)
+    ps2 = partition_store(pspec, store2)
+
+    g_ops, g_sweeps = derive_cache_ops(
+        espec, store, store2, ttable, applied, through=through
+    )
+    g_rows = _op_rows(g_ops)
+    full_count = Counter(r[1:] for r in g_rows)  # order keys are tier-local
+    full_sw = Counter(
+        (int(t), int(r))
+        for t, r in zip(
+            np.asarray(g_sweeps.tpl)[np.asarray(g_sweeps.ok)],
+            np.asarray(g_sweeps.root)[np.asarray(g_sweeps.ok)],
+        )
+    )
+
+    shard_rows, shard_count, shard_sw = [], Counter(), Counter()
+    for s in range(pspec.n_shards):
+        vp = BlockStoreView(pspec, local_shard(pspec, pstore, s), s)
+        vq = BlockStoreView(pspec, local_shard(pspec, ps2, s), s)
+        ops, sweeps = derive_cache_ops_views(
+            espec, vp, vq, ttable, applied, through=through
+        )
+        rows = _op_rows(ops)
+        # every emission the shard makes is rooted at a vertex whose ops it
+        # was supposed to derive — no op the full run lacks
+        assert Counter(r[1:] for r in rows) <= full_count, f"shard {s}"
+        shard_rows += rows
+        shard_count += Counter(r[1:] for r in rows)
+        shard_sw += Counter(
+            (int(t), int(r))
+            for t, r in zip(
+                np.asarray(sweeps.tpl)[np.asarray(sweeps.ok)],
+                np.asarray(sweeps.root)[np.asarray(sweeps.ok)],
+            )
+        )
+    # multiset partition: instances sum to exactly the single-host stream
+    assert shard_count == full_count
+    assert shard_sw == full_sw
+    # merged cross-shard order restores the single-host per-key sequences
+    assert _key_sequences(shard_rows) == _key_sequences(g_rows)
+
+
+def test_segmented_apply_matches_sequential(world):
+    """The key-segmented vectorized write-through apply is byte-identical
+    to the sequential order-restored walk — including stats counters."""
+    spec, store = world["spec"], world["store"]
+    espec, cspec, ttable = world["espec"], world["cspec"], world["ttable"]
+    from repro.core.population import CachePopulator
+    from repro.core import GraphEngine
+    from conftest import fig1_plan, TPL_META
+
+    # warm a cache so value edits have entries to hit
+    cache = empty_cache(cspec)
+    eng = GraphEngine(espec, fig1_plan(), True)
+    pop = CachePopulator(espec, TPL_META)
+    _, misses, _ = eng.run(store, cache, ttable, np.arange(4, dtype=np.int32))
+    pop.queue.push(misses)
+    cache = pop.drain(store, store, cache, ttable)
+
+    mb = _mutation_batch(spec)
+    store2, applied = apply_mutations(spec, store, mb)
+    ops, _ = derive_cache_ops(espec, store, store2, ttable, applied, through=True)
+    seq = apply_op_stream(cspec, cache, ops)
+    seg = apply_op_stream_segmented(cspec, cache, ops)
+    for f in seq._fields:
+        assert np.array_equal(
+            np.asarray(getattr(seq, f)), np.asarray(getattr(seg, f))
+        ), f"cache field {f} diverged"

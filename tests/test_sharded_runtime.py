@@ -63,7 +63,11 @@ PRELUDE = textwrap.dedent(
 TWO_HOP = PRELUDE + textwrap.dedent(
     """
     mesh = flat_mesh(8)
-    rt = ShardedTxnRuntime(espec, mesh)
+    # the replicated-snapshot tier (the PR 3 baseline); byte-identity needs
+    # the no-drop routing configuration. The partitioned default tier has
+    # its own identity suite in test_partitioned_runtime.py.
+    rt = ShardedTxnRuntime(espec, mesh, store_tier="replicated",
+                           route_cap_factor=None)
     plan = common_watchlist_plan()  # 2-hop + post filter
     eng = GraphEngine(espec, plan, True, fused=True)
     roots = np.array([5, 6, 7, 8, 9], np.int32)
@@ -109,7 +113,8 @@ ONE_SHARD = PRELUDE + textwrap.dedent(
     # the single-host engine is the 1-shard special case: every collective
     # degenerates and the runtime must still match exactly
     mesh = flat_mesh(1)
-    rt = ShardedTxnRuntime(espec, mesh)
+    rt = ShardedTxnRuntime(espec, mesh, store_tier="replicated",
+                           route_cap_factor=None)
     plan = fig1_plan()
     eng = GraphEngine(espec, plan, True, fused=True)
     roots = np.array([0, 1, 2, 3], np.int32)
@@ -133,7 +138,8 @@ OVERFLOW = PRELUDE + textwrap.dedent(
     # a too-small per-peer routing bucket must *surface* dropped roots in
     # the metrics instead of silently degrading
     mesh = flat_mesh(8)
-    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=1)
+    rt = ShardedTxnRuntime(espec, mesh, store_tier="replicated",
+                           route_cap_factor=1)
     plan = fig1_plan()
     roots = np.full(16, 1, np.int32)  # every shard routes to one owner
     cache_s = rt.empty_cache()
