@@ -186,6 +186,10 @@ def main(batch=256, iters=3, seed=7, json_path=None):
         gr_speedup_vs_replicated=round(reads["replicated"] / reads["partitioned"], 2),
         grw_ms_per_commit={k: round(v * 1e3, 2) for k, v in writes.items()},
         route_skew=skew,
+        # measured per-hop factors: hop 1 routes Zipfian query roots, hops
+        # >= 2 route leaf-derived frontiers (structural, flatter) — the
+        # tuple ShardedTxnRuntime(route_cap_factor=...) accepts
+        per_hop_route_cap_factors=skew["per_hop_recommended"],
         default_route_cap_factor=DEFAULT_ROUTE_CAP_FACTOR,
         route_overflow_observed=overflow_seen,
         results_identical=True,

@@ -74,6 +74,18 @@ def _bench_partitioned_store():
     )
 
 
+def _bench_block_maintenance():
+    """Sustained gRW traffic through the owner-local maintenance tier:
+    compaction + capacity elasticity vs the no-maintenance baseline
+    (BENCH_block_maintenance.json)."""
+    from benchmarks import bench_maintenance
+
+    return _bench_subprocess(
+        "benchmarks.bench_maintenance", "BENCH_block_maintenance.json",
+        bench_maintenance.N_SHARDS,
+    )
+
+
 def _bench_hop_pipeline(batch=512):
     """Old vs fused hop pipeline; persists BENCH_hop_pipeline.json at the
     repo root so the perf trajectory is tracked across PRs."""
@@ -106,6 +118,9 @@ def main() -> None:
         # partitioned storage tier: memory / throughput / route skew
         # (BENCH_partitioned_store.json)
         "partitioned_store": _bench_partitioned_store,
+        # block maintenance: sustained gRW appends with compaction +
+        # capacity elasticity (BENCH_block_maintenance.json)
+        "block_maintenance": _bench_block_maintenance,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

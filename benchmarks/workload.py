@@ -263,6 +263,17 @@ MIXES = {
 
 
 # ----------------------------------------------------------- route skew
+def _skew_stats(factors) -> dict:
+    f = np.array(factors)
+    return dict(
+        mean=round(float(f.mean()), 3), p50=round(float(np.percentile(f, 50)), 3),
+        p99=round(float(np.percentile(f, 99)), 3),
+        p999=round(float(np.percentile(f, 99.9)), 3),
+        max=round(float(f.max()), 3),
+        recommended_cap_factor=int(np.ceil(np.percentile(f, 99.9))),
+    )
+
+
 def measure_route_skew(world: World, n_shards: int = 8, batch: int = 512,
                        n_batches: int = 200) -> dict:
     """Measure real per-owner routing skew of the production query mix.
@@ -276,24 +287,72 @@ def measure_route_skew(world: World, n_shards: int = 8, batch: int = 512,
     cap factor that bounds the overflow rate at ~0.1%% of batches;
     ``DEFAULT_ROUTE_CAP_FACTOR`` in ``repro.distributed.graph_serve`` ships
     the ceiling of the measured value.
+
+    Hops ≥ 2 route **leaf-derived** frontier roots, not query roots, so
+    their skew is measured separately (``frontier`` sub-dict): for every
+    multi-hop plan in the mix the hop-1 frontier is derived host-side from
+    the first hop's adjacency (direction + edge label; per-root leaves
+    deduped and capped at the engine's result width — the per-segment cap
+    the frontier merge enforces), and the max per-owner share of the merged
+    frontier is taken against *its* uniform share. ``per_hop_recommended``
+    packages both as the tuple ``ShardedTxnRuntime(route_cap_factor=...)``
+    accepts: Zipfian root skew concentrates on hot owners while structural
+    leaf frontiers spread nearly uniformly, so the inner hops usually
+    sustain tighter buckets than the root hop.
     """
     plans = query_plans()
     weights = np.array([w for (_, _, _, w, _) in plans])
     weights /= weights.sum()
-    factors = []
+
+    store = world.store
+    e_len = int(store.e_len)
+    esrc = np.asarray(store.esrc)[:e_len]
+    edst = np.asarray(store.edst)[:e_len]
+    elab = np.asarray(store.elabel)[:e_len]
+    ealive = np.asarray(store.ealive)[:e_len]
+    rw = int(world.espec.result_width)
+    adj = {}
+
+    def hop1_frontier(roots, direction, edge_label):
+        key = (int(direction), int(edge_label))
+        if key not in adj:
+            k, o = (edst, esrc) if direction == DIR_IN else (esrc, edst)
+            sel = ealive & ((edge_label < 0) | (elab == edge_label))
+            order = np.argsort(k[sel], kind="stable")
+            adj[key] = (k[sel][order], o[sel][order])
+        ks, os_ = adj[key]
+        lo = np.searchsorted(ks, roots, side="left")
+        hi = np.searchsorted(ks, roots, side="right")
+        parts = []
+        for l, h in zip(lo, hi):
+            if h > l:
+                ls = os_[l:h]
+                _, first = np.unique(ls, return_index=True)
+                parts.append(ls[np.sort(first)][:rw])
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    root_factors, frontier_factors = [], []
     for _ in range(n_batches):
-        _, _, label, _, _ = plans[int(world.rng.choice(len(plans), p=weights))]
+        _, plan, label, _, _ = plans[int(world.rng.choice(len(plans), p=weights))]
         lo, hi = world.vertex_range(label)
         roots = np.array([world.zipf_pick(lo, hi) for _ in range(batch)])
         owners = np.mod(roots, n_shards)  # interleaved ownership
         counts = np.bincount(owners, minlength=n_shards)
-        factors.append(counts.max() / (batch / n_shards))
-    f = np.array(factors)
-    return dict(
-        n_shards=n_shards, batch=batch, n_batches=n_batches,
-        mean=round(float(f.mean()), 3), p50=round(float(np.percentile(f, 50)), 3),
-        p99=round(float(np.percentile(f, 99)), 3),
-        p999=round(float(np.percentile(f, 99.9)), 3),
-        max=round(float(f.max()), 3),
-        recommended_cap_factor=int(np.ceil(np.percentile(f, 99.9))),
+        root_factors.append(counts.max() / (batch / n_shards))
+        if len(plan.hops) > 1:
+            fr = hop1_frontier(
+                roots, plan.hops[0].direction, plan.hops[0].edge_label
+            )
+            if len(fr):
+                c = np.bincount(np.mod(fr, n_shards), minlength=n_shards)
+                frontier_factors.append(c.max() / (len(fr) / n_shards))
+    out = dict(n_shards=n_shards, batch=batch, n_batches=n_batches)
+    out.update(_skew_stats(root_factors))
+    out["frontier"] = (
+        dict(_skew_stats(frontier_factors), n_batches=len(frontier_factors))
+        if frontier_factors else None
     )
+    out["per_hop_recommended"] = [out["recommended_cap_factor"]] + (
+        [out["frontier"]["recommended_cap_factor"]] if out["frontier"] else []
+    )
+    return out

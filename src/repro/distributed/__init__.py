@@ -21,13 +21,14 @@ __all__ = [
     "add_data_axis",
     "tree_shardings",
     "ShardedTxnRuntime",
+    "ShardedMissDrain",
 ]
 
 
 def __getattr__(name):
     # lazy: graph_serve pulls in the whole core engine stack
-    if name == "ShardedTxnRuntime":
-        from repro.distributed.graph_serve import ShardedTxnRuntime
+    if name in ("ShardedTxnRuntime", "ShardedMissDrain"):
+        from repro.distributed import graph_serve
 
-        return ShardedTxnRuntime
+        return getattr(graph_serve, name)
     raise AttributeError(name)

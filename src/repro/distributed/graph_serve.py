@@ -97,8 +97,20 @@ from repro.core.runtime import (
     route_plan,
     route_scatter,
 )
-from repro.graphstore.mutations import apply_mutations, shard_mutation_rows
+from repro.graphstore.maintenance import (
+    MaintenancePolicy,
+    block_occupancy,
+    compact_block,
+    decide_maintenance,
+    grow_store,
+)
+from repro.graphstore.mutations import (
+    apply_mutations,
+    make_mutation_batch,
+    shard_mutation_rows,
+)
 from repro.graphstore.partition import (
+    BlockCapacityError,
     BlockStoreView,
     EdgeBlock,
     PartitionedGraphStore,
@@ -246,7 +258,16 @@ class ShardedTxnRuntime:
     (``DEFAULT_ROUTE_CAP_FACTOR``) — ``None`` sizes them for the worst case
     (no overflow possible, byte-identity-test configuration). Smaller
     values trade memory/traffic for a nonzero ``route_overflow`` risk,
-    which the step metrics surface.
+    which the step metrics surface. A tuple gives **per-hop** factors (hop
+    ``i`` uses entry ``min(i, last)``): hop ≥ 2 routes *leaf-derived*
+    frontier roots whose skew is measured separately from root skew
+    (``workload.measure_route_skew``), so a mix whose frontiers are flatter
+    than its Zipfian roots can run tighter buckets on the inner hops.
+
+    ``maintenance_tick`` (between transaction batches) keeps the
+    partitioned tier healthy under sustained gRW traffic: owner-local block
+    compaction once recent regions fill and capacity growth instead of
+    append overflow — see ``repro.graphstore.maintenance``.
     """
 
     def __init__(self, espec, mesh: Mesh, *, use_cache: bool = True,
@@ -284,6 +305,11 @@ class ShardedTxnRuntime:
             self.pspec = pspec
         else:
             self.pspec = None
+        if isinstance(route_cap_factor, (list, tuple)):
+            route_cap_factor = tuple(route_cap_factor)
+            assert route_cap_factor and all(
+                isinstance(f, int) for f in route_cap_factor
+            ), "per-hop route_cap_factor entries must be ints"
         self.route_cap_factor = route_cap_factor
         self.ops_cap = ops_cap
         self.sweep_cap = sweep_cap
@@ -291,6 +317,10 @@ class ShardedTxnRuntime:
         self._gr_fns: dict = {}
         self._grw_fns: dict = {}
         self._pop_fns: dict = {}
+        self._maint_fns: dict = {}
+        # applied mutation rows since the last compaction tick (one input to
+        # MaintenancePolicy's latency-amortization bound)
+        self.mutation_rows_since_compact = 0
 
     # ------------------------------------------------------------ sharding
     def cache_sharding(self):
@@ -320,7 +350,7 @@ class ShardedTxnRuntime:
         a = self.axes
         blk = EdgeBlock(
             key=P(a), other=P(a), label=P(a), alive=P(a), props=P(a),
-            geid=P(a), indptr=P(a), blk_len=P(a), csr_len=P(a),
+            geid=P(a), gperm=P(a), indptr=P(a), blk_len=P(a), csr_len=P(a),
         )
         return PartitionedGraphStore(
             vlabel=P(), valive=P(), vprops=P(), vversion=P(),
@@ -334,18 +364,122 @@ class ShardedTxnRuntime:
             is_leaf=lambda x: isinstance(x, P),
         )
 
-    def partition_store(self, store) -> PartitionedGraphStore:
+    def partition_store(self, store, *, elastic: bool = False) -> PartitionedGraphStore:
         """Partition a full ``GraphStore`` into this runtime's owner-local
-        blocks and lay it over the mesh (partitioned tier only)."""
+        blocks and lay it over the mesh (partitioned tier only).
+
+        With ``elastic=True`` an over-capacity orientation grows
+        ``e_blk_cap`` (25% headroom over the reported need) and retries
+        instead of raising ``BlockCapacityError`` — the ingest-time half of
+        capacity elasticity; ``maintenance_tick`` handles the online half.
+        """
         assert self.pspec is not None, "replicated tier keeps full snapshots"
-        return jax.device_put(
-            partition_store(self.pspec, store), self.store_sharding()
-        )
+        while True:
+            try:
+                ps = partition_store(self.pspec, store)
+                break
+            except BlockCapacityError as e:
+                if not elastic:
+                    raise
+                self._set_pspec(self.pspec._replace(
+                    e_blk_cap=max(
+                        int(np.ceil(e.needed * 1.25)), self.pspec.e_blk_cap + 1
+                    ),
+                ))
+        return jax.device_put(ps, self.store_sharding())
 
     def store_bytes(self, pstore=None) -> dict:
         """Per-shard bytes vs the replicated snapshot (partitioned tier)."""
         assert self.pspec is not None
         return store_bytes_report(self.pspec, pstore)
+
+    # ---------------------------------------------------- block maintenance
+    def _set_pspec(self, pspec):
+        """Swap the block layout spec and drop every compiled program closed
+        over the old one (capacity growth is a shape change)."""
+        self.pspec = pspec
+        self._gr_fns.clear()
+        self._grw_fns.clear()
+        self._pop_fns.clear()
+        self._maint_fns.clear()
+
+    def store_occupancy(self, pstore) -> dict:
+        """Per-shard/per-block occupancy + recent fill (partitioned tier)."""
+        assert self.pspec is not None
+        return block_occupancy(self.pspec, pstore)
+
+    def compact_step(self, purge: bool = False):
+        """The jitted owner-local compaction pass: every shard merges its
+        block recent regions into the sorted CSR bodies and rebuilds its
+        geid→slot indexes, with no collectives (cached per ``purge``)."""
+        assert self.pspec is not None
+        if purge not in self._maint_fns:
+            pspec = self.pspec
+
+            def local_compact(ps):
+                return ps._replace(
+                    out=compact_block(pspec, ps.out, purge=purge),
+                    inc=compact_block(pspec, ps.inc, purge=purge),
+                )
+
+            sm = shard_map(
+                local_compact, mesh=self.mesh,
+                in_specs=(self._store_specs(),),
+                out_specs=self._store_specs(), check_rep=False,
+            )
+            self._maint_fns[purge] = jax.jit(sm)
+        return self._maint_fns[purge]
+
+    def grow_blocks(self, pstore, e_blk_cap: int, *,
+                    recent_blk_cap: int | None = None):
+        """Grow every block to ``e_blk_cap`` (host round-trip re-pad), swap
+        the spec, and re-lay the store over the mesh. Compiled programs are
+        invalidated — growth is the rare, amortized elasticity event. The
+        ``run_*`` wrappers and populator steps re-resolve per call and pick
+        up the new layout automatically; step handles fetched *directly*
+        (``serve_step`` / ``grw_step`` / ``compact_step``) before a growth
+        are stale and must be re-acquired."""
+        assert self.pspec is not None
+        new_pspec, grown = grow_store(
+            self.pspec, jax.device_get(pstore), e_blk_cap,
+            recent_blk_cap=recent_blk_cap,
+        )
+        self._set_pspec(new_pspec)
+        return jax.device_put(grown, self.store_sharding())
+
+    def maintenance_tick(self, pstore, policy: MaintenancePolicy | None = None,
+                         *, occupancy: dict | None = None):
+        """Run due maintenance between transaction batches.
+
+        Reads only the tiny block-length scalars, then (per the policy)
+        grows capacity and/or runs the owner-local compaction pass. Returns
+        ``(pstore', info)`` where ``info`` reports what ran and the
+        occupancy/recent-fill signals that drove it.
+
+        ``occupancy`` lets a caller that just committed reuse the report its
+        ``run_grw_tx`` metrics were derived from (any dict carrying
+        ``max_occupancy`` / ``max_recent_fill`` for *this* ``pstore``)
+        instead of re-reading the block scalars inside a timed loop.
+        """
+        assert self.pspec is not None, "maintenance targets the partitioned tier"
+        policy = MaintenancePolicy() if policy is None else policy
+        occ = self.store_occupancy(pstore) if occupancy is None else occupancy
+        dec = decide_maintenance(
+            self.pspec, occ, policy, self.mutation_rows_since_compact
+        )
+        info = dict(
+            compacted=False, grown_to=None, reason=dec.reason,
+            max_occupancy=occ["max_occupancy"],
+            max_recent_fill=occ["max_recent_fill"],
+        )
+        if dec.grow_to is not None:
+            pstore = self.grow_blocks(pstore, dec.grow_to)
+            info["grown_to"] = dec.grow_to
+        if dec.compact:
+            pstore = self.compact_step(policy.purge)(pstore)
+            self.mutation_rows_since_compact = 0
+            info["compacted"] = True
+        return pstore, info
 
     def empty_cache(self) -> CacheState:
         """Global-capacity empty cache, device_put over the mesh: block s of
@@ -362,15 +496,21 @@ class ShardedTxnRuntime:
 
     # --------------------------------------------------------- gR-Tx path
     def _hop_route_caps(self, plan, Bloc):
-        """Per-hop per-peer routing capacity (worst case unless bounded)."""
+        """Per-hop per-peer routing capacity (worst case unless bounded).
+
+        A scalar ``route_cap_factor`` applies to every hop; a tuple supplies
+        per-hop factors (hop 1 routes query roots, hops ≥ 2 route
+        leaf-derived frontier roots with separately measured skew)."""
         caps, A = [], 1
         F, RW = self.espec.frontier, self.espec.result_width
-        for _ in plan.hops:
+        rcf = self.route_cap_factor
+        for i, _ in enumerate(plan.hops):
             rows = Bloc * A
-            if self.route_cap_factor is None:
+            f = rcf[min(i, len(rcf) - 1)] if isinstance(rcf, tuple) else rcf
+            if f is None:
                 caps.append(max(1, rows))
             else:
-                caps.append(max(1, -(-self.route_cap_factor * rows // self.n)))
+                caps.append(max(1, -(-f * rows // self.n)))
             A = min(F, A * RW)
         return caps
 
@@ -490,64 +630,67 @@ class ShardedTxnRuntime:
         cache2 = cache2._replace(n_delete=cache.n_delete + occ_delta)
         return cache2, occ_delta, ovf_c + ovf_r + ovf_s
 
+    def _grw_fn(self, policy: str):
+        """The un-jitted shard_map gRW commit (AOT lowering hook)."""
+        espec = self.espec
+        lspec = self.lspec
+        pspec = self.pspec
+        n, axes = self.n, self.axes
+        through = policy != "write-around"
+
+        if pspec is not None:
+            def local_grw(store, cache, ttable, batch):
+                me = jax.lax.axis_index(axes)
+                # phase A: commit to owner-local storage; the listener
+                # derives ops where the storage lives (ownership masks)
+                store2, applied, store_ovf = apply_mutations_partitioned(
+                    pspec, store, batch, me, axes
+                )
+                ops, sweeps = derive_cache_ops_views(
+                    lspec, BlockStoreView(pspec, store, me),
+                    BlockStoreView(pspec, store2, me), ttable, applied,
+                    through=through,
+                )
+                cache2, occ_delta, ovf = self._route_and_apply_ops(
+                    cache, ops, sweeps, through, local_sweeps=True
+                )
+                impacted = jax.lax.psum(occ_delta, axes)
+                cache2 = _replicate_stats(cache, cache2, axes)
+                overflow = jax.lax.psum(ovf, axes)
+                return store2, cache2, impacted, overflow, store_ovf
+        else:
+            def local_grw(store, cache, ttable, batch):
+                me = jax.lax.axis_index(axes)
+                # every replica applies the same commit (deterministic)
+                store2, applied = apply_mutations(espec.store, store, batch)
+                # phase A: derive impacted keys from this shard's slice
+                # of the mutation batch (round-robin rows)
+                part = shard_mutation_rows(applied, n, me)
+                ops, sweeps = derive_cache_ops(
+                    espec, store, store2, ttable, part, through=through,
+                    row_offset=me, row_stride=n,
+                )
+                cache2, occ_delta, ovf = self._route_and_apply_ops(
+                    cache, ops, sweeps, through, local_sweeps=False
+                )
+                impacted = jax.lax.psum(occ_delta, axes)
+                cache2 = _replicate_stats(cache, cache2, axes)
+                overflow = jax.lax.psum(ovf, axes)
+                return store2, cache2, impacted, overflow, jnp.int32(0)
+
+        return shard_map(
+            local_grw,
+            mesh=self.mesh,
+            in_specs=(self._store_specs(), self._cache_specs(), P(), P()),
+            out_specs=(
+                self._store_specs(), self._cache_specs(), P(), P(), P(),
+            ),
+            check_rep=False,
+        )
+
     def _grw(self, policy: str):
         if policy not in self._grw_fns:
-            espec = self.espec
-            lspec = self.lspec
-            pspec = self.pspec
-            n, axes = self.n, self.axes
-            through = policy != "write-around"
-
-            if pspec is not None:
-                def local_grw(store, cache, ttable, batch):
-                    me = jax.lax.axis_index(axes)
-                    # phase A: commit to owner-local storage; the listener
-                    # derives ops where the storage lives (ownership masks)
-                    store2, applied, store_ovf = apply_mutations_partitioned(
-                        pspec, store, batch, me, axes
-                    )
-                    ops, sweeps = derive_cache_ops_views(
-                        lspec, BlockStoreView(pspec, store, me),
-                        BlockStoreView(pspec, store2, me), ttable, applied,
-                        through=through,
-                    )
-                    cache2, occ_delta, ovf = self._route_and_apply_ops(
-                        cache, ops, sweeps, through, local_sweeps=True
-                    )
-                    impacted = jax.lax.psum(occ_delta, axes)
-                    cache2 = _replicate_stats(cache, cache2, axes)
-                    overflow = jax.lax.psum(ovf, axes)
-                    return store2, cache2, impacted, overflow, store_ovf
-            else:
-                def local_grw(store, cache, ttable, batch):
-                    me = jax.lax.axis_index(axes)
-                    # every replica applies the same commit (deterministic)
-                    store2, applied = apply_mutations(espec.store, store, batch)
-                    # phase A: derive impacted keys from this shard's slice
-                    # of the mutation batch (round-robin rows)
-                    part = shard_mutation_rows(applied, n, me)
-                    ops, sweeps = derive_cache_ops(
-                        espec, store, store2, ttable, part, through=through,
-                        row_offset=me, row_stride=n,
-                    )
-                    cache2, occ_delta, ovf = self._route_and_apply_ops(
-                        cache, ops, sweeps, through, local_sweeps=False
-                    )
-                    impacted = jax.lax.psum(occ_delta, axes)
-                    cache2 = _replicate_stats(cache, cache2, axes)
-                    overflow = jax.lax.psum(ovf, axes)
-                    return store2, cache2, impacted, overflow, jnp.int32(0)
-
-            sm = shard_map(
-                local_grw,
-                mesh=self.mesh,
-                in_specs=(self._store_specs(), self._cache_specs(), P(), P()),
-                out_specs=(
-                    self._store_specs(), self._cache_specs(), P(), P(), P(),
-                ),
-                check_rep=False,
-            )
-            self._grw_fns[policy] = jax.jit(sm)
+            self._grw_fns[policy] = jax.jit(self._grw_fn(policy))
         return self._grw_fns[policy]
 
     def grw_step(self, policy: str = "write-around"):
@@ -556,15 +699,35 @@ class ShardedTxnRuntime:
         route_overflow, store_overflow)``."""
         return self._grw(policy)
 
-    def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around"):
-        """Host wrapper mirroring ``repro.core.engine.run_grw_tx``."""
+    def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around",
+                   *, occupancy_metrics: bool = True):
+        """Host wrapper mirroring ``repro.core.engine.run_grw_tx``.
+
+        On the partitioned tier the metrics also surface the post-commit
+        capacity signals (max block occupancy / recent fill) that drive
+        ``maintenance_tick``, and the applied mutation rows accumulate into
+        the policy's compaction budget. The occupancy read costs a few
+        ``[n]``-scalar host transfers per commit; callers that schedule
+        maintenance on their own signals can pass
+        ``occupancy_metrics=False`` to keep the commit wrapper sync-free
+        beyond the metric scalars themselves."""
         store2, cache2, impacted, overflow, store_ovf = self._grw(policy)(
             store, cache, ttable, batch
         )
-        return store2, cache2, {
+        metrics = {
             "impacted_keys": int(impacted), "op_overflow": int(overflow),
             "store_append_overflow": int(store_ovf),
         }
+        if self.pspec is not None:
+            b = batch
+            self.mutation_rows_since_compact += sum(
+                int(x) for x in (b.nv_n, b.ne_n, b.de_n, b.dv_n, b.sv_n, b.se_n)
+            )
+            if occupancy_metrics:
+                occ = self.store_occupancy(store2)
+                metrics["store_occupancy_max"] = occ["max_occupancy"]
+                metrics["store_recent_fill_max"] = occ["max_recent_fill"]
+        return store2, cache2, metrics
 
     # ------------------------------------------------------ CP population
     def populator(self, templates_meta, max_retries: int = 3):
@@ -580,6 +743,23 @@ class ShardedTxnRuntime:
         )
 
     def _pop(self, templates_meta, tpl_idx: int, bucket: int):
+        # the returned step resolves the compiled program at CALL time:
+        # populators cache this thin adapter in their own _jitted dicts, and
+        # a capacity growth clears _pop_fns — so the next drain recompiles
+        # against the current block layout instead of silently reusing a
+        # closure over the pre-growth pspec (whose gathers clamp slots to
+        # the old e_blk_cap). The adapter also bridges CachePopulator's
+        # keyword calls to shard_map's positional-only wrapper.
+        def step(store_exec, store_commit, cache, ttable, roots, params,
+                 mask, read_versions):
+            return self._pop_compiled(templates_meta, tpl_idx, bucket)(
+                store_exec, store_commit, cache, ttable, roots, params,
+                mask, read_versions,
+            )
+
+        return step
+
+    def _pop_compiled(self, templates_meta, tpl_idx: int, bucket: int):
         key = (tpl_idx, bucket)
         if key not in self._pop_fns:
             from repro.core.population import populate_step
@@ -616,19 +796,51 @@ class ShardedTxnRuntime:
                 out_specs=(self._cache_specs(), P(), P()),
                 check_rep=False,
             )
-            jitted = jax.jit(sm)
-
-            # shard_map's wrapper is positional-only; CachePopulator.drain
-            # calls its step with keyword arguments, so keep this adapter
-            def step(store_exec, store_commit, cache, ttable, roots, params,
-                     mask, read_versions):
-                return jitted(
-                    store_exec, store_commit, cache, ttable, roots, params,
-                    mask, read_versions,
-                )
-
-            self._pop_fns[key] = step
+            self._pop_fns[key] = jax.jit(sm)
         return self._pop_fns[key]
+
+
+class ShardedMissDrain:
+    """Per-shard CP drain loops over ``serve_step``'s per-shard miss records.
+
+    ``serve_step`` already returns one independently-counted miss segment
+    per shard; the single host-side ``CachePopulator`` round-trip merged
+    them back into one global FIFO, re-deriving ownership at insert time.
+    This keeps one ``MissQueue`` + populator per shard instead — each miss
+    record lands in its root's owner queue (the shard whose blocks execute
+    it and whose cache block receives the insert), and ``drain`` walks the
+    shards round-robin so every CP batch is single-owner (the CP-per-shard
+    layout of §4's population threads). All populators share the runtime's
+    compiled CP steps, so the fan-out costs no extra compilation.
+    """
+
+    def __init__(self, rt: ShardedTxnRuntime, templates_meta,
+                 max_retries: int = 3):
+        self.n = rt.n
+        self.pops = [
+            rt.populator(templates_meta, max_retries) for _ in range(rt.n)
+        ]
+
+    def push(self, misses):
+        for m in misses:
+            self.pops[int(m.root) % self.n].queue.push([m])
+
+    def drain(self, store_exec, store_commit, cache, ttable, k: int = 128):
+        """Drain up to ``k`` misses per shard queue; returns the new cache."""
+        for pop in self.pops:
+            cache = pop.drain(store_exec, store_commit, cache, ttable, k)
+        return cache
+
+    @property
+    def committed(self) -> int:
+        return sum(p.committed for p in self.pops)
+
+    @property
+    def aborted(self) -> int:
+        return sum(p.aborted for p in self.pops)
+
+    def pending(self) -> int:
+        return sum(len(p.queue) for p in self.pops)
 
 
 # ======================================================================
@@ -738,3 +950,38 @@ def config_cell(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
         rshard, rshard,
     )
     return step, in_shardings, (pstore, cache, ttable, roots, bvalid), rt
+
+
+def config_grw_cell(cfg: GraphServeConfig, mesh: Mesh, *,
+                    policy: str = "write-around", blk_slack: float = 1.0,
+                    caps: tuple = (8, 32, 32, 8, 32, 32)):
+    """Build the dry-run cell for the sharded gRW commit at capacity-config
+    scale: ``(step_fn, in_shardings, abstract_args, runtime)``.
+
+    This is the lowering check for the indexed edge-copy location: the
+    former O(K × e_blk_cap) broadcast-compare materialized [K, 2^30]
+    intermediates at the FULL config's per-shard block capacity, a compile
+    cliff the geid→slot ``searchsorted`` probes remove. The cell lowers the
+    whole commit — owner-local apply, ownership-masked listener, and the
+    routed cache-maintenance phase — at dry-run block capacity.
+    """
+    espec = config_espec(cfg)
+    _, ttable = config_plan_and_ttable(cfg)
+    rt = ShardedTxnRuntime(
+        espec, mesh, store_tier="partitioned",
+        route_cap_factor=cfg.route_cap_factor, blk_slack=blk_slack,
+    )
+    step = rt._grw_fn(policy)
+    batch = jax.eval_shape(
+        lambda: make_mutation_batch(espec.store, caps=caps)
+    )
+    pstore = abstract_partitioned_store(rt.pspec)
+    cache = jax.eval_shape(lambda: empty_cache(espec.cache))
+    repl = NamedSharding(mesh, P())
+    in_shardings = (
+        rt.store_sharding(),
+        rt.cache_sharding(),
+        jax.tree_util.tree_map(lambda _: repl, ttable),
+        jax.tree_util.tree_map(lambda _: repl, batch),
+    )
+    return step, in_shardings, (pstore, cache, ttable, batch), rt

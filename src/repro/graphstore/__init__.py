@@ -18,16 +18,27 @@ from repro.graphstore.store import (
     ingest,
 )
 from repro.graphstore.partition import (
+    BlockCapacityError,
     BlockStoreView,
     EdgeBlock,
     PartitionedGraphStore,
     PartitionedStoreSpec,
     apply_mutations_partitioned,
     default_pspec,
+    geid_slot_lookup,
     local_of,
     owner_of,
     partition_store,
+    rebuild_geid_index,
     store_bytes_report,
+)
+from repro.graphstore.maintenance import (
+    MaintenancePolicy,
+    block_occupancy,
+    compact_block,
+    compact_store,
+    decide_maintenance,
+    grow_store,
 )
 from repro.graphstore.mutations import (
     AppliedMutations,
@@ -56,6 +67,15 @@ __all__ = [
     "owner_of",
     "local_of",
     "store_bytes_report",
+    "BlockCapacityError",
+    "geid_slot_lookup",
+    "rebuild_geid_index",
+    "MaintenancePolicy",
+    "block_occupancy",
+    "compact_block",
+    "compact_store",
+    "decide_maintenance",
+    "grow_store",
     "MutationBatch",
     "AppliedMutations",
     "make_mutation_batch",

@@ -1,0 +1,269 @@
+"""Owner-local block maintenance: incremental compaction, index rebuilds,
+and capacity elasticity for the partitioned dual-CSR storage tier.
+
+The paper's cache (§4) sits in front of a storage manager that keeps serving
+reads while writes land transactionally in the background — FDB's B-tree
+plus its in-memory write buffer. Our partitioned tier reproduces the *read*
+half of that split (physically CSR-sorted block bodies + per-block recent
+append regions, ``partition.EdgeBlock``), and this module supplies the
+*write-path background* half: the block-local analogue of the single-host
+``store.compact`` plus the policy machinery that decides when shards run it.
+Besta et al. (Demystifying Graph Databases) frame the design point exactly:
+sorted-CSR read performance requires a dynamic-adjacency write buffer *and*
+periodic compaction — without it, recent regions grow until reads silently
+fall off the bounded append-scan window and blocks overflow at append time,
+forcing a full host-side repartition.
+
+Three pieces, all owner-local (no collectives — each shard maintains its own
+blocks independently, exactly like an FDB storage server compacting its own
+B-tree while the commit pipeline keeps running):
+
+- ``compact_block`` — a jittable pass merging a block's recent region into
+  the physically sorted CSR body: stable re-sort by (key, geid), indptr
+  rebuild over the merged body, geid→slot index rebuild, and (opt-in)
+  tombstone purge. Read results are byte-identical before/after — CSR lanes
+  ascend by geid within a root and recent geids exceed all CSR geids, so the
+  merged lane order per root is exactly the pre-compaction gather order.
+  With ``purge=False`` (the default) the compacted block equals the
+  ``partition_store`` of the host-compacted store byte-for-byte, which is
+  the identity the property tests pin. ``purge=True`` additionally reclaims
+  dead-edge slots; reads are unaffected (dead lanes were masked anyway), but
+  a later mutation section naming a purged geid resolves to "not found"
+  instead of the host's slot-array pre-image, so purge is an explicit opt-in
+  for deployments whose write stream never re-references deleted edges.
+
+- ``grow_store`` — capacity elasticity: re-pad every block to a larger
+  ``e_blk_cap`` (fills mirror ``partition_store``'s empty lanes, the
+  geid→slot index extends in place) instead of asserting at ingest or
+  overflowing at append time. Growing is a shape change, so callers must
+  recompile anything closed over the old spec
+  (``ShardedTxnRuntime.grow_blocks`` handles the cache invalidation).
+
+- ``MaintenancePolicy`` / ``decide_maintenance`` — when to do either:
+  compact when any block's recent fill crosses a fraction of its append-scan
+  window (the read-correctness bound) or after a mutation-row budget (the
+  latency-amortization bound); grow when occupancy crosses a high-water
+  fraction. ``block_occupancy`` surfaces the inputs (per-shard occupancy and
+  recent fill) for runtime metrics and serve-loop telemetry.
+
+``ShardedTxnRuntime.maintenance_tick`` schedules all of this between
+transaction batches, which is what lets shards run indefinitely under gRW
+traffic without a host round-trip.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphstore.partition import (
+    EdgeBlock,
+    PartitionedGraphStore,
+    PartitionedStoreSpec,
+    rebuild_geid_index,
+    stack_blocks,
+    unstack_blocks,
+)
+from repro.graphstore.store import INT32_MAX
+from repro.utils import PROP_MISSING, take_along0
+
+
+# ------------------------------------------------------------- compaction
+def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
+                  purge: bool = False) -> EdgeBlock:
+    """Merge one shard's block recent region into its sorted CSR body.
+
+    Operates on a *local* block view (shapes ``[e_blk_cap]``, the slice a
+    shard sees inside ``shard_map``; host callers slice via ``local_shard``
+    or vmap with ``compact_store``). Jittable, owner-local, no collectives.
+
+    The merged body is the stable (key, geid) sort of every allocated edge —
+    recent geids exceed all CSR geids, so per-root lane order (and therefore
+    every gather observable) is unchanged; afterwards the recent region is
+    empty (``csr_len == blk_len``) and every edge is range-readable. With
+    ``purge=False`` dead-but-allocated edges keep CSR lanes exactly like the
+    single-host ``store.compact``, making the result byte-identical to
+    ``partition_store(compact(host_store))``; ``purge=True`` drops them and
+    reclaims their slots (see module docstring for the pre-image caveat).
+    """
+    EB, Vloc, n = pspec.e_blk_cap, pspec.v_loc, pspec.n_shards
+    lanes = jnp.arange(EB, dtype=jnp.int32)
+    keep = lanes < blk.blk_len[0]
+    if purge:
+        keep &= blk.alive
+    # lexicographic (key, geid) stable sort: dropped lanes sink to the end
+    # in slot order, mirroring the host-side block construction
+    skey = jnp.where(keep, blk.key, INT32_MAX)
+    sgeid = jnp.where(keep, blk.geid, INT32_MAX)
+    perm = jnp.argsort(sgeid, stable=True)
+    perm = perm[jnp.argsort(skey[perm], stable=True)]
+    new_len = jnp.sum(keep.astype(jnp.int32))
+    live = lanes < new_len
+
+    def take(a, fill):
+        g = take_along0(a, perm)
+        m = live if g.ndim == 1 else live[:, None]
+        return jnp.where(m, g, jnp.asarray(fill, a.dtype))
+
+    key = take(blk.key, INT32_MAX)
+    other = take(blk.other, -1)
+    label = take(blk.label, -1)
+    alive = take(blk.alive, False)
+    props = take(blk.props, PROP_MISSING)
+    geid = take(blk.geid, -1)
+    # CSR row offsets over the merged body (interleaved: local = key // n);
+    # non-live lanes carry INT32_MAX keys and sort past every local index
+    indptr = jnp.searchsorted(
+        key // n, jnp.arange(Vloc + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    return EdgeBlock(
+        key=key, other=other, label=label, alive=alive, props=props,
+        geid=geid, gperm=rebuild_geid_index(new_len, geid), indptr=indptr,
+        blk_len=jnp.reshape(new_len, (1,)),
+        csr_len=jnp.reshape(new_len, (1,)),
+    )
+
+
+def compact_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, *,
+                  purge: bool = False) -> PartitionedGraphStore:
+    """Compact every shard's blocks of a *global-layout* partitioned store
+    (host-side helper; the runtime runs ``compact_block`` inside shard_map
+    instead). The replicated vertex tier and scalars pass through."""
+    fn = jax.vmap(lambda blk: compact_block(pspec, blk, purge=purge))
+    stacked = stack_blocks(pspec, ps)
+    return unstack_blocks(
+        pspec, stacked._replace(out=fn(stacked.out), inc=fn(stacked.inc))
+    )
+
+
+# ------------------------------------------------------------- elasticity
+def grow_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
+               e_blk_cap: int, *, recent_blk_cap: int | None = None):
+    """Re-pad every block to a larger ``e_blk_cap`` (host-side).
+
+    Returns ``(new_pspec, new_store)``. Per shard, existing rows keep their
+    slots, new tail lanes carry the same fills as freshly partitioned empty
+    lanes, and the geid→slot index extends in place (allocated slots are a
+    block prefix, so the index tail is the ascending unallocated slots — the
+    grown result is byte-identical to ``partition_store`` under the grown
+    spec). ``indptr`` / ``blk_len`` / ``csr_len`` are per-vertex/per-shard
+    and unchanged. Callers owning compiled programs closed over the old spec
+    must invalidate them (``ShardedTxnRuntime.grow_blocks`` does).
+    """
+    n, EB = pspec.n_shards, pspec.e_blk_cap
+    assert e_blk_cap >= EB, (e_blk_cap, EB)
+    rb = pspec.recent_blk_cap if recent_blk_cap is None else recent_blk_cap
+    new_pspec = pspec._replace(
+        e_blk_cap=e_blk_cap, recent_blk_cap=min(rb, e_blk_cap)
+    )
+
+    def blk(b: EdgeBlock) -> EdgeBlock:
+        def pad(a, fill):
+            x = np.asarray(a).reshape(n, EB, *np.shape(a)[1:])
+            out = np.full((n, e_blk_cap) + x.shape[2:], fill, x.dtype)
+            out[:, :EB] = x
+            return jnp.asarray(out.reshape((n * e_blk_cap,) + x.shape[2:]))
+
+        gp = np.tile(np.arange(e_blk_cap, dtype=np.int32), (n, 1))
+        gp[:, :EB] = np.asarray(b.gperm).reshape(n, EB)
+        return EdgeBlock(
+            key=pad(b.key, INT32_MAX), other=pad(b.other, -1),
+            label=pad(b.label, -1), alive=pad(b.alive, False),
+            props=pad(b.props, np.int32(int(PROP_MISSING))),
+            geid=pad(b.geid, -1), gperm=jnp.asarray(gp.reshape(-1)),
+            indptr=jnp.asarray(np.asarray(b.indptr)),
+            blk_len=jnp.asarray(np.asarray(b.blk_len)),
+            csr_len=jnp.asarray(np.asarray(b.csr_len)),
+        )
+
+    return new_pspec, ps._replace(out=blk(ps.out), inc=blk(ps.inc))
+
+
+# ---------------------------------------------------------------- metrics
+def block_occupancy(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore) -> dict:
+    """Per-shard/per-orientation occupancy and recent fill (host-side).
+
+    Reads only the tiny ``[n]`` block-length scalars. ``occupancy`` is
+    ``blk_len / e_blk_cap`` (the growth signal), ``recent_fill`` is
+    ``blk_len - csr_len`` in rows (the compaction signal: reads silently
+    miss appended edges once it exceeds ``recent_blk_cap``).
+    """
+    EB, R = pspec.e_blk_cap, pspec.recent_blk_cap
+    out = dict(e_blk_cap=EB, recent_blk_cap=R)
+    max_occ, max_rec = 0.0, 0
+    for name, b in (("out", ps.out), ("inc", ps.inc)):
+        ln = np.asarray(jax.device_get(b.blk_len)).reshape(-1)
+        cs = np.asarray(jax.device_get(b.csr_len)).reshape(-1)
+        rec = (ln - cs).astype(int)
+        occ = (ln / EB).astype(float)
+        out[name] = dict(
+            blk_len=[int(x) for x in ln],
+            recent_fill=[int(x) for x in rec],
+            occupancy=[round(float(x), 4) for x in occ],
+        )
+        max_occ = max(max_occ, float(occ.max(initial=0.0)))
+        max_rec = max(max_rec, int(rec.max(initial=0)))
+    out["max_occupancy"] = round(max_occ, 4)
+    out["max_recent_fill"] = max_rec
+    out["recent_fill_frac"] = round(max_rec / R, 4) if R else 0.0
+    return out
+
+
+# ----------------------------------------------------------------- policy
+class MaintenancePolicy(NamedTuple):
+    """When shards compact and when blocks grow.
+
+    ``recent_fill_frac`` — compact once any block's recent fill exceeds this
+    fraction of ``recent_blk_cap`` (1.0 is the hard correctness edge: beyond
+    it, reads fall off the bounded append-scan window). ``mutation_rows`` —
+    also compact after this many applied mutation rows since the last
+    compaction, bounding recent-scan latency even under low fill.
+    ``grow_occupancy_frac`` / ``growth_factor`` — grow ``e_blk_cap`` by the
+    factor once any block's occupancy crosses the high-water fraction (a
+    recompile; keep it rare). ``purge`` — reclaim tombstone slots at
+    compaction (see ``compact_block`` for the pre-image caveat).
+    """
+
+    recent_fill_frac: float = 0.5
+    mutation_rows: int = 4096
+    grow_occupancy_frac: float = 0.85
+    growth_factor: float = 2.0
+    purge: bool = False
+
+
+class MaintenanceDecision(NamedTuple):
+    compact: bool
+    grow_to: int | None
+    reason: str
+
+
+def decide_maintenance(pspec: PartitionedStoreSpec, occ: dict,
+                       policy: MaintenancePolicy,
+                       mutation_rows: int = 0) -> MaintenanceDecision:
+    """Pure scheduling decision from an occupancy report (host-side)."""
+    reasons = []
+    grow_to = None
+    if occ["max_occupancy"] >= policy.grow_occupancy_frac:
+        grow_to = max(
+            int(np.ceil(pspec.e_blk_cap * policy.growth_factor)),
+            pspec.e_blk_cap + 1,
+        )
+        reasons.append(
+            f"occupancy {occ['max_occupancy']:.2f} >= "
+            f"{policy.grow_occupancy_frac:.2f}: grow to {grow_to}"
+        )
+    compact = occ["max_recent_fill"] >= policy.recent_fill_frac * pspec.recent_blk_cap
+    if compact:
+        reasons.append(
+            f"recent fill {occ['max_recent_fill']} >= "
+            f"{policy.recent_fill_frac:.2f} x {pspec.recent_blk_cap}"
+        )
+    elif mutation_rows >= policy.mutation_rows:
+        compact = True
+        reasons.append(
+            f"{mutation_rows} mutation rows >= budget {policy.mutation_rows}"
+        )
+    return MaintenanceDecision(compact, grow_to, "; ".join(reasons))

@@ -102,6 +102,20 @@ def default_pspec(spec: StoreSpec, n_shards: int, *, slack: float = 2.0,
     return PartitionedStoreSpec(spec, n_shards, eb, rb)
 
 
+class BlockCapacityError(ValueError):
+    """A shard's owner-local block cannot hold the edges it owns.
+
+    ``needed`` carries the max per-shard edge count of the failing
+    orientation, so elastic callers can grow ``e_blk_cap`` and retry
+    (``ShardedTxnRuntime.partition_store(..., elastic=True)``) instead of
+    dying on a shape assert deep inside block packing.
+    """
+
+    def __init__(self, msg: str, needed: int):
+        super().__init__(msg)
+        self.needed = needed
+
+
 class EdgeBlock(NamedTuple):
     """One orientation's owner-local edge copies, all shards stacked.
 
@@ -113,6 +127,17 @@ class EdgeBlock(NamedTuple):
     mutation sections use to find their local copies). The CSR region
     ``[0, csr_len)`` is physically sorted by (key, geid); ``[csr_len, len)``
     is the recent append region.
+
+    ``gperm`` is the block's **sorted geid→slot index**: the geid column is
+    CSR-ordered by key (not monotone), so a permutation array keeps
+    ``geid[gperm[:blk_len]]`` ascending and the tail ``gperm[blk_len:]`` the
+    unallocated slots in ascending order. Edge-copy location
+    (``geid_slot_lookup``) is then an O(log e_blk_cap) ``searchsorted``
+    probe instead of the former O(K × e_blk_cap) broadcast-compare — the
+    compile cliff before billion-edge blocks. Appends keep it incrementally
+    correct for free (new geids exceed all existing ones, so the sorted
+    position of an appended slot is the slot itself); compaction and growth
+    rebuild it (``maintenance.compact_block`` / ``rebuild_geid_index``).
     """
 
     key: jax.Array  # int32 [n*EB]
@@ -121,6 +146,7 @@ class EdgeBlock(NamedTuple):
     alive: jax.Array  # bool  [n*EB]
     props: jax.Array  # int32 [n*EB, n_eprops]
     geid: jax.Array  # int32 [n*EB]
+    gperm: jax.Array  # int32 [n*EB] sorted-geid rank -> block slot
     indptr: jax.Array  # int32 [n*(v_loc+1)] CSR row offsets (local vertex)
     blk_len: jax.Array  # int32 [n] edges in the block
     csr_len: jax.Array  # int32 [n] CSR region length
@@ -156,12 +182,23 @@ def _build_block(pspec: PartitionedStoreSpec, keyside, otherside, elabel,
     alive = np.zeros((n * EB,), bool)
     props = np.full((n * EB, nep), np.int32(-(2**31) + 1), np.int32)
     geid = np.full((n * EB,), -1, np.int32)
+    gperm = np.zeros((n * EB,), np.int32)
     indptr = np.zeros((n * (Vloc + 1),), np.int32)
     blk_len = np.zeros((n,), np.int32)
     csr_blk = np.zeros((n,), np.int32)
 
     slots = np.arange(e_len)
     owner = np.mod(keyside[slots], n)
+    counts = np.bincount(owner, minlength=n) if e_len else np.zeros(n, np.int64)
+    if counts.max(initial=0) > EB:
+        worst = int(counts.argmax())
+        raise BlockCapacityError(
+            f"shard {worst} owns {int(counts.max())} edges of this "
+            f"orientation > e_blk_cap={EB}. Raise e_blk_cap / blk_slack, or "
+            f"partition with ShardedTxnRuntime.partition_store(..., "
+            f"elastic=True) to grow block capacity automatically.",
+            needed=int(counts.max()),
+        )
     for s in range(n):
         mine = slots[owner == s]
         csr_mine = mine[mine < csr_len]
@@ -172,10 +209,6 @@ def _build_block(pspec: PartitionedStoreSpec, keyside, otherside, elabel,
         csr_sorted = csr_mine[order]
         local = np.concatenate([csr_sorted, rec_mine])
         m = len(local)
-        assert m <= EB, (
-            f"shard {s} owns {m} edges > e_blk_cap={EB}; raise the block "
-            f"capacity (ownership skew)"
-        )
         base = s * EB
         key[base : base + m] = keyside[local]
         other[base : base + m] = otherside[local]
@@ -185,6 +218,13 @@ def _build_block(pspec: PartitionedStoreSpec, keyside, otherside, elabel,
         geid[base : base + m] = local
         blk_len[s] = m
         csr_blk[s] = len(csr_sorted)
+        # sorted geid->slot index: allocated slots by ascending geid, then
+        # the unallocated tail in slot order (stable ties on the sentinel)
+        masked = np.where(
+            np.arange(EB) < m, geid[base : base + EB].astype(np.int64),
+            np.int64(INT32_MAX),
+        )
+        gperm[base : base + EB] = np.argsort(masked, kind="stable")
         lk = keyside[csr_sorted] // n  # interleaved: local index = v // n
         indptr[s * (Vloc + 1) : (s + 1) * (Vloc + 1)] = np.searchsorted(
             lk, np.arange(Vloc + 1), side="left"
@@ -192,7 +232,8 @@ def _build_block(pspec: PartitionedStoreSpec, keyside, otherside, elabel,
     return EdgeBlock(
         key=jnp.asarray(key), other=jnp.asarray(other), label=jnp.asarray(label),
         alive=jnp.asarray(alive), props=jnp.asarray(props),
-        geid=jnp.asarray(geid), indptr=jnp.asarray(indptr),
+        geid=jnp.asarray(geid), gperm=jnp.asarray(gperm),
+        indptr=jnp.asarray(indptr),
         blk_len=jnp.asarray(blk_len), csr_len=jnp.asarray(csr_blk),
     )
 
@@ -231,6 +272,7 @@ def abstract_partitioned_store(pspec: PartitionedStoreSpec):
             key=sds((n * EB,), i32), other=sds((n * EB,), i32),
             label=sds((n * EB,), i32), alive=sds((n * EB,), jnp.bool_),
             props=sds((n * EB, spec.n_eprops), i32), geid=sds((n * EB,), i32),
+            gperm=sds((n * EB,), i32),
             indptr=sds((n * (Vloc + 1),), i32), blk_len=sds((n,), i32),
             csr_len=sds((n,), i32),
         )
@@ -376,23 +418,62 @@ class BlockStoreView:
         return other, mask, trunc, elab, ep
 
 
+# ------------------------------------------------------------- geid index
+def rebuild_geid_index(blk_len, geid) -> jax.Array:
+    """Recompute one block's sorted geid→slot permutation from scratch.
+
+    Allocated slots (``< blk_len``) sort by ascending geid; the unallocated
+    tail keeps ascending slot order (stable ties on the sentinel), matching
+    the host-side ``_build_block`` construction byte-for-byte. Used at
+    compaction / growth; appends maintain the index incrementally instead.
+    """
+    lanes = jnp.arange(geid.shape[0], dtype=jnp.int32)
+    masked = jnp.where(lanes < blk_len, geid, INT32_MAX)
+    return jnp.argsort(masked, stable=True).astype(jnp.int32)
+
+
+def sorted_geid_view(EB: int, geid, gperm, blk_len):
+    """The index's ascending geid view: one O(EB) gather, shareable across
+    every probe batch against the same block state."""
+    lanes = jnp.arange(EB, dtype=jnp.int32)
+    return jnp.where(lanes < blk_len, take_along0(geid, gperm), INT32_MAX)
+
+
+def geid_slot_lookup(EB: int, geid, gperm, blk_len, eids, skey=None):
+    """Locate global edge ids in one block via the sorted geid→slot index.
+
+    ``searchsorted`` over the index's ascending geid view: O(log EB) per
+    probe plus one linear gather to materialize the view (pass a shared
+    ``sorted_geid_view`` as ``skey`` to amortize it across probe batches;
+    the gather is the same order as the functional scatter updates the
+    apply already pays). The former [K, e_blk_cap] broadcast-compare was
+    O(K × EB) — the compile cliff before billion-edge blocks. Returns
+    ``(slot [K], found [K])``; ``slot`` is only meaningful where ``found``
+    (callers scatter with OOB-drop otherwise).
+    """
+    if skey is None:
+        skey = sorted_geid_view(EB, geid, gperm, blk_len)
+    eids = jnp.asarray(eids, jnp.int32)
+    pos = jnp.searchsorted(skey, eids, side="left").astype(jnp.int32)
+    posc = jnp.clip(pos, 0, EB - 1)
+    slot = take_along0(gperm, posc)
+    found = (pos < blk_len) & (skey[posc] == eids) & (eids >= 0)
+    return slot, found
+
+
 # ----------------------------------------------------------------- writes
-def _lookup_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, eids, psum):
+def _lookup_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, eids, psum,
+                  skey=None):
     """Locate global edge ids in one shard's block and psum-replicate their
     records. Exactly one shard holds an edge's copy per orientation, so the
     sum over shards *is* that owner's contribution. Returns ``(found, key,
-    other, label, props)`` replicated across the mesh.
-
-    The match is a [K, e_blk_cap] broadcast-compare: fine for serving-scale
-    blocks (mutation sections K are small), but it scales with block
-    *capacity* — the geid column is CSR-ordered by key, not monotone, so a
-    binary search can't replace it without a per-block geid->slot index
-    (recorded ROADMAP follow-on for billion-edge blocks)."""
+    other, label, props)`` replicated across the mesh. The per-block match
+    is an indexed ``geid_slot_lookup`` probe (``skey`` shares the sorted
+    view across lookups against the same block state)."""
     EB = pspec.e_blk_cap
-    alloc = jnp.arange(EB) < blk.blk_len[0]
-    m = (blk.geid[None, :] == eids[:, None]) & alloc[None, :]  # [K, EB]
-    found_l = jnp.any(m, axis=1)
-    sl = jnp.argmax(m, axis=1)
+    sl, found_l = geid_slot_lookup(
+        EB, blk.geid, blk.gperm, blk.blk_len[0], eids, skey=skey
+    )
     contrib = lambda a: jnp.where(found_l, a[sl], 0)
     found = psum(found_l.astype(jnp.int32)) > 0
     key = psum(contrib(blk.key))
@@ -438,9 +519,11 @@ def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
     sv_mask = _sec_mask(b.sv_vid, b.sv_n)
     se_mask = _sec_mask(b.se_eid, b.se_n)
 
-    # ---- pre-images (pre-state blocks; defaults mirror empty slot arrays)
+    # ---- pre-images (pre-state blocks; defaults mirror empty slot arrays;
+    # the de/se lookups share one sorted view of the pre-state out block)
+    skey_pre = sorted_geid_view(EB, ps.out.geid, ps.out.gperm, ps.out.blk_len[0])
     f_de, de_src_g, de_dst_g, de_lab_g, de_props_g = _lookup_block(
-        pspec, ps.out, b.de_eid, psum
+        pspec, ps.out, b.de_eid, psum, skey=skey_pre
     )
     de_src = jnp.where(de_mask, jnp.where(f_de, de_src_g, INT32_MAX), -1)
     de_dst = jnp.where(de_mask, jnp.where(f_de, de_dst_g, -1), -1)
@@ -450,7 +533,7 @@ def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
         jnp.where(f_de[:, None], de_props_g, PROP_MISSING), PROP_MISSING,
     )
     f_se, se_src_g, se_dst_g, se_lab_g, se_props_g = _lookup_block(
-        pspec, ps.out, b.se_eid, psum
+        pspec, ps.out, b.se_eid, psum, skey=skey_pre
     )
     se_src = jnp.where(se_mask, jnp.where(f_se, se_src_g, INT32_MAX), -1)
     se_dst = jnp.where(se_mask, jnp.where(f_se, se_dst_g, -1), -1)
@@ -517,22 +600,30 @@ def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
             alive=blk.alive.at[pos].set(True, mode="drop"),
             props=blk.props.at[pos].set(b.ne_props, mode="drop"),
             geid=blk.geid.at[pos].set(ne_eid, mode="drop"),
+            # sorted geid->slot index, maintained incrementally: appended
+            # geids exceed every existing geid (e_len only grows), so an
+            # appended slot's sorted rank *is* the slot index
+            gperm=blk.gperm.at[pos].set(pos.astype(jnp.int32), mode="drop"),
         )
         new_len = blk.blk_len[0] + jnp.sum(
             (own_ne & (pos < EB)).astype(jnp.int32)
         )
-        alloc = jnp.arange(EB) < new_len
-        # edge-prop edits locate their local copy by global edge id
-        # (post-append, so same-batch new edges are editable)
-        m_se = (blk.geid[None, :] == b.se_eid[:, None]) & alloc[None, :]
-        m_se &= se_mask[:, None]
-        tgt = jnp.where(jnp.any(m_se, axis=1), jnp.argmax(m_se, axis=1), EB)
+        # edge-prop edits / deletes locate their local copy through the
+        # index (post-append, so same-batch new edges are editable); both
+        # probe batches share one sorted view of the post-append state
+        skey = sorted_geid_view(EB, blk.geid, blk.gperm, new_len)
+        sl_se, f_se = geid_slot_lookup(
+            EB, blk.geid, blk.gperm, new_len, b.se_eid, skey=skey
+        )
+        tgt = jnp.where(f_se & se_mask, sl_se, EB)
         props = blk.props.at[tgt, jnp.clip(b.se_pid, 0, nep - 1)].set(
             b.se_val, mode="drop"
         )
-        m_de = (blk.geid[None, :] == b.de_eid[:, None]) & alloc[None, :]
-        m_de &= de_mask[:, None]
-        alive = blk.alive & ~jnp.any(m_de, axis=0)
+        sl_de, f_de = geid_slot_lookup(
+            EB, blk.geid, blk.gperm, new_len, b.de_eid, skey=skey
+        )
+        kt = jnp.where(f_de & de_mask, sl_de, EB)
+        alive = blk.alive.at[kt].set(False, mode="drop")
         return blk._replace(
             props=props, alive=alive, blk_len=jnp.reshape(new_len, (1,))
         ), ovf
@@ -575,9 +666,45 @@ def local_shard(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, s: int):
             alive=b.alive[s * EB : (s + 1) * EB],
             props=b.props[s * EB : (s + 1) * EB],
             geid=b.geid[s * EB : (s + 1) * EB],
+            gperm=b.gperm[s * EB : (s + 1) * EB],
             indptr=b.indptr[s * (Vloc + 1) : (s + 1) * (Vloc + 1)],
             blk_len=b.blk_len[s : s + 1],
             csr_len=b.csr_len[s : s + 1],
+        )
+
+    return ps._replace(out=blk(ps.out), inc=blk(ps.inc))
+
+
+def stack_blocks(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore):
+    """Reshape a global-layout store's blocks to a leading shard axis
+    ``[n, ...]`` — the per-shard view a named-axis vmap (or host-side
+    per-shard pass) consumes. Inverse of ``unstack_blocks``; the replicated
+    vertex tier and scalars pass through unchanged."""
+    n, EB, Vloc = pspec.n_shards, pspec.e_blk_cap, pspec.v_loc
+
+    def blk(b: EdgeBlock) -> EdgeBlock:
+        return EdgeBlock(
+            key=b.key.reshape(n, EB), other=b.other.reshape(n, EB),
+            label=b.label.reshape(n, EB), alive=b.alive.reshape(n, EB),
+            props=b.props.reshape(n, EB, -1), geid=b.geid.reshape(n, EB),
+            gperm=b.gperm.reshape(n, EB), indptr=b.indptr.reshape(n, Vloc + 1),
+            blk_len=b.blk_len.reshape(n, 1), csr_len=b.csr_len.reshape(n, 1),
+        )
+
+    return ps._replace(out=blk(ps.out), inc=blk(ps.inc))
+
+
+def unstack_blocks(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore):
+    """Flatten shard-stacked blocks back to the global layout."""
+    n, EB = pspec.n_shards, pspec.e_blk_cap
+
+    def blk(b: EdgeBlock) -> EdgeBlock:
+        return EdgeBlock(
+            key=b.key.reshape(-1), other=b.other.reshape(-1),
+            label=b.label.reshape(-1), alive=b.alive.reshape(-1),
+            props=b.props.reshape(n * EB, -1), geid=b.geid.reshape(-1),
+            gperm=b.gperm.reshape(-1), indptr=b.indptr.reshape(-1),
+            blk_len=b.blk_len.reshape(-1), csr_len=b.csr_len.reshape(-1),
         )
 
     return ps._replace(out=blk(ps.out), inc=blk(ps.inc))

@@ -1,0 +1,385 @@
+"""Owner-local block maintenance, host-level properties.
+
+Per-shard behaviour is exercised on one device by slicing shard-local views
+out of the global partitioned layout and by vmapping the partitioned apply
+with a named axis (the same program ``shard_map`` runs on the mesh), exactly
+like ``test_partitioned_store``. The 8-virtual-device identity of the
+*runtime* under interleaved maintenance ticks lives in
+``test_maintenance_runtime.py`` (sharded CI job).
+
+Pinned properties:
+
+- ``compact_block`` ≡ the single-host ``store.compact`` per block:
+  compacting the partition of a post-commit store is byte-identical to
+  partitioning the host-compacted post-commit store (tombstones keep their
+  CSR lanes, recent regions merge in (key, geid) order, geid→slot indexes
+  rebuild).
+- compact ∘ apply ≡ apply ∘ compact on every read observable.
+- tombstone purge preserves read results (dead lanes were masked anyway).
+- the geid→slot index stays consistent across randomized mutation batches,
+  including capacity growth, and the indexed probes match a brute-force
+  broadcast-compare reference.
+- ``grow_store`` ≡ ``partition_store`` under the grown spec, and elastic
+  ingest replaces the bare shape assert with an actionable
+  ``BlockCapacityError`` / automatic growth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_world, enabled_ttable, sq1_hop, sq2_hop
+from repro.core import CacheSpec, EngineSpec
+from repro.core.runtime import onehop_exec_view
+from repro.core.templates import DIR_IN, DIR_OUT
+from repro.graphstore import make_mutation_batch
+from repro.graphstore.maintenance import (
+    MaintenancePolicy,
+    block_occupancy,
+    compact_block,
+    compact_store,
+    decide_maintenance,
+    grow_store,
+)
+from repro.graphstore.mutations import apply_mutations
+from repro.graphstore.partition import (
+    BlockCapacityError,
+    BlockStoreView,
+    EdgeBlock,
+    PartitionedGraphStore,
+    apply_mutations_partitioned,
+    default_pspec,
+    geid_slot_lookup,
+    local_shard,
+    partition_store,
+)
+from repro.graphstore.store import compact
+from test_partitioned_store import _PS_AX, _restack, _stacked_local
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, _, _ = enabled_ttable()
+    pspec = default_pspec(spec, N)
+    return dict(
+        spec=spec, store=store, espec=espec, cspec=cspec, ttable=ttable,
+        pspec=pspec, pstore=partition_store(pspec, store),
+    )
+
+
+def _mutation_batch(spec):
+    return make_mutation_batch(
+        spec,
+        new_vertices=[(1, [0, 1007])],
+        new_edges=[(0, 11, 0, [1]), (2, 16, 0, [0]), (3, 5, 0, [1])],
+        del_edges=[2, 5],
+        del_vertices=[9],
+        set_vprops=[(7, 0, 1), (8, 0, 0)],
+        set_eprops=[(1, 0, 0), (4, 0, 1)],
+    )
+
+
+def _apply_partitioned(pspec, pstore, mb):
+    """The named-axis-vmap partitioned apply (the shard_map program)."""
+    fn = jax.vmap(
+        lambda ps, me: apply_mutations_partitioned(pspec, ps, mb, me, "sh"),
+        axis_name="sh", in_axes=(_PS_AX, 0),
+    )
+    ps2, _, ovf = fn(_stacked_local(pspec, pstore), jnp.arange(pspec.n_shards))
+    assert int(ovf[0]) == 0
+    return _restack(pspec, ps2)
+
+
+def _assert_pstores_equal(a, b, tag):
+    for f in PartitionedGraphStore._fields:
+        x, y = getattr(a, f), getattr(b, f)
+        if isinstance(x, EdgeBlock):
+            for bf in EdgeBlock._fields:
+                assert np.array_equal(
+                    np.asarray(getattr(x, bf)), np.asarray(getattr(y, bf))
+                ), f"{tag}: {f}.{bf}"
+        else:
+            assert np.array_equal(np.asarray(x), np.asarray(y)), f"{tag}: {f}"
+
+
+def _reads(world, pspec, pstore, roots, direction):
+    """Per-shard owner-local read observables over the whole mesh."""
+    espec = world["espec"]
+    hop = sq1_hop() if direction != DIR_IN else sq2_hop()
+    params = jnp.broadcast_to(jnp.asarray(hop.params), (len(roots), 6))
+    rmask = np.ones(len(roots), bool)
+    out = []
+    for s in range(pspec.n_shards):
+        view = BlockStoreView(pspec, local_shard(pspec, pstore, s), s)
+        own = np.mod(np.asarray(roots), pspec.n_shards) == s
+        leaves, lmask, n_true, trunc, stats = onehop_exec_view(
+            espec, view, direction, hop.edge_label, hop.pr, hop.pe, hop.pl,
+            jnp.asarray(roots), params, jnp.asarray(rmask & own),
+        )
+        rows = np.nonzero(own)[0]
+        out.append((
+            np.asarray(leaves)[rows], np.asarray(lmask)[rows],
+            np.asarray(n_true)[rows], np.asarray(trunc)[rows],
+            int(stats["edges_scanned"]), int(stats["leaf_fetches"]),
+        ))
+    return out
+
+
+def _assert_reads_equal(ra, rb, tag):
+    for s, (a, b) in enumerate(zip(ra, rb)):
+        for i, (x, y) in enumerate(zip(a, b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (tag, s, i)
+
+
+def test_compact_block_matches_host_compact(world):
+    """Compacting the partitioned post-commit blocks is byte-identical to
+    partitioning the host-compacted post-commit store — the partitioned
+    analogue of ``store.compact`` (tombstones keep CSR lanes, recent merges
+    in (key, geid) order, csr_len == blk_len, index rebuilt)."""
+    spec, store, pspec = world["spec"], world["store"], world["pspec"]
+    store2, _ = apply_mutations(spec, store, _mutation_batch(spec))
+    got = compact_store(pspec, partition_store(pspec, store2))
+    exp = partition_store(pspec, compact(spec, store2))
+    _assert_pstores_equal(got, exp, "compact vs host-compact partition")
+    occ = block_occupancy(pspec, got)
+    assert occ["max_recent_fill"] == 0  # recent regions drained
+
+
+@pytest.mark.parametrize("direction", [DIR_OUT, DIR_IN])
+def test_compact_apply_commute_on_reads(world, direction):
+    """compact ∘ apply ≡ apply ∘ compact ≡ apply on every read observable
+    (leaves, masks, cardinalities, truncation, scan metrics)."""
+    spec, pspec, pstore = world["spec"], world["pspec"], world["pstore"]
+    mb = _mutation_batch(spec)
+    roots = np.array([0, 1, 2, 3, 5, 9, 11, 15], np.int32)
+
+    applied = _apply_partitioned(pspec, pstore, mb)
+    a_then_c = compact_store(pspec, applied)
+    c_then_a = _apply_partitioned(pspec, compact_store(pspec, pstore), mb)
+
+    base = _reads(world, pspec, applied, roots, direction)
+    _assert_reads_equal(base, _reads(world, pspec, a_then_c, roots, direction),
+                        "apply->compact")
+    _assert_reads_equal(base, _reads(world, pspec, c_then_a, roots, direction),
+                        "compact->apply")
+
+
+@pytest.mark.parametrize("direction", [DIR_OUT, DIR_IN])
+def test_purge_preserves_read_results(world, direction):
+    """Tombstone purge reclaims dead-edge slots without changing any read
+    observable (dead lanes were liveness-masked already)."""
+    spec, pspec, pstore = world["spec"], world["pspec"], world["pstore"]
+    mb = _mutation_batch(spec)  # includes del_edges + del_vertices
+    applied = _apply_partitioned(pspec, pstore, mb)
+    purged = compact_store(pspec, applied, purge=True)
+    kept = compact_store(pspec, applied, purge=False)
+    # purge really dropped the tombstones
+    assert int(np.asarray(purged.out.blk_len).sum()) < int(
+        np.asarray(kept.out.blk_len).sum()
+    )
+    roots = np.array([0, 1, 2, 3, 5, 11, 15], np.int32)
+    _assert_reads_equal(
+        _reads(world, pspec, kept, roots, direction),
+        _reads(world, pspec, purged, roots, direction), "purged",
+    )
+
+
+def _lookup_reference(blk_geid, blk_len, eids, EB):
+    """Brute-force [K, EB] broadcast-compare (the pre-index semantics)."""
+    alloc = np.arange(EB) < blk_len
+    m = (np.asarray(blk_geid)[None, :] == np.asarray(eids)[:, None]) & alloc[None, :]
+    found = m.any(axis=1)
+    slot = np.where(found, m.argmax(axis=1), 0)
+    return slot, found
+
+
+def _check_index(pspec, pstore, tag):
+    EB = pspec.e_blk_cap
+    rng = np.random.default_rng(0)
+    for s in range(pspec.n_shards):
+        ls = local_shard(pspec, pstore, s)
+        for name, blk in (("out", ls.out), ("inc", ls.inc)):
+            ln = int(blk.blk_len[0])
+            gperm = np.asarray(blk.gperm)
+            geid = np.asarray(blk.geid)
+            # the sorted prefix indexes exactly the allocated slots,
+            # ascending by geid
+            assert sorted(gperm[:ln].tolist()) == list(range(ln)), (tag, s, name)
+            sg = geid[gperm[:ln]]
+            assert np.all(np.diff(sg) > 0), (tag, s, name)
+            # indexed probes == broadcast-compare reference
+            probes = np.concatenate([
+                geid[:ln][rng.permutation(ln)][:16] if ln else np.zeros(0, np.int32),
+                rng.integers(-3, 2 * EB, 16).astype(np.int32),
+                np.array([-1, 2**31 - 1], np.int32),
+            ])
+            slot, found = geid_slot_lookup(
+                EB, blk.geid, blk.gperm, blk.blk_len[0], jnp.asarray(probes)
+            )
+            rslot, rfound = _lookup_reference(geid, ln, probes, EB)
+            assert np.array_equal(np.asarray(found), rfound & (probes >= 0)), (tag, s, name)
+            ok = np.asarray(found)
+            assert np.array_equal(np.asarray(slot)[ok], rslot[ok]), (tag, s, name)
+
+
+def test_geid_index_randomized_mutations_and_growth(world):
+    """The index stays consistent (permutation of the allocated prefix,
+    ascending geids, probe-equivalent to broadcast-compare) across random
+    mutation batches, a capacity growth, and compactions."""
+    spec, store = world["spec"], world["store"]
+    pspec = default_pspec(spec, N)
+    pstore = partition_store(pspec, store)
+    host = store
+    rng = np.random.default_rng(42)
+    _check_index(pspec, pstore, "initial")
+    for step in range(6):
+        e_len, v_len = int(host.e_len), int(host.v_len)
+        ne = [
+            (int(rng.integers(0, v_len)), int(rng.integers(0, v_len)), 0,
+             [int(rng.integers(0, 2))])
+            for _ in range(int(rng.integers(1, 6)))
+        ]
+        de = [int(e) for e in rng.integers(0, e_len, rng.integers(1, 4))]
+        se = [(int(rng.integers(0, e_len)), 0, int(rng.integers(0, 2)))]
+        mb = make_mutation_batch(spec, new_edges=ne, del_edges=de, set_eprops=se)
+        host, _ = apply_mutations(spec, host, mb)
+        pstore = _apply_partitioned(pspec, pstore, mb)
+        _check_index(pspec, pstore, f"step{step}")
+        if step == 2:
+            pspec, pstore = grow_store(pspec, pstore, pspec.e_blk_cap + 29)
+            _check_index(pspec, pstore, "grown")
+        if step == 4:
+            pstore = compact_store(pspec, pstore, purge=bool(step % 2))
+            _check_index(pspec, pstore, "compacted")
+    # the maintained store still equals the partition of the host post-state
+    _assert_pstores_equal(
+        compact_store(pspec, pstore),
+        partition_store(pspec, compact(spec, host)), "final",
+    )
+
+
+def test_grow_store_equals_partition_under_grown_spec(world):
+    spec, store, pspec = world["spec"], world["store"], world["pspec"]
+    store2, _ = apply_mutations(spec, store, _mutation_batch(spec))
+    ps2 = partition_store(pspec, store2)
+    new_pspec, grown = grow_store(pspec, ps2, pspec.e_blk_cap + 37)
+    assert new_pspec.e_blk_cap == pspec.e_blk_cap + 37
+    _assert_pstores_equal(grown, partition_store(new_pspec, store2), "grown")
+
+
+def test_block_capacity_error_is_actionable(world):
+    spec, store = world["spec"], world["store"]
+    pspec = default_pspec(spec, N)._replace(e_blk_cap=2, recent_blk_cap=2)
+    with pytest.raises(BlockCapacityError) as ei:
+        partition_store(pspec, store)
+    assert ei.value.needed > 2
+    assert "elastic=True" in str(ei.value)
+    assert "e_blk_cap" in str(ei.value)
+
+
+def test_elastic_partition_grows_runtime_spec(world):
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+
+    rt = ShardedTxnRuntime(
+        world["espec"], flat_mesh(1), route_cap_factor=None, e_blk_cap=2
+    )
+    with pytest.raises(BlockCapacityError):
+        rt.partition_store(world["store"])
+    ps = rt.partition_store(world["store"], elastic=True)
+    assert rt.pspec.e_blk_cap >= int(world["store"].e_len)
+    # the elastically-grown layout serves the same reads
+    _assert_pstores_equal(
+        jax.device_get(ps), partition_store(rt.pspec, world["store"]), "elastic"
+    )
+
+
+def test_populator_steps_survive_capacity_growth(world):
+    """A CachePopulator built before a capacity growth must populate
+    correctly after it: its cached step adapters re-resolve the compiled
+    program per call, so growth-invalidated programs recompile against the
+    grown layout instead of silently gathering through a closure over the
+    old ``e_blk_cap`` (which clamps slots below the pre-growth capacity —
+    wrong reads for every edge appended past it)."""
+    from conftest import TPL_META, fig1_plan
+    from repro.core import GraphEngine, cache_entries, empty_cache, run_grw_tx
+    from repro.core.population import CachePopulator
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+
+    spec, store = world["spec"], world["store"]
+    espec, cspec, ttable = world["espec"], world["cspec"], world["ttable"]
+    e0 = int(store.e_len)
+    rt = ShardedTxnRuntime(
+        espec, flat_mesh(1), route_cap_factor=None, e_blk_cap=e0 + 2,
+        recent_blk_cap=32,
+    )
+    ps = rt.partition_store(store)
+    plan = fig1_plan()
+    eng = GraphEngine(espec, plan, True, fused=True)
+    roots = np.array([0, 1, 2, 3], np.int32)
+
+    # bake the pre-growth CP step into the populator's cache
+    pop_s = rt.populator(TPL_META)
+    pop_h = CachePopulator(espec, TPL_META)
+    cache_h, cache_s = empty_cache(cspec), rt.empty_cache()
+    _, miss_h, _ = eng.run(store, cache_h, ttable, roots)
+    _, miss_s, _ = rt.run_gr_tx_batch(ps, cache_s, ttable, plan, roots)
+    pop_h.queue.push(miss_h)
+    pop_s.queue.push(miss_s)
+    cache_h = pop_h.drain(store, store, cache_h, ttable)
+    cache_s = pop_s.drain(ps, ps, cache_s, ttable)
+    assert cache_entries(cspec, cache_h) == cache_entries(cspec, cache_s)
+
+    # grow, then append edges that land past the pre-growth capacity
+    ps = rt.grow_blocks(ps, e0 + 64)
+    ne = [(int(r), 4 + i, 0, [1]) for i, r in enumerate(roots) for _ in (0,)]
+    mb = make_mutation_batch(spec, new_edges=ne)
+    store2, cache_h, _ = run_grw_tx(espec, store, cache_h, ttable, mb)
+    ps, cache_s, m = rt.run_grw_tx(ps, cache_s, ttable, mb)
+    assert m["store_append_overflow"] == 0
+    assert int(np.asarray(ps.out.blk_len).max()) > e0 + 2  # past old cap
+
+    # the SAME populators drain the post-growth misses
+    _, miss_h2, _ = eng.run(store2, cache_h, ttable, roots)
+    _, miss_s2, met = rt.run_gr_tx_batch(ps, cache_s, ttable, plan, roots)
+    assert met["misses"] > 0
+    pop_h.queue.push(miss_h2)
+    pop_s.queue.push(miss_s2)
+    cache_h = pop_h.drain(store2, store2, cache_h, ttable)
+    cache_s = pop_s.drain(ps, ps, cache_s, ttable)
+    assert (pop_h.committed, pop_h.aborted) == (pop_s.committed, pop_s.aborted)
+    assert cache_entries(cspec, cache_h) == cache_entries(cspec, cache_s)
+
+
+def test_decide_maintenance_thresholds(world):
+    pspec = world["pspec"]
+    policy = MaintenancePolicy(
+        recent_fill_frac=0.5, mutation_rows=100, grow_occupancy_frac=0.8,
+        growth_factor=2.0,
+    )
+    idle = dict(max_occupancy=0.1, max_recent_fill=0)
+    d = decide_maintenance(pspec, idle, policy, mutation_rows=0)
+    assert not d.compact and d.grow_to is None
+
+    full_recent = dict(
+        max_occupancy=0.1,
+        max_recent_fill=int(0.5 * pspec.recent_blk_cap),
+    )
+    d = decide_maintenance(pspec, full_recent, policy)
+    assert d.compact and d.grow_to is None and "recent fill" in d.reason
+
+    d = decide_maintenance(pspec, idle, policy, mutation_rows=100)
+    assert d.compact and "mutation rows" in d.reason
+
+    hot = dict(max_occupancy=0.9, max_recent_fill=0)
+    d = decide_maintenance(pspec, hot, policy)
+    assert d.grow_to == 2 * pspec.e_blk_cap and "grow" in d.reason

@@ -35,7 +35,9 @@ from repro.graphstore.partition import (
     default_pspec,
     local_shard,
     partition_store,
+    stack_blocks,
     store_bytes_report,
+    unstack_blocks,
 )
 
 N = 4
@@ -113,23 +115,10 @@ def test_store_bytes_scale_inverse_in_n(world):
     )
 
 
-def _stacked_local(pspec, ps):
-    n, EB, Vloc = pspec.n_shards, pspec.e_blk_cap, pspec.v_loc
-
-    def blk(b):
-        return EdgeBlock(
-            key=b.key.reshape(n, EB), other=b.other.reshape(n, EB),
-            label=b.label.reshape(n, EB), alive=b.alive.reshape(n, EB),
-            props=b.props.reshape(n, EB, -1), geid=b.geid.reshape(n, EB),
-            indptr=b.indptr.reshape(n, Vloc + 1),
-            blk_len=b.blk_len.reshape(n, 1), csr_len=b.csr_len.reshape(n, 1),
-        )
-
-    return ps._replace(out=blk(ps.out), inc=blk(ps.inc))
-
+_stacked_local = stack_blocks
 
 _BLK_AX = EdgeBlock(
-    key=0, other=0, label=0, alive=0, props=0, geid=0, indptr=0,
+    key=0, other=0, label=0, alive=0, props=0, geid=0, gperm=0, indptr=0,
     blk_len=0, csr_len=0,
 )
 _PS_AX = PartitionedGraphStore(
@@ -139,28 +128,18 @@ _PS_AX = PartitionedGraphStore(
 
 
 def _restack(pspec, ps2):
-    """Undo ``_stacked_local`` on a vmapped output (take shard 0's copy of
+    """Undo ``stack_blocks`` on a vmapped output (take shard 0's copy of
     the replicated leaves after asserting all copies agree)."""
     n = pspec.n_shards
-
-    def blk(b):
-        return EdgeBlock(
-            key=b.key.reshape(-1), other=b.other.reshape(-1),
-            label=b.label.reshape(-1), alive=b.alive.reshape(-1),
-            props=b.props.reshape(b.props.shape[0] * b.props.shape[1], -1),
-            geid=b.geid.reshape(-1), indptr=b.indptr.reshape(-1),
-            blk_len=b.blk_len.reshape(-1), csr_len=b.csr_len.reshape(-1),
-        )
-
     for f in ("vlabel", "valive", "vprops", "vversion", "v_len", "e_len", "version"):
         v = np.asarray(getattr(ps2, f))
         for s in range(1, n):
             assert np.array_equal(v[s], v[0]), f"replicated {f} diverged"
-    return PartitionedGraphStore(
+    return unstack_blocks(pspec, ps2._replace(
         vlabel=ps2.vlabel[0], valive=ps2.valive[0], vprops=ps2.vprops[0],
-        vversion=ps2.vversion[0], out=blk(ps2.out), inc=blk(ps2.inc),
-        v_len=ps2.v_len[0], e_len=ps2.e_len[0], version=ps2.version[0],
-    )
+        vversion=ps2.vversion[0], v_len=ps2.v_len[0], e_len=ps2.e_len[0],
+        version=ps2.version[0],
+    ))
 
 
 def _mutation_batch(spec):
