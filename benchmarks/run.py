@@ -86,6 +86,18 @@ def _bench_block_maintenance():
     )
 
 
+def _bench_elasticity():
+    """Hitless hot-swap capacity growth vs blocking inline recompile:
+    p50/p99 batch latency across the growth event, steady vs during-growth
+    rows/s, journal flush lag (BENCH_elasticity.json)."""
+    from benchmarks import bench_elasticity
+
+    return _bench_subprocess(
+        "benchmarks.bench_elasticity", "BENCH_elasticity.json",
+        bench_elasticity.N_SHARDS,
+    )
+
+
 def _bench_hop_pipeline(batch=512):
     """Old vs fused hop pipeline; persists BENCH_hop_pipeline.json at the
     repo root so the perf trajectory is tracked across PRs."""
@@ -121,6 +133,9 @@ def main() -> None:
         # block maintenance: sustained gRW appends with compaction +
         # capacity elasticity (BENCH_block_maintenance.json)
         "block_maintenance": _bench_block_maintenance,
+        # durability + hitless growth: hot-swap vs blocking recompile
+        # across a live growth event (BENCH_elasticity.json)
+        "elasticity": _bench_elasticity,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

@@ -68,6 +68,8 @@ serving cell was retired in favour of ``ShardedTxnRuntime.serve_step``.
 from __future__ import annotations
 
 import functools
+import threading
+import time
 from dataclasses import dataclass
 
 import jax
@@ -98,11 +100,12 @@ from repro.core.runtime import (
     route_scatter,
 )
 from repro.graphstore.maintenance import (
+    DeviceGate,
     MaintenancePolicy,
     block_occupancy,
     compact_block,
     decide_maintenance,
-    grow_store,
+    grow_block_local,
 )
 from repro.graphstore.mutations import (
     apply_mutations,
@@ -172,15 +175,19 @@ class _MeshTier:
 
     routed = True
 
-    def __init__(self, rt: "ShardedTxnRuntime", caps):
+    def __init__(self, rt: "ShardedTxnRuntime", caps, pspec):
+        # pspec is captured at BUILD time (not read off rt at trace time):
+        # a background pre-compile builds next-tier programs while the
+        # runtime still serves the current tier
         self.rt = rt
         self.caps = caps
+        self.pspec = pspec
         self.axes, self.n = rt.axes, rt.n
 
     def exec_fn(self, hop):
-        if self.rt.pspec is None:
+        if self.pspec is None:
             return None  # replicated snapshot: the default full-store exec
-        pspec, espec, axes = self.rt.pspec, self.rt.lspec, self.axes
+        pspec, espec, axes = self.pspec, self.rt.lspec, self.axes
 
         def exec_fn(store, roots_f, params, miss_m, hop=hop):
             me = jax.lax.axis_index(axes)
@@ -237,6 +244,20 @@ class _MeshTier:
         for k in _ADDITIVE_METRICS:
             m[k] = jax.lax.psum(m[k], self.axes)
         return m
+
+
+class _NextTier:
+    """Handle for a background capacity pre-compile: the double-buffered
+    next-tier spec plus completion state. ``ready`` fires when every
+    requested step (and the grow-pad swap program) is compiled; ``error``
+    carries a worker failure to surface at swap time."""
+
+    def __init__(self, pspec):
+        self.pspec = pspec
+        self.ready = threading.Event()
+        self.error: Exception | None = None
+        self.compiled = 0
+        self.seconds = 0.0
 
 
 class ShardedTxnRuntime:
@@ -314,13 +335,21 @@ class ShardedTxnRuntime:
         self.ops_cap = ops_cap
         self.sweep_cap = sweep_cap
         self.ops_route_cap = ops_route_cap if ops_route_cap is not None else ops_cap
+        # compiled-step caches, every key TIER-SCOPED (leading element is the
+        # pspec the program closed over) so a capacity swap invalidates only
+        # the tiers it retires — see _set_pspec
         self._gr_fns: dict = {}
         self._grw_fns: dict = {}
         self._pop_fns: dict = {}
         self._maint_fns: dict = {}
+        self._grow_fns: dict = {}
         # applied mutation rows since the last compaction tick (one input to
         # MaintenancePolicy's latency-amortization bound)
         self.mutation_rows_since_compact = 0
+        # hitless elasticity: the in-flight background pre-compile handle and
+        # the count of completed hot-swaps (serve-loop metric)
+        self._next_tier: _NextTier | None = None
+        self.swap_events = 0
 
     # ------------------------------------------------------------ sharding
     def cache_sharding(self):
@@ -395,27 +424,46 @@ class ShardedTxnRuntime:
 
     # ---------------------------------------------------- block maintenance
     def _set_pspec(self, pspec):
-        """Swap the block layout spec and drop every compiled program closed
-        over the old one (capacity growth is a shape change)."""
+        """Swap the block layout spec. Invalidation is **tier-scoped**:
+        every compiled-step cache key leads with the pspec the program
+        closed over, so programs of the incoming tier (a background
+        pre-compile populated them) and the outgoing tier (in-flight
+        batches may still reference it) survive the swap — only strictly
+        older tiers are pruned. Unaffected plans keep their compiled steps
+        across a swap instead of recompiling from scratch."""
+        keep = {self.pspec, pspec}
         self.pspec = pspec
-        self._gr_fns.clear()
-        self._grw_fns.clear()
-        self._pop_fns.clear()
-        self._maint_fns.clear()
+        for cache in (self._gr_fns, self._grw_fns, self._pop_fns,
+                      self._maint_fns, self._grow_fns):
+            for k in [k for k in cache if k[0] not in keep]:
+                del cache[k]
+
+    def set_block_capacity(self, e_blk_cap: int, *,
+                           recent_blk_cap: int | None = None):
+        """Adopt a block-layout spec without a store in hand — the recovery
+        path: ``journal.replay`` restores a checkpoint whose blocks were
+        snapshotted under a recorded capacity, so the runtime must speak
+        that layout before the restore."""
+        assert self.pspec is not None
+        rb = (self.pspec.recent_blk_cap if recent_blk_cap is None
+              else int(recent_blk_cap))
+        self._set_pspec(self.pspec._replace(
+            e_blk_cap=int(e_blk_cap), recent_blk_cap=min(rb, int(e_blk_cap)),
+        ))
 
     def store_occupancy(self, pstore) -> dict:
         """Per-shard/per-block occupancy + recent fill (partitioned tier)."""
         assert self.pspec is not None
         return block_occupancy(self.pspec, pstore)
 
-    def compact_step(self, purge: bool = False):
+    def compact_step(self, purge: bool = False, *, pspec=None):
         """The jitted owner-local compaction pass: every shard merges its
         block recent regions into the sorted CSR bodies and rebuilds its
-        geid→slot indexes, with no collectives (cached per ``purge``)."""
+        geid→slot indexes, with no collectives (cached per tier + ``purge``)."""
         assert self.pspec is not None
-        if purge not in self._maint_fns:
-            pspec = self.pspec
-
+        pspec = self.pspec if pspec is None else pspec
+        key = (pspec, purge)
+        if key not in self._maint_fns:
             def local_compact(ps):
                 return ps._replace(
                     out=compact_block(pspec, ps.out, purge=purge),
@@ -427,28 +475,184 @@ class ShardedTxnRuntime:
                 in_specs=(self._store_specs(),),
                 out_specs=self._store_specs(), check_rep=False,
             )
-            self._maint_fns[purge] = jax.jit(sm)
-        return self._maint_fns[purge]
+            self._maint_fns[key] = jax.jit(sm)
+        return self._maint_fns[key]
+
+    def _grow_step(self, new_pspec, *, pspec=None):
+        """The jitted device-resident capacity-grow program (cached per
+        tier pair): each shard pads its own blocks from ``pspec`` to
+        ``new_pspec`` shapes in place on device — owner-local, no
+        collectives, no host round-trip. With the target tier's serving
+        steps precompiled (``precompile_next_tier``), one run of this pad
+        is the entire hot-swap pause."""
+        pspec = self.pspec if pspec is None else pspec
+        key = (pspec, new_pspec)
+        if key not in self._grow_fns:
+            def local_grow(ps):
+                return ps._replace(
+                    out=grow_block_local(pspec, new_pspec, ps.out),
+                    inc=grow_block_local(pspec, new_pspec, ps.inc),
+                )
+
+            sm = shard_map(
+                local_grow, mesh=self.mesh,
+                in_specs=(self._store_specs(),),
+                out_specs=self._store_specs(), check_rep=False,
+            )
+            self._grow_fns[key] = jax.jit(sm)
+        return self._grow_fns[key]
 
     def grow_blocks(self, pstore, e_blk_cap: int, *,
                     recent_blk_cap: int | None = None):
-        """Grow every block to ``e_blk_cap`` (host round-trip re-pad), swap
-        the spec, and re-lay the store over the mesh. Compiled programs are
-        invalidated — growth is the rare, amortized elasticity event. The
-        ``run_*`` wrappers and populator steps re-resolve per call and pick
-        up the new layout automatically; step handles fetched *directly*
-        (``serve_step`` / ``grw_step`` / ``compact_step``) before a growth
-        are stale and must be re-acquired."""
+        """Grow every block to ``e_blk_cap`` (device-resident pad, byte-
+        identical to the host ``grow_store``) and swap the spec.
+        Invalidation is tier-scoped (``_set_pspec``): old-tier steps are
+        retained for the previous tier only, and steps for the NEW tier
+        compile lazily on first use unless ``precompile_next_tier`` built
+        them in the background first — the hitless path is
+        ``precompile_next_tier`` + ``swap_to_next_tier``. Step handles
+        fetched *directly* (``serve_step`` / ``grw_step`` /
+        ``compact_step``) before a growth are stale and must be
+        re-acquired; the ``run_*`` wrappers re-resolve per call."""
         assert self.pspec is not None
-        new_pspec, grown = grow_store(
-            self.pspec, jax.device_get(pstore), e_blk_cap,
-            recent_blk_cap=recent_blk_cap,
+        rb = (self.pspec.recent_blk_cap if recent_blk_cap is None
+              else int(recent_blk_cap))
+        new_pspec = self.pspec._replace(
+            e_blk_cap=int(e_blk_cap), recent_blk_cap=min(rb, int(e_blk_cap)),
         )
+        assert new_pspec.e_blk_cap >= self.pspec.e_blk_cap
+        grown = self._grow_step(new_pspec)(pstore)
         self._set_pspec(new_pspec)
-        return jax.device_put(grown, self.store_sharding())
+        return grown
+
+    # ------------------------------------------------- hitless elasticity
+    def precompile_next_tier(self, e_blk_cap: int, ttable, *,
+                             recent_blk_cap: int | None = None,
+                             gr_plans=(), grw_policies=(),
+                             grw_caps: tuple = (8, 32, 32, 8, 32, 32),
+                             compact_purges=(), pop_steps=(),
+                             background: bool = True):
+        """Compile the NEXT capacity tier's serving programs off the serve
+        critical path (the background half of hitless elasticity).
+
+        A worker thread warm-calls each requested step on owner-sharded
+        dummy inputs at the next tier's shapes — warm calls, because they
+        populate the jit dispatch caches under the new tier's key
+        (``.lower().compile()`` would not) — plus the device grow-pad
+        program that performs the swap itself. The serve loop keeps running
+        on the current tier the whole time (compiled-step caches are
+        tier-scoped, nothing it uses is touched); when the returned
+        handle's ``ready`` event fires, ``swap_to_next_tier`` flips the
+        store at a batch boundary with every post-swap step already
+        compiled. The dummy next-tier store transiently costs one extra
+        store's worth of device memory.
+
+        - ``gr_plans`` — ``(plan, global_batch_bucket)`` pairs to warm.
+        - ``grw_policies`` — ``(policy, gate)`` pairs (``gate`` a
+          ``DeviceGate`` or None) at mutation caps ``grw_caps``.
+        - ``compact_purges`` — purge flags to warm ``compact_step`` for.
+        - ``pop_steps`` — ``(templates_meta, tpl_idx, bucket)`` CP steps.
+        """
+        assert self.pspec is not None
+        cur = self.pspec
+        rb = cur.recent_blk_cap if recent_blk_cap is None else int(recent_blk_cap)
+        nxt = cur._replace(
+            e_blk_cap=int(e_blk_cap), recent_blk_cap=min(rb, int(e_blk_cap)),
+        )
+        assert nxt.e_blk_cap > cur.e_blk_cap, (nxt.e_blk_cap, cur.e_blk_cap)
+        handle = _NextTier(nxt)
+        self._next_tier = handle
+
+        def work():
+            t0 = time.perf_counter()
+            try:
+                def zeros_for(pspec):
+                    tmpl = abstract_partitioned_store(pspec)
+                    z = jax.tree_util.tree_map(
+                        lambda s: jnp.zeros(s.shape, s.dtype), tmpl
+                    )
+                    return jax.device_put(z, self.store_sharding())
+
+                store0 = zeros_for(nxt)
+                cache0 = self.empty_cache()
+                # the swap pad itself (current -> next tier)
+                out = self._grow_step(nxt, pspec=cur)(zeros_for(cur))
+                jax.block_until_ready(out)
+                handle.compiled += 1
+                for plan, bucket in gr_plans:
+                    fn = self._gr(plan, bucket, pspec=nxt)
+                    roots = jnp.zeros((bucket,), jnp.int32)
+                    bvalid = jnp.zeros((bucket,), jnp.bool_)
+                    jax.block_until_ready(
+                        fn(store0, cache0, ttable, roots, bvalid)
+                    )
+                    handle.compiled += 1
+                for pol, gate in grw_policies:
+                    fn = self._grw(pol, gate, pspec=nxt)
+                    mb = make_mutation_batch(self.espec.store, caps=grw_caps)
+                    jax.block_until_ready(fn(store0, cache0, ttable, mb))
+                    handle.compiled += 1
+                for purge in compact_purges:
+                    jax.block_until_ready(
+                        self.compact_step(purge, pspec=nxt)(store0)
+                    )
+                    handle.compiled += 1
+                for templates_meta, tpl_idx, bucket in pop_steps:
+                    from repro.core.keys import PARAM_LEN
+
+                    fn = self._pop_compiled(
+                        templates_meta, tpl_idx, bucket, pspec=nxt
+                    )
+                    jax.block_until_ready(fn(
+                        store0, store0, cache0, ttable,
+                        jnp.full((bucket,), -1, jnp.int32),
+                        jnp.zeros((bucket, PARAM_LEN), jnp.int32),
+                        jnp.zeros((bucket,), jnp.bool_),
+                        jnp.zeros((bucket,), jnp.int32),
+                    ))
+                    handle.compiled += 1
+            except Exception as e:  # noqa: BLE001 — surfaced at swap time
+                handle.error = e
+            finally:
+                handle.seconds = time.perf_counter() - t0
+                handle.ready.set()
+
+        if background:
+            threading.Thread(
+                target=work, name="tier-precompile", daemon=True
+            ).start()
+        else:
+            work()
+        return handle
+
+    def swap_to_next_tier(self, pstore):
+        """Hot-swap the store and compiled steps to the precompiled next
+        tier at a batch boundary: run the (pre-warmed) device grow-pad,
+        flip the spec, prune strictly-older tiers. Blocks until the
+        background pre-compile finishes if it has not (callers wanting a
+        pause-free swap check ``handle.ready`` first). Returns
+        ``(pstore', info)``."""
+        h = self._next_tier
+        assert h is not None, "no next tier: call precompile_next_tier first"
+        h.ready.wait()
+        if h.error is not None:
+            self._next_tier = None
+            raise RuntimeError("next-tier precompile failed") from h.error
+        t0 = time.perf_counter()
+        grown = self._grow_step(h.pspec)(pstore)
+        jax.block_until_ready(grown)
+        swap_s = time.perf_counter() - t0
+        self._set_pspec(h.pspec)
+        self.swap_events += 1
+        self._next_tier = None
+        return grown, dict(
+            swap_seconds=swap_s, e_blk_cap=h.pspec.e_blk_cap,
+            recent_blk_cap=h.pspec.recent_blk_cap,
+            precompile_seconds=h.seconds, compiled_steps=h.compiled,
+        )
 
     def maintenance_tick(self, pstore, policy: MaintenancePolicy | None = None,
-                         *, occupancy: dict | None = None):
+                         *, occupancy: dict | None = None, journal=None):
         """Run due maintenance between transaction batches.
 
         Reads only the tiny block-length scalars, then (per the policy)
@@ -460,6 +664,12 @@ class ShardedTxnRuntime:
         ``run_grw_tx`` metrics were derived from (any dict carrying
         ``max_occupancy`` / ``max_recent_fill`` for *this* ``pstore``)
         instead of re-reading the block scalars inside a timed loop.
+
+        ``journal`` (a ``graphstore.journal.WriteBehindJournal``) records
+        every maintenance event that runs (GROW / COMPACT), so recovery
+        replays layout changes at the same point in the commit order.
+        Host-scheduled ticks are the fallback path — the gated gRW step
+        (``grw_step(gate=...)``) compacts on-device without any of this.
         """
         assert self.pspec is not None, "maintenance targets the partitioned tier"
         policy = MaintenancePolicy() if policy is None else policy
@@ -474,9 +684,15 @@ class ShardedTxnRuntime:
         )
         if dec.grow_to is not None:
             pstore = self.grow_blocks(pstore, dec.grow_to)
+            if journal is not None:
+                journal.append_grow(
+                    self.pspec.e_blk_cap, self.pspec.recent_blk_cap
+                )
             info["grown_to"] = dec.grow_to
         if dec.compact:
             pstore = self.compact_step(policy.purge)(pstore)
+            if journal is not None:
+                journal.append_compact(purge=policy.purge)
             self.mutation_rows_since_compact = 0
             info["compacted"] = True
         return pstore, info
@@ -514,13 +730,18 @@ class ShardedTxnRuntime:
             A = min(F, A * RW)
         return caps
 
-    def _gr_fn(self, plan, bucket: int):
-        """The un-jitted shard_map serving program (AOT lowering hook)."""
+    def _gr_fn(self, plan, bucket: int, *, pspec=None):
+        """The un-jitted shard_map serving program (AOT lowering hook).
+        ``pspec`` defaults to the current tier; the background pre-compiler
+        passes the next tier's spec to build double-buffered programs."""
         n = self.n
         assert bucket % n == 0, "global batch bucket must divide over shards"
+        pspec = self.pspec if pspec is None else pspec
         Bloc = bucket // n
         caps = self._hop_route_caps(plan, Bloc)
-        fused = make_plan_fn(self.lspec, plan, self.use_cache, _MeshTier(self, caps))
+        fused = make_plan_fn(
+            self.lspec, plan, self.use_cache, _MeshTier(self, caps, pspec)
+        )
         return shard_map(
             fused,
             mesh=self.mesh,
@@ -532,10 +753,13 @@ class ShardedTxnRuntime:
             check_rep=False,
         )
 
-    def _gr(self, plan, bucket: int):
-        key = (_plan_key(plan), bucket)
+    def _gr(self, plan, bucket: int, *, pspec=None):
+        pspec = self.pspec if pspec is None else pspec
+        key = (pspec, _plan_key(plan), bucket)
         if key not in self._gr_fns:
-            self._gr_fns[key] = jax.jit(self._gr_fn(plan, bucket))
+            self._gr_fns[key] = jax.jit(
+                self._gr_fn(plan, bucket, pspec=pspec)
+            )
         return self._gr_fns[key]
 
     def serve_step(self, plan, global_batch: int):
@@ -630,15 +854,33 @@ class ShardedTxnRuntime:
         cache2 = cache2._replace(n_delete=cache.n_delete + occ_delta)
         return cache2, occ_delta, ovf_c + ovf_r + ovf_s
 
-    def _grw_fn(self, policy: str):
-        """The un-jitted shard_map gRW commit (AOT lowering hook)."""
+    def _grw_fn(self, policy: str, gate: DeviceGate | None = None, *,
+                pspec=None):
+        """The un-jitted shard_map gRW commit (AOT lowering hook).
+
+        With ``gate`` (a ``DeviceGate``) the step carries the maintenance
+        decision **on-device**: after the owner-local apply + listener,
+        each shard checks its own blocks' recent fill against the gate
+        threshold and compacts them inside a ``lax.cond`` — no per-batch
+        host round-trip of block scalars, no separate compaction dispatch.
+        The post-maintenance capacity signals (max block occupancy /
+        recent fill, pmax-reduced) and the number of shard-blocks compacted
+        come back as step outputs, so the host reads them from the commit's
+        one transfer instead of a follow-up occupancy read."""
         espec = self.espec
         lspec = self.lspec
-        pspec = self.pspec
+        pspec = self.pspec if pspec is None else pspec
         n, axes = self.n, self.axes
         through = policy != "write-around"
 
         if pspec is not None:
+            # static per-block threshold: gate decisions are a pure function
+            # of (store, batch, gate), which journal replay relies on
+            thresh = (
+                max(int(np.ceil(gate.recent_fill_frac * pspec.recent_blk_cap)), 0)
+                if gate is not None else 0
+            )
+
             def local_grw(store, cache, ttable, batch):
                 me = jax.lax.axis_index(axes)
                 # phase A: commit to owner-local storage; the listener
@@ -651,14 +893,50 @@ class ShardedTxnRuntime:
                     BlockStoreView(pspec, store2, me), ttable, applied,
                     through=through,
                 )
+                if gate is not None:
+                    # on-device maintenance gate — ops were derived above,
+                    # so the layout change cannot perturb this commit's
+                    # invalidation; compact_block is collective-free, so a
+                    # per-shard lax.cond is legal under check_rep=False
+                    def maybe_compact(blk):
+                        rec = blk.blk_len[0] - blk.csr_len[0]
+                        hit = rec >= thresh
+                        return jax.lax.cond(
+                            hit,
+                            lambda b: compact_block(
+                                pspec, b, purge=gate.purge
+                            ),
+                            lambda b: b,
+                            blk,
+                        ), hit
+                    out_b, hit_o = maybe_compact(store2.out)
+                    inc_b, hit_i = maybe_compact(store2.inc)
+                    store2 = store2._replace(out=out_b, inc=inc_b)
+                    ncomp = jax.lax.psum(
+                        hit_o.astype(jnp.int32) + hit_i.astype(jnp.int32),
+                        axes,
+                    )
+                else:
+                    ncomp = jnp.int32(0)
                 cache2, occ_delta, ovf = self._route_and_apply_ops(
                     cache, ops, sweeps, through, local_sweeps=True
                 )
                 impacted = jax.lax.psum(occ_delta, axes)
                 cache2 = _replicate_stats(cache, cache2, axes)
                 overflow = jax.lax.psum(ovf, axes)
-                return store2, cache2, impacted, overflow, store_ovf
+                # post-maintenance capacity signals, reduced on-device
+                blk_max = jax.lax.pmax(jnp.maximum(
+                    store2.out.blk_len[0], store2.inc.blk_len[0]
+                ), axes)
+                rec_max = jax.lax.pmax(jnp.maximum(
+                    store2.out.blk_len[0] - store2.out.csr_len[0],
+                    store2.inc.blk_len[0] - store2.inc.csr_len[0],
+                ), axes)
+                return (store2, cache2, impacted, overflow, store_ovf,
+                        blk_max, rec_max, ncomp)
         else:
+            assert gate is None, "the device gate targets the partitioned tier"
+
             def local_grw(store, cache, ttable, batch):
                 me = jax.lax.axis_index(axes)
                 # every replica applies the same commit (deterministic)
@@ -676,7 +954,8 @@ class ShardedTxnRuntime:
                 impacted = jax.lax.psum(occ_delta, axes)
                 cache2 = _replicate_stats(cache, cache2, axes)
                 overflow = jax.lax.psum(ovf, axes)
-                return store2, cache2, impacted, overflow, jnp.int32(0)
+                z = jnp.int32(0)
+                return store2, cache2, impacted, overflow, z, z, z, z
 
         return shard_map(
             local_grw,
@@ -684,36 +963,50 @@ class ShardedTxnRuntime:
             in_specs=(self._store_specs(), self._cache_specs(), P(), P()),
             out_specs=(
                 self._store_specs(), self._cache_specs(), P(), P(), P(),
+                P(), P(), P(),
             ),
             check_rep=False,
         )
 
-    def _grw(self, policy: str):
-        if policy not in self._grw_fns:
-            self._grw_fns[policy] = jax.jit(self._grw_fn(policy))
-        return self._grw_fns[policy]
+    def _grw(self, policy: str, gate: DeviceGate | None = None, *,
+             pspec=None):
+        pspec = self.pspec if pspec is None else pspec
+        key = (pspec, policy, gate)
+        if key not in self._grw_fns:
+            self._grw_fns[key] = jax.jit(
+                self._grw_fn(policy, gate, pspec=pspec)
+            )
+        return self._grw_fns[key]
 
-    def grw_step(self, policy: str = "write-around"):
-        """The jitted sharded gRW-Tx commit (cached per policy):
-        ``step(store, cache, ttable, batch) -> (store', cache', impacted,
-        route_overflow, store_overflow)``."""
-        return self._grw(policy)
+    def grw_step(self, policy: str = "write-around",
+                 gate: DeviceGate | None = None):
+        """The jitted sharded gRW-Tx commit (cached per tier + policy +
+        gate): ``step(store, cache, ttable, batch) -> (store', cache',
+        impacted, route_overflow, store_overflow, max_blk_len,
+        max_recent_fill, device_compactions)``. With ``gate`` the step
+        compacts over-threshold blocks on-device (see ``_grw_fn``)."""
+        return self._grw(policy, gate)
 
     def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around",
-                   *, occupancy_metrics: bool = True):
+                   *, gate: DeviceGate | None = None,
+                   occupancy_metrics: bool = True, journal=None):
         """Host wrapper mirroring ``repro.core.engine.run_grw_tx``.
 
         On the partitioned tier the metrics also surface the post-commit
         capacity signals (max block occupancy / recent fill) that drive
-        ``maintenance_tick``, and the applied mutation rows accumulate into
-        the policy's compaction budget. The occupancy read costs a few
-        ``[n]``-scalar host transfers per commit; callers that schedule
-        maintenance on their own signals can pass
-        ``occupancy_metrics=False`` to keep the commit wrapper sync-free
-        beyond the metric scalars themselves."""
-        store2, cache2, impacted, overflow, store_ovf = self._grw(policy)(
-            store, cache, ttable, batch
-        )
+        growth decisions — computed **inside the step** and pmax-reduced
+        on-device, so they ride the commit's own transfer (the pre-gate
+        runtime re-read block scalars from the host per batch). With
+        ``gate`` the step additionally compacts over-threshold blocks
+        on-device and reports ``device_compactions``.
+
+        ``journal`` (a ``WriteBehindJournal``) makes the commit durable
+        write-behind: the batch is appended with its effective step config
+        (policy + gate) and the journal's lag/queue metrics are folded into
+        the returned metrics."""
+        out = self._grw(policy, gate)(store, cache, ttable, batch)
+        (store2, cache2, impacted, overflow, store_ovf,
+         blk_max, rec_max, ncomp) = out
         metrics = {
             "impacted_keys": int(impacted), "op_overflow": int(overflow),
             "store_append_overflow": int(store_ovf),
@@ -723,10 +1016,21 @@ class ShardedTxnRuntime:
             self.mutation_rows_since_compact += sum(
                 int(x) for x in (b.nv_n, b.ne_n, b.de_n, b.dv_n, b.sv_n, b.se_n)
             )
+            if gate is not None:
+                ncomp = int(ncomp)
+                metrics["device_compactions"] = ncomp
+                if ncomp:
+                    self.mutation_rows_since_compact = 0
             if occupancy_metrics:
-                occ = self.store_occupancy(store2)
-                metrics["store_occupancy_max"] = occ["max_occupancy"]
-                metrics["store_recent_fill_max"] = occ["max_recent_fill"]
+                EB = self.pspec.e_blk_cap
+                metrics["store_occupancy_max"] = round(int(blk_max) / EB, 4)
+                metrics["store_recent_fill_max"] = int(rec_max)
+        if journal is not None:
+            journal.append_commit(
+                batch, policy=policy, gate=gate,
+                commit_version=int(jax.device_get(store2.version)),
+            )
+            metrics.update(journal.metrics())
         return store2, cache2, metrics
 
     # ------------------------------------------------------ CP population
@@ -745,8 +1049,9 @@ class ShardedTxnRuntime:
     def _pop(self, templates_meta, tpl_idx: int, bucket: int):
         # the returned step resolves the compiled program at CALL time:
         # populators cache this thin adapter in their own _jitted dicts, and
-        # a capacity growth clears _pop_fns — so the next drain recompiles
-        # against the current block layout instead of silently reusing a
+        # _pop_fns is keyed by the CURRENT pspec — so the next drain after a
+        # capacity swap resolves the new tier's program (precompiled in the
+        # background, or compiled lazily) instead of silently reusing a
         # closure over the pre-growth pspec (whose gathers clamp slots to
         # the old e_blk_cap). The adapter also bridges CachePopulator's
         # keyword calls to shard_map's positional-only wrapper.
@@ -759,13 +1064,14 @@ class ShardedTxnRuntime:
 
         return step
 
-    def _pop_compiled(self, templates_meta, tpl_idx: int, bucket: int):
-        key = (tpl_idx, bucket)
+    def _pop_compiled(self, templates_meta, tpl_idx: int, bucket: int, *,
+                      pspec=None):
+        pspec = self.pspec if pspec is None else pspec
+        key = (pspec, tpl_idx, bucket)
         if key not in self._pop_fns:
             from repro.core.population import populate_step
 
             lspec, n, axes = self.lspec, self.n, self.axes
-            pspec = self.pspec
             direction, edge_label = templates_meta[tpl_idx]
 
             def local_pop(store_exec, store_commit, cache, ttable, roots,

@@ -33,12 +33,20 @@ from repro.graphstore.partition import (
     store_bytes_report,
 )
 from repro.graphstore.maintenance import (
+    DeviceGate,
     MaintenancePolicy,
     block_occupancy,
     compact_block,
     compact_store,
     decide_maintenance,
+    grow_block_local,
     grow_store,
+)
+from repro.graphstore.journal import (
+    EpochRegistry,
+    FlushError,
+    WriteBehindJournal,
+    replay,
 )
 from repro.graphstore.mutations import (
     AppliedMutations,
@@ -71,11 +79,17 @@ __all__ = [
     "geid_slot_lookup",
     "rebuild_geid_index",
     "MaintenancePolicy",
+    "DeviceGate",
     "block_occupancy",
     "compact_block",
     "compact_store",
     "decide_maintenance",
+    "grow_block_local",
     "grow_store",
+    "WriteBehindJournal",
+    "EpochRegistry",
+    "FlushError",
+    "replay",
     "MutationBatch",
     "AppliedMutations",
     "make_mutation_batch",

@@ -1,0 +1,563 @@
+"""Write-behind durability for the partitioned store: an append-only
+journal of committed gRW mutation batches, a coalescing async flusher, and
+checkpoint/replay that reconstructs a crashed shard's blocks byte-for-byte.
+
+The paper's cache sits on a storage manager that acknowledges commits from
+an in-memory write path and persists them asynchronously (FDB's resolver →
+storage-server pipeline); our partitioned tier so far had only the
+in-memory half — a restart lost every block. This module is the durability
+layer of SNIPPETS.md's write-behind pattern: commits land in the device
+store immediately, a **dirty-owner map** + **write queue** absorb the
+burst, and a **flusher** persists them behind the serve loop with bounded
+retry/backoff (``distributed.fault.RetryPolicy``), so durability is off
+the commit critical path but never lost once flushed.
+
+Record format
+=============
+
+The journal is a sequence of self-delimiting frames::
+
+    MAGIC(4s) | seq(u64 LE) | rtype(u8) | payload_len(u32 LE) |
+    crc32(payload)(u32 LE) | payload
+
+- ``rtype=COMMIT`` — one committed gRW ``MutationBatch``. The payload is a
+  JSON spec (field names, shapes, dtypes, plus the commit's *effective
+  step config*: write policy and on-device maintenance gate) followed by
+  the concatenated raw array bytes. The step config is recorded because
+  replay must re-run each commit through the **same compiled step** the
+  live run used: the on-device compaction gate (``DeviceGate``) makes
+  block-layout changes part of the commit program, and they are a pure
+  function of (store, batch, gate) — recording the gate makes replay a
+  deterministic re-execution, byte-identical including layout.
+- ``rtype=COMPACT`` — a host-scheduled compaction tick (purge flag in the
+  payload). Journaled so replay reproduces block layout *and* purge
+  reclamation at exactly the recorded point in the commit order.
+- ``rtype=GROW`` — a capacity change (new ``e_blk_cap`` /
+  ``recent_blk_cap``). Journaled so replay grows at the same point.
+
+A **torn tail** (crashed writer) is detected by a short frame or a crc
+mismatch and cleanly ignored: every complete frame before it replays, the
+partial one is discarded — exactly the un-flushed window the write-behind
+trade-off already concedes (bounded by ``journal_lag_batches``).
+
+Coalescing rules
+================
+
+The flusher is a **group-commit** coalescer: each flush cycle drains the
+whole pending queue and persists it as ONE write+fsync, so k bursty
+commits cost one I/O round-trip instead of k. Records are **never merged
+or reordered** — replay fidelity requires the exact commit order — so
+"coalescing" here means batching I/O (and clearing the dirty-owner map
+wholesale), not collapsing updates to the same key the way a KV
+write-behind cache may. A flush that fails mid-write leaves garbage past
+the last durable offset; the retry (bounded, exponential backoff)
+truncates back to the durable offset and rewrites the whole group, so a
+record is never lost and never persisted twice (idempotent replay needs no
+dedup — but replay *also* filters ``seq <= checkpoint seq``, which makes a
+crash between checkpoint-publish and journal-truncate harmless).
+
+Epoch / purge invariants
+========================
+
+``compact_block(purge=True)`` reclaims tombstone lanes; a later mutation
+naming a purged geid then resolves to "not found" instead of the slot
+pre-image. ``EpochRegistry`` makes purge safe to enable in the serve loop:
+
+- the registry's epoch is the store's commit version; readers (in-flight
+  gR snapshots, checkpoint writers) **pin** the epoch they read at;
+- purge is allowed only when ``min pinned epoch >= store version`` (no
+  reader holds a snapshot that could still observe a pre-image) **and**
+  the journal's checkpoint covers the store version (recovery never
+  restores a pre-purge snapshot and replays across the purge from state
+  the purge already mutated away);
+- tombstones are created by commits, so every tombstone's epoch is at
+  most the store version — gating on the store version purges exactly the
+  tombstones older than the min pinned epoch + checkpoint, at whole-block
+  granularity.
+
+Purge events that do run are journaled (COMPACT records / COMMIT gate
+configs), so recovery reproduces them deterministically and the
+crash/restart byte-identity pin holds with purge enabled.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+import zlib
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+from repro.distributed.fault import RetryPolicy
+from repro.graphstore.maintenance import DeviceGate
+from repro.graphstore.mutations import MutationBatch
+
+_MAGIC = b"GJL1"
+_HEADER = struct.Struct("<4sQBII")  # magic, seq, rtype, payload_len, crc32
+
+REC_COMMIT = 1
+REC_COMPACT = 2
+REC_GROW = 3
+
+
+class FlushError(RuntimeError):
+    """The flusher exhausted its bounded retries; records stay pending."""
+
+
+def _serialize_arrays(fields: dict, meta: dict) -> bytes:
+    """JSON spec + concatenated raw bytes for a dict of numpy arrays."""
+    spec, blobs = [], []
+    for name, arr in fields.items():
+        a = np.asarray(arr)
+        spec.append({"name": name, "shape": list(a.shape), "dtype": str(a.dtype)})
+        # note ascontiguousarray AFTER recording the shape: it promotes 0-d
+        # scalars (the batch count fields) to 1-d
+        blobs.append(np.ascontiguousarray(a).tobytes())
+    head = json.dumps({"fields": spec, "meta": meta}).encode()
+    return struct.pack("<I", len(head)) + head + b"".join(blobs)
+
+
+def _deserialize_arrays(payload: bytes):
+    (hlen,) = struct.unpack_from("<I", payload, 0)
+    head = json.loads(payload[4 : 4 + hlen].decode())
+    off = 4 + hlen
+    fields = {}
+    for f in head["fields"]:
+        dt = np.dtype(f["dtype"])
+        n = int(np.prod(f["shape"], dtype=np.int64)) * dt.itemsize
+        fields[f["name"]] = np.frombuffer(
+            payload[off : off + n], dtype=dt
+        ).reshape(f["shape"])
+        off += n
+    return fields, head["meta"]
+
+
+def encode_commit(batch: MutationBatch, *, policy: str = "write-around",
+                  gate: Optional[DeviceGate] = None) -> bytes:
+    """Payload of a COMMIT record: the batch arrays + effective step config."""
+    fields = {f: np.asarray(getattr(batch, f)) for f in MutationBatch._fields}
+    meta = {"policy": policy}
+    if gate is not None:
+        meta["gate"] = [float(gate.recent_fill_frac), bool(gate.purge)]
+    return _serialize_arrays(fields, meta)
+
+
+def decode_commit(payload: bytes):
+    """Inverse of ``encode_commit`` → ``(MutationBatch, policy, gate)``."""
+    import jax.numpy as jnp
+
+    fields, meta = _deserialize_arrays(payload)
+    batch = MutationBatch(**{
+        f: jnp.asarray(fields[f]) for f in MutationBatch._fields
+    })
+    gate = meta.get("gate")
+    if gate is not None:
+        gate = DeviceGate(recent_fill_frac=gate[0], purge=bool(gate[1]))
+    return batch, meta["policy"], gate
+
+
+class JournalRecord(NamedTuple):
+    seq: int
+    rtype: int
+    payload: bytes
+
+
+class EpochRegistry:
+    """Geid liveness epochs: readers pin the store version they read at;
+    purge reclaims only behind the min pinned epoch + journal checkpoint
+    (module docstring). Thread-safe — the flusher thread and serve loop
+    both touch it."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pins: dict[int, int] = {}
+        self._next_token = 0
+        self.current = 0
+
+    def advance(self, epoch: int) -> None:
+        """Record a new committed store version (monotone)."""
+        with self._lock:
+            self.current = max(self.current, int(epoch))
+
+    def pin(self, epoch: Optional[int] = None) -> int:
+        """Pin an epoch (default: current); returns a release token."""
+        with self._lock:
+            tok = self._next_token
+            self._next_token += 1
+            self._pins[tok] = self.current if epoch is None else int(epoch)
+            return tok
+
+    def release(self, token: int) -> None:
+        with self._lock:
+            self._pins.pop(token, None)
+
+    def min_pinned(self) -> int:
+        """The oldest live snapshot's epoch (current epoch when none)."""
+        with self._lock:
+            return min(self._pins.values(), default=self.current)
+
+    def safe_to_purge(self, store_version: int,
+                      journal: Optional["WriteBehindJournal"] = None) -> bool:
+        """True iff every tombstone (epoch <= store_version) is older than
+        the min pinned epoch and covered by the journal checkpoint."""
+        if self.min_pinned() < int(store_version):
+            return False
+        if journal is not None and journal.checkpoint_version < int(store_version):
+            return False
+        return True
+
+
+class WriteBehindJournal:
+    """Append-only write-behind journal + coalescing flusher + checkpoints.
+
+    ``append_commit`` is the write-behind acceptance point: it enqueues the
+    record and marks the touched owners dirty, O(batch) host work and no
+    I/O. ``flush`` (or the background thread started by ``start``) is the
+    coalescing drainer; ``checkpoint``/``recover`` bound replay time.
+
+    ``flush_fault`` is the fault-injection hook: called with the attempt
+    index *after* the group's bytes are staged but before they become
+    durable — raising simulates a torn flush (partial bytes on disk), which
+    the bounded-retry path must absorb without losing or duplicating
+    records.
+    """
+
+    def __init__(self, root: str, n_shards: int, *,
+                 retry: Optional[RetryPolicy] = None,
+                 flush_fault: Optional[Callable[[int], None]] = None):
+        self.root = root
+        self.n = n_shards
+        self.retry = retry if retry is not None else RetryPolicy(max_attempts=4)
+        self.flush_fault = flush_fault
+        os.makedirs(root, exist_ok=True)
+        self.log_path = os.path.join(root, "wal.log")
+        self.meta_path = os.path.join(root, "journal_meta.json")
+        self.ckpt_dir = os.path.join(root, "ckpt")
+        self._lock = threading.Lock()
+        self._flush_lock = threading.Lock()  # one flusher at a time
+        self._pending: list[JournalRecord] = []
+        self._dirty_owners: set[int] = set()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.epochs = EpochRegistry()
+        # monotone counters (guarded by _lock where racy)
+        self.next_seq = 1
+        self.durable_seq = 0
+        self._durable_offset = 0
+        self.checkpoint_seq = 0
+        self.checkpoint_version = 0
+        self.flushes = 0
+        self.flush_retries = 0
+        self.flush_failures = 0
+        self.flushed_records = 0
+        self.flushed_bytes = 0
+        self._load_meta()
+
+    # ------------------------------------------------------------- appends
+    def _append(self, rtype: int, payload: bytes) -> int:
+        with self._lock:
+            seq = self.next_seq
+            self.next_seq += 1
+            self._pending.append(JournalRecord(seq, rtype, payload))
+            return seq
+
+    def append_commit(self, batch: MutationBatch, *, policy: str = "write-around",
+                      gate: Optional[DeviceGate] = None,
+                      commit_version: Optional[int] = None) -> int:
+        """Accept one committed gRW batch into the write-behind queue and
+        mark the owners its mutation sections touch dirty."""
+        seq = self._append(REC_COMMIT, encode_commit(batch, policy=policy, gate=gate))
+        owners = set()
+        for ids, cnt in (
+            (batch.ne_src, batch.ne_n), (batch.ne_dst, batch.ne_n),
+            (batch.de_eid, batch.de_n), (batch.se_eid, batch.se_n),
+        ):
+            k = int(cnt)
+            if k:
+                # edge sections touch owner blocks; eids proxy via geid % n
+                # is unknowable host-side for de/se without a lookup, so the
+                # dirty map is conservative there (all owners dirty)
+                vals = np.asarray(ids)[:k]
+                if ids is batch.de_eid or ids is batch.se_eid:
+                    owners.update(range(self.n))
+                else:
+                    owners.update(int(o) for o in np.unique(vals % self.n))
+        with self._lock:
+            self._dirty_owners |= owners
+        if commit_version is not None:
+            self.epochs.advance(commit_version)
+        return seq
+
+    def append_compact(self, *, purge: bool = False) -> int:
+        """Journal a host-scheduled compaction tick (layout + purge replay)."""
+        payload = json.dumps({"purge": bool(purge)}).encode()
+        return self._append(REC_COMPACT, payload)
+
+    def append_grow(self, e_blk_cap: int, recent_blk_cap: int) -> int:
+        """Journal a capacity change (replayed at the same point)."""
+        payload = json.dumps({
+            "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
+        }).encode()
+        return self._append(REC_GROW, payload)
+
+    # ------------------------------------------------------------- flusher
+    def _frame(self, rec: JournalRecord) -> bytes:
+        return _HEADER.pack(
+            _MAGIC, rec.seq, rec.rtype, len(rec.payload),
+            zlib.crc32(rec.payload) & 0xFFFFFFFF,
+        ) + rec.payload
+
+    def flush(self) -> int:
+        """Group-commit the pending queue: one write+fsync for the whole
+        group, bounded-retry on injected/real failures (truncate to the
+        durable offset, rewrite the group — no loss, no duplicates).
+        Returns the number of records made durable."""
+        with self._flush_lock:
+            return self._flush_locked()
+
+    def _flush_locked(self) -> int:
+        with self._lock:
+            group = list(self._pending)
+        if not group:
+            return 0
+        buf = b"".join(self._frame(r) for r in group)
+        attempt_box = [0]
+
+        def write_group():
+            attempt = attempt_box[0]
+            attempt_box[0] += 1
+            with open(self.log_path, "ab") as f:
+                # discard any torn bytes a failed attempt left behind
+                f.truncate(self._durable_offset)
+                f.seek(self._durable_offset)
+                half = len(buf) // 2
+                f.write(buf[:half])
+                f.flush()
+                if self.flush_fault is not None:
+                    self.flush_fault(attempt)  # may raise: torn flush
+                f.write(buf[half:])
+                f.flush()
+                os.fsync(f.fileno())
+
+        def on_retry(attempt, exc):
+            self.flush_retries += 1
+
+        try:
+            self.retry.run(write_group, on_retry=on_retry)
+        except Exception as e:  # noqa: BLE001 — surfaced as flusher state
+            self.flush_failures += 1
+            raise FlushError(
+                f"flush failed after {self.retry.max_attempts} attempts: {e}"
+            ) from e
+        with self._lock:
+            self._durable_offset += len(buf)
+            self.durable_seq = group[-1].seq
+            # records appended while we were writing stay pending
+            self._pending = self._pending[len(group):]
+            if not self._pending:
+                self._dirty_owners.clear()
+            self.flushes += 1
+            self.flushed_records += len(group)
+            self.flushed_bytes += len(buf)
+        self._save_meta()
+        return len(group)
+
+    def start(self, interval: float = 0.005) -> None:
+        """Start the async flusher thread (idempotent)."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    if self._pending:
+                        self.flush()
+                except FlushError:
+                    pass  # counted; records stay pending for the next cycle
+                self._stop.wait(interval)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self, *, final_flush: bool = True) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if final_flush and self._pending:
+            self.flush()
+
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        with self._lock:
+            pending = len(self._pending)
+            dirty = len(self._dirty_owners)
+        return {
+            "journal_lag_batches": (self.next_seq - 1) - self.durable_seq,
+            "flush_queue_depth": pending,
+            "dirty_owners": dirty,
+            "flushes": self.flushes,
+            "flush_retries": self.flush_retries,
+            "flush_failures": self.flush_failures,
+            "flushed_records": self.flushed_records,
+            "flushed_bytes": self.flushed_bytes,
+            "durable_seq": self.durable_seq,
+            "checkpoint_seq": self.checkpoint_seq,
+            "pinned_epoch_min": self.epochs.min_pinned(),
+        }
+
+    # -------------------------------------------------------- meta durable
+    def _save_meta(self) -> None:
+        tmp = self.meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({
+                "durable_seq": self.durable_seq,
+                "durable_offset": self._durable_offset,
+                "checkpoint_seq": self.checkpoint_seq,
+                "checkpoint_version": self.checkpoint_version,
+            }, f)
+        os.replace(tmp, self.meta_path)
+
+    def _load_meta(self) -> None:
+        if os.path.exists(self.meta_path):
+            with open(self.meta_path) as f:
+                m = json.load(f)
+            self.checkpoint_seq = int(m.get("checkpoint_seq", 0))
+            self.checkpoint_version = int(m.get("checkpoint_version", 0))
+        # the log itself is the durability ground truth: a flush that landed
+        # but crashed before the meta rewrite must keep its seqs (replay
+        # reads them), and a torn group's complete prefix frames stay valid
+        off, seq = 0, 0
+        if os.path.exists(self.log_path):
+            with open(self.log_path, "rb") as f:
+                data = f.read()
+            while off + _HEADER.size <= len(data):
+                magic, s, _rt, plen, crc = _HEADER.unpack_from(data, off)
+                end = off + _HEADER.size + plen
+                if magic != _MAGIC or end > len(data):
+                    break
+                body = data[off + _HEADER.size : end]
+                if (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+                    break
+                seq, off = s, end
+        self.durable_seq, self._durable_offset = seq, off
+        self.next_seq = seq + 1
+
+    # ----------------------------------------------------------- read path
+    def read_records(self, *, after_seq: int = 0) -> list[JournalRecord]:
+        """Scan every complete frame with ``seq > after_seq``; a torn tail
+        (short frame / crc mismatch) ends the scan cleanly."""
+        out: list[JournalRecord] = []
+        if not os.path.exists(self.log_path):
+            return out
+        with open(self.log_path, "rb") as f:
+            data = f.read()
+        off = 0
+        while off + _HEADER.size <= len(data):
+            magic, seq, rtype, plen, crc = _HEADER.unpack_from(data, off)
+            if magic != _MAGIC or off + _HEADER.size + plen > len(data):
+                break  # torn tail
+            payload = data[off + _HEADER.size : off + _HEADER.size + plen]
+            if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+                break  # torn tail
+            if seq > after_seq:
+                out.append(JournalRecord(seq, rtype, bytes(payload)))
+            off += _HEADER.size + plen
+        return out
+
+    # --------------------------------------------------- checkpoint/replay
+    def checkpoint(self, pstore, *, e_blk_cap: int, recent_blk_cap: int,
+                   store_version: int) -> str:
+        """Snapshot the partitioned store (``checkpoint.ckpt`` atomic +
+        compressed) covering every appended record, then advance the
+        checkpoint watermark. The block-layout spec at snapshot time is
+        recorded so recovery rebuilds the right shapes before replaying
+        (a later GROW record changes them again at the recorded point)."""
+        from repro.checkpoint import save_checkpoint
+
+        self.flush()
+        with self._lock:
+            seq = self.next_seq - 1
+        path = save_checkpoint(self.ckpt_dir, seq, pstore)
+        spec_meta = {
+            "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
+            "store_version": int(store_version),
+        }
+        with open(os.path.join(path, "journal.json"), "w") as f:
+            json.dump(spec_meta, f)
+        self.checkpoint_seq = seq
+        self.checkpoint_version = int(store_version)
+        self._save_meta()
+        return path
+
+    def latest_checkpoint(self):
+        """``(seq, spec_meta)`` of the newest checkpoint, or ``None``."""
+        from repro.checkpoint import latest_step
+
+        seq = latest_step(self.ckpt_dir)
+        if seq is None:
+            return None
+        with open(os.path.join(self.ckpt_dir, f"step_{seq}", "journal.json")) as f:
+            return seq, json.load(f)
+
+
+def replay(journal: WriteBehindJournal, rt, ttable, *,
+           default_policy: str = "write-around"):
+    """Reconstruct the partitioned store of a crashed shard group:
+    ``restore(latest checkpoint)`` then re-apply every durable journal
+    record after it, each through the same runtime step family the live
+    run used (COMMIT → the recorded (policy, gate) gRW step; COMPACT →
+    the compaction pass; GROW → capacity growth). The store path of the
+    gRW step is independent of cache state, so replay against an empty
+    cache reproduces the pre-crash ``PartitionedGraphStore`` byte-for-byte
+    — ``replay(checkpoint, journal) ≡ pre-crash store``.
+
+    Returns ``(pstore, last_seq, info)``.
+    """
+    from repro.checkpoint import restore_checkpoint
+    from repro.graphstore.partition import abstract_partitioned_store
+
+    ck = journal.latest_checkpoint()
+    info = {"replayed_commits": 0, "replayed_compactions": 0,
+            "replayed_growths": 0}
+    if ck is None:
+        raise FileNotFoundError(
+            f"no checkpoint under {journal.ckpt_dir}; recovery needs at "
+            f"least one (journal records only deltas)"
+        )
+    seq, spec_meta = ck
+    rt.set_block_capacity(
+        spec_meta["e_blk_cap"], recent_blk_cap=spec_meta["recent_blk_cap"]
+    )
+    template = abstract_partitioned_store(rt.pspec)
+    pstore = restore_checkpoint(
+        journal.ckpt_dir, seq, template, shardings=rt.store_sharding()
+    )
+    cache = rt.empty_cache()
+    last = seq
+    for rec in journal.read_records(after_seq=seq):
+        if rec.rtype == REC_COMMIT:
+            batch, policy, gate = decode_commit(rec.payload)
+            pstore, _, _ = rt.run_grw_tx(
+                pstore, cache, ttable, batch,
+                policy=policy or default_policy, gate=gate,
+                occupancy_metrics=False,
+            )
+            info["replayed_commits"] += 1
+        elif rec.rtype == REC_COMPACT:
+            purge = json.loads(rec.payload.decode())["purge"]
+            pstore = rt.compact_step(purge)(pstore)
+            info["replayed_compactions"] += 1
+        elif rec.rtype == REC_GROW:
+            m = json.loads(rec.payload.decode())
+            pstore = rt.grow_blocks(
+                pstore, m["e_blk_cap"], recent_blk_cap=m["recent_blk_cap"]
+            )
+            info["replayed_growths"] += 1
+        last = rec.seq
+    journal.epochs.advance(int(np.asarray(pstore.version)))
+    return pstore, last, info

@@ -72,6 +72,21 @@ from repro.utils import PROP_MISSING, take_along0
 
 
 # ------------------------------------------------------------- compaction
+class DeviceGate(NamedTuple):
+    """Static config of the on-device maintenance gate compiled into a gRW
+    step (``ShardedTxnRuntime.grw_step(gate=...)``): each shard compacts
+    its own blocks inside the commit program (``lax.cond``) once a block's
+    recent fill crosses ``recent_fill_frac`` of the append-scan window —
+    no per-batch host round-trip, and the decision is a pure function of
+    (store, batch, gate), so journal replay of the same commits through the
+    same gated step reproduces block layout deterministically. ``purge``
+    additionally reclaims tombstone lanes (enable it per batch only when
+    ``journal.EpochRegistry.safe_to_purge`` says so)."""
+
+    recent_fill_frac: float = 0.5
+    purge: bool = False
+
+
 def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
                   purge: bool = False) -> EdgeBlock:
     """Merge one shard's block recent region into its sorted CSR body.
@@ -180,6 +195,39 @@ def grow_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
         )
 
     return new_pspec, ps._replace(out=blk(ps.out), inc=blk(ps.inc))
+
+
+def grow_block_local(pspec: PartitionedStoreSpec,
+                     new_pspec: PartitionedStoreSpec,
+                     blk: EdgeBlock) -> EdgeBlock:
+    """Device-resident single-shard grow: pad one *local* block view (the
+    slice a shard sees inside ``shard_map``) from ``pspec.e_blk_cap`` to
+    ``new_pspec.e_blk_cap``. Jittable, owner-local, no collectives — this is
+    the hot-swap pause: with the next tier's steps precompiled, swapping
+    capacity costs one run of this pad program instead of a host re-pad +
+    recompile. Fills match ``grow_store`` exactly (existing rows keep their
+    slots; the geid→slot index extends with the ascending new tail, legal
+    because allocated slots are a block prefix), so the result is
+    byte-identical to the host path / ``partition_store`` under the grown
+    spec."""
+    EB, NE = pspec.e_blk_cap, new_pspec.e_blk_cap
+    assert NE >= EB, (NE, EB)
+    ext = NE - EB
+
+    def pad(a, fill):
+        tail = jnp.full((ext,) + a.shape[1:], fill, a.dtype)
+        return jnp.concatenate([a, tail], axis=0)
+
+    return EdgeBlock(
+        key=pad(blk.key, INT32_MAX), other=pad(blk.other, -1),
+        label=pad(blk.label, -1), alive=pad(blk.alive, False),
+        props=pad(blk.props, np.int32(int(PROP_MISSING))),
+        geid=pad(blk.geid, -1),
+        gperm=jnp.concatenate(
+            [blk.gperm, jnp.arange(EB, NE, dtype=jnp.int32)]
+        ),
+        indptr=blk.indptr, blk_len=blk.blk_len, csr_len=blk.csr_len,
+    )
 
 
 # ---------------------------------------------------------------- metrics

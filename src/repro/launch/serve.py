@@ -7,15 +7,27 @@ report hit/overflow statistics plus the storage-tier memory profile.
 
 The loop exercises the full serving life-cycle on a host:
 
-- gR-Tx batches through ``ShardedTxnRuntime.serve_step``;
+- gR-Tx batches through ``ShardedTxnRuntime.serve_step``, each pinning its
+  read epoch in the journal's ``EpochRegistry`` (the liveness fence that
+  makes tombstone purge safe to enable);
 - the **sharded MissQueue drain**: ``serve_step``'s per-shard miss records
   land in per-owner CP queues (``ShardedMissDrain``) and each CP batch
   executes + inserts at a single owner shard — no host-side global-FIFO
   round-trip;
-- interleaved gRW-Tx commits (``--write-every``) that fill the block recent
-  regions, and **maintenance ticks** between batches: owner-local block
-  compaction + capacity growth per ``MaintenancePolicy``, so the loop can
-  run indefinitely without a host-side repartition.
+- interleaved gRW-Tx commits (``--write-every``) with the **on-device
+  maintenance gate**: the commit step itself compacts over-threshold
+  blocks inside ``lax.cond`` (no per-batch host round-trip), with purge
+  enabled per commit only when ``EpochRegistry.safe_to_purge`` allows;
+- **write-behind durability**: every commit is appended to the
+  ``WriteBehindJournal`` (async coalescing flusher runs behind the loop)
+  and checkpointed every ``--checkpoint-every`` commits, so a crashed
+  run restarts via ``journal.replay`` instead of losing the store;
+- **hitless capacity growth**: when commit metrics cross the occupancy
+  high-water, the next tier's gR/gRW/CP steps compile on a background
+  thread (``precompile_next_tier``) while serving continues on the current
+  tier; the store hot-swaps at a batch boundary (``swap_to_next_tier``)
+  once they are ready — the growth pause is one device pad, not a
+  recompile.
 
 On a real fleet the same ``ShardedTxnRuntime.serve_step`` compiles on the
 production mesh (``graph_serve.config_cell`` / launch/dryrun.py prove it);
@@ -26,6 +38,7 @@ end-to-end on a host.
 from __future__ import annotations
 
 import argparse
+import tempfile
 import time
 
 import numpy as np
@@ -46,7 +59,18 @@ def main(argv=None):
                     help="apply a small gRW commit every N batches "
                          "(0 disables writes; partitioned tier only)")
     ap.add_argument("--no-maintenance", action="store_true",
-                    help="disable the between-batch maintenance ticks")
+                    help="disable the on-device maintenance gate and "
+                         "hitless growth")
+    ap.add_argument("--journal-dir", default=None,
+                    help="write-behind journal root (default: a tempdir; "
+                         "pass a persistent path to make restarts real)")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="disable write-behind durability")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="checkpoint the store every N commits")
+    ap.add_argument("--purge", action="store_true",
+                    help="reclaim tombstones at gated compactions when the "
+                         "liveness epoch allows")
     args = ap.parse_args(argv)
 
     if args.shards > 1:
@@ -54,14 +78,16 @@ def main(argv=None):
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.shards}"
         ).strip()
-    import jax.numpy as jnp
+    import jax
 
     from repro.distributed.graph_serve import (
         GraphServeConfig, ShardedMissDrain, ShardedTxnRuntime, config_espec,
         config_plan_and_ttable,
     )
     from repro.distributed.sharding import flat_mesh
-    from repro.graphstore import MaintenancePolicy, make_mutation_batch
+    from repro.graphstore import (
+        DeviceGate, MaintenancePolicy, WriteBehindJournal, make_mutation_batch,
+    )
     from repro.graphstore.store import ingest
 
     cfg = GraphServeConfig(
@@ -104,18 +130,53 @@ def main(argv=None):
     # per-owner CP queues: each shard's miss records drain at that shard
     drain = ShardedMissDrain(rt, tpl_meta)
     policy = MaintenancePolicy(recent_fill_frac=0.5, grow_occupancy_frac=0.85)
+    maintain = partitioned and not args.no_maintenance
+    gate_base = DeviceGate(recent_fill_frac=policy.recent_fill_frac)
+
+    journal = None
+    if partitioned and not args.no_journal:
+        root = args.journal_dir or os.path.join(
+            tempfile.mkdtemp(prefix="serve-journal-"), "journal"
+        )
+        journal = WriteBehindJournal(root, rt.n)
+        journal.checkpoint(
+            sstate, e_blk_cap=rt.pspec.e_blk_cap,
+            recent_blk_cap=rt.pspec.recent_blk_cap,
+            store_version=int(jax.device_get(sstate.version)),
+        )
+        journal.start()  # async coalescing flusher behind the loop
+        print(f"journal: {root} (checkpoint every "
+              f"{args.checkpoint_every} commits)")
 
     total = dict(requests=0, hits=0, misses=0, route_overflow=0)
-    maint = dict(compactions=0, growths=0, commits=0, append_overflow=0)
+    maint = dict(device_compactions=0, growths=0, commits=0,
+                 append_overflow=0, purges=0)
     t0 = time.time()
     for b in range(args.batches):
+        # hot-swap at the batch boundary once the background pre-compile
+        # of the next capacity tier is ready
+        if maintain and rt._next_tier is not None and rt._next_tier.ready.is_set():
+            sstate, swap = rt.swap_to_next_tier(sstate)
+            if journal is not None:
+                journal.append_grow(
+                    rt.pspec.e_blk_cap, rt.pspec.recent_blk_cap
+                )
+            maint["growths"] += 1
+            print(f"batch {b}: hot-swapped to e_blk_cap="
+                  f"{swap['e_blk_cap']} in {swap['swap_seconds']*1e3:.1f} ms "
+                  f"(precompiled {swap['compiled_steps']} steps in "
+                  f"{swap['precompile_seconds']:.1f} s off-loop)")
         roots = rng.integers(0, V, args.batch).astype(np.int32)
+        # pin the gR snapshot's epoch: purge may not reclaim under us
+        pin = journal.epochs.pin() if journal is not None else None
         res, misses, m = rt.run_gr_tx_batch(sstate, cache, ttable, plan, roots)
         for k in total:
             total[k] += int(m[k])
         # CP-per-shard: misses route to their owner's queue and drain there
         drain.push(misses)
         cache = drain.drain(sstate, sstate, cache, ttable, 512)
+        if pin is not None:
+            journal.epochs.release(pin)
         wm = None
         if partitioned and args.write_every and (b + 1) % args.write_every == 0:
             # a small upsert burst lands in the block recent regions
@@ -125,21 +186,51 @@ def main(argv=None):
                 for _ in range(8)
             ]
             mb = make_mutation_batch(espec.store, new_edges=ne)
-            sstate, cache, wm = rt.run_grw_tx(sstate, cache, ttable, mb)
+            gate = None
+            if maintain:
+                # purge only behind the liveness epoch + journal checkpoint
+                purge_ok = args.purge and journal is not None and (
+                    journal.epochs.safe_to_purge(
+                        journal.epochs.current, journal
+                    )
+                )
+                gate = gate_base._replace(purge=purge_ok)
+                maint["purges"] += int(purge_ok)
+            sstate, cache, wm = rt.run_grw_tx(
+                sstate, cache, ttable, mb, gate=gate, journal=journal
+            )
             # under --no-maintenance this is the degradation signal the
             # flag exists to demonstrate — report it, don't crash on it
             maint["append_overflow"] += wm["store_append_overflow"]
+            maint["device_compactions"] += wm.get("device_compactions", 0)
             maint["commits"] += 1
-        if partitioned and not args.no_maintenance and wm is not None:
-            # occupancy/recent fill only move on commits, so ticks run (and
-            # read signals) only on commit batches — reusing the occupancy
-            # the commit metrics already carry
-            sstate, tick = rt.maintenance_tick(sstate, policy, occupancy=dict(
-                max_occupancy=wm["store_occupancy_max"],
-                max_recent_fill=wm["store_recent_fill_max"],
-            ))
-            maint["compactions"] += int(tick["compacted"])
-            maint["growths"] += int(tick["grown_to"] is not None)
+            if journal is not None and maint["commits"] % args.checkpoint_every == 0:
+                journal.checkpoint(
+                    sstate, e_blk_cap=rt.pspec.e_blk_cap,
+                    recent_blk_cap=rt.pspec.recent_blk_cap,
+                    store_version=int(jax.device_get(sstate.version)),
+                )
+        if (
+            maintain and wm is not None and rt._next_tier is None
+            and wm["store_occupancy_max"] >= policy.grow_occupancy_frac
+        ):
+            # occupancy high-water: compile the next tier in the background
+            # while this tier keeps serving; the swap happens at a later
+            # batch boundary
+            rt.precompile_next_tier(
+                int(np.ceil(rt.pspec.e_blk_cap * policy.growth_factor)),
+                ttable,
+                gr_plans=[(plan, max(args.batch, rt.n))],
+                grw_policies=[("write-around", gate_base),
+                              ("write-around",
+                               gate_base._replace(purge=True))]
+                if args.purge else [("write-around", gate_base)],
+                compact_purges=(False,),
+                pop_steps=[(tpl_meta, 0, bkt) for bkt in (8, 16, 32)],
+            )
+            print(f"batch {b}: occupancy "
+                  f"{wm['store_occupancy_max']:.2f} crossed high-water — "
+                  f"precompiling next tier in the background")
     dt = time.time() - t0
     assert res.shape == (args.batch, espec.result_width)
     print(
@@ -153,10 +244,26 @@ def main(argv=None):
         occ = rt.store_occupancy(sstate)
         print(
             f"maintenance: {maint['commits']} gRW commits, "
-            f"{maint['compactions']} compactions, {maint['growths']} growths, "
-            f"{maint['append_overflow']} appends dropped; "
+            f"{maint['device_compactions']} device compactions "
+            f"({maint['purges']} purge-enabled), {maint['growths']} "
+            f"hot-swaps, {maint['append_overflow']} appends dropped; "
             f"occupancy max {occ['max_occupancy']:.3f}, recent fill max "
             f"{occ['max_recent_fill']}/{occ['recent_blk_cap']}"
+        )
+    if journal is not None:
+        journal.stop(final_flush=True)
+        jm = journal.metrics()
+        total.update({k: jm[k] for k in (
+            "journal_lag_batches", "flush_queue_depth", "pinned_epoch_min",
+        )})
+        total["swap_events"] = rt.swap_events
+        print(
+            f"durability: journal_lag_batches={jm['journal_lag_batches']} "
+            f"flush_queue_depth={jm['flush_queue_depth']} "
+            f"flushes={jm['flushes']} flushed_records={jm['flushed_records']} "
+            f"checkpoint_seq={jm['checkpoint_seq']} "
+            f"pinned_epoch_min={jm['pinned_epoch_min']} "
+            f"swap_events={rt.swap_events}"
         )
     return total
 

@@ -1,0 +1,261 @@
+"""Durability + hitless elasticity on the 8-virtual-device sharded runtime.
+
+Two pins, run in subprocesses so XLA_FLAGS can create the host devices
+before jax initializes (same pattern as ``test_maintenance_runtime``):
+
+- **Crash/restart byte-identity** — a gR/gRW stream with on-device gated
+  compaction (including a tombstone purge enabled behind the liveness
+  epoch), a host-scheduled compaction, and a mid-stream capacity growth is
+  journaled write-behind; after a simulated kill (fresh runtime + journal
+  objects, torn bytes at the log tail), ``journal.replay`` reconstructs
+  the partitioned store byte-for-byte and subsequent gR results/metrics
+  are identical to the uninterrupted run.
+
+- **Hitless hot-swap identity** — while the next capacity tier's steps
+  compile on a background thread, serving continues on the current tier;
+  the swap at a batch boundary changes no served byte vs a never-grown
+  control run, the new tier's steps are compiled *before* the swap
+  (double-buffered), and the outgoing tier's compiled steps survive it
+  (tier-scoped invalidation).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CRASH_RECOVERY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    import numpy as np
+    import jax
+    from conftest import build_world, enabled_ttable, common_watchlist_plan
+    from repro.core import CacheSpec, EngineSpec
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.graphstore import (
+        DeviceGate, WriteBehindJournal, make_mutation_batch, replay,
+    )
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+    mesh = flat_mesh(8)
+    plan = common_watchlist_plan()
+    root = os.path.join(tempfile.mkdtemp(), "journal")
+    roots = np.array([0, 3, 5, 6, 7, 11], np.int32)
+    gate = DeviceGate(recent_fill_frac=0.0)  # compact at every commit
+
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    ps = rt.partition_store(store)
+    cache = rt.empty_cache()
+    j = WriteBehindJournal(root, rt.n)
+    j.start(interval=0.001)  # async coalescing flusher behind the stream
+    j.checkpoint(ps, e_blk_cap=rt.pspec.e_blk_cap,
+                 recent_blk_cap=rt.pspec.recent_blk_cap, store_version=0)
+
+    # batch 1: a pinned gR snapshot makes purge UNSAFE for the next commit
+    pin = j.epochs.pin()
+    rt.run_gr_tx_batch(ps, cache, ttable, plan, roots)
+    mb1 = make_mutation_batch(
+        spec, new_edges=[(0, 11, 0, [1]), (3, 6, 0, [0])],
+        set_vprops=[(7, 0, 1)],
+    )
+    ps, cache, m1 = rt.run_grw_tx(ps, cache, ttable, mb1, gate=gate, journal=j)
+    assert m1["device_compactions"] > 0, m1
+    assert not j.epochs.safe_to_purge(j.epochs.current, j)
+    j.epochs.release(pin)
+    # still unsafe: the checkpoint doesn't cover the current version yet
+    assert not j.epochs.safe_to_purge(j.epochs.current, j)
+    j.checkpoint(ps, e_blk_cap=rt.pspec.e_blk_cap,
+                 recent_blk_cap=rt.pspec.recent_blk_cap,
+                 store_version=int(jax.device_get(ps.version)))
+    assert j.epochs.safe_to_purge(j.epochs.current, j)
+
+    # batch 2: tombstones + purge enabled behind the liveness epoch
+    mb2 = make_mutation_batch(spec, del_edges=[2, 5], del_vertices=[9])
+    ps, cache, m2 = rt.run_grw_tx(
+        ps, cache, ttable, mb2, gate=gate._replace(purge=True), journal=j,
+    )
+    assert m2["device_compactions"] > 0, m2
+    assert m2["journal_lag_batches"] <= 2, m2
+
+    # mid-stream capacity growth, journaled at its point in commit order
+    ps = rt.grow_blocks(ps, rt.pspec.e_blk_cap + 13)
+    j.append_grow(rt.pspec.e_blk_cap, rt.pspec.recent_blk_cap)
+
+    # batch 3: write-through traffic on the grown tier
+    mb3 = make_mutation_batch(
+        spec, new_edges=[(1, 12, 0, [1]), (2, 13, 0, [0])],
+        set_eprops=[(1, 0, 0)],
+    )
+    ps, cache, m3 = rt.run_grw_tx(
+        ps, cache, ttable, mb3, policy="write-through", gate=gate, journal=j,
+    )
+    j.stop(final_flush=True)
+    # kill mid-write: garbage past the last durable frame (torn tail)
+    with open(j.log_path, "ab") as f:
+        f.write(b"GJL1" + b"\\x01" * 9)
+
+    res_pre, miss_pre, met_pre = rt.run_gr_tx_batch(
+        ps, rt.empty_cache(), ttable, plan, roots
+    )
+
+    # ---- crash: fresh runtime + journal objects over the same root
+    rt2 = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    j2 = WriteBehindJournal(root, rt2.n)
+    ps2, last, info = replay(j2, rt2, ttable)
+    assert info == {"replayed_commits": 2, "replayed_compactions": 0,
+                    "replayed_growths": 1}, info
+    assert rt2.pspec == rt.pspec, (rt2.pspec, rt.pspec)
+    for a, b in zip(jax.tree_util.tree_leaves(ps2),
+                    jax.tree_util.tree_leaves(ps)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+            "replayed store diverges from the pre-crash store"
+    res_post, miss_post, met_post = rt2.run_gr_tx_batch(
+        ps2, rt2.empty_cache(), ttable, plan, roots
+    )
+    assert np.array_equal(res_pre, res_post)
+    assert met_pre == met_post, (met_pre, met_post)
+    key = lambda ms: sorted(
+        (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+        for m in ms
+    )
+    assert key(miss_pre) == key(miss_post)
+    print("CRASH_RECOVERY_OK")
+    """
+)
+
+HITLESS_SWAP = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from conftest import (
+        build_world, enabled_ttable, common_watchlist_plan, TPL_META,
+    )
+    from repro.core import CacheSpec, EngineSpec, cache_entries
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import (
+        ShardedMissDrain, ShardedTxnRuntime, _plan_key,
+    )
+    from repro.graphstore import DeviceGate, make_mutation_batch
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+    mesh = flat_mesh(8)
+    plan = common_watchlist_plan()
+    gate = DeviceGate(recent_fill_frac=0.0)
+    roots = np.array([5, 6, 7, 8, 9], np.int32)
+    bucket = 8  # bucket_for(5 roots) on 8 shards
+
+    class Run:
+        def __init__(self, swap):
+            self.rt = ShardedTxnRuntime(
+                espec, mesh, route_cap_factor=None, blk_slack=1.0)
+            self.ps = self.rt.partition_store(store)
+            self.cache = self.rt.empty_cache()
+            self.swap = swap
+        def gr(self, r):
+            return self.rt.run_gr_tx_batch(
+                self.ps, self.cache, ttable, plan, r)
+        def grw(self, mb):
+            g = gate if self.swap else None
+            self.ps, self.cache, m = self.rt.run_grw_tx(
+                self.ps, self.cache, ttable, mb, gate=g)
+            return m
+
+    A, B = Run(True), Run(False)  # A hot-swaps mid-stream, B never grows
+
+    def check_gr(r):
+        ra, ma_, mta = A.gr(r)
+        rb, mb_, mtb = B.gr(r)
+        assert np.array_equal(ra, rb)
+        assert mta == mtb, (mta, mtb)
+        return ra
+
+    def check_grw(mb):
+        ma_, mb_ = A.grw(mb), B.grw(mb)
+        assert ma_["impacted_keys"] == mb_["impacted_keys"], (ma_, mb_)
+        assert cache_entries(cspec, A.cache) == cache_entries(cspec, B.cache)
+
+    check_gr(roots)
+    old_pspec = A.rt.pspec
+    old_step = A.rt._gr(plan, bucket)
+
+    # background pre-compile of the doubled tier; serving continues NOW
+    h = A.rt.precompile_next_tier(
+        old_pspec.e_blk_cap * 2, ttable,
+        gr_plans=[(plan, bucket)],
+        grw_policies=[("write-around", gate)],
+        compact_purges=(False,),
+        pop_steps=[(TPL_META, 0, 8), (TPL_META, 1, 8)],
+    )
+    mb1 = make_mutation_batch(
+        spec, new_edges=[(0, 11, 0, [1]), (3, 6, 0, [0])],
+        set_vprops=[(7, 0, 1)], del_edges=[2],
+    )
+    check_grw(mb1)  # during-precompile traffic, byte-identical
+    check_gr(np.array([0, 3, 5, 6, 7, 11], np.int32))
+    assert A.rt.pspec == old_pspec  # still serving the old tier
+    h.ready.wait(1200)
+    assert h.error is None, h.error
+    assert h.compiled >= 6, h.compiled
+    # double-buffered: the next tier's gR step exists BEFORE the swap
+    nxt_key = (h.pspec, _plan_key(plan), bucket)
+    assert nxt_key in A.rt._gr_fns
+
+    A.ps, info = A.rt.swap_to_next_tier(A.ps)
+    assert A.rt.swap_events == 1
+    assert A.rt.pspec.e_blk_cap == old_pspec.e_blk_cap * 2
+    assert info["swap_seconds"] < info["precompile_seconds"], info
+    # tier-scoped invalidation: the outgoing tier's compiled step survives
+    assert A.rt._gr_fns[(old_pspec, _plan_key(plan), bucket)] is old_step
+    # and the post-swap resolve returns the precompiled program (no retrace)
+    assert A.rt._gr(plan, bucket) is A.rt._gr_fns[nxt_key]
+
+    # post-swap traffic + CP population, still byte-identical to control
+    check_grw(make_mutation_batch(
+        spec, new_edges=[(1, 12, 0, [1]), (2, 13, 0, [0])]))
+    missA = check_gr(np.array([1, 2, 5, 12, 13], np.int32))
+    for r in (A, B):
+        drain = ShardedMissDrain(r.rt, TPL_META)
+        _, miss, _ = r.rt.run_gr_tx_batch(
+            r.ps, r.rt.empty_cache(), ttable, plan, roots)
+        drain.push(miss)
+        r.cache = drain.drain(r.ps, r.ps, r.cache, ttable)
+    assert cache_entries(cspec, A.cache) == cache_entries(cspec, B.cache)
+    check_gr(roots)
+    print("HITLESS_SWAP_OK")
+    """
+)
+
+
+def _run(script, token, timeout=1800):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=timeout,
+    )
+    assert token in out.stdout, out.stdout + out.stderr
+
+
+def test_crash_restart_replay_is_byte_identical():
+    _run(CRASH_RECOVERY, "CRASH_RECOVERY_OK")
+
+
+def test_hot_swap_is_hitless_and_tier_scoped():
+    _run(HITLESS_SWAP, "HITLESS_SWAP_OK")
