@@ -98,6 +98,19 @@ def _bench_elasticity():
     )
 
 
+def _bench_failover():
+    """Live shard failover chaos run: crash one owner mid-traffic, measure
+    the unavailability window, deferred-row fraction, degraded p95/p99, and
+    post-recovery byte-identity vs the uninterrupted run
+    (BENCH_failover.json)."""
+    from benchmarks import bench_failover
+
+    return _bench_subprocess(
+        "benchmarks.bench_failover", "BENCH_failover.json",
+        bench_failover.N_SHARDS,
+    )
+
+
 def _bench_hop_pipeline(batch=512):
     """Old vs fused hop pipeline; persists BENCH_hop_pipeline.json at the
     repo root so the perf trajectory is tracked across PRs."""
@@ -136,6 +149,9 @@ def main() -> None:
         # durability + hitless growth: hot-swap vs blocking recompile
         # across a live growth event (BENCH_elasticity.json)
         "elasticity": _bench_elasticity,
+        # live shard failover: detection, degraded serving, journal-replay
+        # recovery/migration under traffic (BENCH_failover.json)
+        "failover": _bench_failover,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
         "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
         # Table 2 + 6 (impacted keys per write type)

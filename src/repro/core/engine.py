@@ -231,7 +231,12 @@ class GraphEngine:
             store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid)
         )
         # the batch's single device->host synchronization point
-        result, miss_roots, miss_counts, m, version = jax.device_get(out)
+        result, _deferred, miss_roots, miss_counts, m, version = (
+            jax.device_get(out)
+        )
+        # _deferred is structurally always present (the sharded tier's
+        # degraded mode flags owner-down rows there) but identically False
+        # on a single host — nothing to surface beyond m["deferred"] == 0
         metrics = {k: int(v) for k, v in m.items()}
         metrics["host_syncs"] = 1
         misses = decode_miss_records(
@@ -268,7 +273,8 @@ class GraphEngine:
             "leaf_fetches": 0,
             "edges_scanned": 0,
             "cache_reads": 0,
-            "host_syncs": 1,  # int(store.version) above
+            "deferred": 0,  # degraded-mode rows: sharded-tier-only, kept
+            "host_syncs": 1,  # for structural metric identity with fused
         }
 
         for hop_idx, hop in enumerate(self.plan.hops):

@@ -263,7 +263,7 @@ class MissRecord(NamedTuple):
 
 
 # ----------------------------------------------------------- fused pipeline
-def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None):
+def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
     """One hop of the fused pipeline over a flat root frontier.
 
     Returns ``kernel(store, cache, ttable, roots_flat, rmask_flat) ->
@@ -279,6 +279,16 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None):
     ``exec_fn(store, roots, params, rmask)`` is the storage hook for the
     miss path (default: ``onehop_exec`` over a full ``GraphStore``; the
     partitioned tier supplies an owner-local block executor).
+
+    ``defer_fn() -> bool`` is the degraded-mode hook: a traced scalar that
+    is True when this shard's *storage* is marked down. Misses here then
+    **defer** instead of executing — cache hits still serve (the cache
+    tier survives an owner's storage loss), no storage gather runs, no
+    miss record is emitted (CP must not populate from a lost block), and
+    the deferred rows are encoded as ``cnt = -1`` so the home shard can
+    flag them after unrouting. With the hook absent (single host) or the
+    mask all-False (healthy mesh) the program is byte-identical to the
+    non-degraded trace — degrading is an *input* change, not a recompile.
     """
     RW = espec.result_width
     cacheable = hop.tpl_idx >= 0 and use_cache
@@ -309,6 +319,11 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None):
             leaves_c = cnt_c = None
             n_read = n_hit = jnp.int32(0)
         miss_mask = rmask_flat & ~hit
+        if defer_fn is not None:
+            deferred = miss_mask & defer_fn()
+            miss_mask = miss_mask & ~deferred
+        else:
+            deferred = jnp.zeros((BF,), bool)
         k = jnp.sum(miss_mask.astype(jnp.int32))
 
         def run_exec(args, hop=hop):
@@ -351,6 +366,9 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None):
         vals, cnt, mr, nrec, trunc_n, es, lf = jax.lax.cond(
             k > 0, run_exec, skip_exec, (roots_flat, miss_mask)
         )
+        # deferred rows ride the count channel home as -1 (their cnt is 0
+        # on both cond branches, so the encoding is unambiguous)
+        cnt = jnp.where(deferred, jnp.int32(-1), cnt)
         stats = {
             "k": k, "n_read": n_read, "hits": n_hit,
             "trunc": trunc_n, "edges": es, "leaves": lf,
@@ -386,6 +404,15 @@ class LocalPlanTier:
     program the pre-driver fused pipeline traced."""
 
     routed = False
+    # degraded-mode hooks: a single host has no owner to lose, so the plan
+    # fn takes no extra inputs and nothing ever defers
+    extra_inputs = 0
+
+    def bind(self, *extra):
+        pass
+
+    def defer_fn(self):
+        return None
 
     def exec_fn(self, hop):
         return None  # default: onehop_exec over the full store
@@ -420,25 +447,38 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
     all_to_all on a mesh); ``psum`` reduces batch-global quantities (the
     miss-phase gate must fire on *any* shard's miss); ``pack_count`` shapes
     per-hop miss counts (the sharded tier emits one segment per shard);
-    ``reduce_metrics`` globalizes additive metrics. Shape-polymorphic over
+    ``reduce_metrics`` globalizes additive metrics. ``extra_inputs`` /
+    ``bind`` / ``defer_fn`` are the degraded-mode hooks: a tier may declare
+    extra traced inputs (the sharded tier takes a ``down: bool[n]`` owner
+    mask), bind them at the top of the trace, and defer owner-down misses
+    in the hop kernel — deferred slots come home as ``cnt = -1`` and are
+    surfaced per row in the ``deferred`` output. Shape-polymorphic over
     the batch dimension (the caller pads to a ``BUCKETS`` bucket and jits).
     """
     F, RW = espec.frontier, espec.result_width
     kernels = [
-        make_hop_kernel(espec, hop, use_cache, tier.exec_fn(hop))
+        make_hop_kernel(
+            espec, hop, use_cache, tier.exec_fn(hop), tier.defer_fn()
+        )
         for hop in plan.hops
     ]
+    n_extra = getattr(tier, "extra_inputs", 0)
 
-    def fused(store, cache, ttable, roots, bvalid):
+    def fused(store, cache, ttable, roots, bvalid, *extra):
+        assert len(extra) == n_extra, (len(extra), n_extra)
+        if n_extra:
+            tier.bind(*extra)
         Bb = roots.shape[0]
         frontier = jnp.full((Bb, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
         fmask = jnp.zeros((Bb, F), bool).at[:, 0].set(bvalid)
+        row_def = jnp.zeros((Bb,), bool)
         z = jnp.int32(0)
         m = {
             "phases": jnp.int32(1),  # root index lookup (request 1)
             "requests": jnp.sum(bvalid.astype(jnp.int32)),
             "hits": z, "misses": z, "truncated": z,
             "leaf_fetches": z, "edges_scanned": z, "cache_reads": z,
+            "deferred": z,
         }
         if tier.routed:
             m["route_overflow"] = z
@@ -477,11 +517,17 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
             # ---- route the left-packed results home, then the home-shard
             # on-device dedup/compact merge (cost tracks occupancy) ----
             vals, cnt = tier.unroute(ctx, vals, cnt)
+            cnt = cnt.reshape(Bb, A)
+            # decode the deferred channel: any owner-down slot (cnt = -1)
+            # marks the whole query row bounded-stale
+            row_def = row_def | jnp.any(cnt < 0, axis=1)
+            cnt = jnp.maximum(cnt, 0)
             frontier, fmask = segmented_dedup_merge(
-                vals.reshape(Bb, A, RW), cnt.reshape(Bb, A), F
+                vals.reshape(Bb, A, RW), cnt, F
             )
             A = min(F, A * RW)
 
+        m["deferred"] = jnp.sum(row_def.astype(jnp.int32))
         result = finalize_frontier(plan, store, roots, frontier, fmask)
         if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
             m["phases"] = m["phases"] + 1  # un-rewritten property fetch
@@ -491,7 +537,8 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
             m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
         m["phases"] = m["phases"] + plan.extra_phases
         m = tier.reduce_metrics(m)
-        return result, tuple(miss_roots), tuple(miss_counts), m, store.version
+        return (result, row_def, tuple(miss_roots), tuple(miss_counts), m,
+                store.version)
 
     return fused
 

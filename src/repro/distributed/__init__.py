@@ -22,6 +22,7 @@ __all__ = [
     "tree_shardings",
     "ShardedTxnRuntime",
     "ShardedMissDrain",
+    "FailoverController",
 ]
 
 
@@ -31,4 +32,8 @@ def __getattr__(name):
         from repro.distributed import graph_serve
 
         return getattr(graph_serve, name)
+    if name == "FailoverController":
+        from repro.distributed import failover
+
+        return failover.FailoverController
     raise AttributeError(name)

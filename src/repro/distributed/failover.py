@@ -1,0 +1,222 @@
+"""Live shard failover: per-batch failure detection, degraded-mode
+serving, and recovery-as-migration for the partitioned serve loop.
+
+``FailoverController`` is the thin state machine between the serve loop
+and the runtime. Healthy operation adds one branch per batch; under an
+injected (or real) owner loss it degrades instead of failing:
+
+- **detect** — each batch probes every owner (``ShardFaultPlan`` scripts
+  the outcomes in chaos runs); ``FailureDetector`` turns consecutive
+  failures into a ``down`` set. Until detection trips, a gR batch that
+  needs the dead owner raises ``NodeFailure`` — those batches ARE the
+  unavailability window, and it is bounded by ``fail_threshold`` probes.
+- **degrade (reads)** — with the owner marked down, gR executes with the
+  down shard's miss segments masked (the ``down`` input of the serving
+  step): cache hits — including hits on the dead owner's data, served at
+  the *caching* shard per Smart Query Routing's decoupling — and
+  surviving-owner misses return normally; masked rows come back flagged
+  ``deferred``. Deferred rows emit no miss records, so the cache
+  populator cannot manufacture entries from lost blocks.
+- **degrade (writes)** — every gRW commit queues in the journal
+  (``applied=False``) instead of applying. All of them, not just those
+  naming the dead owner: commit id assignment (``e_len + i``) makes
+  commits order-dependent, so applying a "safe" commit out of order would
+  diverge from the journal's replay order. The staleness of degraded
+  reads is therefore bounded by the queued-commit count, which the
+  controller surfaces per batch.
+- **recover** — ``replay_to_owner`` rebuilds the dead owner's blocks from
+  the incremental-checkpoint chain + journal (byte-identical pre-outage
+  state), splices them into the live store via the geid index, then
+  ``drain_queued`` applies the outage window's commits in journal order
+  against the live cache. ``mark_recovered`` + ``revive`` close the loop.
+
+Stragglers (alive but slow) never enter degraded mode: the detector marks
+them ``straggling`` and the read path hedges — the full batch races a
+degraded call with the straggler's segment masked (``HedgedCalls``), so
+tail latency is bounded by the hedge, and the fast path still returns
+complete results when the straggler recovers mid-race.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.distributed.fault import (
+    FailureDetector,
+    HedgedCalls,
+    NodeFailure,
+    ShardFaultPlan,
+)
+from repro.graphstore.journal import (
+    WriteBehindJournal,
+    drain_queued,
+    replay_to_owner,
+)
+
+
+class FailoverController:
+    """Per-batch failover state machine over a ``ShardedTxnRuntime``.
+
+    ``plan`` scripts faults for chaos runs (None = probe outcomes are all
+    healthy and the controller is pass-through); ``hedge_after`` is the
+    straggler hedge deadline in seconds."""
+
+    def __init__(self, rt, journal: WriteBehindJournal, ttable, *,
+                 plan: Optional[ShardFaultPlan] = None,
+                 detector: Optional[FailureDetector] = None,
+                 hedge: Optional[HedgedCalls] = None,
+                 hedge_after: float = 0.05,
+                 default_policy: str = "write-around"):
+        self.rt = rt
+        self.journal = journal
+        self.ttable = ttable
+        self.plan = plan
+        self.detector = detector if detector is not None else FailureDetector(n=rt.n)
+        self.hedge = hedge
+        self.hedge_after = hedge_after
+        self.default_policy = default_policy
+        self.failed_batches = 0  # raised NodeFailure pre-detection
+        self.degraded_batches = 0
+        self.deferred_rows = 0
+
+    # ---------------------------------------------------------------- probe
+    def probe(self, batch_idx: int) -> frozenset:
+        """One heartbeat round: feed every owner's scripted (or real) probe
+        outcome to the detector; returns the post-probe down set."""
+        crashed = (self.plan.crashed_at(batch_idx) if self.plan is not None
+                   else frozenset())
+        for s in range(self.rt.n):
+            if s in crashed:
+                self.detector.observe_failure(s)
+            else:
+                lat = (self.plan.hang_delay(s, batch_idx)
+                       if self.plan is not None else 0.0)
+                self.detector.observe_ok(s, latency_s=lat)
+        return self.detector.down()
+
+    # ----------------------------------------------------------------- read
+    def run_gr(self, pstore, cache, qplan, roots, batch_idx: int):
+        """Serve one gR batch under the current failure state.
+
+        Returns ``(results, deferred, misses, metrics)``. Raises
+        ``NodeFailure`` when a crashed owner is needed but not yet marked
+        down (the detection gap — callers count it as unavailability)."""
+        crashed = (self.plan.crashed_at(batch_idx) if self.plan is not None
+                   else frozenset())
+        down = self.detector.down()
+        unmasked = crashed - down
+        if unmasked:
+            self.failed_batches += 1
+            raise NodeFailure(
+                f"owners {sorted(unmasked)} lost storage and are not yet "
+                f"marked down (batch {batch_idx})"
+            )
+        epochs = self.journal.epochs
+        mask = self.detector.down_mask()
+        straggling = self.detector.straggling() - down
+
+        def call(m):
+            with epochs.pin_scope():
+                return self.rt.run_gr_tx_batch(
+                    pstore, cache, self.ttable, qplan, roots,
+                    down=m if m.any() else None, return_deferred=True,
+                )
+
+        from_hedge = False
+        if straggling and self.hedge is not None:
+            # primary: the full batch, paying the straggler's delay;
+            # hedge: the degraded batch with the straggler's segment masked
+            delay = max(
+                self.plan.hang_delay(s, batch_idx) for s in straggling
+            ) if self.plan is not None else 0.0
+            hmask = mask.copy()
+            for s in straggling:
+                hmask[s] = True
+
+            def primary():
+                if delay:
+                    time.sleep(delay)
+                return call(mask)
+
+            out, from_hedge = self.hedge.call(
+                primary, lambda: call(hmask), self.hedge_after
+            )
+        else:
+            out = call(mask)
+        result, misses, metrics, deferred = out
+        ndef = int(np.asarray(deferred).sum())
+        self.deferred_rows += ndef
+        if mask.any():
+            self.degraded_batches += 1
+        metrics = dict(metrics)
+        metrics.update(
+            deferred_rows=ndef,
+            hedged=int(from_hedge),
+            staleness_bound_commits=self.journal.metrics()["queued_commits"],
+        )
+        return result, np.asarray(deferred), misses, metrics
+
+    # ---------------------------------------------------------------- write
+    def run_grw(self, pstore, cache, batch, *, policy: Optional[str] = None,
+                gate=None, occupancy_metrics: bool = True):
+        """Commit one gRW batch — or queue it durably when degraded.
+
+        During an outage the batch is journaled with ``applied=False`` and
+        the device store is left untouched (see module docstring for why
+        ALL commits queue); otherwise this is the normal journaled commit.
+        Returns ``(pstore, cache, metrics)`` either way."""
+        policy = self.default_policy if policy is None else policy
+        if self.detector.down():
+            self.journal.append_commit(
+                batch, policy=policy, gate=gate, applied=False,
+            )
+            metrics = {"queued": 1, **self.journal.metrics()}
+            return pstore, cache, metrics
+        pstore, cache, metrics = self.rt.run_grw_tx(
+            pstore, cache, self.ttable, batch, policy=policy, gate=gate,
+            occupancy_metrics=occupancy_metrics, journal=self.journal,
+        )
+        metrics["queued"] = 0
+        return pstore, cache, metrics
+
+    # -------------------------------------------------------------- recover
+    def recover(self, pstore, cache, owner: int):
+        """Recovery-as-migration for one down owner: replay + splice the
+        dead blocks into the live store, drain the queued outage commits,
+        mark the owner healthy. Returns ``(pstore, cache, info)``."""
+        t0 = time.perf_counter()
+        pstore, info = replay_to_owner(
+            self.journal, self.rt, self.ttable, live_pstore=pstore,
+            owner=owner, default_policy=self.default_policy,
+        )
+        pstore, cache, dinfo = drain_queued(
+            self.journal, self.rt, self.ttable, pstore, cache,
+            default_policy=self.default_policy,
+        )
+        self.detector.mark_recovered(owner)
+        if self.plan is not None:
+            self.plan.revive(owner)
+        info.update(dinfo)
+        info["recovery_seconds"] = time.perf_counter() - t0
+        return pstore, cache, info
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        m = {
+            "failed_batches": self.failed_batches,
+            "degraded_batches": self.degraded_batches,
+            "deferred_rows_total": self.deferred_rows,
+            "detections": self.detector.detections,
+            "recoveries": self.detector.recoveries,
+            "down_shards": len(self.detector.down()),
+        }
+        if self.hedge is not None:
+            m.update(
+                hedge_issued=self.hedge.issued, hedged_calls=self.hedge.hedged,
+                hedge_wins=self.hedge.hedge_wins,
+                hedge_rate=round(self.hedge.hedge_rate, 4),
+            )
+        return m

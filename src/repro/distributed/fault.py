@@ -5,15 +5,25 @@
   re-restores the last checkpoint with the new shardings, and resumes —
   the single-controller analogue of a coordinator-driven elastic restart.
 - ``HedgedCalls``: serve-path straggler mitigation — issue the same request
-  to r replicas, take the first completion (tail-latency hedging). In this
-  offline harness replica latencies come from a provided sampler so the
-  p99-vs-cost tradeoff is measurable and testable.
-- ``RetryPolicy``: bounded exponential-backoff retries (the same policy the
-  Service Coordinator and the CP population threads use).
+  to r replicas, take the first completion (tail-latency hedging). ``call``
+  hedges two real callables against the wall clock; ``simulate`` keeps the
+  offline sampler harness so the p99-vs-cost tradeoff stays measurable.
+- ``RetryPolicy``: bounded exponential-backoff retries with a
+  ``retryable`` predicate (the same policy the Service Coordinator, the CP
+  population threads, and the journal flusher use).
+- ``FailureDetector`` / ``ShardFaultPlan``: the serve loop's per-batch
+  failure model — scripted crash/hang/torn-flush injection and the
+  consecutive-failure heartbeat detector that turns probe outcomes into a
+  ``down`` owner set (degraded-mode serving masks those owners' miss
+  segments; see ``distributed.failover``).
+- ``timed_call``: a bounded-wall-clock wrapper for journal flush and
+  checkpoint I/O — a hung filesystem surfaces as ``CallTimeout`` instead
+  of freezing the serve loop.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -23,25 +33,181 @@ import numpy as np
 
 @dataclass
 class RetryPolicy:
+    """Bounded retries with exponential backoff.
+
+    ``retryable(exc) -> bool`` classifies failures: a non-transient error
+    (e.g. ``BlockCapacityError`` — retrying cannot change the capacity)
+    surfaces immediately instead of burning the attempt budget. ``None``
+    retries everything (the historical behaviour).
+    """
+
     max_attempts: int = 3
     base_delay: float = 0.0  # seconds (0 in simulations)
+    retryable: Optional[Callable[[Exception], bool]] = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}"
+            )
 
     def run(self, fn: Callable, *args, on_retry: Optional[Callable] = None):
-        last = None
         for attempt in range(self.max_attempts):
             try:
                 return fn(*args)
             except Exception as e:  # noqa: BLE001
-                last = e
+                if self.retryable is not None and not self.retryable(e):
+                    raise
+                if attempt == self.max_attempts - 1:
+                    raise
                 if on_retry:
                     on_retry(attempt, e)
                 if self.base_delay:
                     time.sleep(self.base_delay * (2**attempt))
-        raise last
 
 
 class NodeFailure(RuntimeError):
     """Raised (or injected) when a worker/node is lost mid-step."""
+
+
+class CallTimeout(RuntimeError):
+    """A bounded-wall-clock call (``timed_call``) exceeded its budget."""
+
+
+def timed_call(fn: Callable, timeout: Optional[float], *args, **kwargs):
+    """Run ``fn(*args, **kwargs)`` with a wall-clock bound.
+
+    ``timeout=None`` calls inline (zero overhead). Otherwise the call runs
+    on a worker thread and ``CallTimeout`` is raised if it does not finish
+    in time — the worker is left to finish in the background (Python
+    threads cannot be killed), which is the right trade for the I/O calls
+    this wraps: a hung fsync must not freeze the serve loop, and a late
+    completion is harmless because the caller's retry path truncates back
+    to the last durable offset before rewriting.
+    """
+    if timeout is None:
+        return fn(*args, **kwargs)
+    box: dict = {}
+    done = threading.Event()
+
+    def work():
+        try:
+            box["ok"] = fn(*args, **kwargs)
+        except Exception as e:  # noqa: BLE001 — re-raised on the caller
+            box["err"] = e
+        finally:
+            done.set()
+
+    t = threading.Thread(target=work, daemon=True)
+    t.start()
+    if not done.wait(timeout):
+        raise CallTimeout(
+            f"{getattr(fn, '__name__', fn)!s} exceeded {timeout:.3f}s"
+        )
+    if "err" in box:
+        raise box["err"]
+    return box["ok"]
+
+
+@dataclass
+class ShardFaultPlan:
+    """A scripted per-batch fault schedule for chaos runs.
+
+    - ``crash[shard] = batch``: the shard's storage is lost from that batch
+      on (heartbeats fail, unmasked executions raise ``NodeFailure``) until
+      ``revive`` — recovery-as-migration rebuilds its blocks.
+    - ``hang[shard] = (from_batch, to_batch, delay_s)``: the shard is alive
+      but straggling in ``[from_batch, to_batch)`` — probes succeed with
+      ``delay_s`` latency, which the detector's straggle threshold and the
+      hedged read path react to.
+    - ``torn_flush_attempts``: journal flush attempt indices to tear
+      (compose with ``WriteBehindJournal(flush_fault=plan.flush_fault)``).
+    """
+
+    crash: dict = field(default_factory=dict)  # shard -> batch idx
+    hang: dict = field(default_factory=dict)  # shard -> (from, to, delay_s)
+    torn_flush_attempts: tuple = ()
+
+    def crashed_at(self, batch: int) -> frozenset:
+        """Shards whose storage is gone as of ``batch``."""
+        return frozenset(
+            s for s, b in self.crash.items() if batch >= b
+        )
+
+    def hang_delay(self, shard: int, batch: int) -> float:
+        ent = self.hang.get(shard)
+        if ent is None:
+            return 0.0
+        lo, hi, delay = ent
+        return float(delay) if lo <= batch < hi else 0.0
+
+    def revive(self, shard: int) -> None:
+        """Recovery finished: the (replacement) owner serves again."""
+        self.crash.pop(shard, None)
+
+    def flush_fault(self, attempt: int) -> None:
+        """``WriteBehindJournal`` fault hook: tear the listed attempts."""
+        if attempt in self.torn_flush_attempts:
+            raise OSError(f"injected torn flush at attempt {attempt}")
+
+
+@dataclass
+class FailureDetector:
+    """Heartbeat-driven failure detection over ``n`` owner shards.
+
+    The serve loop probes each shard once per batch (``observe_ok`` /
+    ``observe_failure``); ``fail_threshold`` consecutive failures mark a
+    shard down (single blips don't flap the mesh into degraded mode), and
+    ``straggle_after`` seconds of probe latency mark it straggling —
+    alive, so nothing defers, but the hedged read path races a degraded
+    call against it. ``mark_recovered`` clears both states after
+    recovery-as-migration completes.
+    """
+
+    n: int
+    fail_threshold: int = 2
+    straggle_after: Optional[float] = None
+    _consecutive: dict = field(default_factory=dict)
+    _down: set = field(default_factory=set)
+    _straggling: set = field(default_factory=set)
+    detections: int = 0
+    recoveries: int = 0
+
+    def observe_ok(self, shard: int, latency_s: float = 0.0) -> None:
+        self._consecutive[shard] = 0
+        if self.straggle_after is not None:
+            if latency_s >= self.straggle_after:
+                self._straggling.add(shard)
+            else:
+                self._straggling.discard(shard)
+
+    def observe_failure(self, shard: int) -> None:
+        c = self._consecutive.get(shard, 0) + 1
+        self._consecutive[shard] = c
+        if c >= self.fail_threshold and shard not in self._down:
+            self._down.add(shard)
+            self._straggling.discard(shard)
+            self.detections += 1
+
+    def down(self) -> frozenset:
+        return frozenset(self._down)
+
+    def straggling(self) -> frozenset:
+        return frozenset(self._straggling)
+
+    def mark_recovered(self, shard: int) -> None:
+        if shard in self._down:
+            self.recoveries += 1
+        self._down.discard(shard)
+        self._straggling.discard(shard)
+        self._consecutive[shard] = 0
+
+    def down_mask(self) -> np.ndarray:
+        """The serve step's ``down`` input: bool[n], True = owner down."""
+        m = np.zeros((self.n,), bool)
+        for s in self._down:
+            m[s] = True
+        return m
 
 
 @dataclass
@@ -101,11 +267,68 @@ class ElasticRunner:
 class HedgedCalls:
     """Tail-latency hedging: take the fastest of r replicas.
 
+    ``call`` is the live serve-path API: run ``primary``, and if it has not
+    completed within ``hedge_after`` seconds launch ``hedge`` and return
+    whichever finishes first. The gR read path uses it when the detector
+    reports a straggling-but-alive owner — the primary is the full batch,
+    the hedge is the degraded call with the straggler's miss segment
+    masked, so the batch's tail is bounded by the hedge latency instead of
+    the straggler's. ``issued`` / ``hedged`` / ``hedge_wins`` make the
+    hedge rate a serve metric.
+
     ``latency_sampler(rng) -> seconds`` models one replica's service time
-    (in production this is the real backend call)."""
+    for the offline ``simulate`` harness (in production this is the real
+    backend call)."""
 
     replicas: int = 2
     seed: int = 0
+    issued: int = 0
+    hedged: int = 0
+    hedge_wins: int = 0
+
+    def call(self, primary: Callable, hedge: Callable, hedge_after: float):
+        """Race ``primary`` against a delayed ``hedge``; first result wins.
+
+        Returns ``(result, from_hedge)``. If the winner raised, its
+        exception propagates; the loser (either way) is left to finish on
+        its daemon thread — both callables must therefore be pure
+        functions of their inputs (the jitted serve steps are).
+        """
+        self.issued += 1
+        lock = threading.Lock()
+        first: dict = {}
+        done = threading.Event()
+
+        def run(tag: str, fn: Callable):
+            try:
+                r = fn()
+                err = None
+            except Exception as e:  # noqa: BLE001 — re-raised if it won
+                r, err = None, e
+            with lock:
+                if not first:
+                    first["tag"], first["r"], first["err"] = tag, r, err
+                    done.set()
+
+        tp = threading.Thread(
+            target=run, args=("primary", primary), daemon=True
+        )
+        tp.start()
+        if not done.wait(hedge_after):
+            self.hedged += 1
+            threading.Thread(
+                target=run, args=("hedge", hedge), daemon=True
+            ).start()
+        done.wait()
+        won_hedge = first["tag"] == "hedge"
+        self.hedge_wins += int(won_hedge)
+        if first["err"] is not None:
+            raise first["err"]
+        return first["r"], won_hedge
+
+    @property
+    def hedge_rate(self) -> float:
+        return self.hedged / self.issued if self.issued else 0.0
 
     def simulate(self, n_requests: int, latency_sampler) -> dict:
         rng = np.random.default_rng(self.seed)

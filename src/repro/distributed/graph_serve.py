@@ -129,7 +129,7 @@ from repro.utils import NULL_ID
 _STAT_FIELDS = ("n_hit", "n_miss", "n_insert", "n_evict", "n_delete", "n_oversize")
 _ADDITIVE_METRICS = (
     "requests", "hits", "misses", "truncated", "leaf_fetches",
-    "edges_scanned", "cache_reads", "route_overflow",
+    "edges_scanned", "cache_reads", "route_overflow", "deferred",
 )
 
 # Measured default per-peer routing capacity multiplier: sized from the
@@ -174,6 +174,12 @@ class _MeshTier:
     the partitioned store tier) owner-local block execution."""
 
     routed = True
+    # degraded-mode serving: the plan fn takes one extra traced input — the
+    # ``down: bool[n]`` owner mask (replicated). All-False is the healthy
+    # fast path and traces byte-identically, so flipping an owner down is
+    # an input change, not a recompile (the unavailability window is one
+    # batch, not one XLA compile).
+    extra_inputs = 1
 
     def __init__(self, rt: "ShardedTxnRuntime", caps, pspec):
         # pspec is captured at BUILD time (not read off rt at trace time):
@@ -183,6 +189,24 @@ class _MeshTier:
         self.caps = caps
         self.pspec = pspec
         self.axes, self.n = rt.axes, rt.n
+        self._down = None
+
+    def bind(self, down):
+        self._down = down
+
+    def defer_fn(self):
+        if self.pspec is None:
+            # the replicated tier keeps a full snapshot per shard: losing
+            # an owner's storage loses nothing, so nothing ever defers
+            return None
+
+        def defer():
+            # True at the owner whose storage blocks are down: its misses
+            # defer instead of reading lost blocks (hits still serve from
+            # the surviving co-partitioned cache shard)
+            return self._down[jax.lax.axis_index(self.axes)]
+
+        return defer
 
     def exec_fn(self, hop):
         if self.pspec is None:
@@ -730,6 +754,14 @@ class ShardedTxnRuntime:
             A = min(F, A * RW)
         return caps
 
+    def _down_none(self):
+        """The healthy owner mask (all-False) — the serve step's default
+        ``down`` input, cached so steady-state batches reuse one device
+        constant instead of re-transferring per call."""
+        if getattr(self, "_down_zeros", None) is None:
+            self._down_zeros = jnp.zeros((self.n,), jnp.bool_)
+        return self._down_zeros
+
     def _gr_fn(self, plan, bucket: int, *, pspec=None):
         """The un-jitted shard_map serving program (AOT lowering hook).
         ``pspec`` defaults to the current tier; the background pre-compiler
@@ -747,9 +779,12 @@ class ShardedTxnRuntime:
             mesh=self.mesh,
             in_specs=(
                 self._store_specs(), self._cache_specs(), P(),
-                P(self.axes), P(self.axes),
+                P(self.axes), P(self.axes), P(),
             ),
-            out_specs=(P(self.axes), P(self.axes), P(self.axes), P(), P()),
+            out_specs=(
+                P(self.axes), P(self.axes), P(self.axes), P(self.axes),
+                P(), P(),
+            ),
             check_rep=False,
         )
 
@@ -757,32 +792,54 @@ class ShardedTxnRuntime:
         pspec = self.pspec if pspec is None else pspec
         key = (pspec, _plan_key(plan), bucket)
         if key not in self._gr_fns:
-            self._gr_fns[key] = jax.jit(
-                self._gr_fn(plan, bucket, pspec=pspec)
-            )
+            jitted = jax.jit(self._gr_fn(plan, bucket, pspec=pspec))
+
+            def step(store, cache, ttable, roots, bvalid, down=None,
+                     _fn=jitted):
+                return _fn(
+                    store, cache, ttable, roots, bvalid,
+                    self._down_none() if down is None else jnp.asarray(down),
+                )
+
+            step.jitted = jitted
+            self._gr_fns[key] = step
         return self._gr_fns[key]
 
     def serve_step(self, plan, global_batch: int):
         """The jitted serving step for one ``QueryPlan`` (any hop count) —
-        ``step(store, cache, ttable, roots [global_batch], bvalid) ->
-        (results, miss_roots, miss_counts, metrics, read_version)``."""
+        ``step(store, cache, ttable, roots [global_batch], bvalid,
+        down=None) -> (results, deferred, miss_roots, miss_counts, metrics,
+        read_version)``. ``down`` is the degraded-mode owner mask (bool[n],
+        default all-healthy); ``deferred`` flags the rows whose miss
+        segments were masked at a down owner (bounded-stale)."""
         return self._gr(plan, global_batch)
 
-    def run_gr_tx_batch(self, store, cache, ttable, plan, roots):
+    def run_gr_tx_batch(self, store, cache, ttable, plan, roots, *,
+                        down=None, return_deferred: bool = False):
         """Host wrapper: pad, execute, decode misses. Same contract as
-        ``GraphEngine.run`` — one blocking device→host transfer."""
+        ``GraphEngine.run`` — one blocking device→host transfer.
+
+        ``down`` (bool[n]) masks the named owners' miss segments
+        (degraded-mode serving); with ``return_deferred=True`` the
+        per-query deferred flags come back as a fourth element."""
         B = len(roots)
         bucket = max(bucket_for(B), self.n)
         proots, bvalid = pad_roots(roots, bucket)
         out = self._gr(plan, bucket)(
-            store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid)
+            store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid),
+            down,
         )
-        result, miss_roots, miss_counts, m, version = jax.device_get(out)
+        result, deferred, miss_roots, miss_counts, m, version = (
+            jax.device_get(out)
+        )
         metrics = {k: int(v) for k, v in m.items()}
         metrics["host_syncs"] = 1
         misses = decode_miss_records(
             plan, self.use_cache, miss_roots, miss_counts, int(version)
         )
+        if return_deferred:
+            return (np.asarray(result)[:B], misses, metrics,
+                    np.asarray(deferred)[:B])
         return np.asarray(result)[:B], misses, metrics
 
     # -------------------------------------------------------- gRW-Tx path
@@ -1029,6 +1086,10 @@ class ShardedTxnRuntime:
             journal.append_commit(
                 batch, policy=policy, gate=gate,
                 commit_version=int(jax.device_get(store2.version)),
+                device_compactions=(
+                    int(ncomp) if (gate is not None and self.pspec is not None)
+                    else 0
+                ),
             )
             metrics.update(journal.metrics())
         return store2, cache2, metrics
@@ -1247,15 +1308,17 @@ def config_cell(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
     cache = jax.eval_shape(lambda: empty_cache(espec.cache))
     roots = sds((global_batch,), jnp.int32)
     bvalid = sds((global_batch,), jnp.bool_)
+    down = sds((rt.n,), jnp.bool_)
     repl = NamedSharding(mesh, P())
     rshard = NamedSharding(mesh, P(tuple(mesh.axis_names)))
     in_shardings = (
         rt.store_sharding(),
         rt.cache_sharding(),
         jax.tree_util.tree_map(lambda _: repl, ttable),
-        rshard, rshard,
+        rshard, rshard, repl,
     )
-    return step, in_shardings, (pstore, cache, ttable, roots, bvalid), rt
+    return step, in_shardings, (pstore, cache, ttable, roots, bvalid,
+                                down), rt
 
 
 def config_grw_cell(cfg: GraphServeConfig, mesh: Mesh, *,

@@ -30,6 +30,7 @@ from repro.graphstore.partition import (
     owner_of,
     partition_store,
     rebuild_geid_index,
+    splice_owner_blocks,
     store_bytes_report,
 )
 from repro.graphstore.maintenance import (
@@ -46,7 +47,10 @@ from repro.graphstore.journal import (
     EpochRegistry,
     FlushError,
     WriteBehindJournal,
+    drain_queued,
     replay,
+    replay_to_owner,
+    restore_chain,
 )
 from repro.graphstore.mutations import (
     AppliedMutations,
@@ -78,6 +82,7 @@ __all__ = [
     "BlockCapacityError",
     "geid_slot_lookup",
     "rebuild_geid_index",
+    "splice_owner_blocks",
     "MaintenancePolicy",
     "DeviceGate",
     "block_occupancy",
@@ -90,6 +95,9 @@ __all__ = [
     "EpochRegistry",
     "FlushError",
     "replay",
+    "replay_to_owner",
+    "restore_chain",
+    "drain_queued",
     "MutationBatch",
     "AppliedMutations",
     "make_mutation_batch",

@@ -82,6 +82,7 @@ crash/restart byte-identity pin holds with purge enabled.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import struct
@@ -91,7 +92,7 @@ from typing import Callable, NamedTuple, Optional
 
 import numpy as np
 
-from repro.distributed.fault import RetryPolicy
+from repro.distributed.fault import RetryPolicy, timed_call
 from repro.graphstore.maintenance import DeviceGate
 from repro.graphstore.mutations import MutationBatch
 
@@ -176,6 +177,7 @@ class EpochRegistry:
         self._pins: dict[int, int] = {}
         self._next_token = 0
         self.current = 0
+        self.leaked_releases = 0
 
     def advance(self, epoch: int) -> None:
         """Record a new committed store version (monotone)."""
@@ -193,6 +195,29 @@ class EpochRegistry:
     def release(self, token: int) -> None:
         with self._lock:
             self._pins.pop(token, None)
+
+    @contextlib.contextmanager
+    def pin_scope(self, epoch: Optional[int] = None):
+        """Exception-safe pin: ``with epochs.pin_scope(): ...`` releases on
+        every exit path. A gR batch that raises mid-flight (a crashed owner
+        surfacing as ``NodeFailure``) would otherwise leak its pin and block
+        tombstone purge forever; ``leaked_releases`` counts the pins this
+        scope recovered from an exception unwind (the serve loop surfaces it
+        as the leaked-pin metric)."""
+        tok = self.pin(epoch)
+        try:
+            yield tok
+        except BaseException:
+            with self._lock:
+                self.leaked_releases += 1
+            raise
+        finally:
+            self.release(tok)
+
+    def open_pins(self) -> int:
+        """Currently-held pin count (0 in a quiesced serve loop)."""
+        with self._lock:
+            return len(self._pins)
 
     def min_pinned(self) -> int:
         """The oldest live snapshot's epoch (current epoch when none)."""
@@ -227,11 +252,16 @@ class WriteBehindJournal:
 
     def __init__(self, root: str, n_shards: int, *,
                  retry: Optional[RetryPolicy] = None,
-                 flush_fault: Optional[Callable[[int], None]] = None):
+                 flush_fault: Optional[Callable[[int], None]] = None,
+                 io_timeout: Optional[float] = None):
         self.root = root
         self.n = n_shards
         self.retry = retry if retry is not None else RetryPolicy(max_attempts=4)
         self.flush_fault = flush_fault
+        # wall-clock bound on each flush write / checkpoint save attempt: a
+        # hung filesystem surfaces as CallTimeout (retried like any flush
+        # failure) instead of freezing the serve loop. None = unbounded.
+        self.io_timeout = io_timeout
         os.makedirs(root, exist_ok=True)
         self.log_path = os.path.join(root, "wal.log")
         self.meta_path = os.path.join(root, "journal_meta.json")
@@ -240,12 +270,25 @@ class WriteBehindJournal:
         self._flush_lock = threading.Lock()  # one flusher at a time
         self._pending: list[JournalRecord] = []
         self._dirty_owners: set[int] = set()
+        # owners whose blocks changed since the last checkpoint — unlike
+        # _dirty_owners (cleared per flush) this accumulates across flushes
+        # and is cleared only by checkpoint/checkpoint_incremental; it is
+        # what makes incremental checkpoints sound (they persist exactly
+        # these owners' block rows).
+        self._dirty_since_ckpt: set[int] = set()
+        self._queued_commits = 0
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self.epochs = EpochRegistry()
         # monotone counters (guarded by _lock where racy)
         self.next_seq = 1
         self.durable_seq = 0
+        # highest seq applied to the LIVE device store. In healthy operation
+        # it tracks next_seq - 1; during an owner outage gRW commits are
+        # journaled with applied=False (queued) and the watermark freezes —
+        # recovery replays records <= applied_seq to rebuild the pre-outage
+        # store and drain_queued applies the rest against the live cache.
+        self.applied_seq = 0
         self._durable_offset = 0
         self.checkpoint_seq = 0
         self.checkpoint_version = 0
@@ -266,9 +309,20 @@ class WriteBehindJournal:
 
     def append_commit(self, batch: MutationBatch, *, policy: str = "write-around",
                       gate: Optional[DeviceGate] = None,
-                      commit_version: Optional[int] = None) -> int:
+                      commit_version: Optional[int] = None,
+                      device_compactions: int = 0,
+                      applied: bool = True) -> int:
         """Accept one committed gRW batch into the write-behind queue and
-        mark the owners its mutation sections touch dirty."""
+        mark the owners its mutation sections touch dirty.
+
+        ``applied=False`` queues the record without advancing the
+        applied-store watermark — degraded mode's write path: the batch is
+        durable (it flushes like any record) but was NOT applied to the
+        live device store; ``drain_queued`` re-executes it after recovery.
+        ``device_compactions`` (the gated step's on-device compaction
+        count) conservatively marks every owner checkpoint-dirty: the gate
+        may rewrite any over-threshold block's layout, not just the owners
+        the batch's ids name."""
         seq = self._append(REC_COMMIT, encode_commit(batch, policy=policy, gate=gate))
         owners = set()
         for ids, cnt in (
@@ -285,23 +339,41 @@ class WriteBehindJournal:
                     owners.update(range(self.n))
                 else:
                     owners.update(int(o) for o in np.unique(vals % self.n))
+        if int(device_compactions) > 0:
+            owners.update(range(self.n))
         with self._lock:
             self._dirty_owners |= owners
+            self._dirty_since_ckpt |= owners
+            if applied:
+                self.applied_seq = max(self.applied_seq, seq)
+            else:
+                self._queued_commits += 1
         if commit_version is not None:
             self.epochs.advance(commit_version)
         return seq
 
     def append_compact(self, *, purge: bool = False) -> int:
-        """Journal a host-scheduled compaction tick (layout + purge replay)."""
+        """Journal a host-scheduled compaction tick (layout + purge replay).
+        Compaction rewrites every owner's block in place, so all owners go
+        checkpoint-dirty."""
         payload = json.dumps({"purge": bool(purge)}).encode()
-        return self._append(REC_COMPACT, payload)
+        seq = self._append(REC_COMPACT, payload)
+        with self._lock:
+            self._dirty_since_ckpt.update(range(self.n))
+            self.applied_seq = max(self.applied_seq, seq)
+        return seq
 
     def append_grow(self, e_blk_cap: int, recent_blk_cap: int) -> int:
-        """Journal a capacity change (replayed at the same point)."""
+        """Journal a capacity change (replayed at the same point). Growth
+        re-pads every block, so all owners go checkpoint-dirty."""
         payload = json.dumps({
             "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
         }).encode()
-        return self._append(REC_GROW, payload)
+        seq = self._append(REC_GROW, payload)
+        with self._lock:
+            self._dirty_since_ckpt.update(range(self.n))
+            self.applied_seq = max(self.applied_seq, seq)
+        return seq
 
     # ------------------------------------------------------------- flusher
     def _frame(self, rec: JournalRecord) -> bytes:
@@ -346,7 +418,15 @@ class WriteBehindJournal:
             self.flush_retries += 1
 
         try:
-            self.retry.run(write_group, on_retry=on_retry)
+            # each attempt is wall-clock bounded (io_timeout): a hung write
+            # becomes CallTimeout and burns one retry instead of wedging the
+            # flusher; the next attempt truncates to the durable offset, so
+            # a late background completion cannot corrupt the rewrite's
+            # prefix property (replay stops at the first bad frame anyway)
+            self.retry.run(
+                lambda: timed_call(write_group, self.io_timeout),
+                on_retry=on_retry,
+            )
         except Exception as e:  # noqa: BLE001 — surfaced as flusher state
             self.flush_failures += 1
             raise FlushError(
@@ -396,10 +476,18 @@ class WriteBehindJournal:
         with self._lock:
             pending = len(self._pending)
             dirty = len(self._dirty_owners)
+            dirty_ckpt = len(self._dirty_since_ckpt)
+            queued = self._queued_commits
+            applied = self.applied_seq
         return {
             "journal_lag_batches": (self.next_seq - 1) - self.durable_seq,
             "flush_queue_depth": pending,
             "dirty_owners": dirty,
+            "dirty_owners_since_ckpt": dirty_ckpt,
+            "applied_seq": applied,
+            "queued_commits": queued,
+            "open_pins": self.epochs.open_pins(),
+            "leaked_pin_releases": self.epochs.leaked_releases,
             "flushes": self.flushes,
             "flush_retries": self.flush_retries,
             "flush_failures": self.flush_failures,
@@ -419,15 +507,19 @@ class WriteBehindJournal:
                 "durable_offset": self._durable_offset,
                 "checkpoint_seq": self.checkpoint_seq,
                 "checkpoint_version": self.checkpoint_version,
+                "applied_seq": self.applied_seq,
             }, f)
         os.replace(tmp, self.meta_path)
 
     def _load_meta(self) -> None:
+        meta_applied = None
         if os.path.exists(self.meta_path):
             with open(self.meta_path) as f:
                 m = json.load(f)
             self.checkpoint_seq = int(m.get("checkpoint_seq", 0))
             self.checkpoint_version = int(m.get("checkpoint_version", 0))
+            if "applied_seq" in m:
+                meta_applied = int(m["applied_seq"])
         # the log itself is the durability ground truth: a flush that landed
         # but crashed before the meta rewrite must keep its seqs (replay
         # reads them), and a torn group's complete prefix frames stay valid
@@ -446,6 +538,12 @@ class WriteBehindJournal:
                 seq, off = s, end
         self.durable_seq, self._durable_offset = seq, off
         self.next_seq = seq + 1
+        # applied watermark on reopen: records the meta knew were applied,
+        # clamped to what actually survived on the log (a torn tail may have
+        # eaten applied-but-unflushed frames — those are the conceded
+        # write-behind window). Legacy metas (no applied_seq) predate
+        # degraded mode: everything durable was applied.
+        self.applied_seq = seq if meta_applied is None else min(meta_applied, seq)
 
     # ----------------------------------------------------------- read path
     def read_records(self, *, after_seq: int = 0) -> list[JournalRecord]:
@@ -482,13 +580,70 @@ class WriteBehindJournal:
         self.flush()
         with self._lock:
             seq = self.next_seq - 1
-        path = save_checkpoint(self.ckpt_dir, seq, pstore)
+        path = timed_call(save_checkpoint, self.io_timeout,
+                          self.ckpt_dir, seq, pstore)
         spec_meta = {
+            "kind": "full",
             "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
             "store_version": int(store_version),
         }
         with open(os.path.join(path, "journal.json"), "w") as f:
             json.dump(spec_meta, f)
+        with self._lock:
+            self._dirty_since_ckpt.clear()
+        self.checkpoint_seq = seq
+        self.checkpoint_version = int(store_version)
+        self._save_meta()
+        return path
+
+    def checkpoint_incremental(self, pstore, *, e_blk_cap: int,
+                               recent_blk_cap: int, store_version: int) -> str:
+        """Snapshot only the journal's checkpoint-dirty owners' block rows
+        (plus the replicated vertex tier and global scalars, which every
+        commit touches) on top of the previous checkpoint — recovery cost
+        scales with write rate, not store size. Falls back to a full
+        ``checkpoint`` when there is no base to build on or the block
+        layout changed since (a GROW re-shapes every block, so an overlay
+        across it cannot splice).
+
+        Restore walks the base chain (full → incremental*) and splices each
+        overlay's owner rows forward; ``incremental ∘ incremental`` composes
+        to the same bytes as a full snapshot (tested)."""
+        import jax
+
+        base = self.latest_checkpoint()
+        if base is None:
+            return self.checkpoint(
+                pstore, e_blk_cap=e_blk_cap, recent_blk_cap=recent_blk_cap,
+                store_version=store_version,
+            )
+        base_seq, base_meta = base
+        if (int(base_meta["e_blk_cap"]) != int(e_blk_cap)
+                or int(base_meta["recent_blk_cap"]) != int(recent_blk_cap)):
+            return self.checkpoint(
+                pstore, e_blk_cap=e_blk_cap, recent_blk_cap=recent_blk_cap,
+                store_version=store_version,
+            )
+        from repro.checkpoint import save_checkpoint
+
+        self.flush()
+        with self._lock:
+            seq = self.next_seq - 1
+            owners = sorted(self._dirty_since_ckpt)
+        host = jax.device_get(pstore)
+        tree = _incremental_tree(host, owners, self.n, int(e_blk_cap))
+        path = timed_call(save_checkpoint, self.io_timeout,
+                          self.ckpt_dir, seq, tree)
+        spec_meta = {
+            "kind": "incremental", "base_seq": int(base_seq),
+            "owners": [int(o) for o in owners],
+            "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
+            "store_version": int(store_version),
+        }
+        with open(os.path.join(path, "journal.json"), "w") as f:
+            json.dump(spec_meta, f)
+        with self._lock:
+            self._dirty_since_ckpt.clear()
         self.checkpoint_seq = seq
         self.checkpoint_version = int(store_version)
         self._save_meta()
@@ -501,29 +656,138 @@ class WriteBehindJournal:
         seq = latest_step(self.ckpt_dir)
         if seq is None:
             return None
+        return seq, self.checkpoint_meta(seq)
+
+    def checkpoint_meta(self, seq: int) -> dict:
         with open(os.path.join(self.ckpt_dir, f"step_{seq}", "journal.json")) as f:
-            return seq, json.load(f)
+            return json.load(f)
 
 
-def replay(journal: WriteBehindJournal, rt, ttable, *,
-           default_policy: str = "write-around"):
-    """Reconstruct the partitioned store of a crashed shard group:
-    ``restore(latest checkpoint)`` then re-apply every durable journal
-    record after it, each through the same runtime step family the live
-    run used (COMMIT → the recorded (policy, gate) gRW step; COMPACT →
-    the compaction pass; GROW → capacity growth). The store path of the
-    gRW step is independent of cache state, so replay against an empty
-    cache reproduces the pre-crash ``PartitionedGraphStore`` byte-for-byte
-    — ``replay(checkpoint, journal) ≡ pre-crash store``.
+def _incremental_tree(host_pstore, owners, n: int, e_blk_cap: int) -> dict:
+    """The overlay pytree an incremental checkpoint persists: replicated
+    vertex tier + global scalars whole (every commit touches them, and they
+    are small next to the blocks), plus the listed owners' block-row slices
+    for both orientations. Plain dict-of-dicts so save/restore flattening
+    is deterministic (sorted keys)."""
+    EB, k = int(e_blk_cap), len(owners)
+    idx = np.asarray(owners, np.int64)
 
-    Returns ``(pstore, last_seq, info)``.
-    """
+    def blk_slices(b) -> dict:
+        key = np.asarray(b.key)
+        Vloc1 = np.asarray(b.indptr).shape[0] // n
+        return {
+            "key": key.reshape(n, EB)[idx],
+            "other": np.asarray(b.other).reshape(n, EB)[idx],
+            "label": np.asarray(b.label).reshape(n, EB)[idx],
+            "alive": np.asarray(b.alive).reshape(n, EB)[idx],
+            "props": np.asarray(b.props).reshape(n, EB, -1)[idx],
+            "geid": np.asarray(b.geid).reshape(n, EB)[idx],
+            "gperm": np.asarray(b.gperm).reshape(n, EB)[idx],
+            "indptr": np.asarray(b.indptr).reshape(n, Vloc1)[idx],
+            "blk_len": np.asarray(b.blk_len)[idx],
+            "csr_len": np.asarray(b.csr_len)[idx],
+        }
+
+    return {
+        "vertex": {
+            "vlabel": np.asarray(host_pstore.vlabel),
+            "valive": np.asarray(host_pstore.valive),
+            "vprops": np.asarray(host_pstore.vprops),
+            "vversion": np.asarray(host_pstore.vversion),
+        },
+        "scalars": {
+            "v_len": np.asarray(host_pstore.v_len),
+            "e_len": np.asarray(host_pstore.e_len),
+            "version": np.asarray(host_pstore.version),
+        },
+        "out": blk_slices(host_pstore.out),
+        "inc": blk_slices(host_pstore.inc),
+    }
+
+
+def _apply_overlay(host_pstore, tree: dict, owners, n: int):
+    """Splice an incremental overlay's owner rows (and the whole vertex
+    tier + scalars) into a host-side store. Inverse of
+    ``_incremental_tree``; returns a new ``PartitionedGraphStore``."""
+    idx = np.asarray(owners, np.int64)
+
+    def blk(b, t: dict):
+        def row(cur, new):
+            cur = np.asarray(cur)
+            out = cur.reshape((n,) + new.shape[1:]).copy()
+            out[idx] = new
+            return out.reshape(cur.shape)
+
+        return b._replace(
+            key=row(b.key, t["key"]), other=row(b.other, t["other"]),
+            label=row(b.label, t["label"]), alive=row(b.alive, t["alive"]),
+            props=row(b.props, t["props"]), geid=row(b.geid, t["geid"]),
+            gperm=row(b.gperm, t["gperm"]), indptr=row(b.indptr, t["indptr"]),
+            blk_len=row(b.blk_len, t["blk_len"]),
+            csr_len=row(b.csr_len, t["csr_len"]),
+        )
+
+    return host_pstore._replace(
+        vlabel=tree["vertex"]["vlabel"], valive=tree["vertex"]["valive"],
+        vprops=tree["vertex"]["vprops"], vversion=tree["vertex"]["vversion"],
+        v_len=tree["scalars"]["v_len"], e_len=tree["scalars"]["e_len"],
+        version=tree["scalars"]["version"],
+        out=blk(host_pstore.out, tree["out"]),
+        inc=blk(host_pstore.inc, tree["inc"]),
+    )
+
+
+def _overlay_template(pspec, owners) -> dict:
+    """ShapeDtypeStruct tree matching ``_incremental_tree`` for restore."""
+    import jax
+
+    sds = jax.ShapeDtypeStruct
+    n, EB, Vloc = pspec.n_shards, pspec.e_blk_cap, pspec.v_loc
+    k = len(owners)
+    base = pspec.base
+    nep, nvp = base.n_eprops, base.n_vprops
+
+    def blk() -> dict:
+        return {
+            "key": sds((k, EB), np.int32), "other": sds((k, EB), np.int32),
+            "label": sds((k, EB), np.int32), "alive": sds((k, EB), np.bool_),
+            "props": sds((k, EB, nep), np.int32),
+            "geid": sds((k, EB), np.int32), "gperm": sds((k, EB), np.int32),
+            "indptr": sds((k, Vloc + 1), np.int32),
+            "blk_len": sds((k,), np.int32), "csr_len": sds((k,), np.int32),
+        }
+
+    return {
+        "vertex": {
+            "vlabel": sds((base.v_cap,), np.int32),
+            "valive": sds((base.v_cap,), np.bool_),
+            "vprops": sds((base.v_cap, nvp), np.int32),
+            "vversion": sds((base.v_cap,), np.int32),
+        },
+        "scalars": {
+            "v_len": sds((), np.int32), "e_len": sds((), np.int32),
+            "version": sds((), np.int32),
+        },
+        "out": blk(), "inc": blk(),
+    }
+
+
+def restore_chain(journal: WriteBehindJournal, rt):
+    """Restore the newest checkpoint, walking its incremental base chain.
+
+    Finds the latest checkpoint, follows ``base_seq`` links back to the
+    most recent FULL snapshot, restores it, then splices each incremental
+    overlay forward in order (oldest → newest). The whole chain shares one
+    block layout (``checkpoint_incremental`` falls back to full across a
+    GROW), so the runtime adopts the chain's capacity once up front.
+    Returns ``(pstore, seq, spec_meta)`` with ``pstore`` device-resident
+    under the runtime's store sharding."""
+    import jax
+
     from repro.checkpoint import restore_checkpoint
     from repro.graphstore.partition import abstract_partitioned_store
 
     ck = journal.latest_checkpoint()
-    info = {"replayed_commits": 0, "replayed_compactions": 0,
-            "replayed_growths": 0}
     if ck is None:
         raise FileNotFoundError(
             f"no checkpoint under {journal.ckpt_dir}; recovery needs at "
@@ -533,13 +797,55 @@ def replay(journal: WriteBehindJournal, rt, ttable, *,
     rt.set_block_capacity(
         spec_meta["e_blk_cap"], recent_blk_cap=spec_meta["recent_blk_cap"]
     )
+    chain = []  # (seq, meta) of incrementals, newest first
+    cur_seq, cur_meta = seq, spec_meta
+    while cur_meta.get("kind", "full") == "incremental":
+        chain.append((cur_seq, cur_meta))
+        cur_seq = int(cur_meta["base_seq"])
+        cur_meta = journal.checkpoint_meta(cur_seq)
     template = abstract_partitioned_store(rt.pspec)
-    pstore = restore_checkpoint(
-        journal.ckpt_dir, seq, template, shardings=rt.store_sharding()
-    )
+    pstore = restore_checkpoint(journal.ckpt_dir, cur_seq, template)
+    pstore = jax.tree_util.tree_map(np.asarray, pstore)
+    for inc_seq, inc_meta in reversed(chain):
+        owners = [int(o) for o in inc_meta["owners"]]
+        tree = restore_checkpoint(
+            journal.ckpt_dir, inc_seq, _overlay_template(rt.pspec, owners)
+        )
+        tree = jax.tree_util.tree_map(np.asarray, tree)
+        pstore = _apply_overlay(pstore, tree, owners, rt.n)
+    pstore = jax.device_put(pstore, rt.store_sharding())
+    return pstore, seq, spec_meta
+
+
+def replay(journal: WriteBehindJournal, rt, ttable, *,
+           default_policy: str = "write-around",
+           upto_seq: Optional[int] = None):
+    """Reconstruct the partitioned store of a crashed shard group:
+    ``restore(latest checkpoint)`` (via ``restore_chain`` — the newest
+    snapshot may be an incremental overlay stack) then re-apply every
+    durable journal record after it, each through the same runtime step
+    family the live run used (COMMIT → the recorded (policy, gate) gRW
+    step; COMPACT → the compaction pass; GROW → capacity growth). The
+    store path of the gRW step is independent of cache state, so replay
+    against an empty cache reproduces the pre-crash
+    ``PartitionedGraphStore`` byte-for-byte — ``replay(checkpoint,
+    journal) ≡ pre-crash store``.
+
+    ``upto_seq`` stops replay at a watermark (exclusive above): recovery
+    from a live outage replays only records the dead store had applied
+    (``journal.applied_seq``) — the queued remainder is ``drain_queued``'s
+    job, applied against the live cache after the block splice.
+
+    Returns ``(pstore, last_seq, info)``.
+    """
+    info = {"replayed_commits": 0, "replayed_compactions": 0,
+            "replayed_growths": 0}
+    pstore, seq, _spec_meta = restore_chain(journal, rt)
     cache = rt.empty_cache()
     last = seq
     for rec in journal.read_records(after_seq=seq):
+        if upto_seq is not None and rec.seq > upto_seq:
+            break
         if rec.rtype == REC_COMMIT:
             batch, policy, gate = decode_commit(rec.payload)
             pstore, _, _ = rt.run_grw_tx(
@@ -561,3 +867,83 @@ def replay(journal: WriteBehindJournal, rt, ttable, *,
         last = rec.seq
     journal.epochs.advance(int(np.asarray(pstore.version)))
     return pstore, last, info
+
+
+def replay_to_owner(journal: WriteBehindJournal, rt, ttable, *,
+                    live_pstore, owner: int,
+                    default_policy: str = "write-around"):
+    """Recovery-as-migration: rebuild a dead owner's blocks from durable
+    state and graft them into the live store that kept serving in degraded
+    mode.
+
+    1. ``replay(upto_seq=journal.applied_seq)`` reconstructs the
+       pre-outage store byte-for-byte (incremental-checkpoint chain +
+       journal replay — PR 6's byte-identity pin, bounded here at the
+       applied watermark so queued-during-outage commits are excluded).
+    2. ``splice_owner_blocks`` moves ONLY the dead owner's out/inc block
+       rows into the live store; the geid→slot permutation (``gperm``)
+       lives inside those rows, so the spliced store is immediately
+       servable with no re-index pass. The replacement owner is whichever
+       device holds that shard of the re-``device_put`` store — migration
+       and restart-in-place are the same code path.
+
+    The caller then runs ``drain_queued`` to apply the outage window's
+    queued commits (against the LIVE cache, so maintenance listeners see
+    them) and finally marks the owner healthy. Returns ``(pstore, info)``.
+    """
+    import jax
+
+    replayed, last, info = replay(
+        journal, rt, ttable, default_policy=default_policy,
+        upto_seq=journal.applied_seq,
+    )
+    from repro.graphstore.partition import splice_owner_blocks
+
+    live_host = jax.tree_util.tree_map(np.asarray, jax.device_get(live_pstore))
+    dead_host = jax.tree_util.tree_map(np.asarray, jax.device_get(replayed))
+    spliced = splice_owner_blocks(rt.pspec, live_host, dead_host, owner)
+    pstore = jax.device_put(spliced, rt.store_sharding())
+    info.update(recovered_owner=int(owner), replayed_to_seq=int(last))
+    return pstore, info
+
+
+def drain_queued(journal: WriteBehindJournal, rt, ttable, pstore, cache, *,
+                 after_seq: Optional[int] = None,
+                 default_policy: str = "write-around"):
+    """Apply the commits that queued (durable but unapplied) during an
+    outage, in journal order, through the normal gRW step against the LIVE
+    store and cache — write policies and maintenance listeners observe them
+    exactly as if they had committed late, which they did. Advances
+    ``journal.applied_seq`` per record and clears the queued counter.
+    Returns ``(pstore, cache, info)``."""
+    import jax
+
+    journal.flush()
+    after = journal.applied_seq if after_seq is None else int(after_seq)
+    info = {"drained_commits": 0, "drained_compactions": 0,
+            "drained_growths": 0}
+    for rec in journal.read_records(after_seq=after):
+        if rec.rtype == REC_COMMIT:
+            batch, policy, gate = decode_commit(rec.payload)
+            pstore, cache, _ = rt.run_grw_tx(
+                pstore, cache, ttable, batch,
+                policy=policy or default_policy, gate=gate,
+                occupancy_metrics=False,
+            )
+            info["drained_commits"] += 1
+        elif rec.rtype == REC_COMPACT:
+            purge = json.loads(rec.payload.decode())["purge"]
+            pstore = rt.compact_step(purge)(pstore)
+            info["drained_compactions"] += 1
+        elif rec.rtype == REC_GROW:
+            m = json.loads(rec.payload.decode())
+            pstore = rt.grow_blocks(
+                pstore, m["e_blk_cap"], recent_blk_cap=m["recent_blk_cap"]
+            )
+            info["drained_growths"] += 1
+        with journal._lock:
+            journal.applied_seq = max(journal.applied_seq, rec.seq)
+    with journal._lock:
+        journal._queued_commits = 0
+    journal.epochs.advance(int(np.asarray(jax.device_get(pstore.version))))
+    return pstore, cache, info

@@ -694,6 +694,54 @@ def stack_blocks(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore):
     return ps._replace(out=blk(ps.out), inc=blk(ps.inc))
 
 
+def splice_owner_blocks(pspec: PartitionedStoreSpec,
+                        dst: PartitionedGraphStore,
+                        src: PartitionedGraphStore,
+                        owner: int) -> PartitionedGraphStore:
+    """Graft owner ``owner``'s out/inc block rows from ``src`` into ``dst``
+    (host-side, numpy). This is the recovery-as-migration transport: ``src``
+    is the dead shard's reconstructed store (incremental checkpoint +
+    journal replay), ``dst`` the live store that kept serving in degraded
+    mode — only the lost owner's block region moves, everything else stays
+    the live tier's bytes. The replicated vertex tier and global scalars are
+    taken from ``src`` as well: during the outage every gRW commit queued in
+    the journal unapplied, so the replayed store *is* the durable global
+    state (``v_len``/``e_len``/``version`` included) and the live store's
+    copy is identical by construction.
+
+    The geid index makes the splice sufficient: ``gperm`` (the sorted
+    geid→slot probe permutation) lives inside the block rows and travels
+    with them, so the spliced store is immediately servable — no host
+    re-sort, no re-index pass."""
+    EB, Vloc, s = pspec.e_blk_cap, pspec.v_loc, int(owner)
+
+    def blk(d: EdgeBlock, r: EdgeBlock) -> EdgeBlock:
+        def row(dv, rv):
+            out = np.asarray(dv).copy()
+            out[s * EB:(s + 1) * EB] = np.asarray(rv)[s * EB:(s + 1) * EB]
+            return out
+
+        indptr = np.asarray(d.indptr).copy()
+        indptr[s * (Vloc + 1):(s + 1) * (Vloc + 1)] = (
+            np.asarray(r.indptr)[s * (Vloc + 1):(s + 1) * (Vloc + 1)]
+        )
+        blk_len = np.asarray(d.blk_len).copy()
+        blk_len[s] = np.asarray(r.blk_len)[s]
+        csr_len = np.asarray(d.csr_len).copy()
+        csr_len[s] = np.asarray(r.csr_len)[s]
+        return EdgeBlock(
+            key=row(d.key, r.key), other=row(d.other, r.other),
+            label=row(d.label, r.label), alive=row(d.alive, r.alive),
+            props=row(d.props, r.props), geid=row(d.geid, r.geid),
+            gperm=row(d.gperm, r.gperm), indptr=indptr,
+            blk_len=blk_len, csr_len=csr_len,
+        )
+
+    return src._replace(
+        out=blk(dst.out, src.out), inc=blk(dst.inc, src.inc),
+    )
+
+
 def unstack_blocks(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore):
     """Flatten shard-stacked blocks back to the global layout."""
     n, EB = pspec.n_shards, pspec.e_blk_cap

@@ -71,6 +71,22 @@ def main(argv=None):
     ap.add_argument("--purge", action="store_true",
                     help="reclaim tombstones at gated compactions when the "
                          "liveness epoch allows")
+    ap.add_argument("--inject-crash", default=None, metavar="SHARD:BATCH",
+                    help="chaos: lose shard SHARD's storage from batch "
+                         "BATCH (serving degrades, writes queue, recovery "
+                         "replays — requires the journal)")
+    ap.add_argument("--recover-after", type=int, default=4,
+                    help="batches of degraded serving before recovery-as-"
+                         "migration runs for the crashed shard")
+    ap.add_argument("--hedge-after", type=float, default=0.05,
+                    help="straggler hedge deadline in seconds for the gR "
+                         "read path")
+    ap.add_argument("--io-timeout", type=float, default=None,
+                    help="wall-clock bound per journal flush / checkpoint "
+                         "write attempt (CallTimeout + retry past it)")
+    ap.add_argument("--full-checkpoints", action="store_true",
+                    help="periodic checkpoints snapshot the whole store "
+                         "(default: incremental — dirty owners only)")
     args = ap.parse_args(argv)
 
     if args.shards > 1:
@@ -80,6 +96,10 @@ def main(argv=None):
         ).strip()
     import jax
 
+    from repro.distributed.fault import (
+        HedgedCalls, NodeFailure, ShardFaultPlan,
+    )
+    from repro.distributed.failover import FailoverController
     from repro.distributed.graph_serve import (
         GraphServeConfig, ShardedMissDrain, ShardedTxnRuntime, config_espec,
         config_plan_and_ttable,
@@ -138,7 +158,7 @@ def main(argv=None):
         root = args.journal_dir or os.path.join(
             tempfile.mkdtemp(prefix="serve-journal-"), "journal"
         )
-        journal = WriteBehindJournal(root, rt.n)
+        journal = WriteBehindJournal(root, rt.n, io_timeout=args.io_timeout)
         journal.checkpoint(
             sstate, e_blk_cap=rt.pspec.e_blk_cap,
             recent_blk_cap=rt.pspec.recent_blk_cap,
@@ -148,7 +168,24 @@ def main(argv=None):
         print(f"journal: {root} (checkpoint every "
               f"{args.checkpoint_every} commits)")
 
-    total = dict(requests=0, hits=0, misses=0, route_overflow=0)
+    failover = None
+    crash_shard = crash_batch = None
+    if args.inject_crash is not None:
+        if journal is None:
+            ap.error("--inject-crash requires the journal (degraded-mode "
+                     "writes queue there)")
+        crash_shard, crash_batch = (int(x) for x in args.inject_crash.split(":"))
+        fault_plan = ShardFaultPlan(crash={crash_shard: crash_batch})
+        failover = FailoverController(
+            rt, journal, ttable, plan=fault_plan, hedge=HedgedCalls(),
+            hedge_after=args.hedge_after,
+        )
+        print(f"chaos: shard {crash_shard} crashes at batch {crash_batch}, "
+              f"recovery after {args.recover_after} degraded batches")
+
+    total = dict(requests=0, hits=0, misses=0, route_overflow=0, deferred=0)
+    avail = dict(unavailable_batches=0, degraded_batches=0, deferred_rows=0,
+                 queued_commits=0, recovery_seconds=0.0)
     maint = dict(device_compactions=0, growths=0, commits=0,
                  append_overflow=0, purges=0)
     t0 = time.time()
@@ -167,16 +204,45 @@ def main(argv=None):
                   f"(precompiled {swap['compiled_steps']} steps in "
                   f"{swap['precompile_seconds']:.1f} s off-loop)")
         roots = rng.integers(0, V, args.batch).astype(np.int32)
-        # pin the gR snapshot's epoch: purge may not reclaim under us
-        pin = journal.epochs.pin() if journal is not None else None
-        res, misses, m = rt.run_gr_tx_batch(sstate, cache, ttable, plan, roots)
+        if failover is not None:
+            failover.probe(b)
+            try:
+                res, _deferred, misses, m = failover.run_gr(
+                    sstate, cache, plan, roots, b
+                )
+            except NodeFailure:
+                # detection gap: the dead owner is needed but not yet
+                # marked down — this batch IS the unavailability window
+                avail["unavailable_batches"] += 1
+                continue
+            avail["deferred_rows"] += m["deferred_rows"]
+            avail["degraded_batches"] += int(bool(failover.detector.down()))
+        elif journal is not None:
+            # pin the gR snapshot's epoch: purge may not reclaim under us;
+            # the scope releases on every exit path (no leaked pins)
+            with journal.epochs.pin_scope():
+                res, misses, m = rt.run_gr_tx_batch(
+                    sstate, cache, ttable, plan, roots
+                )
+        else:
+            res, misses, m = rt.run_gr_tx_batch(
+                sstate, cache, ttable, plan, roots
+            )
         for k in total:
-            total[k] += int(m[k])
+            total[k] += int(m.get(k, 0))
         # CP-per-shard: misses route to their owner's queue and drain there
         drain.push(misses)
         cache = drain.drain(sstate, sstate, cache, ttable, 512)
-        if pin is not None:
-            journal.epochs.release(pin)
+        if (failover is not None and crash_shard in failover.detector.down()
+                and b >= crash_batch + args.recover_after):
+            sstate, cache, rinfo = failover.recover(sstate, cache, crash_shard)
+            avail["queued_commits"] = rinfo["drained_commits"]
+            avail["recovery_seconds"] = round(rinfo["recovery_seconds"], 3)
+            print(f"batch {b}: recovered shard {crash_shard} — replayed "
+                  f"{rinfo['replayed_commits']} commits to seq "
+                  f"{rinfo['replayed_to_seq']}, drained "
+                  f"{rinfo['drained_commits']} queued, "
+                  f"{rinfo['recovery_seconds']*1e3:.0f} ms")
         wm = None
         if partitioned and args.write_every and (b + 1) % args.write_every == 0:
             # a small upsert burst lands in the block recent regions
@@ -196,23 +262,33 @@ def main(argv=None):
                 )
                 gate = gate_base._replace(purge=purge_ok)
                 maint["purges"] += int(purge_ok)
-            sstate, cache, wm = rt.run_grw_tx(
-                sstate, cache, ttable, mb, gate=gate, journal=journal
-            )
+            if failover is not None:
+                # degraded mode queues the commit durably instead of
+                # applying (order-dependent ids; see distributed.failover)
+                sstate, cache, wm = failover.run_grw(
+                    sstate, cache, mb, gate=gate
+                )
+            else:
+                sstate, cache, wm = rt.run_grw_tx(
+                    sstate, cache, ttable, mb, gate=gate, journal=journal
+                )
             # under --no-maintenance this is the degradation signal the
             # flag exists to demonstrate — report it, don't crash on it
-            maint["append_overflow"] += wm["store_append_overflow"]
+            maint["append_overflow"] += wm.get("store_append_overflow", 0)
             maint["device_compactions"] += wm.get("device_compactions", 0)
             maint["commits"] += 1
-            if journal is not None and maint["commits"] % args.checkpoint_every == 0:
-                journal.checkpoint(
+            if (journal is not None and not wm.get("queued", 0)
+                    and maint["commits"] % args.checkpoint_every == 0):
+                ckpt = (journal.checkpoint if args.full_checkpoints
+                        else journal.checkpoint_incremental)
+                ckpt(
                     sstate, e_blk_cap=rt.pspec.e_blk_cap,
                     recent_blk_cap=rt.pspec.recent_blk_cap,
                     store_version=int(jax.device_get(sstate.version)),
                 )
         if (
             maintain and wm is not None and rt._next_tier is None
-            and wm["store_occupancy_max"] >= policy.grow_occupancy_frac
+            and wm.get("store_occupancy_max", 0) >= policy.grow_occupancy_frac
         ):
             # occupancy high-water: compile the next tier in the background
             # while this tier keeps serving; the swap happens at a later
@@ -255,6 +331,7 @@ def main(argv=None):
         jm = journal.metrics()
         total.update({k: jm[k] for k in (
             "journal_lag_batches", "flush_queue_depth", "pinned_epoch_min",
+            "open_pins", "leaked_pin_releases",
         )})
         total["swap_events"] = rt.swap_events
         print(
@@ -263,7 +340,24 @@ def main(argv=None):
             f"flushes={jm['flushes']} flushed_records={jm['flushed_records']} "
             f"checkpoint_seq={jm['checkpoint_seq']} "
             f"pinned_epoch_min={jm['pinned_epoch_min']} "
+            f"open_pins={jm['open_pins']} "
+            f"leaked_pin_releases={jm['leaked_pin_releases']} "
             f"swap_events={rt.swap_events}"
+        )
+    if failover is not None:
+        fm = failover.metrics()
+        total.update(avail)
+        total.update({k: fm[k] for k in (
+            "detections", "recoveries", "hedge_rate",
+        ) if k in fm})
+        print(
+            f"failover: unavailable_batches={avail['unavailable_batches']} "
+            f"degraded_batches={avail['degraded_batches']} "
+            f"deferred_rows={avail['deferred_rows']} "
+            f"queued_commits_drained={avail['queued_commits']} "
+            f"recovery_seconds={avail['recovery_seconds']} "
+            f"detections={fm['detections']} recoveries={fm['recoveries']} "
+            f"hedge_rate={fm.get('hedge_rate', 0.0)}"
         )
     return total
 

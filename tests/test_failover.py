@@ -1,0 +1,365 @@
+"""Failure-detection, degraded-mode serving, and recovery-as-migration —
+the tier-1 (host / 1-shard) half of the failover layer.
+
+The fault library primitives (`RetryPolicy` validation + retryable
+classification, `timed_call` bounds, `FailureDetector` thresholds,
+`ShardFaultPlan` scripting, `HedgedCalls.call` racing, exception-safe
+epoch pins) are pure host code and test directly. The serving state
+machine runs end-to-end on the 1-shard degenerate mesh — crash the only
+owner and the loop must detect, defer every miss (cache hits keep
+serving), queue every commit, then recover byte-identically — the fast
+crash/recover smoke; the 8-device chaos run with a *partial* outage is
+``benchmarks/bench_failover.py`` in the sharded-runtime CI job."""
+
+import time
+
+import numpy as np
+import pytest
+
+from conftest import build_world, enabled_ttable, fig1_plan
+from repro.core import CacheSpec, EngineSpec
+from repro.distributed import flat_mesh
+from repro.distributed.failover import FailoverController
+from repro.distributed.fault import (
+    CallTimeout,
+    FailureDetector,
+    HedgedCalls,
+    NodeFailure,
+    RetryPolicy,
+    ShardFaultPlan,
+    timed_call,
+)
+from repro.distributed.graph_serve import ShardedTxnRuntime
+from repro.graphstore import (
+    EpochRegistry,
+    WriteBehindJournal,
+    make_mutation_batch,
+)
+
+
+# --------------------------------------------------------------- RetryPolicy
+def test_retry_policy_rejects_zero_attempts():
+    # the old code fell through the loop and re-raised `last = None`
+    # (TypeError); now the bad budget is rejected at construction
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=-3)
+
+
+def test_retry_policy_retryable_predicate_short_circuits():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise KeyError("not transient")
+
+    rp = RetryPolicy(
+        max_attempts=5, retryable=lambda e: not isinstance(e, KeyError)
+    )
+    with pytest.raises(KeyError):
+        rp.run(fn)
+    assert len(calls) == 1  # surfaced immediately, no burned retries
+
+    calls.clear()
+    rp2 = RetryPolicy(max_attempts=3, retryable=lambda e: isinstance(e, OSError))
+    with pytest.raises(OSError):
+        rp2.run(lambda: (calls.append(1), (_ for _ in ()).throw(OSError()))[1])
+    assert len(calls) == 3  # transient per the predicate: full budget
+
+
+def test_retry_policy_succeeds_mid_budget():
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert RetryPolicy(max_attempts=4).run(flaky) == "ok"
+    assert state["n"] == 3
+
+
+# ----------------------------------------------------------------- timed_call
+def test_timed_call_inline_when_unbounded():
+    assert timed_call(lambda x: x + 1, None, 2) == 3
+
+
+def test_timed_call_times_out_and_propagates_errors():
+    with pytest.raises(CallTimeout):
+        timed_call(time.sleep, 0.02, 0.5)
+    with pytest.raises(ZeroDivisionError):
+        timed_call(lambda: 1 / 0, 1.0)
+    assert timed_call(lambda: "fast", 1.0) == "fast"
+
+
+# ----------------------------------------------------- detector + fault plan
+def test_failure_detector_threshold_and_recovery():
+    d = FailureDetector(n=4, fail_threshold=2)
+    d.observe_failure(1)
+    assert d.down() == frozenset()  # one blip does not flap the mesh
+    d.observe_ok(1)
+    d.observe_failure(1)
+    assert d.down() == frozenset()  # consecutive counter reset by the ok
+    d.observe_failure(1)
+    d.observe_failure(1)
+    assert d.down() == frozenset({1})
+    assert d.detections == 1
+    assert d.down_mask().tolist() == [False, True, False, False]
+    d.mark_recovered(1)
+    assert d.down() == frozenset() and d.recoveries == 1
+
+
+def test_failure_detector_straggle_marking():
+    d = FailureDetector(n=2, straggle_after=0.1)
+    d.observe_ok(0, latency_s=0.5)
+    assert d.straggling() == frozenset({0})
+    d.observe_ok(0, latency_s=0.01)
+    assert d.straggling() == frozenset()
+
+
+def test_shard_fault_plan_script():
+    p = ShardFaultPlan(
+        crash={2: 5}, hang={1: (3, 6, 0.2)}, torn_flush_attempts=(0,)
+    )
+    assert p.crashed_at(4) == frozenset()
+    assert p.crashed_at(5) == frozenset({2})
+    assert p.hang_delay(1, 2) == 0.0
+    assert p.hang_delay(1, 4) == 0.2
+    assert p.hang_delay(1, 6) == 0.0
+    with pytest.raises(OSError):
+        p.flush_fault(0)
+    p.flush_fault(1)  # not scripted: no-op
+    p.revive(2)
+    assert p.crashed_at(99) == frozenset()
+
+
+# ------------------------------------------------------------ hedged calls
+def test_hedged_call_fast_primary_skips_hedge():
+    h = HedgedCalls()
+    r, from_hedge = h.call(lambda: "fast", lambda: "hedge", hedge_after=0.5)
+    assert r == "fast" and not from_hedge
+    assert h.issued == 1 and h.hedged == 0 and h.hedge_rate == 0.0
+
+
+def test_hedged_call_slow_primary_loses_to_hedge():
+    h = HedgedCalls()
+
+    def slow():
+        time.sleep(0.5)
+        return "slow"
+
+    r, from_hedge = h.call(slow, lambda: "hedge", hedge_after=0.01)
+    assert r == "hedge" and from_hedge
+    assert h.hedged == 1 and h.hedge_wins == 1 and h.hedge_rate == 1.0
+
+
+def test_hedged_call_winner_error_propagates():
+    h = HedgedCalls()
+
+    def bad():
+        raise RuntimeError("primary died")
+
+    with pytest.raises(RuntimeError, match="primary died"):
+        h.call(bad, lambda: "never-launched", hedge_after=5.0)
+
+
+# -------------------------------------------------------- exception-safe pins
+def test_pin_scope_releases_on_every_exit_path():
+    reg = EpochRegistry()
+    reg.advance(7)
+    with reg.pin_scope():
+        assert reg.open_pins() == 1
+        assert reg.min_pinned() == 7
+    assert reg.open_pins() == 0
+    assert reg.leaked_releases == 0
+
+    # the failure mode the scope exists for: a gR batch raising mid-flight
+    # used to leak its pin and block tombstone purge forever
+    with pytest.raises(NodeFailure):
+        with reg.pin_scope():
+            raise NodeFailure("owner lost mid-batch")
+    assert reg.open_pins() == 0  # released, not leaked
+    assert reg.leaked_releases == 1
+    reg.advance(9)
+    assert reg.safe_to_purge(9)  # purge is NOT wedged by the dead reader
+
+
+# ------------------------------------------------- queued-commit watermark
+def test_applied_watermark_freezes_for_queued_commits(tmp_path):
+    spec, _ = build_world()
+    j = WriteBehindJournal(str(tmp_path / "j"), 2)
+    mb = make_mutation_batch(spec, new_edges=[(0, 5, 0, [1])])
+    s1 = j.append_commit(mb, commit_version=1)
+    assert j.applied_seq == s1
+    s2 = j.append_commit(mb, applied=False)  # degraded mode: queued
+    s3 = j.append_commit(mb, applied=False)
+    assert j.applied_seq == s1  # frozen at the outage boundary
+    m = j.metrics()
+    assert m["queued_commits"] == 2 and m["applied_seq"] == s1
+    j.flush()
+    # the watermark is durable: a reopened journal (crashed process) still
+    # knows which records were device-applied vs queued
+    j2 = WriteBehindJournal(str(tmp_path / "j"), 2)
+    assert j2.applied_seq == s1
+    assert [r.seq for r in j2.read_records(after_seq=j2.applied_seq)] == [s2, s3]
+
+
+def test_queued_commits_mark_owners_checkpoint_dirty(tmp_path):
+    spec, _ = build_world()
+    j = WriteBehindJournal(str(tmp_path / "j"), 4)
+    mb = make_mutation_batch(spec, new_edges=[(1, 5, 0, [1])])
+    j.append_commit(mb)
+    assert j.metrics()["dirty_owners_since_ckpt"] > 0
+    # flush clears the per-flush dirty map but NOT the checkpoint map
+    j.flush()
+    assert j.metrics()["dirty_owners"] == 0
+    assert j.metrics()["dirty_owners_since_ckpt"] > 0
+    # a gated commit that compacted on-device dirties every owner
+    j.append_commit(mb, device_compactions=1)
+    assert j.metrics()["dirty_owners_since_ckpt"] == 4
+
+
+def test_journal_io_timeout_flush(tmp_path):
+    """A hung flush write surfaces as a bounded-retry failure, not a hang."""
+    from repro.graphstore import FlushError
+
+    spec, _ = build_world()
+
+    def hang_forever(attempt):
+        time.sleep(10.0)
+
+    j = WriteBehindJournal(
+        str(tmp_path / "j"), 1, io_timeout=0.05,
+        retry=RetryPolicy(max_attempts=2), flush_fault=hang_forever,
+    )
+    j.append_commit(make_mutation_batch(spec, new_edges=[(0, 5, 0, [1])]))
+    t0 = time.perf_counter()
+    with pytest.raises(FlushError):
+        j.flush()
+    assert time.perf_counter() - t0 < 5.0  # bounded, not wedged
+    assert j.flush_failures == 1
+
+
+# ------------------------------------- 1-shard crash/recover smoke (tier-1)
+def _one_shard_world():
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=256, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, _, _ = enabled_ttable()
+    return spec, store, espec, ttable, fig1_plan()
+
+
+def test_single_shard_crash_degrade_recover(tmp_path):
+    """The full failover lifecycle on the 1-shard degenerate mesh: with the
+    only owner down, every miss defers but cache hits keep serving; commits
+    queue durably; recovery replays + drains back to byte-identity with an
+    uninterrupted control run."""
+    import jax
+
+    spec, store, espec, ttable, plan = _one_shard_world()
+    roots = np.array([0, 1, 2, 3], np.int32)
+    mb1 = make_mutation_batch(spec, new_edges=[(0, 9, 0, [1])])
+    mb2 = make_mutation_batch(spec, new_edges=[(1, 8, 0, [0])])
+
+    # --- control: the same traffic, no fault
+    rt_c = ShardedTxnRuntime(espec, flat_mesh(1), route_cap_factor=None,
+                             blk_slack=1.0)
+    ps_c = rt_c.partition_store(store)
+    cache_c = rt_c.empty_cache()
+    res_c0, _, _ = rt_c.run_gr_tx_batch(ps_c, cache_c, ttable, plan, roots)
+    ps_c, cache_c, _ = rt_c.run_grw_tx(ps_c, cache_c, ttable, mb1)
+    ps_c, cache_c, _ = rt_c.run_grw_tx(ps_c, cache_c, ttable, mb2)
+    res_c1, _, _ = rt_c.run_gr_tx_batch(ps_c, cache_c, ttable, plan, roots)
+
+    # --- chaos: owner 0 (the only owner) crashes at batch 1
+    rt = ShardedTxnRuntime(espec, flat_mesh(1), route_cap_factor=None,
+                           blk_slack=1.0)
+    ps = rt.partition_store(store)
+    cache = rt.empty_cache()
+    j = WriteBehindJournal(str(tmp_path / "j"), rt.n)
+    j.checkpoint(ps, e_blk_cap=rt.pspec.e_blk_cap,
+                 recent_blk_cap=rt.pspec.recent_blk_cap, store_version=0)
+    ctl = FailoverController(
+        rt, j, ttable, plan=ShardFaultPlan(crash={0: 1}),
+        detector=FailureDetector(n=1, fail_threshold=2),
+    )
+
+    # batch 0: healthy — same bytes as control
+    ctl.probe(0)
+    res0, d0, _, m0 = ctl.run_gr(ps, cache, plan, roots, 0)
+    assert np.array_equal(res0, res_c0) and not d0.any()
+
+    # batch 1: crash lands; one probe is below the threshold -> the gap
+    ctl.probe(1)
+    with pytest.raises(NodeFailure):
+        ctl.run_gr(ps, cache, plan, roots, 1)
+    assert ctl.failed_batches == 1
+
+    # batch 2: detector trips -> degraded serving; on one shard EVERY miss
+    # defers (nothing is cached: cold cache), no miss records escape
+    ctl.probe(2)
+    res2, d2, misses2, m2 = ctl.run_gr(ps, cache, plan, roots, 2)
+    assert ctl.detector.down() == frozenset({0})
+    assert d2.all() and m2["deferred_rows"] == len(roots)
+    assert not misses2  # CP must not populate from lost blocks
+    assert m2["hits"] == 0
+
+    # degraded writes: both commits queue durably, the store doesn't move
+    v_before = int(jax.device_get(ps.version))
+    ps, cache, w1 = ctl.run_grw(ps, cache, mb1)
+    ps, cache, w2 = ctl.run_grw(ps, cache, mb2)
+    assert w1["queued"] == 1 and w2["queued"] == 1
+    assert int(jax.device_get(ps.version)) == v_before
+    assert j.metrics()["queued_commits"] == 2
+
+    # recovery-as-migration: replay to the applied watermark, splice, drain
+    ps, cache, rinfo = ctl.recover(ps, cache, 0)
+    assert rinfo["drained_commits"] == 2
+    assert ctl.detector.down() == frozenset()
+    assert ctl.plan.crashed_at(99) == frozenset()
+
+    # post-recovery: byte-identical store and results vs control
+    for a, b in zip(
+        jax.tree_util.tree_leaves(jax.device_get(ps)),
+        jax.tree_util.tree_leaves(jax.device_get(ps_c)),
+    ):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    ctl.probe(3)  # the revived owner now heartbeats healthy
+    res3, d3, _, _ = ctl.run_gr(ps, cache, plan, roots, 3)
+    assert not d3.any()
+    assert np.array_equal(res3, res_c1)
+    fm = ctl.metrics()
+    assert fm["detections"] == 1 and fm["recoveries"] == 1
+
+
+def test_hedged_read_path_masks_straggler(tmp_path):
+    """A straggling-but-alive owner never enters degraded mode: the read
+    path hedges the full batch against a masked call and the hedge's
+    deferred rows are bounded to the straggler's segment (on 1 shard: all
+    rows, making the outcome easy to pin)."""
+    spec, store, espec, ttable, plan = _one_shard_world()
+    roots = np.array([0, 1, 2, 3], np.int32)
+    rt = ShardedTxnRuntime(espec, flat_mesh(1), route_cap_factor=None,
+                           blk_slack=1.0)
+    ps = rt.partition_store(store)
+    cache = rt.empty_cache()
+    j = WriteBehindJournal(str(tmp_path / "j"), rt.n)
+    hedge = HedgedCalls()
+    ctl = FailoverController(
+        rt, j, ttable, plan=ShardFaultPlan(hang={0: (0, 10, 2.0)}),
+        detector=FailureDetector(n=1, fail_threshold=2, straggle_after=1.0),
+        hedge=hedge, hedge_after=0.05,
+    )
+    # warm the compiled step OUTSIDE the race so the hedge deadline
+    # measures serving latency, not compile latency
+    rt.run_gr_tx_batch(ps, cache, ttable, plan, roots)
+
+    ctl.probe(0)
+    assert ctl.detector.straggling() == frozenset({0})
+    assert ctl.detector.down() == frozenset()  # alive: nothing is down
+    res, deferred, _, m = ctl.run_gr(ps, cache, plan, roots, 0)
+    assert m["hedged"] == 1 and hedge.hedge_wins == 1
+    assert deferred.all()  # the masked hedge won; its rows are flagged
+    assert hedge.hedge_rate == 1.0
