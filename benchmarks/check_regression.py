@@ -1,0 +1,110 @@
+"""Bench-regression guard for the partitioned serving tier.
+
+Compares a freshly measured ``BENCH_partitioned_store.json`` against the
+committed baseline (``git show HEAD:BENCH_partitioned_store.json`` by
+default, or any ``--baseline`` file) and fails — exit 1, with the numbers —
+when either headline metric regresses more than ``--max-regress``
+(default 10%):
+
+- ``gr_speedup_vs_replicated`` — the tier's reason to exist; LOWER is a
+  regression. This ratio divides out machine speed, so it is the stable
+  signal on shared CI runners.
+- ``gr_ms_per_batch.partitioned`` — absolute serving latency; HIGHER is a
+  regression. Only compared when the fresh run used the same batch size
+  and shard count as the baseline (a reduced-size CI smoke run is not
+  comparable row-for-row; the guard says so and skips the wall-clock
+  check rather than inventing a scale factor).
+
+``results_identical`` must be true in the fresh run — a fast wrong answer
+is not a benchmark result.
+
+Usage::
+
+    python benchmarks/check_regression.py --fresh BENCH_partitioned_store.json
+    python benchmarks/check_regression.py --fresh /tmp/b.json --baseline old.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+BASELINE_GIT_PATH = "BENCH_partitioned_store.json"
+
+
+def load_baseline(path: str | None) -> dict:
+    if path:
+        with open(path) as f:
+            return json.load(f)
+    blob = subprocess.run(
+        ["git", "show", f"HEAD:{BASELINE_GIT_PATH}"],
+        capture_output=True, text=True, check=True,
+    ).stdout
+    return json.loads(blob)
+
+
+def check(fresh: dict, base: dict, max_regress: float) -> list[str]:
+    """Returns the list of failure messages (empty = pass)."""
+    failures = []
+    if not fresh.get("results_identical", False):
+        failures.append(
+            "results_identical is not true in the fresh run — the tiers "
+            "diverged; latency numbers are meaningless"
+        )
+
+    sp_new = float(fresh["gr_speedup_vs_replicated"])
+    sp_old = float(base["gr_speedup_vs_replicated"])
+    floor = sp_old * (1.0 - max_regress)
+    line = (f"gr_speedup_vs_replicated: {sp_new:.2f} vs baseline "
+            f"{sp_old:.2f} (floor {floor:.2f})")
+    if sp_new < floor:
+        failures.append("REGRESSION " + line)
+    else:
+        print("ok  " + line)
+
+    comparable = (fresh.get("batch") == base.get("batch")
+                  and fresh.get("n_shards") == base.get("n_shards"))
+    if not comparable:
+        print(
+            f"skip gr_ms_per_batch: fresh run shape "
+            f"(batch={fresh.get('batch')}, n_shards={fresh.get('n_shards')}) "
+            f"!= baseline (batch={base.get('batch')}, "
+            f"n_shards={base.get('n_shards')}) — wall-clock not comparable"
+        )
+        return failures
+
+    ms_new = float(fresh["gr_ms_per_batch"]["partitioned"])
+    ms_old = float(base["gr_ms_per_batch"]["partitioned"])
+    ceil = ms_old * (1.0 + max_regress)
+    line = (f"gr_ms_per_batch.partitioned: {ms_new:.1f} vs baseline "
+            f"{ms_old:.1f} (ceiling {ceil:.1f})")
+    if ms_new > ceil:
+        failures.append("REGRESSION " + line)
+    else:
+        print("ok  " + line)
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="freshly measured BENCH_partitioned_store.json")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline json (default: git show "
+                         f"HEAD:{BASELINE_GIT_PATH})")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    base = load_baseline(args.baseline)
+    failures = check(fresh, base, args.max_regress)
+    for msg in failures:
+        print(msg, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

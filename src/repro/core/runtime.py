@@ -63,6 +63,52 @@ from repro.utils import (
 # final-clause codes of a QueryPlan
 FINAL_IDS, FINAL_COUNT, FINAL_VALUES = 0, 1, 2
 
+# ------------------------------------------------------- packed wire format
+# One hop exchange each direction moves ONE contiguous int32 buffer (one
+# all_to_all), instead of the former separate root / value / count phases.
+#
+# Query frame (querier -> owner), int32 lanes per routed row:
+#     [0]              root vertex id (>= 0 for delivered rows)
+#     [1]              flags — bit 0 (WIRE_FLAG_VALID) marks a live row;
+#                      bucket padding is zero-filled, so its flags are 0
+#     [2 : 2+PARAM_LEN] the hop's bound predicate params (wildcard values)
+#
+# Result frame (owner -> querier), int32 lanes per row:
+#     [0 : RW]         left-packed leaf ids (cache hit or miss exec)
+#     [RW]             count lane, doubling as the hit/miss/deferred flag:
+#                      >= 0 is the leaf count (hit or executed miss),
+#                      -1 marks a row deferred at a down owner
+WIRE_FLAG_VALID = 1
+WIRE_QUERY_LANES = 2 + PARAM_LEN
+
+
+def pack_query_frame(roots, flags, params):
+    """Pack routed query rows into the contiguous wire layout above.
+
+    ``roots`` int32 [M], ``flags`` int32 [M], ``params`` int32
+    [M, PARAM_LEN] -> int32 [M, WIRE_QUERY_LANES].
+    """
+    return jnp.concatenate(
+        [roots[:, None], flags[:, None], params], axis=1
+    ).astype(jnp.int32)
+
+
+def unpack_query_frame(frame):
+    """Inverse of ``pack_query_frame``: (roots, flags, params)."""
+    return frame[..., 0], frame[..., 1], frame[..., 2:]
+
+
+def pack_result_frame(vals, cnt):
+    """Pack per-row results + count/flag lane: [M, RW] + [M] -> [M, RW+1]."""
+    return jnp.concatenate(
+        [vals, cnt[..., None].astype(vals.dtype)], axis=-1
+    )
+
+
+def unpack_result_frame(frame):
+    """Inverse of ``pack_result_frame``: (vals [M, RW], cnt [M])."""
+    return frame[..., :-1], frame[..., -1]
+
 # batch buckets: gR-Tx batches are padded to the next bucket so the jit
 # cache stays small. ``CachePopulator`` uses the prefix ``BUCKETS[:4]``.
 BUCKETS = (8, 32, 128, 512, 2048, 8192)
@@ -266,8 +312,12 @@ class MissRecord(NamedTuple):
 def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
     """One hop of the fused pipeline over a flat root frontier.
 
-    Returns ``kernel(store, cache, ttable, roots_flat, rmask_flat) ->
+    Returns ``kernel(store, cache, ttable, roots_flat, rmask_flat,
+    params_flat=None) ->
     (vals [BF, RW], cnt [BF], miss_roots [BF], n_miss_records, stats)``.
+    ``params_flat`` is the per-row bound predicate params ([BF, PARAM_LEN]);
+    the sharded tier unpacks it from the routed query frame, the single
+    host leaves it None and the hop's own params broadcast in place.
     ``(vals, cnt)`` are the hop's per-row results left-packed; everything
     the miss path touches — the storage gathers, hit/miss select, and
     miss-record compaction — lives behind a ``lax.cond``, so an all-hit
@@ -299,11 +349,14 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
                 hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
             )
 
-    def kernel(store, cache, ttable, roots_flat, rmask_flat):
+    def kernel(store, cache, ttable, roots_flat, rmask_flat, params_flat=None):
         BF = roots_flat.shape[0]
-        params = jnp.broadcast_to(
-            jnp.asarray(hop.params, jnp.int32), (BF, PARAM_LEN)
-        )
+        if params_flat is None:
+            params = jnp.broadcast_to(
+                jnp.asarray(hop.params, jnp.int32), (BF, PARAM_LEN)
+            )
+        else:
+            params = params_flat
         if cacheable:
             # lean probe: raw cached rows + O(BF) validity counts
             # (no per-element mask/select on the hit path)
@@ -329,12 +382,7 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
         def run_exec(args, hop=hop):
             roots_f, miss_m = args
             leaves_e, lmask_e, n_true, trunc, stats = exec_fn(
-                store, roots_f,
-                jnp.broadcast_to(
-                    jnp.asarray(hop.params, jnp.int32),
-                    (roots_f.shape[0], PARAM_LEN),
-                ),
-                miss_m,
+                store, roots_f, params, miss_m,
             )
             cnt_e = jnp.where(miss_m, jnp.minimum(n_true, RW), 0)
             if cacheable:
@@ -417,8 +465,10 @@ class LocalPlanTier:
     def exec_fn(self, hop):
         return None  # default: onehop_exec over the full store
 
-    def route(self, hop_idx, A, roots_flat, rmask_flat):
-        return roots_flat, rmask_flat, None, jnp.int32(0)
+    def route(self, hop_idx, A, roots_flat, rmask_flat, params_row):
+        # no routing: rows stay home, per-row params stay implicit (None ->
+        # the hop kernel broadcasts its own params)
+        return roots_flat, rmask_flat, None, None, jnp.int32(0)
 
     def unroute(self, ctx, vals, cnt):
         return vals, cnt
@@ -433,7 +483,7 @@ class LocalPlanTier:
         return m
 
 
-def make_plan_fn(espec, plan, use_cache: bool, tier):
+def make_plan_fn(espec, plan, use_cache: bool, tier, *, overlap: bool = False):
     """The ROADMAP's shared hop driver: the whole-plan device program —
     every hop's probe + masked miss-exec + frontier merge, the final clause,
     per-hop compact miss arrays, and device metrics — parameterized by a
@@ -454,6 +504,22 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
     in the hop kernel — deferred slots come home as ``cnt = -1`` and are
     surfaced per row in the ``deferred`` output. Shape-polymorphic over
     the batch dimension (the caller pads to a ``BUCKETS`` bucket and jits).
+
+    The per-hop collective profile is lean: ``route`` and ``unroute`` are
+    each ONE exchange of a packed frame (see the wire-format constants at
+    the top of this module), and the former per-hop ``psum`` miss gate is
+    deferred — per-hop local miss counts are stacked under the ``_hop_k``
+    metrics key and globalized together with the additive metrics in one
+    ``reduce_metrics`` call after the hop loop, which on a mesh is a single
+    all-reduce per plan instead of one per hop plus one per metric.
+
+    ``overlap=True`` double-buffers the frontier: the batch is split into
+    two row streams pipelined through the hop loop with a one-stage skew,
+    so one stream's exchange is issued adjacent to the other stream's
+    owner-local exec and the two can overlap under async collectives.
+    The caller must guarantee an even per-shard batch (and size route caps
+    for the half-batch); results are row-identical to the unoverlapped
+    schedule when route caps don't drop (e.g. ``route_cap_factor=None``).
     """
     F, RW = espec.frontier, espec.result_width
     kernels = [
@@ -464,14 +530,16 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
     ]
     n_extra = getattr(tier, "extra_inputs", 0)
 
+    H = len(plan.hops)
+
     def fused(store, cache, ttable, roots, bvalid, *extra):
         assert len(extra) == n_extra, (len(extra), n_extra)
         if n_extra:
             tier.bind(*extra)
         Bb = roots.shape[0]
-        frontier = jnp.full((Bb, F), NULL_ID, jnp.int32).at[:, 0].set(roots)
-        fmask = jnp.zeros((Bb, F), bool).at[:, 0].set(bvalid)
-        row_def = jnp.zeros((Bb,), bool)
+        n_streams = 2 if overlap else 1
+        assert Bb % n_streams == 0, (Bb, n_streams)
+        Bs = Bb // n_streams
         z = jnp.int32(0)
         m = {
             "phases": jnp.int32(1),  # root index lookup (request 1)
@@ -482,51 +550,111 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
         }
         if tier.routed:
             m["route_overflow"] = z
-        miss_roots, miss_counts = [], []
-        # the occupied frontier is always a left-packed prefix, so each hop
-        # only probes/executes the A slots that can be live (1 for the root
-        # hop, then min(F, A*RW)) instead of the full F-wide frontier
-        A = 1
-        for hop_idx, (hop, kernel) in enumerate(zip(plan.hops, kernels)):
-            roots_flat = frontier[:, :A].reshape(-1)
-            rmask_flat = fmask[:, :A].reshape(-1)
-            # ---- route frontier roots to their owner shards (identity on
-            # a single host) ----
-            q, qmask, ctx, ovf = tier.route(hop_idx, A, roots_flat, rmask_flat)
+        # per-hop miss segments and local miss counts, in stream order
+        miss_roots = [[] for _ in range(H)]
+        miss_counts = [[] for _ in range(H)]
+        hop_k = [z for _ in range(H)]
+
+        def new_stream(r, bv):
+            return {
+                "frontier": jnp.full(
+                    (r.shape[0], F), NULL_ID, jnp.int32
+                ).at[:, 0].set(r),
+                "fmask": jnp.zeros((r.shape[0], F), bool).at[:, 0].set(bv),
+                "row_def": jnp.zeros((r.shape[0],), bool),
+                # the occupied frontier is always a left-packed prefix, so
+                # each hop only probes/executes the A slots that can be live
+                # (1 for the root hop, then min(F, A*RW)) instead of the
+                # full F-wide frontier
+                "A": 1,
+            }
+
+        streams = [
+            new_stream(roots[i * Bs:(i + 1) * Bs], bvalid[i * Bs:(i + 1) * Bs])
+            for i in range(n_streams)
+        ]
+
+        def stage_route(s, hop_idx):
+            # ---- one packed exchange: frontier roots + flags + bound
+            # params travel to their owner shards in a single frame
+            # (identity on a single host) ----
+            hop, A = plan.hops[hop_idx], s["A"]
+            roots_flat = s["frontier"][:, :A].reshape(-1)
+            rmask_flat = s["fmask"][:, :A].reshape(-1)
+            q, qmask, qparams, ctx, ovf = tier.route(
+                hop_idx, A, roots_flat, rmask_flat,
+                jnp.asarray(hop.params, jnp.int32),
+            )
             if tier.routed:
                 m["route_overflow"] = m["route_overflow"] + ovf
-            cacheable = hop.tpl_idx >= 0 and use_cache
+            s["q"], s["qmask"], s["qparams"], s["ctx"] = q, qmask, qparams, ctx
+
+        def stage_exec(s, hop_idx):
             # ---- owner-local probe + cond-gated miss execution ----
-            vals, cnt, mr, nrec, hs = kernel(store, cache, ttable, q, qmask)
-            if cacheable:
-                m["phases"] = m["phases"] + 1  # one cache get round-trip
+            hop, kernel = plan.hops[hop_idx], kernels[hop_idx]
+            vals, cnt, mr, nrec, hs = kernel(
+                store, cache, ttable, s["q"], s["qmask"], s["qparams"]
+            )
+            if hop.tpl_idx >= 0 and use_cache:
                 m["requests"] = m["requests"] + hs["n_read"]
                 m["cache_reads"] = m["cache_reads"] + hs["n_read"]
                 m["hits"] = m["hits"] + hs["hits"]
-                miss_roots.append(mr)
-                miss_counts.append(tier.pack_count(nrec))
-            # phases are structural (identical on every shard), so the miss
-            # gate uses the *global* miss count
-            k_g = tier.psum(hs["k"])
-            m["phases"] = m["phases"] + 2 * (k_g > 0)  # edge read + leaf fetch
+                miss_roots[hop_idx].append(mr)
+                miss_counts[hop_idx].append(tier.pack_count(nrec))
+            # the miss-phase gate is structural (fires on *any* shard's
+            # miss) — stash the local count; it globalizes with the other
+            # metrics in the single deferred reduction below
+            hop_k[hop_idx] = hop_k[hop_idx] + hs["k"]
             m["requests"] = m["requests"] + hs["k"] + hs["leaves"]
             m["leaf_fetches"] = m["leaf_fetches"] + hs["leaves"]
             m["edges_scanned"] = m["edges_scanned"] + hs["edges"]
             m["misses"] = m["misses"] + hs["k"]
             m["truncated"] = m["truncated"] + hs["trunc"]
-            # ---- route the left-packed results home, then the home-shard
-            # on-device dedup/compact merge (cost tracks occupancy) ----
-            vals, cnt = tier.unroute(ctx, vals, cnt)
-            cnt = cnt.reshape(Bb, A)
+            s["vals"], s["cnt"] = vals, cnt
+
+        def stage_finish(s, hop_idx):
+            # ---- one packed exchange home, then the home-shard on-device
+            # dedup/compact merge (cost tracks occupancy) ----
+            A, Br = s["A"], s["frontier"].shape[0]
+            vals, cnt = tier.unroute(s["ctx"], s["vals"], s["cnt"])
+            cnt = cnt.reshape(Br, A)
             # decode the deferred channel: any owner-down slot (cnt = -1)
             # marks the whole query row bounded-stale
-            row_def = row_def | jnp.any(cnt < 0, axis=1)
+            s["row_def"] = s["row_def"] | jnp.any(cnt < 0, axis=1)
             cnt = jnp.maximum(cnt, 0)
-            frontier, fmask = segmented_dedup_merge(
-                vals.reshape(Bb, A, RW), cnt, F
+            s["frontier"], s["fmask"] = segmented_dedup_merge(
+                vals.reshape(Br, A, RW), cnt, F
             )
-            A = min(F, A * RW)
+            s["A"] = min(F, A * RW)
 
+        if n_streams == 1:
+            (s,) = streams
+            for h in range(H):
+                stage_route(s, h)
+                stage_exec(s, h)
+                stage_finish(s, h)
+        else:
+            # double-buffered schedule, one-stage skew: each exchange
+            # (route/unroute) is issued adjacent to the *other* stream's
+            # owner-local exec, so async collectives overlap miss work
+            sa, sb = streams
+            stage_route(sa, 0)
+            for h in range(H):
+                stage_exec(sa, h)
+                stage_route(sb, h)       # b's hop-h exchange vs a's exec
+                stage_finish(sa, h)
+                if h + 1 < H:
+                    stage_route(sa, h + 1)
+                stage_exec(sb, h)        # b's exec vs a's hop-(h+1) exchange
+                stage_finish(sb, h)
+
+        for hop in plan.hops:
+            if hop.tpl_idx >= 0 and use_cache:
+                m["phases"] = m["phases"] + 1  # one cache get round-trip
+
+        row_def = jnp.concatenate([s["row_def"] for s in streams])
+        frontier = jnp.concatenate([s["frontier"] for s in streams])
+        fmask = jnp.concatenate([s["fmask"] for s in streams])
         m["deferred"] = jnp.sum(row_def.astype(jnp.int32))
         result = finalize_frontier(plan, store, roots, frontier, fmask)
         if plan.post_filter is not None and plan.post_filter[0] != "id_neq":
@@ -536,9 +664,24 @@ def make_plan_fn(espec, plan, use_cache: bool, tier):
             m["phases"] = m["phases"] + 1  # valueMap fetch
             m["requests"] = m["requests"] + jnp.sum(fmask.astype(jnp.int32))
         m["phases"] = m["phases"] + plan.extra_phases
+        # single deferred reduction: per-hop miss counts ride the metrics
+        # dict through ``reduce_metrics`` (one all-reduce on a mesh), then
+        # gate the per-hop edge-read + leaf-fetch phases on the global count
+        m["_hop_k"] = jnp.stack(hop_k) if H else jnp.zeros((0,), jnp.int32)
         m = tier.reduce_metrics(m)
-        return (result, row_def, tuple(miss_roots), tuple(miss_counts), m,
-                store.version)
+        k_g = m.pop("_hop_k")
+        for h in range(H):
+            m["phases"] = m["phases"] + 2 * (k_g[h] > 0)  # edge read + leaf fetch
+        mr_out = tuple(
+            seg[0] if len(seg) == 1 else jnp.concatenate(seg)
+            for seg in miss_roots if seg
+        )
+        mc_out = tuple(
+            c[0] if len(c) == 1 else
+            jnp.concatenate([jnp.atleast_1d(x) for x in c])
+            for c in miss_counts if c
+        )
+        return (result, row_def, mr_out, mc_out, m, store.version)
 
     return fused
 

@@ -85,16 +85,26 @@ class FailoverController:
     # ---------------------------------------------------------------- probe
     def probe(self, batch_idx: int) -> frozenset:
         """One heartbeat round: feed every owner's scripted (or real) probe
-        outcome to the detector; returns the post-probe down set."""
-        crashed = (self.plan.crashed_at(batch_idx) if self.plan is not None
-                   else frozenset())
+        outcome to the detector; returns the post-probe down set.
+
+        With a ``ShardFaultPlan`` the outcomes are scripted (chaos runs);
+        without one the heartbeat is the runtime's MEASURED latest step
+        wall-clock (``rt.last_step_seconds``, recorded by
+        ``run_gr_tx_batch``) — a live straggler trips ``straggle_after``
+        from real timings, not scripts."""
+        if self.plan is None:
+            self.detector.observe_step(
+                float(getattr(self.rt, "last_step_seconds", 0.0))
+            )
+            return self.detector.down()
+        crashed = self.plan.crashed_at(batch_idx)
         for s in range(self.rt.n):
             if s in crashed:
                 self.detector.observe_failure(s)
             else:
-                lat = (self.plan.hang_delay(s, batch_idx)
-                       if self.plan is not None else 0.0)
-                self.detector.observe_ok(s, latency_s=lat)
+                self.detector.observe_ok(
+                    s, latency_s=self.plan.hang_delay(s, batch_idx)
+                )
         return self.detector.down()
 
     # ----------------------------------------------------------------- read

@@ -181,6 +181,20 @@ class FailureDetector:
             else:
                 self._straggling.discard(shard)
 
+    def observe_step(self, latency_s: float) -> None:
+        """Feed one measured serving-step wall-clock to every live owner.
+
+        The sharded step is a collective program — every owner participates
+        in the same all_to_all exchanges — so one measured step latency IS
+        each owner's observable heartbeat: a straggling owner inflates it
+        for the whole mesh (marking everyone straggling engages the hedged
+        read path, which is the correct response either way), while a
+        crashed owner surfaces through ``observe_failure``, not timing.
+        Owners already marked down keep their state until recovery."""
+        for s in range(self.n):
+            if s not in self._down:
+                self.observe_ok(s, latency_s=latency_s)
+
     def observe_failure(self, shard: int) -> None:
         c = self._consecutive.get(shard, 0) + 1
         self._consecutive[shard] = c

@@ -24,12 +24,37 @@ Two storage tiers back it:
 - gR-Txs (``serve_step`` / ``run_gr_tx_batch``): arbitrary multi-hop
   ``QueryPlan``s execute the fused probe→miss-exec→frontier-merge pipeline
   *inside* ``shard_map`` via the shared hop driver (``runtime.make_plan_fn``)
-  with a mesh tier: per hop, frontier roots are routed to their owner shards
-  (all_to_all), the owner runs the shared hop kernel against its local cache
-  block and local storage, and the left-packed results route back to the
-  querying shard for the on-device ``segmented_dedup_merge``. Results,
-  per-hop miss arrays, and psum'd metrics come back in one device→host
-  transfer, byte-identical to the single-host fused engine.
+  with a mesh tier. The hop protocol is **collective-lean**: exactly ONE
+  all_to_all each direction per hop, with everything a hop needs packed
+  into one contiguous int32 frame (``runtime.pack_query_frame`` /
+  ``pack_result_frame``):
+
+  * **route** — each frontier root ships as ``[root | flags | params]``
+    (``WIRE_QUERY_LANES`` lanes; bit 0 of flags = VALID, padding slots are
+    zero-filled so they can never decode valid) into per-peer buckets of
+    ``cap = ceil(route_cap_factor[hop] * rows / n)`` rows, then one
+    tiled all_to_all scatters every peer's bucket to its owner.
+  * **exec** — the owner probes its co-partitioned cache block and runs the
+    fused ``kernels/block_gather`` executor (one pass: CSR window + recent
+    region + liveness + statically specialized predicates, sort-based
+    set-dedup) over its owner-local blocks. ``fused_gather=False`` keeps
+    the legacy multi-op ``onehop_exec_view`` path for A/B.
+  * **unroute** — results return as ``[vals x RW | cnt]`` frames (the cnt
+    lane doubles as the hit/miss/deferred flag, -1 = deferred) in the
+    mirror all_to_all; the querying shard unpacks into the on-device
+    ``segmented_dedup_merge``.
+
+  Per-hop metric/phase globalization is DEFERRED into a single concatenated
+  psum after the hop loop (commutative sums, so totals are unchanged), so a
+  whole gR step costs ``2 * n_hops`` all_to_alls + 1 all-reduce — pinned by
+  the HLO collective-count test in ``tests/test_sharded_collectives.py``.
+  With ``overlap=True`` the batch splits into two row streams software-
+  pipelined one hop apart (stream B's route exchange issues while stream
+  A's owner-local exec runs), overlapping communication with compute under
+  async collectives; off by default (row-identical results, but it changes
+  the program shape and per-stream route caps halve). Results, per-hop miss
+  arrays, and the reduced metrics come back in one device→host transfer,
+  byte-identical to the single-host fused engine.
 
 - gRW-Txs (``run_grw_tx``): two phases inside one jitted step. On the
   partitioned tier, phase A applies the commit to owner-local storage
@@ -89,16 +114,22 @@ from repro.core.invalidation import (
     derive_cache_ops_views,
 )
 from repro.core.runtime import (
+    WIRE_FLAG_VALID,
     bucket_for,
     bucketize,
     compact_rows,
     decode_miss_records,
     make_plan_fn,
     onehop_exec_view,
+    pack_query_frame,
+    pack_result_frame,
     pad_roots,
     route_plan,
     route_scatter,
+    unpack_query_frame,
+    unpack_result_frame,
 )
+from repro.kernels.block_gather.ops import block_onehop_exec
 from repro.graphstore.maintenance import (
     DeviceGate,
     MaintenancePolicy,
@@ -132,13 +163,16 @@ _ADDITIVE_METRICS = (
     "edges_scanned", "cache_reads", "route_overflow", "deferred",
 )
 
-# Measured default per-peer routing capacity multiplier: sized from the
-# Zipfian (a=1.3) eCommerce workload's owner skew on an 8-shard mesh, where
-# the p99.9 per-owner share of a routed frontier stays under 3.4x the
-# uniform share (benchmarks/workload.measure_route_skew; recorded in
-# BENCH_partitioned_store.json). 4x makes the measured overflow rate 0 on
-# the production mix while bounding bucket memory at 4/n of the worst case.
-DEFAULT_ROUTE_CAP_FACTOR = 4
+# Measured default per-peer routing capacity multipliers, per hop: sized
+# from the Zipfian (a=1.3) eCommerce workload's owner skew on an 8-shard
+# mesh (benchmarks/workload.measure_route_skew; recorded in
+# BENCH_partitioned_store.json, per_hop_recommended = [3, 3]). Hop 1 routes
+# the raw Zipfian query roots and keeps 4x headroom over the uniform share
+# (p99.9 root skew ≈ 3.4x); hops ≥ 2 route leaf-derived frontier roots whose
+# measured skew is flatter, so 3x suffices. Both make the measured overflow
+# rate 0 on the production mix while bounding bucket memory at factor/n of
+# the worst case.
+DEFAULT_ROUTE_CAP_FACTOR = (4, 3)
 
 
 def _plan_key(plan):
@@ -189,6 +223,7 @@ class _MeshTier:
         self.caps = caps
         self.pspec = pspec
         self.axes, self.n = rt.axes, rt.n
+        self.fused_gather = rt.fused_gather
         self._down = None
 
     def bind(self, down):
@@ -213,45 +248,68 @@ class _MeshTier:
             return None  # replicated snapshot: the default full-store exec
         pspec, espec, axes = self.pspec, self.rt.lspec, self.axes
 
-        def exec_fn(store, roots_f, params, miss_m, hop=hop):
-            me = jax.lax.axis_index(axes)
-            view = BlockStoreView(pspec, store, me)
-            return onehop_exec_view(
-                espec, view, hop.direction, hop.edge_label,
-                hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
-            )
+        if self.fused_gather:
+            def exec_fn(store, roots_f, params, miss_m, hop=hop):
+                me = jax.lax.axis_index(axes)
+                view = BlockStoreView(pspec, store, me)
+                return block_onehop_exec(
+                    espec, view, hop.direction, hop.edge_label,
+                    hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
+                )
+        else:
+            def exec_fn(store, roots_f, params, miss_m, hop=hop):
+                me = jax.lax.axis_index(axes)
+                view = BlockStoreView(pspec, store, me)
+                return onehop_exec_view(
+                    espec, view, hop.direction, hop.edge_label,
+                    hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
+                )
 
         return exec_fn
 
-    def route(self, hop_idx, A, roots_flat, rmask_flat):
+    def route(self, hop_idx, A, roots_flat, rmask_flat, params_row):
         # interleaved ownership maps any id (even past v_cap) to exactly
         # one shard, where an out-of-range root is processed and comes back
         # empty exactly like on the single host; negative ids are
-        # indistinguishable from frontier padding
+        # indistinguishable from frontier padding.
+        #
+        # ONE exchange: root id + valid flag + bound predicate params
+        # travel together as a packed query frame (runtime wire format)
+        # instead of separate per-field collectives. Bucket padding is
+        # zero-filled, so padded rows decode as flags=0 (invalid) — their
+        # root lane 0 is never observed (every owner-side output is gated
+        # by the decoded row mask, and home-side gathers are kept-masked).
         n, cap = self.n, self.caps[hop_idx]
         rvals = jnp.where(rmask_flat, roots_flat, NULL_ID)
         owner = jnp.where(
             rmask_flat & (roots_flat >= 0), owner_of(roots_flat, n), -1
         )
-        send, slot, kept, ovf = bucketize(rvals, owner, n, cap)
+        flags = rmask_flat.astype(jnp.int32) * WIRE_FLAG_VALID
+        params = jnp.broadcast_to(
+            params_row[None, :], (roots_flat.shape[0], params_row.shape[0])
+        )
+        frame = pack_query_frame(rvals, flags, params)
+        send, slot, kept, ovf = bucketize(frame, owner, n, cap, fill=0)
         recv = jax.lax.all_to_all(
             send, self.axes, split_axis=0, concat_axis=0, tiled=True
         )
-        q = recv.reshape(-1)  # [n*cap] roots I own (NULL padded)
-        return q, q != NULL_ID, (slot, kept, cap), ovf
+        q, qflags, qparams = unpack_query_frame(recv.reshape(n * cap, -1))
+        qmask = (qflags & WIRE_FLAG_VALID) == WIRE_FLAG_VALID
+        return q, qmask, qparams, (slot, kept, cap), ovf
 
     def unroute(self, ctx, vals, cnt):
+        # ONE exchange home: the RW leaf lanes and the count lane (which
+        # doubles as the hit/deferred flag, cnt = -1 deferred) ride one
+        # packed result frame
         slot, kept, cap = ctx
         n, axes = self.n, self.axes
         RW = vals.shape[-1]
-        back_v = jax.lax.all_to_all(
-            vals.reshape(n, cap, RW), axes,
+        frame = pack_result_frame(vals, cnt)
+        back = jax.lax.all_to_all(
+            frame.reshape(n, cap, RW + 1), axes,
             split_axis=0, concat_axis=0, tiled=True,
-        ).reshape(n * cap, RW)
-        back_c = jax.lax.all_to_all(
-            cnt.reshape(n, cap), axes,
-            split_axis=0, concat_axis=0, tiled=True,
-        ).reshape(-1)
+        ).reshape(n * cap, RW + 1)
+        back_v, back_c = unpack_result_frame(back)
         sl = jnp.clip(slot, 0, n * cap - 1)
         return (
             jnp.where(kept[:, None], back_v[sl], NULL_ID),
@@ -265,8 +323,19 @@ class _MeshTier:
         return nrec[None]  # one independently-counted miss segment per shard
 
     def reduce_metrics(self, m):
-        for k in _ADDITIVE_METRICS:
-            m[k] = jax.lax.psum(m[k], self.axes)
+        # ONE all-reduce for the whole plan: the additive scalars and the
+        # per-hop miss-count vector (the deferred phase gate) globalize as
+        # a single concatenated psum instead of one psum per metric per plan
+        # plus one gate psum per hop
+        keys = [k for k in _ADDITIVE_METRICS if k in m]
+        hop_k = m["_hop_k"]
+        vec = jnp.concatenate(
+            [jnp.stack([m[k] for k in keys]).astype(jnp.int32), hop_k]
+        )
+        g = jax.lax.psum(vec, self.axes)
+        for i, k in enumerate(keys):
+            m[k] = g[i]
+        m["_hop_k"] = g[len(keys):]
         return m
 
 
@@ -317,11 +386,12 @@ class ShardedTxnRuntime:
 
     def __init__(self, espec, mesh: Mesh, *, use_cache: bool = True,
                  store_tier: str = "partitioned",
-                 route_cap_factor: int | None = DEFAULT_ROUTE_CAP_FACTOR,
+                 route_cap_factor: int | tuple | None = DEFAULT_ROUTE_CAP_FACTOR,
                  ops_cap: int = 4096, sweep_cap: int = 512,
                  ops_route_cap: int | None = None,
                  blk_slack: float = 2.0, e_blk_cap: int | None = None,
-                 recent_blk_cap: int | None = None):
+                 recent_blk_cap: int | None = None,
+                 fused_gather: bool = True, overlap: bool = False):
         assert store_tier in ("partitioned", "replicated"), store_tier
         self.axes = tuple(mesh.axis_names)
         self.n = int(np.prod([mesh.shape[a] for a in self.axes]))
@@ -356,6 +426,18 @@ class ShardedTxnRuntime:
                 isinstance(f, int) for f in route_cap_factor
             ), "per-hop route_cap_factor entries must be ints"
         self.route_cap_factor = route_cap_factor
+        # fused_gather selects the kernels/block_gather owner-local miss
+        # executor (sort-based dedup + static-specialized predicates) on
+        # the partitioned tier; False keeps the PR 4 multi-op
+        # gather_block + onehop_exec_view path for A/B comparison.
+        self.fused_gather = fused_gather
+        # overlap double-buffers the hop-loop frontier (two row streams,
+        # one-stage pipeline skew) so exchanges overlap owner-local exec
+        # under async collectives — see runtime.make_plan_fn(overlap=...)
+        self.overlap = overlap
+        # wall-clock of the latest executed serving step (blocking sync
+        # included) — the unscripted FailoverController probe's heartbeat
+        self.last_step_seconds = 0.0
         self.ops_cap = ops_cap
         self.sweep_cap = sweep_cap
         self.ops_route_cap = ops_route_cap if ops_route_cap is not None else ops_cap
@@ -770,9 +852,14 @@ class ShardedTxnRuntime:
         assert bucket % n == 0, "global batch bucket must divide over shards"
         pspec = self.pspec if pspec is None else pspec
         Bloc = bucket // n
-        caps = self._hop_route_caps(plan, Bloc)
+        # double-buffering needs an even per-shard batch to split into two
+        # row streams; route caps are sized for the half-batch each stream
+        # actually routes
+        overlap = self.overlap and Bloc % 2 == 0 and Bloc >= 2
+        caps = self._hop_route_caps(plan, Bloc // 2 if overlap else Bloc)
         fused = make_plan_fn(
-            self.lspec, plan, self.use_cache, _MeshTier(self, caps, pspec)
+            self.lspec, plan, self.use_cache, _MeshTier(self, caps, pspec),
+            overlap=overlap,
         )
         return shard_map(
             fused,
@@ -825,6 +912,7 @@ class ShardedTxnRuntime:
         B = len(roots)
         bucket = max(bucket_for(B), self.n)
         proots, bvalid = pad_roots(roots, bucket)
+        t0 = time.perf_counter()
         out = self._gr(plan, bucket)(
             store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid),
             down,
@@ -832,6 +920,10 @@ class ShardedTxnRuntime:
         result, deferred, miss_roots, miss_counts, m, version = (
             jax.device_get(out)
         )
+        # measured per-step wall-clock (device_get above is the blocking
+        # sync): the live heartbeat FailoverController feeds the
+        # FailureDetector when no scripted ShardFaultPlan is driving it
+        self.last_step_seconds = time.perf_counter() - t0
         metrics = {k: int(v) for k, v in m.items()}
         metrics["host_syncs"] = 1
         misses = decode_miss_records(
@@ -1226,7 +1318,7 @@ class GraphServeConfig:
     max_deg: int = 64  # per-hop gather window
     max_leaves: int = 64  # cache value width
     cache_slots_total: int = 2**26  # cache capacity across the fleet
-    route_cap_factor: int = DEFAULT_ROUTE_CAP_FACTOR
+    route_cap_factor: int | tuple | None = DEFAULT_ROUTE_CAP_FACTOR
     recent_cap: int = 1024  # append-region scan window
     # the served template instance (Figure 1): edge prop0 == 1, leaf prop0 == 0
     edge_prop: int = 0

@@ -18,7 +18,13 @@ Record format
 The journal is a sequence of self-delimiting frames::
 
     MAGIC(4s) | seq(u64 LE) | rtype(u8) | payload_len(u32 LE) |
-    crc32(payload)(u32 LE) | payload
+    crc32(header[0:17] + payload)(u32 LE) | payload
+
+The crc covers the header fields (magic, seq, rtype, payload_len) *and*
+the payload, so a flipped bit anywhere in a frame — including a corrupted
+length that would mis-delimit the rest of the stream — fails verification
+at that frame (``GJL1`` crc'd only the payload; the magic bump to ``GJL2``
+keeps old logs from being half-verified).
 
 - ``rtype=COMMIT`` — one committed gRW ``MutationBatch``. The payload is a
   JSON spec (field names, shapes, dtypes, plus the commit's *effective
@@ -96,8 +102,22 @@ from repro.distributed.fault import RetryPolicy, timed_call
 from repro.graphstore.maintenance import DeviceGate
 from repro.graphstore.mutations import MutationBatch
 
-_MAGIC = b"GJL1"
+_MAGIC = b"GJL2"
 _HEADER = struct.Struct("<4sQBII")  # magic, seq, rtype, payload_len, crc32
+# the crc32 field covers header bytes [0, _CRC_OFFSET) *plus* the payload —
+# a flipped bit anywhere in a frame (magic, seq, rtype, length, or body) is
+# detected, not just payload corruption. GJL1 frames crc'd the payload only,
+# so e.g. a corrupted payload_len could mis-delimit the stream while every
+# frame still "checksummed"; the magic bump makes old logs torn-tail at
+# frame 0 instead of silently half-verified.
+_CRC_OFFSET = _HEADER.size - 4  # 17: crc is the trailing u32 of the header
+
+
+def _frame_crc(header: bytes, offset: int, payload: bytes) -> int:
+    """crc32 over the frame's covered bytes: header (sans the crc field
+    itself) followed by the payload."""
+    crc = zlib.crc32(header[offset : offset + _CRC_OFFSET])
+    return zlib.crc32(payload, crc) & 0xFFFFFFFF
 
 REC_COMMIT = 1
 REC_COMPACT = 2
@@ -377,10 +397,9 @@ class WriteBehindJournal:
 
     # ------------------------------------------------------------- flusher
     def _frame(self, rec: JournalRecord) -> bytes:
-        return _HEADER.pack(
-            _MAGIC, rec.seq, rec.rtype, len(rec.payload),
-            zlib.crc32(rec.payload) & 0xFFFFFFFF,
-        ) + rec.payload
+        head = _HEADER.pack(_MAGIC, rec.seq, rec.rtype, len(rec.payload), 0)
+        crc = _frame_crc(head, 0, rec.payload)
+        return head[:_CRC_OFFSET] + struct.pack("<I", crc) + rec.payload
 
     def flush(self) -> int:
         """Group-commit the pending queue: one write+fsync for the whole
@@ -533,7 +552,7 @@ class WriteBehindJournal:
                 if magic != _MAGIC or end > len(data):
                     break
                 body = data[off + _HEADER.size : end]
-                if (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+                if _frame_crc(data, off, body) != crc:
                     break
                 seq, off = s, end
         self.durable_seq, self._durable_offset = seq, off
@@ -560,7 +579,7 @@ class WriteBehindJournal:
             if magic != _MAGIC or off + _HEADER.size + plen > len(data):
                 break  # torn tail
             payload = data[off + _HEADER.size : off + _HEADER.size + plen]
-            if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            if _frame_crc(data, off, payload) != crc:
                 break  # torn tail
             if seq > after_seq:
                 out.append(JournalRecord(seq, rtype, bytes(payload)))

@@ -417,6 +417,39 @@ class BlockStoreView:
         ep = take_along0(blk.props, slots)
         return other, mask, trunc, elab, ep
 
+    def kernel_operands(self, *, incoming: bool) -> "BlockGatherOperands":
+        """Flat per-orientation operand bundle for ``kernels/block_gather``
+        (the fused scan+filter executor): the local block arrays, the
+        replicated vertex-attribute tier, and the block fill scalars —
+        exactly the arrays the kernel streams, in its argument order."""
+        blk = self.ps.inc if incoming else self.ps.out
+        return BlockGatherOperands(
+            indptr=blk.indptr, key=blk.key, other=blk.other, label=blk.label,
+            alive=blk.alive, props=blk.props,
+            vlabel=self.ps.vlabel, valive=self.ps.valive,
+            vprops=self.ps.vprops,
+            csr_len=blk.csr_len[0], blk_len=blk.blk_len[0],
+        )
+
+
+class BlockGatherOperands(NamedTuple):
+    """Kernel-friendly view of one orientation's owner-local block: the
+    positional operands of ``kernels/block_gather`` (see that package for
+    the layout contract). Built inside ``shard_map`` from the local slices
+    via ``BlockStoreView.kernel_operands``."""
+
+    indptr: jax.Array   # int32 [v_loc + 1] CSR row index (local vertex ids)
+    key: jax.Array      # int32 [e_blk_cap] owner-side key per edge record
+    other: jax.Array    # int32 [e_blk_cap] global leaf id per edge record
+    label: jax.Array    # int32 [e_blk_cap] edge label
+    alive: jax.Array    # bool  [e_blk_cap] edge liveness
+    props: jax.Array    # int32 [e_blk_cap, NEP] edge properties
+    vlabel: jax.Array   # int32 [v_cap] replicated vertex labels
+    valive: jax.Array   # bool  [v_cap] replicated vertex liveness
+    vprops: jax.Array   # int32 [v_cap, NVP] replicated vertex properties
+    csr_len: jax.Array  # int32 [] sorted-region length of this block
+    blk_len: jax.Array  # int32 [] allocated length (recent = [csr, blk))
+
 
 # ------------------------------------------------------------- geid index
 def rebuild_geid_index(blk_len, geid) -> jax.Array:

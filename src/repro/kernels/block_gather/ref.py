@@ -1,0 +1,171 @@
+"""Pure-jnp reference for the block_gather kernel (and the CPU fast path).
+
+One orientation of the partitioned store's owner-local miss execution,
+fused: CSR-window scan + recent-region scan + edge-label / edge-predicate /
+leaf-predicate filter over one ``BlockGatherOperands`` bundle. The math is
+lane-for-lane ``partition.gather_block`` followed by the filter chain of
+``runtime.onehop_exec_view``, with the hop's predicates specialized
+*statically* (a ``QueryPlan`` hop's ``PredSpec`` holds concrete host
+arrays, so the per-condition select of ``templates.evaluate_pred`` unrolls
+to the exact comparisons the hop needs — wildcard conditions read the
+per-row bound params, everything else is a compile-time constant).
+
+Inputs the caller prepares once per batch (shared by both orientations):
+
+- ``roots``    int32 [B] global root ids (recent-region key compare)
+- ``lroot``    int32 [B] clipped local index ``clip(local_of(root), 0, Vloc-1)``
+- ``rvalid``   bool  [B] ownership + range gate (owner == me, 0 <= root < v_cap)
+- ``rmask``    bool  [B] request mask (rows this call actually executes)
+- ``r_ok``     bool  [B] root-predicate result & rmask
+- ``pe_bound`` int32 [B, MAX_CONDS] bound edge-predicate wildcard values
+- ``pl_bound`` int32 [B, MAX_CONDS] bound leaf-predicate wildcard values
+
+Outputs, all [B, W] with ``W = max_deg + recent_cap`` (plus trunc [B]):
+
+- ``leaf``  global leaf id per lane
+- ``scan``  pre-predicate observed-edge mask (liveness chain & rvalid & rmask)
+- ``emask`` after the edge-label + edge-predicate filter (leaf fetches)
+- ``qual``  final qualifying mask (leaf predicate & root predicate)
+- ``trunc`` adjacency exceeded the ``max_deg`` window (unmasked, as in
+  ``gather_block`` — the caller ands with its request mask)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.templates import (
+    MAX_CONDS,
+    OP_EQ,
+    OP_GE,
+    OP_GT,
+    OP_LE,
+    OP_LT,
+    OP_NEQ,
+)
+from repro.utils import PROP_MISSING
+
+# Python-int twin of PROP_MISSING: the jnp scalar would be a captured
+# constant inside the Pallas kernel body (weak-typed compare is identical).
+_PROP_MISSING = int(PROP_MISSING)
+
+
+def pred_static(pred) -> tuple:
+    """Freeze a ``PredSpec`` of concrete (host) arrays into a hashable
+    static form: ``(label, ((lane, prop_id, op, val, wild), ...))`` with
+    unused conditions (prop_id < 0) dropped. ``lane`` is the condition's
+    original MAX_CONDS index — wildcards bind per-row values by lane."""
+    pid = np.asarray(pred.prop_ids)
+    ops = np.asarray(pred.ops)
+    vals = np.asarray(pred.vals)
+    wild = np.asarray(pred.wild)
+    conds = tuple(
+        (c, int(pid[c]), int(ops[c]), int(vals[c]), bool(wild[c]))
+        for c in range(MAX_CONDS)
+        if int(pid[c]) >= 0
+    )
+    return (int(np.asarray(pred.label)), conds)
+
+
+def _cmp_static(op: int, a, b):
+    """``templates._cmp`` with the op code known at trace time."""
+    if op == OP_EQ:
+        return a == b
+    if op == OP_NEQ:
+        return a != b
+    if op == OP_LT:
+        return a < b
+    if op == OP_LE:
+        return a <= b
+    if op == OP_GT:
+        return a > b
+    if op == OP_GE:
+        return a >= b
+    return jnp.zeros_like(a, bool)
+
+
+def eval_pred_static(stat: tuple, labels, props, bound):
+    """``templates.evaluate_pred`` with the spec static and wildcards bound.
+
+    ``labels`` int32 [...], ``props`` int32 [..., NP], ``bound`` int32
+    [..., MAX_CONDS] (broadcastable). Bit-identical to
+    ``evaluate_pred(pred, labels, props, bound_vals=bound)`` for the
+    ``pred`` that ``stat`` froze: a wildcard condition compares OP_EQ
+    against its bound lane, a literal condition compares its constant, and
+    both require presence."""
+    label, conds = stat
+    if label < 0:
+        ok = jnp.ones(labels.shape, bool)
+    else:
+        ok = labels == label
+    for lane, pid, op, val, wild in conds:
+        pv = props[..., min(pid, props.shape[-1] - 1)]
+        present = pv != _PROP_MISSING
+        if wild:
+            cond = present & _cmp_static(OP_EQ, pv, bound[..., lane])
+        else:
+            # plain int, not jnp.int32(val): a concrete scalar would be a
+            # captured constant inside the Pallas kernel body
+            cond = present & _cmp_static(op, pv, val)
+        ok = ok & cond
+    return ok
+
+
+def block_gather_filter_ref(
+    indptr, key, other, label, alive, props, vlabel, valive, vprops,
+    csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+    *, max_deg: int, recent_cap: int, e_blk_cap: int, edge_label: int,
+    pe: tuple, pl: tuple,
+):
+    """The fused scan + filter, vectorized over the whole batch (the oracle
+    the Pallas kernel must match bit-exactly, and the production executor on
+    backends without Pallas compile support)."""
+    B = roots.shape[0]
+    EB, R = e_blk_cap, recent_cap
+
+    # ---- CSR window (the physically sorted block region) ----
+    start = indptr[lroot]
+    deg = indptr[lroot + 1] - start
+    trunc = deg > max_deg
+    lane = jnp.arange(max_deg, dtype=jnp.int32)[None, :]
+    pos = start[:, None] + lane
+    csr_mask = (lane < deg[:, None]) & rvalid[:, None]
+    slot_csr = jnp.clip(pos, 0, EB - 1)
+
+    # ---- recent region: [csr_len, blk_len) within a bounded window ----
+    roff = jnp.clip(csr_len, 0, EB - R)
+    key_r = jax.lax.dynamic_slice(key, (roff,), (R,))
+    sid = roff + jnp.arange(R, dtype=jnp.int32)
+    in_region = (sid >= csr_len) & (sid < blk_len)
+    rec_mask = (key_r[None, :] == roots[:, None]) & in_region[None, :]
+    rec_mask &= rvalid[:, None]
+    slot_rec = jnp.broadcast_to(sid[None, :], (B, R))
+
+    slots = jnp.concatenate([slot_csr, slot_rec], axis=1)  # [B, W]
+    mask = jnp.concatenate([csr_mask, rec_mask], axis=1)
+    # liveness chain identical to gather_block: edge alive, both endpoints
+    # alive (leaf via the replicated vertex tier)
+    mask &= alive[slots]
+    leaf = other[slots]
+    leaf_c = jnp.clip(leaf, 0, valive.shape[0] - 1)
+    mask &= valive[leaf_c]
+    root_c = jnp.clip(roots, 0, valive.shape[0] - 1)
+    mask &= valive[root_c][:, None]
+
+    # ---- filter chain of onehop_exec_view, statically specialized ----
+    scan = mask & rmask[:, None]
+    elab = label[slots]
+    epv = props[slots]
+    if edge_label < 0:
+        e_ok = jnp.ones_like(scan)
+    else:
+        e_ok = elab == edge_label
+    e_ok &= eval_pred_static(pe, elab, epv, pe_bound[:, None, :])
+    emask = scan & e_ok
+    llab = vlabel[leaf_c]
+    lpv = vprops[leaf_c]
+    l_ok = eval_pred_static(pl, llab, lpv, pl_bound[:, None, :])
+    qual = emask & l_ok & r_ok[:, None]
+    return leaf, scan, emask, qual, trunc

@@ -119,6 +119,44 @@ def test_failure_detector_straggle_marking():
     assert d.straggling() == frozenset()
 
 
+def test_failure_detector_observe_step_heartbeat():
+    """A measured collective-step latency feeds every live owner's
+    heartbeat: slow steps mark the mesh straggling, a fast step clears it,
+    and owners already down keep their state (no flap through observe_ok)."""
+    d = FailureDetector(n=3, fail_threshold=1, straggle_after=0.1)
+    d.observe_step(0.5)
+    assert d.straggling() == frozenset({0, 1, 2})
+    d.observe_step(0.01)
+    assert d.straggling() == frozenset()
+    d.observe_failure(2)
+    assert d.down() == frozenset({2})
+    d.observe_step(0.01)
+    assert d.down() == frozenset({2})  # a step heartbeat never revives
+
+
+def test_probe_uses_measured_step_timing_when_unscripted():
+    """With no ShardFaultPlan the controller's probe must heartbeat from
+    the runtime's real measured step wall-clock, so a live straggler trips
+    ``straggle_after`` without any scripted fault."""
+
+    class _Rt:
+        n = 4
+        last_step_seconds = 0.0
+
+    rt = _Rt()
+    det = FailureDetector(n=4, straggle_after=0.05)
+    ctl = FailoverController(rt, None, None, detector=det)
+    rt.last_step_seconds = 0.01
+    assert ctl.probe(0) == frozenset()
+    assert det.straggling() == frozenset()
+    rt.last_step_seconds = 0.2  # a real slow step
+    ctl.probe(1)
+    assert det.straggling() == frozenset(range(4))
+    rt.last_step_seconds = 0.01
+    ctl.probe(2)
+    assert det.straggling() == frozenset()
+
+
 def test_shard_fault_plan_script():
     p = ShardFaultPlan(
         crash={2: 5}, hang={1: (3, 6, 0.2)}, torn_flush_attempts=(0,)

@@ -81,7 +81,10 @@ SCRIPT = textwrap.dedent(
         _, _, m = rt.run_gr_tx_batch(pstore, cache, ttable, plan, roots)
         overflowed += int(m["route_overflow"] > 0)
     assert overflowed == 0, f"{overflowed}/20 batches overflowed default caps"
-    assert DEFAULT_ROUTE_CAP_FACTOR >= 4  # the measured p99.9 ceiling
+    # hop-1 factor covers the measured p99.9 Zipfian-root ceiling; inner
+    # hops route flatter leaf-derived frontiers and may sit lower
+    assert DEFAULT_ROUTE_CAP_FACTOR[0] >= 4
+    assert min(DEFAULT_ROUTE_CAP_FACTOR) >= 3
 
     print("MULTISHARD_OK")
     """

@@ -104,12 +104,34 @@ def test_torn_tail_reflush_truncates_garbage(tmp_path):
     assert seq == 3 and ends[-2] + _HEADER.size + plen == len(newdata)
 
 
+def test_header_corruption_every_byte_offset(tmp_path):
+    """Exhaustive single-byte header-damage sweep: flip each of the 21
+    header bytes of each frame in turn. The crc covers the header fields
+    (and the crc field guards itself by mismatching), so EVERY header byte
+    offset must end the scan at the damaged frame — including a corrupted
+    ``payload_len``, which under the old payload-only crc could silently
+    mis-delimit the rest of the stream."""
+    data, ends = _flushed_log(tmp_path)
+    starts = [0] + ends[:-1]
+    for frame, s in enumerate(starts):
+        for rel in range(_HEADER.size):
+            corrupted = bytearray(data)
+            corrupted[s + rel] ^= 0x40
+            j = _reopen_with_log(
+                str(tmp_path / f"hdr{frame}_{rel}"), bytes(corrupted)
+            )
+            recs = j.read_records()
+            assert [r.seq for r in recs] == list(range(1, frame + 1)), (
+                f"frame {frame} header byte {rel}: damage not detected"
+            )
+            assert j.durable_seq == frame
+
+
 def test_torn_tail_randomized_corruption(tmp_path):
-    """Hypothesis variant: flip an arbitrary PAYLOAD byte of an arbitrary
-    frame — crc32 must catch any single-byte change, so recovery yields
-    exactly the frames strictly before the damaged one. (Payload-only:
-    the crc does not cover the 21-byte frame header, so header damage is
-    a different — magic-guarded — failure mode.)"""
+    """Hypothesis variant: flip an arbitrary byte — header OR payload — of
+    an arbitrary frame. The crc covers both (header bytes [0:17] + payload),
+    so any single-byte change ends the scan at the damaged frame and
+    recovery yields exactly the frames strictly before it."""
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")
     data, ends = _flushed_log(tmp_path)
@@ -119,13 +141,12 @@ def test_torn_tail_randomized_corruption(tmp_path):
     @hyp.settings(max_examples=30, deadline=None)
     @hyp.given(
         frame=st.integers(0, len(ends) - 1),
-        rel=st.integers(0, min(e - s - _HEADER.size
-                               for s, e in zip(starts, ends)) - 1),
+        rel=st.integers(0, min(e - s for s, e in zip(starts, ends)) - 1),
         flip=st.integers(1, 255),
     )
     def check(frame, rel, flip):
         corrupted = bytearray(data)
-        corrupted[starts[frame] + _HEADER.size + rel] ^= flip
+        corrupted[starts[frame] + rel] ^= flip
         counter[0] += 1
         j = _reopen_with_log(
             str(tmp_path / f"fuzz{counter[0]}"), bytes(corrupted)

@@ -162,3 +162,124 @@ def test_segment_spmm_sweep(N, E, D, bn, be, dtype):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
     )
+
+
+# ------------------------------------------------------------ block gather
+from repro.core.templates import OP_EQ, OP_GT, OP_LE  # noqa: E402
+from repro.kernels.block_gather.ops import (  # noqa: E402
+    block_gather,
+    first_occurrence_mask,
+)
+from repro.kernels.block_gather.ref import block_gather_filter_ref  # noqa: E402
+from repro.utils import NULL_ID, PROP_MISSING, dedup_masked  # noqa: E402
+
+
+def _block_gather_world(rng, B, *, v_loc=8, v_cap=32, EB=64, max_deg=4,
+                        recent_cap=8):
+    """Synthetic one-orientation operand bundle: a CSR region with one
+    over-degree adjacency (trunc), junk bytes past ``csr_len``, and a live
+    recent region whose keys hit a subset of the batch roots."""
+    deg = np.array([0, 2, 4, 6, 1, 8, 3, 0], np.int32)[:v_loc]
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int32)
+    csr_len, blk_len = 40, 48
+    key = rng.integers(0, v_cap, EB).astype(np.int32)
+    other = rng.integers(-1, v_cap + 4, EB).astype(np.int32)  # some OOB
+    label = rng.integers(0, 2, EB).astype(np.int32)
+    alive = (rng.random(EB) < 0.8)
+    props = rng.integers(0, 8, (EB, 2)).astype(np.int32)
+    props[rng.random((EB, 2)) < 0.2] = int(PROP_MISSING)
+    vlabel = rng.integers(0, 2, v_cap).astype(np.int32)
+    valive = rng.random(v_cap) < 0.9
+    vprops = rng.integers(0, 8, (v_cap, 2)).astype(np.int32)
+    vprops[rng.random((v_cap, 2)) < 0.2] = int(PROP_MISSING)
+    roots = rng.integers(0, v_cap, B).astype(np.int32)
+    # recent region [csr_len, blk_len): keys match half the batch's roots
+    key[csr_len:blk_len] = roots[rng.integers(0, B, blk_len - csr_len)]
+    lroot = rng.integers(0, v_loc, B).astype(np.int32)
+    rvalid = rng.random(B) < 0.8
+    rmask = rng.random(B) < 0.8
+    r_ok = (rng.random(B) < 0.8) & rmask
+    pe_bound = rng.integers(0, 8, (B, 3)).astype(np.int32)
+    pl_bound = rng.integers(0, 8, (B, 3)).astype(np.int32)
+    arrs = (indptr, key, other, label, alive, props, vlabel, valive, vprops,
+            np.int32(csr_len), np.int32(blk_len), roots, lroot, rvalid,
+            rmask, r_ok, pe_bound, pl_bound)
+    statics = dict(max_deg=max_deg, recent_cap=recent_cap, e_blk_cap=EB)
+    return tuple(map(jnp.asarray, arrs)), statics
+
+
+_PRED_CASES = [
+    # any edge label, no conditions — the liveness chain alone
+    (-1, (-1, ()), (-1, ())),
+    # static label + literal conditions on both predicate stages
+    (0, (-1, ((0, 0, OP_LE, 3, False),)), (1, ((1, 1, OP_GT, 2, False),))),
+    # wildcard conditions reading the per-row bound params by lane
+    (1, (-1, ((1, 0, OP_GT, 0, True),)), (0, ((0, 1, OP_EQ, 7, True),))),
+    # mixed: literal + wildcard on the same predicate
+    (0, (0, ((0, 0, OP_EQ, 1, False), (2, 1, OP_LE, 5, True))), (-1, ())),
+]
+
+
+@pytest.mark.parametrize("B,block_b", [(8, 8), (12, 8), (33, 16)])
+@pytest.mark.parametrize("edge_label,pe,pl", _PRED_CASES)
+def test_block_gather_interpret_parity(B, block_b, edge_label, pe, pl):
+    """The Pallas kernel (interpret mode) must match the vectorized
+    reference bit-exactly: CSR window, recent region, liveness chain, and
+    the statically specialized predicate filters — including batches that
+    need padding to whole kernel blocks."""
+    rng = np.random.default_rng(B * 7 + len(pe[1]))
+    args, statics = _block_gather_world(rng, B)
+    statics.update(edge_label=edge_label, pe=pe, pl=pl)
+    ref = block_gather_filter_ref(*args, **statics)
+    got = block_gather(*args, **statics, block_b=block_b, use_pallas=True,
+                       interpret=True)
+    names = ("leaf", "scan", "emask", "qual", "trunc")
+    for name, a, b in zip(names, ref, got):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg=name
+        )
+
+
+def test_block_gather_empty_and_full_cap_frontier():
+    """An all-masked (empty) frontier produces no observed lanes; a
+    full-cap frontier (B == block_b, every row valid) stays bit-exact."""
+    rng = np.random.default_rng(5)
+    args, statics = _block_gather_world(rng, 16)
+    statics.update(edge_label=-1, pe=(-1, ()), pl=(-1, ()))
+    z = jnp.zeros(16, bool)
+    empty = list(args)
+    empty[13], empty[14], empty[15] = z, z, z  # rvalid, rmask, r_ok
+    leaf_e, scan_e, emask_e, qual_e, _ = block_gather(
+        *empty, **statics, block_b=16, use_pallas=True, interpret=True
+    )
+    assert not (np.asarray(scan_e).any() or np.asarray(emask_e).any()
+                or np.asarray(qual_e).any())
+    o = jnp.ones(16, bool)
+    full = list(args)
+    full[13], full[14], full[15] = o, o, o
+    ref = block_gather_filter_ref(*full, **statics)
+    got = block_gather(*full, **statics, block_b=16, use_pallas=True,
+                       interpret=True)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.asarray(got[1]).any()  # the full frontier observed lanes
+
+
+def test_first_occurrence_mask_matches_dedup_masked():
+    """The O(W log W) sort-based dedup must keep exactly the lanes the
+    O(W^2) pairwise ``dedup_masked`` keeps, for any masked lane set free
+    of NULL_ID (the liveness-masked block-lane invariant)."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        vals = rng.integers(0, 12, (6, 24)).astype(np.int32)
+        mask = rng.random((6, 24)) < 0.6
+        a = dedup_masked(jnp.asarray(vals), jnp.asarray(mask))
+        b = first_occurrence_mask(jnp.asarray(vals), jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # degenerate rows: fully masked, single lane, all-equal values
+    vals = jnp.asarray(np.array([[3, 3, 3, 3], [7, 1, 7, 1]], np.int32))
+    mask = jnp.asarray(np.array([[0, 0, 0, 0], [1, 1, 1, 1]], bool))
+    np.testing.assert_array_equal(
+        np.asarray(dedup_masked(vals, mask)),
+        np.asarray(first_occurrence_mask(vals, mask)),
+    )

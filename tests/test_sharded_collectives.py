@@ -1,0 +1,124 @@
+"""Collective-count and overlap pins for the one-exchange hop protocol.
+
+The sharded gR step's collective budget is part of its contract: ONE packed
+all_to_all each direction per hop (route out, results home) and ONE
+all-reduce for the whole step (the deferred metrics/phase psum) — see the
+``distributed.graph_serve`` module docstring. These tests lower the actual
+compiled serving program and count collectives in the optimized HLO with
+``launch.hlo_analysis``, so a regression that sneaks an extra exchange into
+the hop loop (e.g. un-deferring a psum, or splitting the query frame back
+into per-field routes) fails loudly rather than silently tripling latency.
+
+Also pins that ``overlap=True`` (double-buffered frontier streams) returns
+row-identical results to the default schedule: the overlap knob may change
+wall-clock and program shape, never bytes.
+
+Runs in subprocesses so XLA_FLAGS can create the host devices before jax
+initializes (same pattern as test_graph_serve_multishard).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from conftest import (
+        build_world, enabled_ttable, fig1_plan, common_watchlist_plan,
+    )
+    from repro.core import CacheSpec, EngineSpec
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.launch.hlo_analysis import analyze
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, _, _ = enabled_ttable()
+    mesh = flat_mesh(8)
+    """
+)
+
+
+def _run(script: str, token: str) -> None:
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", PRELUDE + textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert token in out.stdout, out.stdout
+
+
+def test_gr_step_collective_counts():
+    """Exactly 2 all_to_alls per hop + 1 all-reduce per step, on both a
+    1-hop and a 2-hop plan — and nothing else (no all-gathers, no
+    collective-permutes smuggled in by the compiler)."""
+    _run(
+        """
+        rt = ShardedTxnRuntime(espec, mesh)
+        pstore = rt.partition_store(store)
+        cache = rt.empty_cache()
+        for plan in (fig1_plan(), common_watchlist_plan()):
+            step = rt.serve_step(plan, 64)
+            hlo = step.jitted.lower(
+                pstore, cache, ttable, jnp.zeros(64, jnp.int32),
+                jnp.ones(64, bool), rt._down_none(),
+            ).compile().as_text()
+            c = analyze(hlo)["counts"]
+            h = len(plan.hops)
+            assert c["all-to-all"] == 2 * h, (h, c)
+            assert c["all-reduce"] == 1, (h, c)
+            assert c["all-gather"] == 0 and c["collective-permute"] == 0, c
+        print("COLLECTIVE_COUNTS_OK")
+        """,
+        "COLLECTIVE_COUNTS_OK",
+    )
+
+
+def test_overlap_schedule_is_row_identical():
+    """Double-buffered frontier streams (overlap=True) must return the
+    same results, miss-record sets, and metrics as the default schedule
+    for multi-hop plans over a mixed local/remote Zipf-ish batch."""
+    _run(
+        """
+        rng = np.random.default_rng(7)
+        roots = rng.integers(0, spec.v_cap, size=64).astype(np.int32)
+        mkey = lambda ms: sorted(
+            (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+            for m in ms
+        )
+        base = ShardedTxnRuntime(espec, mesh)
+        ov = ShardedTxnRuntime(
+            espec, mesh, overlap=True, e_blk_cap=base.pspec.e_blk_cap
+        )
+        ps_b = base.partition_store(store)
+        ps_o = ov.partition_store(store)
+        for plan in (fig1_plan(), common_watchlist_plan()):
+            ra, msa, ma = base.run_gr_tx_batch(
+                ps_b, base.empty_cache(), ttable, plan, roots
+            )
+            rb, msb, mb = ov.run_gr_tx_batch(
+                ps_o, ov.empty_cache(), ttable, plan, roots
+            )
+            assert np.array_equal(ra, rb)
+            assert mkey(msa) == mkey(msb)
+            for k in ma:
+                assert ma[k] == mb[k], (k, ma[k], mb[k])
+        print("OVERLAP_IDENTITY_OK")
+        """,
+        "OVERLAP_IDENTITY_OK",
+    )

@@ -1,0 +1,141 @@
+"""Property pins for the one-exchange hop protocol's packed wire format.
+
+The sharded hop loop ships each routed frontier as ONE contiguous int32
+frame per item — ``[root | flags | params]`` outbound, ``[vals | cnt]``
+home — so route→exec→unroute costs a single all_to_all each direction
+(see ``distributed.graph_serve``). Three invariants the exchange leans on:
+
+- **pack ∘ unpack ≡ id** — framing is lossless for any int32 payload, so
+  the packed exchange is byte-identical to the retired multi-collective
+  chain by construction.
+- **padding is never valid** — ``bucketize`` fills unrouted bucket slots
+  with zeros; a zero flags lane decodes invalid (the VALID bit is set
+  only by the sender), so a receiver can never execute a padding frame.
+  This is why the fill is 0 and NOT ``NULL_ID``: ``(-1 & 1) == 1`` would
+  light the VALID bit on every padding row.
+- **overflow is surfaced, not silent** — routing more valid frames at one
+  peer than its ``cap`` drops the excess AND counts every dropped frame
+  in the returned overflow (the serve loop exposes it as the
+  ``route_overflow`` metric and the bench asserts it is zero under the
+  measured default caps); frames that do land are bit-exact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.keys import PARAM_LEN
+from repro.core.runtime import (
+    WIRE_FLAG_VALID,
+    WIRE_QUERY_LANES,
+    bucketize,
+    pack_query_frame,
+    pack_result_frame,
+    route_plan,
+    unpack_query_frame,
+    unpack_result_frame,
+)
+
+
+def _rand_queries(rng, m):
+    roots = rng.integers(-1, 1 << 20, size=m).astype(np.int32)
+    flags = (rng.integers(0, 2, size=m) * WIRE_FLAG_VALID).astype(np.int32)
+    params = rng.integers(-(1 << 15), 1 << 15,
+                          size=(m, PARAM_LEN)).astype(np.int32)
+    return roots, flags, params
+
+
+def test_query_frame_roundtrip():
+    rng = np.random.default_rng(0)
+    roots, flags, params = _rand_queries(rng, 64)
+    frame = pack_query_frame(
+        jnp.asarray(roots), jnp.asarray(flags), jnp.asarray(params)
+    )
+    assert frame.shape == (64, WIRE_QUERY_LANES) and frame.dtype == jnp.int32
+    r, f, p = unpack_query_frame(frame)
+    assert np.array_equal(np.asarray(r), roots)
+    assert np.array_equal(np.asarray(f), flags)
+    assert np.array_equal(np.asarray(p), params)
+
+
+def test_result_frame_roundtrip():
+    rng = np.random.default_rng(1)
+    vals = rng.integers(-1, 1 << 20, size=(32, 8)).astype(np.int32)
+    # cnt's int32 lanes double as the hit/miss/deferred flag: -1 = deferred
+    cnt = rng.integers(-1, 9, size=32).astype(np.int32)
+    frame = pack_result_frame(jnp.asarray(vals), jnp.asarray(cnt))
+    assert frame.shape == (32, 9)
+    v, c = unpack_result_frame(frame)
+    assert np.array_equal(np.asarray(v), vals)
+    assert np.array_equal(np.asarray(c), cnt)
+
+
+def test_bucketized_padding_frames_decode_invalid():
+    """Route a batch into roomy buckets: every kept frame survives
+    bit-exact at its assigned slot, and every OTHER bucket slot (the
+    zero-filled padding) decodes flags == 0, i.e. invalid."""
+    rng = np.random.default_rng(2)
+    n, cap, m = 4, 8, 16
+    roots, _, params = _rand_queries(rng, m)
+    flags = np.full(m, WIRE_FLAG_VALID, np.int32)
+    dest = rng.integers(-1, n, size=m).astype(np.int32)  # -1 rows = padding
+    frame = pack_query_frame(
+        jnp.asarray(roots), jnp.asarray(flags), jnp.asarray(params)
+    )
+    buckets, slot, kept, ovf = bucketize(frame, jnp.asarray(dest), n, cap,
+                                         fill=0)
+    assert int(ovf) == 0
+    flat = np.asarray(buckets).reshape(n * cap, WIRE_QUERY_LANES)
+    r, f, p = (np.asarray(x) for x in
+               unpack_query_frame(jnp.asarray(flat)))
+    valid = (f & WIRE_FLAG_VALID) == WIRE_FLAG_VALID
+    slot, kept = np.asarray(slot), np.asarray(kept)
+    assert np.array_equal(kept, dest >= 0)
+    for i in np.flatnonzero(kept):
+        s = slot[i]
+        assert valid[s] and r[s] == roots[i]
+        assert np.array_equal(p[s], params[i])
+        assert s // cap == dest[i]  # landed at its peer's bucket
+    # padding: every slot no kept item claimed is invalid — zero fill keeps
+    # the VALID bit dark, so a receiver can never execute it
+    claimed = set(slot[kept].tolist())
+    for s in range(n * cap):
+        if s not in claimed:
+            assert not valid[s] and r[s] == 0
+
+
+def test_route_overflow_counts_every_dropped_frame():
+    """Aim 3x a bucket's cap at one peer: exactly (m - cap) valid frames
+    must be dropped, all counted in overflow, and the cap that DID land is
+    bit-exact — degradation is bounded and observable, never silent."""
+    rng = np.random.default_rng(3)
+    n, cap = 4, 4
+    m = 3 * cap
+    roots, _, params = _rand_queries(rng, m)
+    flags = np.full(m, WIRE_FLAG_VALID, np.int32)
+    dest = np.full(m, 2, np.int32)  # every frame at peer 2
+    frame = pack_query_frame(
+        jnp.asarray(roots), jnp.asarray(flags), jnp.asarray(params)
+    )
+    buckets, slot, kept, ovf = bucketize(frame, jnp.asarray(dest), n, cap,
+                                         fill=0)
+    assert int(ovf) == m - cap
+    assert int(np.sum(np.asarray(kept))) == cap
+    peer = np.asarray(buckets)[2]
+    r, f, p = (np.asarray(x) for x in unpack_query_frame(jnp.asarray(peer)))
+    assert np.all((f & WIRE_FLAG_VALID) == WIRE_FLAG_VALID)
+    landed = sorted(r.tolist())
+    expect = sorted(roots[np.asarray(kept)].tolist())
+    assert landed == expect
+    # the other peers saw nothing but invalid padding
+    others = np.asarray(buckets)[[0, 1, 3]].reshape(-1, WIRE_QUERY_LANES)
+    _, fo, _ = unpack_query_frame(jnp.asarray(others))
+    assert not np.any(np.asarray(fo) & WIRE_FLAG_VALID)
+
+
+def test_route_plan_padding_dest_not_counted_as_overflow():
+    """Out-of-range destinations are padding by contract (masked rows
+    route dest=-1): dropped, but never counted in overflow."""
+    dest = jnp.asarray(np.array([-1, -1, 0, 1], np.int32))
+    slot, kept, ovf = route_plan(dest, 2, 2)
+    assert int(ovf) == 0
+    assert np.asarray(kept).tolist() == [False, False, True, True]
