@@ -15,6 +15,7 @@ improvement vs C-Q-.
 
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
@@ -251,7 +252,7 @@ def hop_pipeline(batch=512, hops=2, reps=5, seed=0):
     return out
 
 
-def main(n_ops=300, seed=0):
+def main(n_ops=300, seed=0, json_path=None):
     world = build_world(seed=seed)
     rows = []
     base = {}
@@ -284,6 +285,15 @@ def main(n_ops=300, seed=0):
         b = base[row["mix"]]
         f = lambda k: round(b[k] / row[k], 2) if row[k] else float("nan")
         print(",".join(str(row[k]) for k in row) + f",{f('cached_p95')},{f('cached_p99')},{f('agg_p95')},{f('write_p95')}")
+    if json_path:
+        # persisted for the p99 regression guard (check_regression.py):
+        # the run shape (n_ops, seed) rides along so a reduced CI smoke
+        # is never compared row-for-row against a full baseline
+        with open(json_path, "w") as fh:
+            json.dump({"n_ops": n_ops, "seed": seed, "rows": rows},
+                      fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"wrote {json_path}")
     return rows
 
 

@@ -18,10 +18,22 @@ when either headline metric regresses more than ``--max-regress``
 ``results_identical`` must be true in the fresh run — a fast wrong answer
 is not a benchmark result.
 
+A second, independent guard covers the C±Q± tail-latency tables
+(``BENCH_latency.json`` from ``bench_latency.main``): for every mix, the
+C+Q+ configuration's ``cached_p99`` / ``agg_p99`` must stay under the
+committed baseline times ``1 + --latency-max-regress``. The default slack
+is deliberately generous (50%) — the numbers come from an M/G/1 sojourn
+simulation over measured service times, which is noisy on shared runners;
+the guard exists to catch order-of-magnitude tail blowups (e.g. telemetry
+overhead landing on the query path), not single-digit drift. Runs whose
+shape (``n_ops``, ``seed``) differs from the baseline are skipped, not
+scaled.
+
 Usage::
 
     python benchmarks/check_regression.py --fresh BENCH_partitioned_store.json
     python benchmarks/check_regression.py --fresh /tmp/b.json --baseline old.json
+    python benchmarks/check_regression.py --latency-fresh BENCH_latency.json
 """
 
 from __future__ import annotations
@@ -32,14 +44,15 @@ import subprocess
 import sys
 
 BASELINE_GIT_PATH = "BENCH_partitioned_store.json"
+LATENCY_GIT_PATH = "BENCH_latency.json"
 
 
-def load_baseline(path: str | None) -> dict:
+def load_baseline(path: str | None, git_path: str = BASELINE_GIT_PATH) -> dict:
     if path:
         with open(path) as f:
             return json.load(f)
     blob = subprocess.run(
-        ["git", "show", f"HEAD:{BASELINE_GIT_PATH}"],
+        ["git", "show", f"HEAD:{git_path}"],
         capture_output=True, text=True, check=True,
     ).stdout
     return json.loads(blob)
@@ -87,20 +100,72 @@ def check(fresh: dict, base: dict, max_regress: float) -> list[str]:
     return failures
 
 
+def check_latency(fresh: dict, base: dict, max_regress: float) -> list[str]:
+    """p99 tail-latency ceiling over the C+Q+ rows of BENCH_latency.json.
+
+    Returns the list of failure messages (empty = pass)."""
+    failures = []
+    fresh_shape = (fresh.get("n_ops"), fresh.get("seed"))
+    base_shape = (base.get("n_ops"), base.get("seed"))
+    if fresh_shape != base_shape:
+        print(
+            f"skip latency p99: fresh run shape (n_ops, seed)={fresh_shape} "
+            f"!= baseline {base_shape} — tails not comparable"
+        )
+        return failures
+    base_rows = {(r["mix"], r["cfg"]): r for r in base.get("rows", [])}
+    for row in fresh.get("rows", []):
+        if row.get("cfg") != "C+Q+":
+            continue
+        b = base_rows.get((row["mix"], row["cfg"]))
+        if b is None:
+            continue
+        for key in ("cached_p99", "agg_p99"):
+            new, old = float(row[key]), float(b[key])
+            if new != new or old != old or old <= 0:
+                continue  # NaN (empty class) or degenerate baseline
+            ceil = old * (1.0 + max_regress)
+            line = (f"latency {row['mix']}/C+Q+ {key}: {new:.2f} ms vs "
+                    f"baseline {old:.2f} ms (ceiling {ceil:.2f})")
+            if new > ceil:
+                failures.append("REGRESSION " + line)
+            else:
+                print("ok  " + line)
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh", default=None,
                     help="freshly measured BENCH_partitioned_store.json")
     ap.add_argument("--baseline", default=None,
                     help=f"baseline json (default: git show "
                          f"HEAD:{BASELINE_GIT_PATH})")
     ap.add_argument("--max-regress", type=float, default=0.10,
                     help="allowed fractional regression (default 0.10)")
+    ap.add_argument("--latency-fresh", default=None,
+                    help="freshly measured BENCH_latency.json")
+    ap.add_argument("--latency-baseline", default=None,
+                    help=f"latency baseline json (default: git show "
+                         f"HEAD:{LATENCY_GIT_PATH})")
+    ap.add_argument("--latency-max-regress", type=float, default=0.50,
+                    help="allowed fractional p99 regression for the C+Q+ "
+                         "latency tables (default 0.50 — M/G/1 tails are "
+                         "noisy; this catches blowups, not drift)")
     args = ap.parse_args()
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    base = load_baseline(args.baseline)
-    failures = check(fresh, base, args.max_regress)
+    if args.fresh is None and args.latency_fresh is None:
+        ap.error("pass --fresh and/or --latency-fresh")
+    failures = []
+    if args.fresh is not None:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        base = load_baseline(args.baseline)
+        failures += check(fresh, base, args.max_regress)
+    if args.latency_fresh is not None:
+        with open(args.latency_fresh) as f:
+            lfresh = json.load(f)
+        lbase = load_baseline(args.latency_baseline, LATENCY_GIT_PATH)
+        failures += check_latency(lfresh, lbase, args.latency_max_regress)
     for msg in failures:
         print(msg, file=sys.stderr)
     return 1 if failures else 0

@@ -152,8 +152,10 @@ def main() -> None:
         # live shard failover: detection, degraded serving, journal-replay
         # recovery/migration under traffic (BENCH_failover.json)
         "failover": _bench_failover,
-        # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class)
-        "latency_tables_1_3_5": lambda: bench_latency.main(n_ops=n),
+        # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class;
+        # BENCH_latency.json feeds the p99 regression guard)
+        "latency_tables_1_3_5": lambda: bench_latency.main(
+            n_ops=n, json_path=os.path.join(REPO_ROOT, "BENCH_latency.json")),
         # Table 2 + 6 (impacted keys per write type)
         "invalidation_tables_2_6": lambda: bench_invalidation.main(n_writes=n),
         # Table 9 (error rates)

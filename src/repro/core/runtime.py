@@ -550,6 +550,13 @@ def make_plan_fn(espec, plan, use_cache: bool, tier, *, overlap: bool = False):
         }
         if tier.routed:
             m["route_overflow"] = z
+        # telemetry tier: owner-side frontier occupancy (live routed rows
+        # this shard probed/executed, summed over hops). Local-only until
+        # ``reduce_metrics`` folds it into the per-owner stage block — the
+        # key is popped there, so host-visible metrics are unchanged.
+        stage_rows = getattr(tier, "stage_rows", False)
+        if stage_rows:
+            m["_frontier_rows"] = z
         # per-hop miss segments and local miss counts, in stream order
         miss_roots = [[] for _ in range(H)]
         miss_counts = [[] for _ in range(H)]
@@ -592,6 +599,9 @@ def make_plan_fn(espec, plan, use_cache: bool, tier, *, overlap: bool = False):
         def stage_exec(s, hop_idx):
             # ---- owner-local probe + cond-gated miss execution ----
             hop, kernel = plan.hops[hop_idx], kernels[hop_idx]
+            if stage_rows:
+                m["_frontier_rows"] = m["_frontier_rows"] + jnp.sum(
+                    s["qmask"].astype(jnp.int32))
             vals, cnt, mr, nrec, hs = kernel(
                 store, cache, ttable, s["q"], s["qmask"], s["qparams"]
             )

@@ -89,12 +89,15 @@ class FailoverController:
 
         With a ``ShardFaultPlan`` the outcomes are scripted (chaos runs);
         without one the heartbeat is the runtime's MEASURED latest step
-        wall-clock (``rt.last_step_seconds``, recorded by
-        ``run_gr_tx_batch``) — a live straggler trips ``straggle_after``
-        from real timings, not scripts."""
+        latency — per-owner work-attributed when the telemetry tier ran
+        (``rt.last_step_owner_seconds``, so one straggling owner trips
+        ``straggle_after`` alone), falling back to the collective step
+        wall-clock (``rt.last_step_seconds``) fed to every owner when
+        attribution is unavailable."""
         if self.plan is None:
             self.detector.observe_step(
-                float(getattr(self.rt, "last_step_seconds", 0.0))
+                float(getattr(self.rt, "last_step_seconds", 0.0)),
+                per_owner=getattr(self.rt, "last_step_owner_seconds", None),
             )
             return self.detector.down()
         crashed = self.plan.crashed_at(batch_idx)

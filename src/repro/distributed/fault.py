@@ -181,16 +181,34 @@ class FailureDetector:
             else:
                 self._straggling.discard(shard)
 
-    def observe_step(self, latency_s: float) -> None:
-        """Feed one measured serving-step wall-clock to every live owner.
+    def observe_step(self, latency_s: float, per_owner=None) -> None:
+        """Feed one measured serving-step wall-clock to the live owners.
 
-        The sharded step is a collective program — every owner participates
-        in the same all_to_all exchanges — so one measured step latency IS
-        each owner's observable heartbeat: a straggling owner inflates it
-        for the whole mesh (marking everyone straggling engages the hedged
-        read path, which is the correct response either way), while a
-        crashed owner surfaces through ``observe_failure``, not timing.
-        Owners already marked down keep their state until recovery."""
+        ``per_owner`` (float[n], seconds) is the telemetry tier's
+        work-attributed per-owner step latency
+        (``ShardedTxnRuntime.last_step_owner_seconds``): each live owner
+        observes *its own* attributed share, so a single straggling owner
+        trips ``straggle_after`` alone instead of marking the whole mesh
+        straggling (the ROADMAP's per-owner attribution item).
+
+        Without attribution (``per_owner=None`` — telemetry off, or no
+        step has run yet) the aggregate fallback keeps the old semantics:
+        the sharded step is a collective program — every owner
+        participates in the same all_to_all exchanges — so the one
+        measured step latency is fed to every live owner, and a straggler
+        inflates it for the whole mesh. Either way a crashed owner
+        surfaces through ``observe_failure``, not timing; owners already
+        marked down keep their state until recovery."""
+        if per_owner is not None:
+            per = np.asarray(per_owner, dtype=np.float64).reshape(-1)
+            if per.shape[0] != self.n:
+                raise ValueError(
+                    f"per_owner has {per.shape[0]} entries for {self.n} "
+                    f"owners")
+            for s in range(self.n):
+                if s not in self._down:
+                    self.observe_ok(s, latency_s=float(per[s]))
+            return
         for s in range(self.n):
             if s not in self._down:
                 self.observe_ok(s, latency_s=latency_s)

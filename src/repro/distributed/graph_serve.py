@@ -88,6 +88,32 @@ for worst-case no-drop buckets (the byte-identity tests do).
 production deployment; ``config_cell`` lowers it onto the runtime for the
 roofline/dry-run tooling. The legacy fixed-template ``build_serve_step``
 serving cell was retired in favour of ``ShardedTxnRuntime.serve_step``.
+
+Observability
+-------------
+
+With ``telemetry=True`` (the default) the serving step additionally
+assembles a per-owner/per-stage counter block
+(``repro.obs.metrics.OWNER_STAGE_FIELDS``: frontier occupancy, probe hits,
+miss rows, edges scanned, leaf fetches, route overflow, deferred rows)
+that rides the SAME stacked metrics all-reduce: each shard one-hot
+scatters its *pre-reduction local* stage counters at its own row of an
+``[n, S]`` int32 block, the block flattens onto the existing concatenated
+psum vector, and the sum across shards assembles the full matrix on every
+shard — the per-step collective budget (2 all_to_alls per hop + 1
+all-reduce) is unchanged, pinned by ``tests/test_sharded_collectives.py``.
+The host wrapper pops the block into ``last_owner_stage`` before building
+the metrics dict, so host-visible results and metrics are byte-identical
+to ``telemetry=False``, and work-attributes the measured step wall-clock
+into ``last_step_owner_seconds`` (``obs.metrics.attribute_step_seconds``)
+— the per-owner heartbeat ``FailureDetector.observe_step`` consumes so one
+straggler no longer marks every owner straggling. Host-side phases
+(gr_dispatch / gr_sync / gr_unpack, grw_step, journal_flush, checkpoint,
+compaction_tick, hot_swap_pause) are wrapped in ``tracer.span(...)``
+(``repro.obs.trace``; the zero-cost ``NULL_TRACER`` unless a tracer is
+injected), and ``launch/serve.py`` aggregates everything into streaming
+latency histograms and a schema-validated JSONL trace — format and
+reading guide in ``docs/OBSERVABILITY.md``.
 """
 
 from __future__ import annotations
@@ -155,6 +181,8 @@ from repro.graphstore.partition import (
     partition_store,
     store_bytes_report,
 )
+from repro.obs.metrics import OWNER_STAGE_FIELDS, attribute_step_seconds
+from repro.obs.trace import NULL_TRACER
 from repro.utils import NULL_ID
 
 _STAT_FIELDS = ("n_hit", "n_miss", "n_insert", "n_evict", "n_delete", "n_oversize")
@@ -224,6 +252,11 @@ class _MeshTier:
         self.pspec = pspec
         self.axes, self.n = rt.axes, rt.n
         self.fused_gather = rt.fused_gather
+        # telemetry: the hop driver accumulates owner-side frontier
+        # occupancy (stage_rows) and reduce_metrics folds the per-owner
+        # stage block into the existing stacked all-reduce
+        self.telemetry = rt.telemetry
+        self.stage_rows = rt.telemetry
         self._down = None
 
     def bind(self, down):
@@ -329,13 +362,41 @@ class _MeshTier:
         # plus one gate psum per hop
         keys = [k for k in _ADDITIVE_METRICS if k in m]
         hop_k = m["_hop_k"]
-        vec = jnp.concatenate(
-            [jnp.stack([m[k] for k in keys]).astype(jnp.int32), hop_k]
-        )
-        g = jax.lax.psum(vec, self.axes)
+        parts = [jnp.stack([m[k] for k in keys]).astype(jnp.int32), hop_k]
+        S = len(OWNER_STAGE_FIELDS)
+        if self.telemetry:
+            # per-owner stage attribution rides the SAME psum: before the
+            # reduction every metric value is this shard's local count, so
+            # one-hot scattering the locals at our own row of an [n, S]
+            # block and summing across shards assembles the full matrix on
+            # every shard — zero extra collectives. Field order is the
+            # OWNER_STAGE_FIELDS contract (repro.obs.metrics). hits/misses/
+            # edges/leaves and frontier occupancy accumulate owner-side
+            # (post-route); route_overflow and deferred accumulate at the
+            # origin shard.
+            local_src = {
+                "frontier_rows": m.pop("_frontier_rows"),
+                "probe_hits": m["hits"],
+                "miss_rows": m["misses"],
+                "edges_scanned": m["edges_scanned"],
+                "leaf_fetches": m["leaf_fetches"],
+                "route_overflow": m["route_overflow"],
+                "deferred_rows": m["deferred"],
+            }
+            local = jnp.stack(
+                [local_src[f] for f in OWNER_STAGE_FIELDS]
+            ).astype(jnp.int32)
+            block = jnp.zeros((self.n, S), jnp.int32).at[
+                jax.lax.axis_index(self.axes)
+            ].set(local)
+            parts.append(block.reshape(-1))
+        g = jax.lax.psum(jnp.concatenate(parts), self.axes)
         for i, k in enumerate(keys):
             m[k] = g[i]
-        m["_hop_k"] = g[len(keys):]
+        nk, nh = len(keys), hop_k.shape[0]
+        m["_hop_k"] = g[nk:nk + nh]
+        if self.telemetry:
+            m["owner_stage"] = g[nk + nh:].reshape(self.n, S)
         return m
 
 
@@ -391,7 +452,8 @@ class ShardedTxnRuntime:
                  ops_route_cap: int | None = None,
                  blk_slack: float = 2.0, e_blk_cap: int | None = None,
                  recent_blk_cap: int | None = None,
-                 fused_gather: bool = True, overlap: bool = False):
+                 fused_gather: bool = True, overlap: bool = False,
+                 telemetry: bool = True, tracer=None):
         assert store_tier in ("partitioned", "replicated"), store_tier
         self.axes = tuple(mesh.axis_names)
         self.n = int(np.prod([mesh.shape[a] for a in self.axes]))
@@ -435,9 +497,21 @@ class ShardedTxnRuntime:
         # one-stage pipeline skew) so exchanges overlap owner-local exec
         # under async collectives — see runtime.make_plan_fn(overlap=...)
         self.overlap = overlap
+        # telemetry: when on (default), serving steps assemble the
+        # per-owner stage block on-device (riding the existing stacked
+        # all-reduce — see the module docstring's Observability section)
+        # and host wrappers wrap their phases in tracer spans. ``tracer``
+        # defaults to the zero-cost NULL_TRACER.
+        self.telemetry = bool(telemetry)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # wall-clock of the latest executed serving step (blocking sync
         # included) — the unscripted FailoverController probe's heartbeat
         self.last_step_seconds = 0.0
+        # the latest step's per-owner stage counters ([n, S] int64, field
+        # order OWNER_STAGE_FIELDS) and work-attributed per-owner step
+        # seconds — None until a telemetry-on step runs
+        self.last_owner_stage = None
+        self.last_step_owner_seconds = None
         self.ops_cap = ops_cap
         self.sweep_cap = sweep_cap
         self.ops_route_cap = ops_route_cap if ops_route_cap is not None else ops_cap
@@ -745,8 +819,9 @@ class ShardedTxnRuntime:
             self._next_tier = None
             raise RuntimeError("next-tier precompile failed") from h.error
         t0 = time.perf_counter()
-        grown = self._grow_step(h.pspec)(pstore)
-        jax.block_until_ready(grown)
+        with self.tracer.span("hot_swap_pause"):
+            grown = self._grow_step(h.pspec)(pstore)
+            jax.block_until_ready(grown)
         swap_s = time.perf_counter() - t0
         self._set_pspec(h.pspec)
         self.swap_events += 1
@@ -778,29 +853,31 @@ class ShardedTxnRuntime:
         (``grw_step(gate=...)``) compacts on-device without any of this.
         """
         assert self.pspec is not None, "maintenance targets the partitioned tier"
-        policy = MaintenancePolicy() if policy is None else policy
-        occ = self.store_occupancy(pstore) if occupancy is None else occupancy
-        dec = decide_maintenance(
-            self.pspec, occ, policy, self.mutation_rows_since_compact
-        )
-        info = dict(
-            compacted=False, grown_to=None, reason=dec.reason,
-            max_occupancy=occ["max_occupancy"],
-            max_recent_fill=occ["max_recent_fill"],
-        )
-        if dec.grow_to is not None:
-            pstore = self.grow_blocks(pstore, dec.grow_to)
-            if journal is not None:
-                journal.append_grow(
-                    self.pspec.e_blk_cap, self.pspec.recent_blk_cap
-                )
-            info["grown_to"] = dec.grow_to
-        if dec.compact:
-            pstore = self.compact_step(policy.purge)(pstore)
-            if journal is not None:
-                journal.append_compact(purge=policy.purge)
-            self.mutation_rows_since_compact = 0
-            info["compacted"] = True
+        with self.tracer.span("compaction_tick"):
+            policy = MaintenancePolicy() if policy is None else policy
+            occ = (self.store_occupancy(pstore) if occupancy is None
+                   else occupancy)
+            dec = decide_maintenance(
+                self.pspec, occ, policy, self.mutation_rows_since_compact
+            )
+            info = dict(
+                compacted=False, grown_to=None, reason=dec.reason,
+                max_occupancy=occ["max_occupancy"],
+                max_recent_fill=occ["max_recent_fill"],
+            )
+            if dec.grow_to is not None:
+                pstore = self.grow_blocks(pstore, dec.grow_to)
+                if journal is not None:
+                    journal.append_grow(
+                        self.pspec.e_blk_cap, self.pspec.recent_blk_cap
+                    )
+                info["grown_to"] = dec.grow_to
+            if dec.compact:
+                pstore = self.compact_step(policy.purge)(pstore)
+                if journal is not None:
+                    journal.append_compact(purge=policy.purge)
+                self.mutation_rows_since_compact = 0
+                info["compacted"] = True
         return pstore, info
 
     def empty_cache(self) -> CacheState:
@@ -912,23 +989,38 @@ class ShardedTxnRuntime:
         B = len(roots)
         bucket = max(bucket_for(B), self.n)
         proots, bvalid = pad_roots(roots, bucket)
+        tr = self.tracer
         t0 = time.perf_counter()
-        out = self._gr(plan, bucket)(
-            store, cache, ttable, jnp.asarray(proots), jnp.asarray(bvalid),
-            down,
-        )
-        result, deferred, miss_roots, miss_counts, m, version = (
-            jax.device_get(out)
-        )
+        with tr.span("gr_dispatch"):
+            out = self._gr(plan, bucket)(
+                store, cache, ttable, jnp.asarray(proots),
+                jnp.asarray(bvalid), down,
+            )
+        with tr.span("gr_sync"):
+            result, deferred, miss_roots, miss_counts, m, version = (
+                jax.device_get(out)
+            )
         # measured per-step wall-clock (device_get above is the blocking
         # sync): the live heartbeat FailoverController feeds the
         # FailureDetector when no scripted ShardFaultPlan is driving it
         self.last_step_seconds = time.perf_counter() - t0
-        metrics = {k: int(v) for k, v in m.items()}
-        metrics["host_syncs"] = 1
-        misses = decode_miss_records(
-            plan, self.use_cache, miss_roots, miss_counts, int(version)
-        )
+        with tr.span("gr_unpack"):
+            # pop the per-owner stage block BEFORE building the host
+            # metrics dict, keeping it byte-identical to telemetry=False
+            owner_stage = m.pop("owner_stage", None)
+            metrics = {k: int(v) for k, v in m.items()}
+            metrics["host_syncs"] = 1
+            misses = decode_miss_records(
+                plan, self.use_cache, miss_roots, miss_counts, int(version)
+            )
+        if owner_stage is not None:
+            self.last_owner_stage = np.asarray(owner_stage, dtype=np.int64)
+            self.last_step_owner_seconds = attribute_step_seconds(
+                self.last_step_seconds, self.last_owner_stage
+            )
+        else:
+            self.last_owner_stage = None
+            self.last_step_owner_seconds = None
         if return_deferred:
             return (np.asarray(result)[:B], misses, metrics,
                     np.asarray(deferred)[:B])
@@ -1153,13 +1245,14 @@ class ShardedTxnRuntime:
         write-behind: the batch is appended with its effective step config
         (policy + gate) and the journal's lag/queue metrics are folded into
         the returned metrics."""
-        out = self._grw(policy, gate)(store, cache, ttable, batch)
-        (store2, cache2, impacted, overflow, store_ovf,
-         blk_max, rec_max, ncomp) = out
-        metrics = {
-            "impacted_keys": int(impacted), "op_overflow": int(overflow),
-            "store_append_overflow": int(store_ovf),
-        }
+        with self.tracer.span("grw_step"):
+            out = self._grw(policy, gate)(store, cache, ttable, batch)
+            (store2, cache2, impacted, overflow, store_ovf,
+             blk_max, rec_max, ncomp) = out
+            metrics = {
+                "impacted_keys": int(impacted), "op_overflow": int(overflow),
+                "store_append_overflow": int(store_ovf),
+            }
         if self.pspec is not None:
             b = batch
             self.mutation_rows_since_compact += sum(

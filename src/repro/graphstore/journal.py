@@ -273,11 +273,18 @@ class WriteBehindJournal:
     def __init__(self, root: str, n_shards: int, *,
                  retry: Optional[RetryPolicy] = None,
                  flush_fault: Optional[Callable[[int], None]] = None,
-                 io_timeout: Optional[float] = None):
+                 io_timeout: Optional[float] = None, tracer=None):
         self.root = root
         self.n = n_shards
         self.retry = retry if retry is not None else RetryPolicy(max_attempts=4)
         self.flush_fault = flush_fault
+        # observability: flush and checkpoint wall-clock report through
+        # tracer spans ("journal_flush" / "checkpoint"); the tracer must be
+        # thread-safe — the async flusher records from its own thread.
+        # Default NULL_TRACER is a no-op.
+        from repro.obs.trace import NULL_TRACER
+
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # wall-clock bound on each flush write / checkpoint save attempt: a
         # hung filesystem surfaces as CallTimeout (retried like any flush
         # failure) instead of freezing the serve loop. None = unbounded.
@@ -407,7 +414,8 @@ class WriteBehindJournal:
         durable offset, rewrite the group — no loss, no duplicates).
         Returns the number of records made durable."""
         with self._flush_lock:
-            return self._flush_locked()
+            with self.tracer.span("journal_flush"):
+                return self._flush_locked()
 
     def _flush_locked(self) -> int:
         with self._lock:
@@ -596,23 +604,25 @@ class WriteBehindJournal:
         (a later GROW record changes them again at the recorded point)."""
         from repro.checkpoint import save_checkpoint
 
-        self.flush()
-        with self._lock:
-            seq = self.next_seq - 1
-        path = timed_call(save_checkpoint, self.io_timeout,
-                          self.ckpt_dir, seq, pstore)
-        spec_meta = {
-            "kind": "full",
-            "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
-            "store_version": int(store_version),
-        }
-        with open(os.path.join(path, "journal.json"), "w") as f:
-            json.dump(spec_meta, f)
-        with self._lock:
-            self._dirty_since_ckpt.clear()
-        self.checkpoint_seq = seq
-        self.checkpoint_version = int(store_version)
-        self._save_meta()
+        with self.tracer.span("checkpoint"):
+            self.flush()
+            with self._lock:
+                seq = self.next_seq - 1
+            path = timed_call(save_checkpoint, self.io_timeout,
+                              self.ckpt_dir, seq, pstore)
+            spec_meta = {
+                "kind": "full",
+                "e_blk_cap": int(e_blk_cap),
+                "recent_blk_cap": int(recent_blk_cap),
+                "store_version": int(store_version),
+            }
+            with open(os.path.join(path, "journal.json"), "w") as f:
+                json.dump(spec_meta, f)
+            with self._lock:
+                self._dirty_since_ckpt.clear()
+            self.checkpoint_seq = seq
+            self.checkpoint_version = int(store_version)
+            self._save_meta()
         return path
 
     def checkpoint_incremental(self, pstore, *, e_blk_cap: int,
@@ -645,27 +655,29 @@ class WriteBehindJournal:
             )
         from repro.checkpoint import save_checkpoint
 
-        self.flush()
-        with self._lock:
-            seq = self.next_seq - 1
-            owners = sorted(self._dirty_since_ckpt)
-        host = jax.device_get(pstore)
-        tree = _incremental_tree(host, owners, self.n, int(e_blk_cap))
-        path = timed_call(save_checkpoint, self.io_timeout,
-                          self.ckpt_dir, seq, tree)
-        spec_meta = {
-            "kind": "incremental", "base_seq": int(base_seq),
-            "owners": [int(o) for o in owners],
-            "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
-            "store_version": int(store_version),
-        }
-        with open(os.path.join(path, "journal.json"), "w") as f:
-            json.dump(spec_meta, f)
-        with self._lock:
-            self._dirty_since_ckpt.clear()
-        self.checkpoint_seq = seq
-        self.checkpoint_version = int(store_version)
-        self._save_meta()
+        with self.tracer.span("checkpoint"):
+            self.flush()
+            with self._lock:
+                seq = self.next_seq - 1
+                owners = sorted(self._dirty_since_ckpt)
+            host = jax.device_get(pstore)
+            tree = _incremental_tree(host, owners, self.n, int(e_blk_cap))
+            path = timed_call(save_checkpoint, self.io_timeout,
+                              self.ckpt_dir, seq, tree)
+            spec_meta = {
+                "kind": "incremental", "base_seq": int(base_seq),
+                "owners": [int(o) for o in owners],
+                "e_blk_cap": int(e_blk_cap),
+                "recent_blk_cap": int(recent_blk_cap),
+                "store_version": int(store_version),
+            }
+            with open(os.path.join(path, "journal.json"), "w") as f:
+                json.dump(spec_meta, f)
+            with self._lock:
+                self._dirty_since_ckpt.clear()
+            self.checkpoint_seq = seq
+            self.checkpoint_version = int(store_version)
+            self._save_meta()
         return path
 
     def latest_checkpoint(self):

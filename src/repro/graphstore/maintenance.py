@@ -143,15 +143,23 @@ def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
 
 
 def compact_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, *,
-                  purge: bool = False) -> PartitionedGraphStore:
+                  purge: bool = False,
+                  tracer=None) -> PartitionedGraphStore:
     """Compact every shard's blocks of a *global-layout* partitioned store
     (host-side helper; the runtime runs ``compact_block`` inside shard_map
-    instead). The replicated vertex tier and scalars pass through."""
-    fn = jax.vmap(lambda blk: compact_block(pspec, blk, purge=purge))
-    stacked = stack_blocks(pspec, ps)
-    return unstack_blocks(
-        pspec, stacked._replace(out=fn(stacked.out), inc=fn(stacked.inc))
-    )
+    instead). The replicated vertex tier and scalars pass through.
+    ``tracer`` (a ``repro.obs.trace.Tracer``) records the pass as a
+    ``compact_store`` span; default is the no-op tracer."""
+    if tracer is None:
+        from repro.obs.trace import NULL_TRACER
+
+        tracer = NULL_TRACER
+    with tracer.span("compact_store"):
+        fn = jax.vmap(lambda blk: compact_block(pspec, blk, purge=purge))
+        stacked = stack_blocks(pspec, ps)
+        return unstack_blocks(
+            pspec, stacked._replace(out=fn(stacked.out), inc=fn(stacked.inc))
+        )
 
 
 # ------------------------------------------------------------- elasticity

@@ -87,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--full-checkpoints", action="store_true",
                     help="periodic checkpoints snapshot the whole store "
                          "(default: incremental — dirty owners only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write structured telemetry (span / snapshot / "
+                         "report events) as JSONL to PATH; validate with "
+                         "`python -m repro.obs.validate PATH`")
+    ap.add_argument("--snapshot-every", type=int, default=5,
+                    help="emit a telemetry snapshot event every N batches "
+                         "(0 disables periodic snapshots; the end-of-run "
+                         "report is always emitted)")
     args = ap.parse_args(argv)
 
     if args.shards > 1:
@@ -109,6 +117,7 @@ def main(argv=None):
         DeviceGate, MaintenancePolicy, WriteBehindJournal, make_mutation_batch,
     )
     from repro.graphstore.store import ingest
+    from repro.obs.telemetry import ServeTelemetry
 
     cfg = GraphServeConfig(
         name="serve-local", v_total=args.vertices, e_per_vertex=4,
@@ -131,8 +140,14 @@ def main(argv=None):
         espec.store, vlabels, vprops, es, ed, [0] * len(es), np.array(ep)
     )
 
+    # telemetry: per-owner stage attribution rides the runtime's existing
+    # stacked all-reduce; the tracer times the host-side phases. JSONL
+    # export only happens under --trace; the histograms + end-of-run
+    # report are always on.
+    telemetry = ServeTelemetry(args.shards, trace_path=args.trace)
     mesh = flat_mesh(args.shards)
-    rt = ShardedTxnRuntime(espec, mesh, store_tier=args.store_tier)
+    rt = ShardedTxnRuntime(espec, mesh, store_tier=args.store_tier,
+                           tracer=telemetry.tracer)
     partitioned = args.store_tier == "partitioned"
     if partitioned:
         sstate = rt.partition_store(store, elastic=True)
@@ -158,7 +173,8 @@ def main(argv=None):
         root = args.journal_dir or os.path.join(
             tempfile.mkdtemp(prefix="serve-journal-"), "journal"
         )
-        journal = WriteBehindJournal(root, rt.n, io_timeout=args.io_timeout)
+        journal = WriteBehindJournal(root, rt.n, io_timeout=args.io_timeout,
+                                     tracer=telemetry.tracer)
         journal.checkpoint(
             sstate, e_blk_cap=rt.pspec.e_blk_cap,
             recent_blk_cap=rt.pspec.recent_blk_cap,
@@ -230,9 +246,15 @@ def main(argv=None):
             )
         for k in total:
             total[k] += int(m.get(k, 0))
+        # fold the batch into the latency histograms + owner attribution
+        telemetry.record_gr(rt.last_step_seconds, m,
+                            owner_stage=rt.last_owner_stage)
         # CP-per-shard: misses route to their owner's queue and drain there
-        drain.push(misses)
-        cache = drain.drain(sstate, sstate, cache, ttable, 512)
+        tcp = time.perf_counter()
+        with telemetry.tracer.span("cp_drain"):
+            drain.push(misses)
+            cache = drain.drain(sstate, sstate, cache, ttable, 512)
+        telemetry.record_cp_drain(time.perf_counter() - tcp)
         if (failover is not None and crash_shard in failover.detector.down()
                 and b >= crash_batch + args.recover_after):
             sstate, cache, rinfo = failover.recover(sstate, cache, crash_shard)
@@ -262,6 +284,7 @@ def main(argv=None):
                 )
                 gate = gate_base._replace(purge=purge_ok)
                 maint["purges"] += int(purge_ok)
+            tw = time.perf_counter()
             if failover is not None:
                 # degraded mode queues the commit durably instead of
                 # applying (order-dependent ids; see distributed.failover)
@@ -272,6 +295,7 @@ def main(argv=None):
                 sstate, cache, wm = rt.run_grw_tx(
                     sstate, cache, ttable, mb, gate=gate, journal=journal
                 )
+            telemetry.record_grw(time.perf_counter() - tw)
             # under --no-maintenance this is the degradation signal the
             # flag exists to demonstrate — report it, don't crash on it
             maint["append_overflow"] += wm.get("store_append_overflow", 0)
@@ -307,6 +331,8 @@ def main(argv=None):
             print(f"batch {b}: occupancy "
                   f"{wm['store_occupancy_max']:.2f} crossed high-water — "
                   f"precompiling next tier in the background")
+        if args.snapshot_every and (b + 1) % args.snapshot_every == 0:
+            telemetry.snapshot(b)
     dt = time.time() - t0
     assert res.shape == (args.batch, espec.result_width)
     print(
@@ -359,6 +385,26 @@ def main(argv=None):
             f"detections={fm['detections']} recoveries={fm['recoveries']} "
             f"hedge_rate={fm.get('hedge_rate', 0.0)}"
         )
+    # end-of-run telemetry report (emitted after journal.stop so the final
+    # flush's span is counted)
+    report = telemetry.report()
+
+    def _ms(v):
+        return "n/a" if v is None else f"{v * 1e3:.2f}ms"
+
+    for cls in ("gr_cached", "gr_uncached", "grw", "cp_drain"):
+        p = report["latency"][cls]
+        print(
+            f"latency[{cls}]: p50={_ms(p['p50'])} p95={_ms(p['p95'])} "
+            f"p99={_ms(p['p99'])} p99.9={_ms(p['p999'])} (n={p['count']})"
+        )
+    print("hit_locality per shard: "
+          + " ".join(f"{v:.2f}" for v in report["hit_locality"]))
+    total["trace_events"] = (telemetry.writer.events_written
+                             if telemetry.writer is not None else 0)
+    if args.trace:
+        print(f"trace: {args.trace} ({total['trace_events']} events)")
+    telemetry.close()
     return total
 
 

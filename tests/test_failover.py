@@ -134,6 +134,33 @@ def test_failure_detector_observe_step_heartbeat():
     assert d.down() == frozenset({2})  # a step heartbeat never revives
 
 
+def test_failure_detector_per_owner_marks_only_the_straggler():
+    """The telemetry tier's work-attributed per-owner step latency must
+    single out the slow owner: one straggler of eight is marked alone,
+    while the aggregate fallback (no attribution) still marks the whole
+    mesh — the collective-step semantics it preserves."""
+    d = FailureDetector(n=8, fail_threshold=1, straggle_after=0.1)
+    per = np.full(8, 0.02)
+    per[5] = 0.5  # one slow owner; mesh-wide mean stays under threshold
+    d.observe_step(float(per.mean()), per_owner=per)
+    assert d.straggling() == frozenset({5})
+    # a balanced follow-up step clears the mark
+    d.observe_step(0.02, per_owner=np.full(8, 0.02))
+    assert d.straggling() == frozenset()
+    # down owners never flap through the per-owner heartbeat
+    d.observe_failure(3)
+    d.observe_step(0.02, per_owner=per)
+    assert d.down() == frozenset({3})
+    assert d.straggling() == frozenset({5})
+    # same latencies through the aggregate fallback: everyone straggles
+    d2 = FailureDetector(n=8, fail_threshold=1, straggle_after=0.1)
+    d2.observe_step(0.5)
+    assert d2.straggling() == frozenset(range(8))
+    # attribution must cover every owner — a short vector is an error
+    with pytest.raises(ValueError, match="owners"):
+        d.observe_step(0.02, per_owner=np.full(4, 0.02))
+
+
 def test_probe_uses_measured_step_timing_when_unscripted():
     """With no ShardFaultPlan the controller's probe must heartbeat from
     the runtime's real measured step wall-clock, so a live straggler trips

@@ -122,3 +122,66 @@ def test_overlap_schedule_is_row_identical():
         """,
         "OVERLAP_IDENTITY_OK",
     )
+
+
+def test_telemetry_keeps_collective_budget_and_bytes():
+    """The observability tier's per-owner stage block rides the step's
+    existing stacked all-reduce: telemetry on vs off must compile to the
+    SAME collective counts (2 all_to_alls per hop, 1 all-reduce, nothing
+    else), return byte-identical results/misses/metrics, and the
+    attributed owner_stage columns must sum exactly to the global
+    metrics they decompose."""
+    _run(
+        """
+        rng = np.random.default_rng(11)
+        roots = rng.integers(0, spec.v_cap, size=64).astype(np.int32)
+        mkey = lambda ms: sorted(
+            (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+            for m in ms
+        )
+        rt_t = ShardedTxnRuntime(espec, mesh)  # telemetry defaults on
+        rt_p = ShardedTxnRuntime(
+            espec, mesh, telemetry=False, e_blk_cap=rt_t.pspec.e_blk_cap
+        )
+        ps_t = rt_t.partition_store(store)
+        ps_p = rt_p.partition_store(store)
+        for plan in (fig1_plan(), common_watchlist_plan()):
+            h = len(plan.hops)
+            for rt, ps in ((rt_t, ps_t), (rt_p, ps_p)):
+                step = rt.serve_step(plan, 64)
+                hlo = step.jitted.lower(
+                    ps, rt.empty_cache(), ttable, jnp.zeros(64, jnp.int32),
+                    jnp.ones(64, bool), rt._down_none(),
+                ).compile().as_text()
+                c = analyze(hlo)["counts"]
+                assert c["all-to-all"] == 2 * h, (h, c)
+                assert c["all-reduce"] == 1, (h, c)
+                assert c["all-gather"] == 0 and c["collective-permute"] == 0, c
+            ra, msa, ma = rt_t.run_gr_tx_batch(
+                ps_t, rt_t.empty_cache(), ttable, plan, roots
+            )
+            rb, msb, mb = rt_p.run_gr_tx_batch(
+                ps_p, rt_p.empty_cache(), ttable, plan, roots
+            )
+            assert np.array_equal(ra, rb)
+            assert mkey(msa) == mkey(msb)
+            for k in ma:
+                assert ma[k] == mb[k], (k, ma[k], mb[k])
+            # attribution is a decomposition, not an estimate: per-owner
+            # columns sum exactly to the step's global metrics
+            stage = rt_t.last_owner_stage
+            assert stage is not None and stage.shape[0] == 8
+            assert rt_p.last_owner_stage is None
+            from repro.obs.metrics import OWNER_STAGE_FIELDS
+            col = {f: int(stage[:, i].sum())
+                   for i, f in enumerate(OWNER_STAGE_FIELDS)}
+            assert col["probe_hits"] == ma["hits"]
+            assert col["miss_rows"] == ma["misses"]
+            assert col["edges_scanned"] == ma["edges_scanned"]
+            assert col["leaf_fetches"] == ma["leaf_fetches"]
+            assert col["route_overflow"] == ma["route_overflow"]
+            assert rt_t.last_step_owner_seconds.shape == (8,)
+        print("TELEMETRY_BUDGET_OK")
+        """,
+        "TELEMETRY_BUDGET_OK",
+    )
