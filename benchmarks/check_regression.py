@@ -45,6 +45,7 @@ import sys
 
 BASELINE_GIT_PATH = "BENCH_partitioned_store.json"
 LATENCY_GIT_PATH = "BENCH_latency.json"
+ROUTING_GIT_PATH = "BENCH_routing.json"
 
 
 def load_baseline(path: str | None, git_path: str = BASELINE_GIT_PATH) -> dict:
@@ -134,6 +135,38 @@ def check_latency(fresh: dict, base: dict, max_regress: float) -> list[str]:
     return failures
 
 
+def check_routing(fresh: dict, base: dict, max_regress: float) -> list[str]:
+    """Routing-tier guard over BENCH_routing.json: the hottest-owner load
+    cut and the migrated-vs-static speedup are ratios (machine-speed
+    independent), guarded with floors; ``results_identical`` and the
+    zero-recompile pin are hard requirements of the fresh run.
+
+    Returns the list of failure messages (empty = pass)."""
+    failures = []
+    if not fresh.get("results_identical", False):
+        failures.append(
+            "routing: results_identical is not true in the fresh run — "
+            "locality routing / migration diverged from the single-host "
+            "engine"
+        )
+    if fresh.get("migrated", {}).get("serve_compiles") != 1:
+        failures.append(
+            "routing: migrated phase compiled "
+            f"{fresh.get('migrated', {}).get('serve_compiles')} serve "
+            "programs — table updates must be input changes, never "
+            "recompiles"
+        )
+    for key in ("hot_owner_load_cut", "gr_speedup_vs_static"):
+        new, old = float(fresh[key]), float(base[key])
+        floor = old * (1.0 - max_regress)
+        line = f"routing {key}: {new:.2f} vs baseline {old:.2f} (floor {floor:.2f})"
+        if new < floor:
+            failures.append("REGRESSION " + line)
+        else:
+            print("ok  " + line)
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default=None,
@@ -152,9 +185,15 @@ def main() -> int:
                     help="allowed fractional p99 regression for the C+Q+ "
                          "latency tables (default 0.50 — M/G/1 tails are "
                          "noisy; this catches blowups, not drift)")
+    ap.add_argument("--routing-fresh", default=None,
+                    help="freshly measured BENCH_routing.json")
+    ap.add_argument("--routing-baseline", default=None,
+                    help=f"routing baseline json (default: git show "
+                         f"HEAD:{ROUTING_GIT_PATH})")
     args = ap.parse_args()
-    if args.fresh is None and args.latency_fresh is None:
-        ap.error("pass --fresh and/or --latency-fresh")
+    if (args.fresh is None and args.latency_fresh is None
+            and args.routing_fresh is None):
+        ap.error("pass --fresh, --latency-fresh, and/or --routing-fresh")
     failures = []
     if args.fresh is not None:
         with open(args.fresh) as f:
@@ -166,6 +205,11 @@ def main() -> int:
             lfresh = json.load(f)
         lbase = load_baseline(args.latency_baseline, LATENCY_GIT_PATH)
         failures += check_latency(lfresh, lbase, args.latency_max_regress)
+    if args.routing_fresh is not None:
+        with open(args.routing_fresh) as f:
+            rfresh = json.load(f)
+        rbase = load_baseline(args.routing_baseline, ROUTING_GIT_PATH)
+        failures += check_routing(rfresh, rbase, args.max_regress)
     for msg in failures:
         print(msg, file=sys.stderr)
     return 1 if failures else 0

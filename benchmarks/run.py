@@ -111,6 +111,18 @@ def _bench_failover():
     )
 
 
+def _bench_routing():
+    """Cache-locality routing + hot-vertex migration vs the static modulo
+    layout on a colliding Zipfian hot set: hottest-owner load share cut,
+    warm gR speedup, zero-recompile pin (BENCH_routing.json)."""
+    from benchmarks import bench_routing
+
+    return _bench_subprocess(
+        "benchmarks.bench_routing", "BENCH_routing.json",
+        bench_routing.N_SHARDS,
+    )
+
+
 def _bench_hop_pipeline(batch=512):
     """Old vs fused hop pipeline; persists BENCH_hop_pipeline.json at the
     repo root so the perf trajectory is tracked across PRs."""
@@ -152,6 +164,9 @@ def main() -> None:
         # live shard failover: detection, degraded serving, journal-replay
         # recovery/migration under traffic (BENCH_failover.json)
         "failover": _bench_failover,
+        # routing tier: static modulo vs locality routing + hot-vertex
+        # migration on a colliding hot set (BENCH_routing.json)
+        "routing": _bench_routing,
         # Table 1 + 3 + 4 + 5 + 7 + 8 (C±Q± latency percentiles, per class;
         # BENCH_latency.json feeds the p99 regression guard)
         "latency_tables_1_3_5": lambda: bench_latency.main(

@@ -94,6 +94,8 @@ def populate_step(
     mask,
     read_versions,
     exec_view=None,
+    commit_mask=None,
+    allreduce=None,
 ):
     """One CP transaction batch for one template (jit this with static
     espec/tpl_idx/direction/edge_label via functools.partial).
@@ -107,6 +109,17 @@ def populate_step(
     partitioned tier passes a ``BlockStoreView`` over owner-local blocks);
     ``store_exec``/``store_commit`` then only supply ``.version`` /
     ``.vversion`` (a ``PartitionedGraphStore`` satisfies both).
+
+    ``commit_mask`` + ``allreduce`` split the transaction across shards
+    (the routing-table tier): ``mask`` selects the rows this shard
+    *executes* (its storage owns them) and ``commit_mask`` the rows whose
+    cache entry it *inserts* (its cache block owns them). The computed
+    bundle — leaves, counts, the post-OCC commit verdict — crosses shards
+    through ``allreduce`` (a psum inside shard_map): exactly one shard
+    executes each row, every other shard contributes zeros, so the sum
+    reconstructs the bundle at the inserting shard. With both defaulted
+    (single host, or exec == commit shard) nothing is reduced and the
+    path is byte-identical to the fused transaction.
     """
     pr = _tpl_row(ttable.pr, tpl_idx)
     pe = _tpl_row(ttable.pe, tpl_idx)
@@ -133,6 +146,16 @@ def populate_step(
     # installed-for-writes is safe and matches §4.1 Phase 2.
     ok = cacheable & ~conflict & ttable.read_enabled[tpl_idx]
 
+    insert_ok = ok
+    if commit_mask is not None:
+        assert allreduce is not None, "the CP split needs a reducer"
+        # ship the executed bundle to the inserting shard: one owner per
+        # row contributes, everyone else adds zeros
+        leaves = allreduce(jnp.where(ok[:, None], leaves, 0))
+        n_true = allreduce(jnp.where(ok, n_true, 0))
+        ok_g = allreduce(ok.astype(jnp.int32)) > 0
+        insert_ok = ok_g & commit_mask
+
     cache = cache_insert(
         espec.cache,
         cache,
@@ -142,7 +165,7 @@ def populate_step(
         leaves,
         n_true,
         jnp.full(roots.shape, cp_read_version, jnp.int32),
-        ok,
+        insert_ok,
     )
     return cache, ok, cacheable & conflict
 

@@ -330,14 +330,18 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
     miss path (default: ``onehop_exec`` over a full ``GraphStore``; the
     partitioned tier supplies an owner-local block executor).
 
-    ``defer_fn() -> bool`` is the degraded-mode hook: a traced scalar that
-    is True when this shard's *storage* is marked down. Misses here then
-    **defer** instead of executing — cache hits still serve (the cache
-    tier survives an owner's storage loss), no storage gather runs, no
-    miss record is emitted (CP must not populate from a lost block), and
-    the deferred rows are encoded as ``cnt = -1`` so the home shard can
-    flag them after unrouting. With the hook absent (single host) or the
-    mask all-False (healthy mesh) the program is byte-identical to the
+    ``defer_fn(roots_flat) -> bool[BF]`` is the degraded-mode hook: a
+    traced per-row mask that is True where this shard cannot execute the
+    row's miss — its storage is marked down, or (under cache-locality
+    routing) the row was routed here for its *cache* home while its rows
+    live at another shard. Misses there then **defer** instead of
+    executing — cache hits still serve (the cache tier survives an
+    owner's storage loss, and a locality-routed hit is the whole point),
+    no storage gather runs, no miss record is emitted (CP must not
+    populate from a lost block), and the deferred rows are encoded as
+    ``cnt = -1`` so the home shard can flag them after unrouting. With
+    the hook absent (single host) or the mask all-False (healthy mesh,
+    no locality splits) the program is byte-identical to the
     non-degraded trace — degrading is an *input* change, not a recompile.
     """
     RW = espec.result_width
@@ -373,7 +377,7 @@ def make_hop_kernel(espec, hop, use_cache: bool, exec_fn=None, defer_fn=None):
             n_read = n_hit = jnp.int32(0)
         miss_mask = rmask_flat & ~hit
         if defer_fn is not None:
-            deferred = miss_mask & defer_fn()
+            deferred = miss_mask & defer_fn(roots_flat)
             miss_mask = miss_mask & ~deferred
         else:
             deferred = jnp.zeros((BF,), bool)

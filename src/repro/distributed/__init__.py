@@ -23,7 +23,17 @@ __all__ = [
     "ShardedTxnRuntime",
     "ShardedMissDrain",
     "FailoverController",
+    "RoutingTable",
+    "RoutingTableHost",
+    "identity_table",
+    "storage_owner_of",
+    "cache_owner_of",
 ]
+
+_ROUTING = (
+    "RoutingTable", "RoutingTableHost", "identity_table",
+    "storage_owner_of", "cache_owner_of",
+)
 
 
 def __getattr__(name):
@@ -36,4 +46,8 @@ def __getattr__(name):
         from repro.distributed import failover
 
         return failover.FailoverController
+    if name in _ROUTING:
+        from repro.distributed import routing
+
+        return getattr(routing, name)
     raise AttributeError(name)

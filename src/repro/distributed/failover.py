@@ -69,7 +69,8 @@ class FailoverController:
                  detector: Optional[FailureDetector] = None,
                  hedge: Optional[HedgedCalls] = None,
                  hedge_after: float = 0.05,
-                 default_policy: str = "write-around"):
+                 default_policy: str = "write-around",
+                 rhost=None):
         self.rt = rt
         self.journal = journal
         self.ttable = ttable
@@ -78,6 +79,10 @@ class FailoverController:
         self.hedge = hedge
         self.hedge_after = hedge_after
         self.default_policy = default_policy
+        # the routing-table host mirror (stateful routing tier): explicit,
+        # else whatever the runtime has attached — every read/write/recover
+        # below threads it so failover composes with migrated placements
+        self.rhost = rhost if rhost is not None else getattr(rt, "rhost", None)
         self.failed_batches = 0  # raised NodeFailure pre-detection
         self.degraded_batches = 0
         self.deferred_rows = 0
@@ -135,7 +140,8 @@ class FailoverController:
             with epochs.pin_scope():
                 return self.rt.run_gr_tx_batch(
                     pstore, cache, self.ttable, qplan, roots,
-                    down=m if m.any() else None, return_deferred=True,
+                    down=m if m.any() else None, rtable=self.rhost,
+                    return_deferred=True,
                 )
 
         from_hedge = False
@@ -185,12 +191,15 @@ class FailoverController:
         if self.detector.down():
             self.journal.append_commit(
                 batch, policy=policy, gate=gate, applied=False,
+                route=(self.rhost.storage_owner if self.rhost is not None
+                       else None),
             )
             metrics = {"queued": 1, **self.journal.metrics()}
             return pstore, cache, metrics
         pstore, cache, metrics = self.rt.run_grw_tx(
             pstore, cache, self.ttable, batch, policy=policy, gate=gate,
             occupancy_metrics=occupancy_metrics, journal=self.journal,
+            rtable=self.rhost,
         )
         metrics["queued"] = 0
         return pstore, cache, metrics
@@ -207,7 +216,7 @@ class FailoverController:
         )
         pstore, cache, dinfo = drain_queued(
             self.journal, self.rt, self.ttable, pstore, cache,
-            default_policy=self.default_policy,
+            default_policy=self.default_policy, rhost=self.rhost,
         )
         self.detector.mark_recovered(owner)
         if self.plan is not None:

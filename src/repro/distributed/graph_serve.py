@@ -181,6 +181,14 @@ from repro.graphstore.partition import (
     partition_store,
     store_bytes_report,
 )
+from repro.distributed.routing import (
+    RoutingTable,
+    RoutingTableHost,
+    base_owner,
+    cache_owner_of,
+    identity_table,
+    storage_owner_of,
+)
 from repro.obs.metrics import OWNER_STAGE_FIELDS, attribute_step_seconds
 from repro.obs.trace import NULL_TRACER
 from repro.utils import NULL_ID
@@ -189,6 +197,7 @@ _STAT_FIELDS = ("n_hit", "n_miss", "n_insert", "n_evict", "n_delete", "n_oversiz
 _ADDITIVE_METRICS = (
     "requests", "hits", "misses", "truncated", "leaf_fetches",
     "edges_scanned", "cache_reads", "route_overflow", "deferred",
+    "locality_routed",
 )
 
 # Measured default per-peer routing capacity multipliers, per hop: sized
@@ -236,12 +245,13 @@ class _MeshTier:
     the partitioned store tier) owner-local block execution."""
 
     routed = True
-    # degraded-mode serving: the plan fn takes one extra traced input — the
-    # ``down: bool[n]`` owner mask (replicated). All-False is the healthy
-    # fast path and traces byte-identically, so flipping an owner down is
-    # an input change, not a recompile (the unavailability window is one
-    # batch, not one XLA compile).
-    extra_inputs = 1
+    # stateful serving inputs: the plan fn takes TWO extra traced inputs —
+    # the ``down: bool[n]`` owner mask and the replicated ``RoutingTable``
+    # (both fixed-shape). All-False / identity-table are the healthy fast
+    # path and trace byte-identically, so flipping an owner down or moving
+    # a vertex (migration, locality override) is an *input* change, not a
+    # recompile.
+    extra_inputs = 2
 
     def __init__(self, rt: "ShardedTxnRuntime", caps, pspec):
         # pspec is captured at BUILD time (not read off rt at trace time):
@@ -258,21 +268,33 @@ class _MeshTier:
         self.telemetry = rt.telemetry
         self.stage_rows = rt.telemetry
         self._down = None
+        self._rtable = None
+        self._locality = None
 
-    def bind(self, down):
+    def bind(self, down, rtable):
         self._down = down
+        self._rtable = rtable
+        # per-trace accumulator: rows routed away from their static-modulo
+        # home by the table (folded into the metrics psum)
+        self._locality = jnp.int32(0)
 
     def defer_fn(self):
         if self.pspec is None:
             # the replicated tier keeps a full snapshot per shard: losing
-            # an owner's storage loses nothing, so nothing ever defers
+            # an owner's storage loses nothing, and every shard can execute
+            # any miss, so nothing ever defers
             return None
 
-        def defer():
-            # True at the owner whose storage blocks are down: its misses
-            # defer instead of reading lost blocks (hits still serve from
-            # the surviving co-partitioned cache shard)
-            return self._down[jax.lax.axis_index(self.axes)]
+        def defer(roots_flat):
+            # a miss defers where this shard cannot execute it: the owner's
+            # storage blocks are down, or the row was routed here for its
+            # *cache* home (locality routing) while its dual-CSR rows live
+            # at another shard — the host re-dispatches those through the
+            # storage view of the same table (same compiled program).
+            # Cache hits still serve either way.
+            me = jax.lax.axis_index(self.axes)
+            split = storage_owner_of(self._rtable, roots_flat, self.n) != me
+            return self._down[me] | split
 
         return defer
 
@@ -284,7 +306,7 @@ class _MeshTier:
         if self.fused_gather:
             def exec_fn(store, roots_f, params, miss_m, hop=hop):
                 me = jax.lax.axis_index(axes)
-                view = BlockStoreView(pspec, store, me)
+                view = BlockStoreView(pspec, store, me, rtable=self._rtable)
                 return block_onehop_exec(
                     espec, view, hop.direction, hop.edge_label,
                     hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
@@ -292,7 +314,7 @@ class _MeshTier:
         else:
             def exec_fn(store, roots_f, params, miss_m, hop=hop):
                 me = jax.lax.axis_index(axes)
-                view = BlockStoreView(pspec, store, me)
+                view = BlockStoreView(pspec, store, me, rtable=self._rtable)
                 return onehop_exec_view(
                     espec, view, hop.direction, hop.edge_label,
                     hop.pr, hop.pe, hop.pl, roots_f, params, miss_m,
@@ -314,8 +336,15 @@ class _MeshTier:
         # by the decoded row mask, and home-side gathers are kept-masked).
         n, cap = self.n, self.caps[hop_idx]
         rvals = jnp.where(rmask_flat, roots_flat, NULL_ID)
-        owner = jnp.where(
-            rmask_flat & (roots_flat >= 0), owner_of(roots_flat, n), -1
+        ok = rmask_flat & (roots_flat >= 0)
+        # gR routes by the *cache* owner (Smart Query Routing): a hit is
+        # served entirely at the caching shard; a locality-split miss comes
+        # back deferred and the host retries at the storage owner. The
+        # identity table reduces this to exactly owner_of.
+        dest = cache_owner_of(self._rtable, roots_flat, n)
+        owner = jnp.where(ok, dest, -1)
+        self._locality = self._locality + jnp.sum(
+            (ok & (dest != owner_of(roots_flat, n))).astype(jnp.int32)
         )
         flags = rmask_flat.astype(jnp.int32) * WIRE_FLAG_VALID
         params = jnp.broadcast_to(
@@ -360,6 +389,7 @@ class _MeshTier:
         # per-hop miss-count vector (the deferred phase gate) globalize as
         # a single concatenated psum instead of one psum per metric per plan
         # plus one gate psum per hop
+        m["locality_routed"] = self._locality
         keys = [k for k in _ADDITIVE_METRICS if k in m]
         hop_k = m["_hop_k"]
         parts = [jnp.stack([m[k] for k in keys]).astype(jnp.int32), hop_k]
@@ -438,6 +468,18 @@ class ShardedTxnRuntime:
     frontier roots whose skew is measured separately from root skew
     (``workload.measure_route_skew``), so a mix whose frontiers are flatter
     than its Zipfian roots can run tighter buckets on the inner hops.
+    ``"auto"`` sizes buckets from the telemetry tier's *measured* per-owner
+    frontier skew (starting at the production default), ratcheting up as
+    skew is observed; a batch that still overflows re-dispatches once on
+    the worst-case-caps program variant instead of dropping rows
+    (``route_cap_retries`` in the step metrics) — this retires hand-tuned
+    CI cap factors.
+
+    ``attach_routing(rhost)`` threads a live ``RoutingTableHost`` through
+    every step (serving, commits, CP population, miss-drain queueing) as a
+    replicated traced input: table updates — hot-vertex migrations, cache
+    locality overrides — are input changes at batch boundaries, never
+    recompiles. See ``repro.distributed.routing`` and ``docs/ROUTING.md``.
 
     ``maintenance_tick`` (between transaction batches) keeps the
     partitioned tier healthy under sustained gRW traffic: owner-local block
@@ -456,6 +498,13 @@ class ShardedTxnRuntime:
                  telemetry: bool = True, tracer=None):
         assert store_tier in ("partitioned", "replicated"), store_tier
         self.axes = tuple(mesh.axis_names)
+        # spec spelling for device_put shardings: a single mesh axis must
+        # be the bare name, not a 1-tuple. P(("shard",)) and P("shard")
+        # compare equal, but the jit fastpath keys on the concrete layout
+        # string and shard_map outputs normalize to the bare-name form —
+        # mixing the spellings makes a second executable-cache entry for
+        # the same program (pinned by the zero-recompile tests)
+        self._ax = self.axes[0] if len(self.axes) == 1 else self.axes
         self.n = int(np.prod([mesh.shape[a] for a in self.axes]))
         n = self.n
         assert n & (n - 1) == 0, "shard count must be a power of two"
@@ -487,6 +536,8 @@ class ShardedTxnRuntime:
             assert route_cap_factor and all(
                 isinstance(f, int) for f in route_cap_factor
             ), "per-hop route_cap_factor entries must be ints"
+        elif isinstance(route_cap_factor, str):
+            assert route_cap_factor == "auto", route_cap_factor
         self.route_cap_factor = route_cap_factor
         # fused_gather selects the kernels/block_gather owner-local miss
         # executor (sort-based dedup + static-specialized predicates) on
@@ -530,11 +581,25 @@ class ShardedTxnRuntime:
         # the count of completed hot-swaps (serve-loop metric)
         self._next_tier: _NextTier | None = None
         self.swap_events = 0
+        # stateful routing: the attached host routing table (None = the
+        # compiled-in modulo layout — identity-table input, byte-identical),
+        # the peak measured owner frontier skew (feeds "auto" route caps),
+        # and the host-side retry counters the serve loop reports
+        self.rhost: RoutingTableHost | None = None
+        self._route_skew_seen: float | None = None
+        self.route_cap_retries = 0
+        self.locality_retries = 0
 
     # ------------------------------------------------------------ sharding
     def cache_sharding(self):
-        s1 = NamedSharding(self.mesh, P(self.axes))
-        s2 = NamedSharding(self.mesh, P(self.axes, None))
+        # vals (2D) deliberately shares s1 = P(ax), not P(ax, None): the
+        # trailing None is the same placement but shard_map outputs drop
+        # it, and a spelling mismatch is a fresh executable-cache entry
+        # (see the _ax note in __init__) — a device_put under the other
+        # spelling would recompile the serve step on the first post-drain
+        # batch (pinned by the zero-recompile test in test_routing_runtime)
+        s1 = NamedSharding(self.mesh, P(self._ax))
+        s2 = s1
         s0 = NamedSharding(self.mesh, P())
         return CacheState(
             tpl=s1, root=s1, fp=s1, chunk=s1, total_len=s1, vals=s2,
@@ -556,7 +621,7 @@ class ShardedTxnRuntime:
         """shard_map PartitionSpecs for the storage tier."""
         if self.pspec is None:
             return P()  # replicated snapshot
-        a = self.axes
+        a = self._ax
         blk = EdgeBlock(
             key=P(a), other=P(a), label=P(a), alive=P(a), props=P(a),
             geid=P(a), gperm=P(a), indptr=P(a), blk_len=P(a), csr_len=P(a),
@@ -789,6 +854,7 @@ class ShardedTxnRuntime:
                         jnp.zeros((bucket, PARAM_LEN), jnp.int32),
                         jnp.zeros((bucket,), jnp.bool_),
                         jnp.zeros((bucket,), jnp.int32),
+                        self._rtable_none(),
                     ))
                     handle.compiled += 1
             except Exception as e:  # noqa: BLE001 — surfaced at swap time
@@ -893,16 +959,69 @@ class ShardedTxnRuntime:
         state."""
         return jax.device_put(cache, self.cache_sharding())
 
+    # ---------------------------------------------------- stateful routing
+    def attach_routing(self, rhost: RoutingTableHost | None):
+        """Attach the host routing table. Once attached, every serving /
+        commit / CP step resolves ``rhost.device_table()`` at dispatch time
+        (cached per epoch, so an unchanged table costs a dict hit), and
+        ``ShardedMissDrain`` queues misses at each root's *cache* owner.
+        ``None`` detaches — back to the compiled-in modulo layout."""
+        if rhost is not None:
+            assert rhost.n == self.n, (rhost.n, self.n)
+        self.rhost = rhost
+        return rhost
+
+    def _rtable_none(self) -> RoutingTable:
+        """The identity table (routes exactly like ``owner_of``) — the
+        serve step's default ``rtable`` input, cached so steady-state
+        batches reuse one device constant instead of re-transferring."""
+        if getattr(self, "_rtable_id", None) is None:
+            self._rtable_id = identity_table(self.n)
+        return self._rtable_id
+
+    def _resolve_rtable(self, rtable) -> RoutingTable:
+        """Resolve a step's table input: an explicit device ``RoutingTable``
+        passes through, a ``RoutingTableHost`` stamps its current device
+        table, ``None`` falls back to the attached ``rhost`` (or the
+        identity table)."""
+        if rtable is None:
+            return (self.rhost.device_table() if self.rhost is not None
+                    else self._rtable_none())
+        if isinstance(rtable, RoutingTableHost):
+            return rtable.device_table()
+        return rtable
+
     # --------------------------------------------------------- gR-Tx path
-    def _hop_route_caps(self, plan, Bloc):
+    def _effective_cap_factor(self, worst_case: bool = False):
+        """The cap factor a program variant compiles with. ``"auto"``
+        derives the factor from measured telemetry (the peak per-owner
+        frontier-row share, 25% headroom, floor 2) and starts at the
+        measured production default before any step has run; the factor
+        only ever grows (monotone max), so adaptation recompiles a bounded
+        number of times. ``worst_case=True`` is the no-drop fallback
+        variant the overflow retry dispatches."""
+        if worst_case:
+            return None
+        rcf = self.route_cap_factor
+        if rcf == "auto":
+            if self._route_skew_seen is None:
+                return DEFAULT_ROUTE_CAP_FACTOR
+            f = max(2, int(np.ceil(self._route_skew_seen * 1.25)))
+            return (max(f, DEFAULT_ROUTE_CAP_FACTOR[0]),
+                    max(f, DEFAULT_ROUTE_CAP_FACTOR[1]))
+        return rcf
+
+    def _hop_route_caps(self, plan, Bloc, *, worst_case: bool = False):
         """Per-hop per-peer routing capacity (worst case unless bounded).
 
         A scalar ``route_cap_factor`` applies to every hop; a tuple supplies
         per-hop factors (hop 1 routes query roots, hops ≥ 2 route
-        leaf-derived frontier roots with separately measured skew)."""
+        leaf-derived frontier roots with separately measured skew);
+        ``"auto"`` derives them from the telemetry tier's measured owner
+        skew (``_effective_cap_factor``)."""
         caps, A = [], 1
         F, RW = self.espec.frontier, self.espec.result_width
-        rcf = self.route_cap_factor
+        rcf = self._effective_cap_factor(worst_case)
         for i, _ in enumerate(plan.hops):
             rows = Bloc * A
             f = rcf[min(i, len(rcf) - 1)] if isinstance(rcf, tuple) else rcf
@@ -921,10 +1040,13 @@ class ShardedTxnRuntime:
             self._down_zeros = jnp.zeros((self.n,), jnp.bool_)
         return self._down_zeros
 
-    def _gr_fn(self, plan, bucket: int, *, pspec=None):
+    def _gr_fn(self, plan, bucket: int, *, pspec=None,
+               worst_case: bool = False):
         """The un-jitted shard_map serving program (AOT lowering hook).
         ``pspec`` defaults to the current tier; the background pre-compiler
-        passes the next tier's spec to build double-buffered programs."""
+        passes the next tier's spec to build double-buffered programs.
+        ``worst_case`` sizes route buckets for no-drop (the overflow-retry
+        fallback variant)."""
         n = self.n
         assert bucket % n == 0, "global batch bucket must divide over shards"
         pspec = self.pspec if pspec is None else pspec
@@ -933,7 +1055,9 @@ class ShardedTxnRuntime:
         # row streams; route caps are sized for the half-batch each stream
         # actually routes
         overlap = self.overlap and Bloc % 2 == 0 and Bloc >= 2
-        caps = self._hop_route_caps(plan, Bloc // 2 if overlap else Bloc)
+        caps = self._hop_route_caps(
+            plan, Bloc // 2 if overlap else Bloc, worst_case=worst_case
+        )
         fused = make_plan_fn(
             self.lspec, plan, self.use_cache, _MeshTier(self, caps, pspec),
             overlap=overlap,
@@ -943,7 +1067,7 @@ class ShardedTxnRuntime:
             mesh=self.mesh,
             in_specs=(
                 self._store_specs(), self._cache_specs(), P(),
-                P(self.axes), P(self.axes), P(),
+                P(self.axes), P(self.axes), P(), P(),
             ),
             out_specs=(
                 P(self.axes), P(self.axes), P(self.axes), P(self.axes),
@@ -952,17 +1076,28 @@ class ShardedTxnRuntime:
             check_rep=False,
         )
 
-    def _gr(self, plan, bucket: int, *, pspec=None):
+    def _gr(self, plan, bucket: int, *, pspec=None, worst_case: bool = False):
         pspec = self.pspec if pspec is None else pspec
-        key = (pspec, _plan_key(plan), bucket)
+        # the caps are part of the key: "auto" mode re-derives the factor
+        # from telemetry, and a grown factor is a new program variant (the
+        # worst-case retry variant keys the same way)
+        Bloc = bucket // self.n
+        overlap = self.overlap and Bloc % 2 == 0 and Bloc >= 2
+        caps = tuple(self._hop_route_caps(
+            plan, Bloc // 2 if overlap else Bloc, worst_case=worst_case
+        ))
+        key = (pspec, _plan_key(plan), bucket, caps)
         if key not in self._gr_fns:
-            jitted = jax.jit(self._gr_fn(plan, bucket, pspec=pspec))
+            jitted = jax.jit(self._gr_fn(
+                plan, bucket, pspec=pspec, worst_case=worst_case
+            ))
 
             def step(store, cache, ttable, roots, bvalid, down=None,
-                     _fn=jitted):
+                     rtable=None, _fn=jitted):
                 return _fn(
                     store, cache, ttable, roots, bvalid,
                     self._down_none() if down is None else jnp.asarray(down),
+                    self._resolve_rtable(rtable),
                 )
 
             step.jitted = jitted
@@ -972,29 +1107,56 @@ class ShardedTxnRuntime:
     def serve_step(self, plan, global_batch: int):
         """The jitted serving step for one ``QueryPlan`` (any hop count) —
         ``step(store, cache, ttable, roots [global_batch], bvalid,
-        down=None) -> (results, deferred, miss_roots, miss_counts, metrics,
-        read_version)``. ``down`` is the degraded-mode owner mask (bool[n],
-        default all-healthy); ``deferred`` flags the rows whose miss
-        segments were masked at a down owner (bounded-stale)."""
+        down=None, rtable=None) -> (results, deferred, miss_roots,
+        miss_counts, metrics, read_version)``. ``down`` is the
+        degraded-mode owner mask (bool[n], default all-healthy);
+        ``rtable`` the replicated routing table (``RoutingTable`` /
+        ``RoutingTableHost``; default: the attached ``rhost`` or the
+        identity table — byte-identical to the static modulo layout);
+        ``deferred`` flags rows whose miss segments were masked at a down
+        owner (bounded-stale) or locality-routed away from their storage
+        owner (retry through ``RoutingTableHost.storage_table()``)."""
         return self._gr(plan, global_batch)
 
     def run_gr_tx_batch(self, store, cache, ttable, plan, roots, *,
-                        down=None, return_deferred: bool = False):
+                        down=None, rtable=None,
+                        return_deferred: bool = False):
         """Host wrapper: pad, execute, decode misses. Same contract as
-        ``GraphEngine.run`` — one blocking device→host transfer.
+        ``GraphEngine.run`` — one blocking device→host transfer on the
+        healthy path.
 
         ``down`` (bool[n]) masks the named owners' miss segments
-        (degraded-mode serving); with ``return_deferred=True`` the
-        per-query deferred flags come back as a fourth element."""
+        (degraded-mode serving); ``rtable`` threads the routing table (see
+        ``serve_step``). Two host-side retry loops wrap the step, both
+        re-dispatching through compiled program variants (never a
+        recompile on the serving path):
+
+        - **locality retry** — rows deferred because they hit a *split*
+          vertex's cache home (cache owner ≠ storage owner) re-dispatch
+          once through the table's storage view
+          (``RoutingTableHost.storage_table()`` — the same compiled
+          program, a different table input). Needs a host table (a
+          ``RoutingTableHost`` argument or the attached ``rhost``).
+        - **overflow retry** (``route_cap_factor="auto"`` only) — a batch
+          that overflowed the telemetry-derived buckets re-dispatches on
+          the worst-case-caps variant, and the measured skew ratchets up
+          so future plans compile with wider buckets
+          (``route_cap_retries`` counts the fallbacks).
+
+        With ``return_deferred=True`` the per-query deferred flags come
+        back as a fourth element."""
         B = len(roots)
         bucket = max(bucket_for(B), self.n)
         proots, bvalid = pad_roots(roots, bucket)
+        proots, bvalid = jnp.asarray(proots), jnp.asarray(bvalid)
+        rhost = rtable if isinstance(rtable, RoutingTableHost) else (
+            self.rhost if rtable is None else None
+        )
         tr = self.tracer
         t0 = time.perf_counter()
         with tr.span("gr_dispatch"):
             out = self._gr(plan, bucket)(
-                store, cache, ttable, jnp.asarray(proots),
-                jnp.asarray(bvalid), down,
+                store, cache, ttable, proots, bvalid, down, rtable,
             )
         with tr.span("gr_sync"):
             result, deferred, miss_roots, miss_counts, m, version = (
@@ -1018,21 +1180,78 @@ class ShardedTxnRuntime:
             self.last_step_owner_seconds = attribute_step_seconds(
                 self.last_step_seconds, self.last_owner_stage
             )
+            # feed the auto-cap sizer: peak owner share of routed frontier
+            # rows this step (ratcheted max, so factors only ever grow)
+            fr = self.last_owner_stage[
+                :, OWNER_STAGE_FIELDS.index("frontier_rows")
+            ].astype(np.float64)
+            if fr.sum() > 0:
+                skew = float(fr.max() * self.n / fr.sum())
+                self._route_skew_seen = (
+                    skew if self._route_skew_seen is None
+                    else max(self._route_skew_seen, skew)
+                )
         else:
             self.last_owner_stage = None
             self.last_step_owner_seconds = None
+        metrics["route_cap_retries"] = 0
+        if self.route_cap_factor == "auto" and metrics["route_overflow"] > 0:
+            with tr.span("gr_dispatch"):
+                out = self._gr(plan, bucket, worst_case=True)(
+                    store, cache, ttable, proots, bvalid, down, rtable,
+                )
+            with tr.span("gr_sync"):
+                result, deferred, miss_roots, miss_counts, m2, version = (
+                    jax.device_get(out)
+                )
+            m2.pop("owner_stage", None)
+            syncs = metrics["host_syncs"] + 1
+            metrics = {k: int(v) for k, v in m2.items()}
+            metrics["host_syncs"] = syncs
+            metrics["route_cap_retries"] = 1
+            self.route_cap_retries += 1
+            misses = decode_miss_records(
+                plan, self.use_cache, miss_roots, miss_counts, int(version)
+            )
+        result = np.asarray(result)
+        deferred = np.asarray(deferred)
+        metrics["locality_retry_rows"] = 0
+        if rhost is not None and rhost.cache_exceptions and deferred[:B].any():
+            split = np.asarray(rhost.is_split(np.asarray(roots, np.int64)))
+            idx = np.flatnonzero(deferred[:B] & split)
+            if idx.size:
+                r2, mis2, m2, d2 = self.run_gr_tx_batch(
+                    store, cache, ttable, plan,
+                    np.asarray(roots, np.int32)[idx],
+                    down=down, rtable=rhost.storage_table(),
+                    return_deferred=True,
+                )
+                # device_get buffers are read-only; copy to merge into
+                result, deferred = result.copy(), deferred.copy()
+                result[idx] = r2
+                deferred[idx] = d2
+                misses = list(misses) + list(mis2)
+                for k, v in m2.items():
+                    if k in metrics:
+                        metrics[k] += int(v)
+                metrics["locality_retry_rows"] = int(idx.size)
+                self.locality_retries += 1
         if return_deferred:
-            return (np.asarray(result)[:B], misses, metrics,
-                    np.asarray(deferred)[:B])
-        return np.asarray(result)[:B], misses, metrics
+            return result[:B], misses, metrics, deferred[:B]
+        return result[:B], misses, metrics
 
     # -------------------------------------------------------- gRW-Tx path
-    def _route_and_apply_ops(self, cache, ops, sweeps, through, local_sweeps):
+    def _route_and_apply_ops(self, cache, ops, sweeps, through, local_sweeps,
+                             rtable=None):
         """Shared phase B: compact the derived op stream, route each op to
-        the shard owning its root, and apply against the local cache block.
-        ``local_sweeps`` marks sweeps as already owner-local (the
-        partitioned tier's ownership-masked phase A); otherwise they are
-        all_gathered (round-robin phase A emits them anywhere).
+        the shard holding its root's *cache* entries (``cache_owner_of``
+        under ``rtable``; the identity table is exactly ``owner_of``), and
+        apply against the local cache block. ``local_sweeps`` marks sweeps
+        as already owner-local; otherwise they are all_gathered and every
+        shard applies the full stream (non-matching sweeps no-op, so this
+        is correct wherever a root's entries live — the partitioned tier
+        uses it because a migrated/split root's cache home may differ from
+        the storage shard that derived the sweep).
 
         Returns (cache', occupancy_delta, overflow)."""
         lcspec = self.lspec.cache
@@ -1047,9 +1266,11 @@ class ShardedTxnRuntime:
             (ops.kind, ops.tpl, ops.root, ops.params, ops.vid, ops.order),
             (0, -1, NULL_ID, 0, NULL_ID, 0),
         )
-        # route each op to the shard owning its root, whose local cache
-        # block holds the impacted entry
-        dest = jnp.where(oroot != NULL_ID, owner_of(oroot, n), -1)
+        # route each op to the shard whose local cache block holds the
+        # impacted entry (the root's cache home under the routing table)
+        dest = jnp.where(
+            oroot != NULL_ID, cache_owner_of(rtable, oroot, n), -1
+        )
         slot, kept, ovf_r = route_plan(dest, n, ops_route_cap)
 
         def a2a(x, fill):
@@ -1122,17 +1343,19 @@ class ShardedTxnRuntime:
                 if gate is not None else 0
             )
 
-            def local_grw(store, cache, ttable, batch):
+            def local_grw(store, cache, ttable, batch, rtable):
                 me = jax.lax.axis_index(axes)
                 # phase A: commit to owner-local storage; the listener
-                # derives ops where the storage lives (ownership masks)
+                # derives ops where the storage lives (ownership masks,
+                # table-aware: a migrated vertex's rows commit and derive
+                # at its table owner)
                 store2, applied, store_ovf = apply_mutations_partitioned(
-                    pspec, store, batch, me, axes
+                    pspec, store, batch, me, axes, rtable=rtable
                 )
                 ops, sweeps = derive_cache_ops_views(
-                    lspec, BlockStoreView(pspec, store, me),
-                    BlockStoreView(pspec, store2, me), ttable, applied,
-                    through=through,
+                    lspec, BlockStoreView(pspec, store, me, rtable=rtable),
+                    BlockStoreView(pspec, store2, me, rtable=rtable),
+                    ttable, applied, through=through,
                 )
                 if gate is not None:
                     # on-device maintenance gate — ops were derived above,
@@ -1145,7 +1368,7 @@ class ShardedTxnRuntime:
                         return jax.lax.cond(
                             hit,
                             lambda b: compact_block(
-                                pspec, b, purge=gate.purge
+                                pspec, b, purge=gate.purge, me=me
                             ),
                             lambda b: b,
                             blk,
@@ -1159,8 +1382,15 @@ class ShardedTxnRuntime:
                     )
                 else:
                     ncomp = jnp.int32(0)
+                # sweeps gather (local_sweeps=False): the listener derives
+                # each sweep at the swept root's STORAGE shard, but under a
+                # routing table the root's cache entries may live elsewhere
+                # — every shard applies the full gathered stream, and
+                # non-matching sweeps no-op (byte-identical to the old
+                # owner-local apply when the table is the identity)
                 cache2, occ_delta, ovf = self._route_and_apply_ops(
-                    cache, ops, sweeps, through, local_sweeps=True
+                    cache, ops, sweeps, through, local_sweeps=False,
+                    rtable=rtable,
                 )
                 impacted = jax.lax.psum(occ_delta, axes)
                 cache2 = _replicate_stats(cache, cache2, axes)
@@ -1178,7 +1408,7 @@ class ShardedTxnRuntime:
         else:
             assert gate is None, "the device gate targets the partitioned tier"
 
-            def local_grw(store, cache, ttable, batch):
+            def local_grw(store, cache, ttable, batch, rtable):
                 me = jax.lax.axis_index(axes)
                 # every replica applies the same commit (deterministic)
                 store2, applied = apply_mutations(espec.store, store, batch)
@@ -1190,7 +1420,8 @@ class ShardedTxnRuntime:
                     row_offset=me, row_stride=n,
                 )
                 cache2, occ_delta, ovf = self._route_and_apply_ops(
-                    cache, ops, sweeps, through, local_sweeps=False
+                    cache, ops, sweeps, through, local_sweeps=False,
+                    rtable=rtable,
                 )
                 impacted = jax.lax.psum(occ_delta, axes)
                 cache2 = _replicate_stats(cache, cache2, axes)
@@ -1201,7 +1432,8 @@ class ShardedTxnRuntime:
         return shard_map(
             local_grw,
             mesh=self.mesh,
-            in_specs=(self._store_specs(), self._cache_specs(), P(), P()),
+            in_specs=(self._store_specs(), self._cache_specs(), P(), P(),
+                      P()),
             out_specs=(
                 self._store_specs(), self._cache_specs(), P(), P(), P(),
                 P(), P(), P(),
@@ -1214,24 +1446,40 @@ class ShardedTxnRuntime:
         pspec = self.pspec if pspec is None else pspec
         key = (pspec, policy, gate)
         if key not in self._grw_fns:
-            self._grw_fns[key] = jax.jit(
-                self._grw_fn(policy, gate, pspec=pspec)
-            )
+            jitted = jax.jit(self._grw_fn(policy, gate, pspec=pspec))
+
+            def step(store, cache, ttable, batch, rtable=None, _fn=jitted):
+                return _fn(
+                    store, cache, ttable, batch,
+                    self._resolve_rtable(rtable),
+                )
+
+            step.jitted = jitted
+            self._grw_fns[key] = step
         return self._grw_fns[key]
 
     def grw_step(self, policy: str = "write-around",
                  gate: DeviceGate | None = None):
         """The jitted sharded gRW-Tx commit (cached per tier + policy +
-        gate): ``step(store, cache, ttable, batch) -> (store', cache',
-        impacted, route_overflow, store_overflow, max_blk_len,
-        max_recent_fill, device_compactions)``. With ``gate`` the step
-        compacts over-threshold blocks on-device (see ``_grw_fn``)."""
+        gate): ``step(store, cache, ttable, batch, rtable=None) ->
+        (store', cache', impacted, route_overflow, store_overflow,
+        max_blk_len, max_recent_fill, device_compactions)``. With ``gate``
+        the step compacts over-threshold blocks on-device (see
+        ``_grw_fn``); ``rtable`` resolves like ``serve_step``'s."""
         return self._grw(policy, gate)
 
     def run_grw_tx(self, store, cache, ttable, batch, policy: str = "write-around",
                    *, gate: DeviceGate | None = None,
-                   occupancy_metrics: bool = True, journal=None):
+                   occupancy_metrics: bool = True, journal=None,
+                   rtable=None):
         """Host wrapper mirroring ``repro.core.engine.run_grw_tx``.
+
+        ``rtable`` threads the routing table through the commit (resolved
+        like ``serve_step``'s: explicit table > ``RoutingTableHost`` >
+        attached ``rhost`` > identity); when a host table is available its
+        ``storage_owner`` lookup also routes the journal's dirty-owner
+        bookkeeping, so incremental checkpoints stay consistent with
+        migrated placements.
 
         On the partitioned tier the metrics also surface the post-commit
         capacity signals (max block occupancy / recent fill) that drive
@@ -1245,8 +1493,13 @@ class ShardedTxnRuntime:
         write-behind: the batch is appended with its effective step config
         (policy + gate) and the journal's lag/queue metrics are folded into
         the returned metrics."""
+        rhost = rtable if isinstance(rtable, RoutingTableHost) else (
+            self.rhost if rtable is None else None
+        )
         with self.tracer.span("grw_step"):
-            out = self._grw(policy, gate)(store, cache, ttable, batch)
+            out = self._grw(policy, gate)(
+                store, cache, ttable, batch, rtable
+            )
             (store2, cache2, impacted, overflow, store_ovf,
              blk_max, rec_max, ncomp) = out
             metrics = {
@@ -1275,6 +1528,7 @@ class ShardedTxnRuntime:
                     int(ncomp) if (gate is not None and self.pspec is not None)
                     else 0
                 ),
+                route=(rhost.storage_owner if rhost is not None else None),
             )
             metrics.update(journal.metrics())
         return store2, cache2, metrics
@@ -1305,7 +1559,7 @@ class ShardedTxnRuntime:
                  mask, read_versions):
             return self._pop_compiled(templates_meta, tpl_idx, bucket)(
                 store_exec, store_commit, cache, ttable, roots, params,
-                mask, read_versions,
+                mask, read_versions, self._resolve_rtable(None),
             )
 
         return step
@@ -1321,18 +1575,41 @@ class ShardedTxnRuntime:
             direction, edge_label = templates_meta[tpl_idx]
 
             def local_pop(store_exec, store_commit, cache, ttable, roots,
-                          params, mask, read_versions):
+                          params, mask, read_versions, rtable):
                 me = jax.lax.axis_index(axes)
-                owned = mask & (roots >= 0) & (owner_of(roots, n) == me)
-                view = (
-                    BlockStoreView(pspec, store_exec, me)
-                    if pspec is not None else None
-                )
-                cache2, ok, ab = populate_step(
-                    lspec, store_exec, store_commit, cache, ttable, tpl_idx,
-                    direction, edge_label, roots, params, owned, read_versions,
-                    exec_view=view,
-                )
+                valid = mask & (roots >= 0)
+                if pspec is not None:
+                    # CP split under the routing table: the miss executes
+                    # at the root's STORAGE owner (where its dual-CSR rows
+                    # live) and the entry inserts at its CACHE owner; the
+                    # computed bundle crosses via a zero-masked psum inside
+                    # populate_step. Identity table → exec == commit shard,
+                    # byte-identical to the fused path.
+                    owned_exec = valid & (
+                        storage_owner_of(rtable, roots, n) == me
+                    )
+                    owned_commit = valid & (
+                        cache_owner_of(rtable, roots, n) == me
+                    )
+                    view = BlockStoreView(
+                        pspec, store_exec, me, rtable=rtable
+                    )
+                    cache2, ok, ab = populate_step(
+                        lspec, store_exec, store_commit, cache, ttable,
+                        tpl_idx, direction, edge_label, roots, params,
+                        owned_exec, read_versions, exec_view=view,
+                        commit_mask=owned_commit,
+                        allreduce=lambda x: jax.lax.psum(x, axes),
+                    )
+                else:
+                    # replicated snapshot: every shard can execute any
+                    # miss, so CP runs whole at the root's cache owner
+                    owned = valid & (cache_owner_of(rtable, roots, n) == me)
+                    cache2, ok, ab = populate_step(
+                        lspec, store_exec, store_commit, cache, ttable,
+                        tpl_idx, direction, edge_label, roots, params,
+                        owned, read_versions, exec_view=None,
+                    )
                 ok = jax.lax.psum(ok.astype(jnp.int32), axes) > 0
                 ab = jax.lax.psum(ab.astype(jnp.int32), axes) > 0
                 cache2 = _replicate_stats(cache, cache2, axes)
@@ -1343,7 +1620,7 @@ class ShardedTxnRuntime:
                 mesh=self.mesh,
                 in_specs=(
                     self._store_specs(), self._store_specs(),
-                    self._cache_specs(), P(), P(), P(), P(), P(),
+                    self._cache_specs(), P(), P(), P(), P(), P(), P(),
                 ),
                 out_specs=(self._cache_specs(), P(), P()),
                 check_rep=False,
@@ -1369,13 +1646,20 @@ class ShardedMissDrain:
     def __init__(self, rt: ShardedTxnRuntime, templates_meta,
                  max_retries: int = 3):
         self.n = rt.n
+        self.rt = rt
         self.pops = [
             rt.populator(templates_meta, max_retries) for _ in range(rt.n)
         ]
 
     def push(self, misses):
+        rhost = self.rt.rhost
         for m in misses:
-            self.pops[int(m.root) % self.n].queue.push([m])
+            # each miss lands at its root's CACHE owner queue — under the
+            # routing table that is where the insert commits (and, for an
+            # unsplit vertex, where its rows execute)
+            owner = (int(rhost.cache_owner(int(m.root))) if rhost is not None
+                     else int(base_owner(m.root, self.n)))
+            self.pops[owner].queue.push([m])
 
     def drain(self, store_exec, store_commit, cache, ttable, k: int = 128):
         """Drain up to ``k`` misses per shard queue; returns the new cache."""
@@ -1494,6 +1778,7 @@ def config_cell(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
     roots = sds((global_batch,), jnp.int32)
     bvalid = sds((global_batch,), jnp.bool_)
     down = sds((rt.n,), jnp.bool_)
+    rtab = jax.eval_shape(lambda: identity_table(rt.n))
     repl = NamedSharding(mesh, P())
     rshard = NamedSharding(mesh, P(tuple(mesh.axis_names)))
     in_shardings = (
@@ -1501,9 +1786,10 @@ def config_cell(cfg: GraphServeConfig, mesh: Mesh, *, use_cache: bool = True,
         rt.cache_sharding(),
         jax.tree_util.tree_map(lambda _: repl, ttable),
         rshard, rshard, repl,
+        jax.tree_util.tree_map(lambda _: repl, rtab),
     )
     return step, in_shardings, (pstore, cache, ttable, roots, bvalid,
-                                down), rt
+                                down, rtab), rt
 
 
 def config_grw_cell(cfg: GraphServeConfig, mesh: Mesh, *,
@@ -1531,11 +1817,13 @@ def config_grw_cell(cfg: GraphServeConfig, mesh: Mesh, *,
     )
     pstore = abstract_partitioned_store(rt.pspec)
     cache = jax.eval_shape(lambda: empty_cache(espec.cache))
+    rtab = jax.eval_shape(lambda: identity_table(rt.n))
     repl = NamedSharding(mesh, P())
     in_shardings = (
         rt.store_sharding(),
         rt.cache_sharding(),
         jax.tree_util.tree_map(lambda _: repl, ttable),
         jax.tree_util.tree_map(lambda _: repl, batch),
+        jax.tree_util.tree_map(lambda _: repl, rtab),
     )
-    return step, in_shardings, (pstore, cache, ttable, batch), rt
+    return step, in_shardings, (pstore, cache, ttable, batch, rtab), rt

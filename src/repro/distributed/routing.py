@@ -1,0 +1,316 @@
+"""Replicated, versioned vertex-routing table for the partitioned tier.
+
+Ownership so far was the *compiled-in* modulo ``owner_of(v) = v % n``:
+cheap, but frozen — the hottest owner under a Zipfian root distribution
+bounds throughput forever because no table exists to move a vertex. This
+module promotes ownership to data, the way Smart Query Routing decouples
+"who stores v" from "where a query for v is cheapest to serve":
+
+- ``RoutingTable`` is a tiny replicated pytree threaded through the
+  serving step as a **traced input** (exactly like the failover tier's
+  ``down`` mask): fixed shapes, so updating the table — a migration, a
+  locality override — is an *input* change, never a recompile. The
+  ``epoch`` scalar versions the table; the epoch protocol is the batch
+  boundary: the host swaps the device table only between dispatches, and
+  in-flight epoch-pinned readers (``EpochRegistry``) always ran against
+  exactly one table value because the whole batch traced it as one input.
+- The base rule stays ``v % n`` (interleaved ids — see
+  ``partition.owner_of``); the table stores **exceptions** as two small
+  sorted overlays:
+
+  * ``svid/sowner`` — *storage* exceptions: vertex v's dual-CSR rows were
+    physically migrated to ``sowner`` (``graphstore.migration``). Reads
+    and writes for v must go there.
+  * ``cvid/cowner`` — *cache* exceptions: v's cache entries live at
+    ``cowner`` even though its rows did not move. gR routes v there — a
+    hit is served entirely at the caching shard and never touches the
+    storage owner (the paper's cheapest request); a miss comes back
+    ``deferred`` and the host re-dispatches it through the storage view
+    of the same table (``storage_only`` — same compiled program, new
+    table input).
+
+  An empty table routes every vertex exactly like ``owner_of`` —
+  byte-identity with the static-modulo tier is the degenerate case, not a
+  separate code path.
+
+Lookups are O(log M) ``searchsorted`` probes over the M-entry overlays
+(M = ``cap``, default 64, a static shape: raising it is the one change
+that does recompile). ``RoutingTableHost`` owns the mutable host mirror
+and stamps a fresh device table per change; the serve loop hands
+``.device_table()`` to the runtime at each batch boundary.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# sorts after every real vertex id (ids are < v_cap << 2**31-1) — the
+# overlay fill value, so searchsorted never matches a real root
+_FILL = np.int32(2**31 - 1)
+
+DEFAULT_TABLE_CAP = 64
+
+
+class RoutingTable(NamedTuple):
+    """Device-resident replicated routing state (all shapes static).
+
+    ``epoch``  int32 []      — table version, bumped per host mutation
+    ``svid``   int32 [M]     — sorted storage-exception vids (fill 2^31-1)
+    ``sowner`` int32 [M]     — owner per storage exception (fill -1)
+    ``cvid``   int32 [M]     — sorted cache-exception vids (fill 2^31-1)
+    ``cowner`` int32 [M]     — owner per cache exception (fill -1)
+    """
+
+    epoch: jnp.ndarray
+    svid: jnp.ndarray
+    sowner: jnp.ndarray
+    cvid: jnp.ndarray
+    cowner: jnp.ndarray
+
+    @property
+    def cap(self) -> int:
+        return self.svid.shape[0]
+
+
+def _overlay_lookup(vid_sorted, owner, v, base):
+    """Override ``base`` where ``v`` appears in the sorted overlay."""
+    pos = jnp.searchsorted(vid_sorted, v)
+    posc = jnp.clip(pos, 0, vid_sorted.shape[0] - 1)
+    hit = vid_sorted[posc] == v
+    return jnp.where(hit, owner[posc], base)
+
+
+def storage_owner_of(rtable: Optional[RoutingTable], vids, n: int):
+    """Where vertex ``vids``' dual-CSR rows physically live.
+
+    ``rtable=None`` (or an empty table) is exactly ``partition.owner_of``:
+    the interleaved modulo layout. Negative / out-of-range ids fall through
+    to the modulo of their value, matching ``owner_of``'s behaviour — the
+    callers gate validity separately, as they always have.
+    """
+    v = jnp.asarray(vids, jnp.int32)
+    base = jnp.mod(v, n)
+    if rtable is None:
+        return base
+    return _overlay_lookup(rtable.svid, rtable.sowner, v, base)
+
+
+def cache_owner_of(rtable: Optional[RoutingTable], vids, n: int):
+    """Where vertex ``vids``' cache entries live — the gR routing rule.
+
+    Cache exceptions override storage exceptions override the modulo:
+    a storage migration moves v's cache home along with its rows (CP
+    repopulates at the new owner), and a cache-locality override on top
+    of that redirects only the read path.
+    """
+    v = jnp.asarray(vids, jnp.int32)
+    base = storage_owner_of(rtable, vids, n)
+    if rtable is None:
+        return base
+    return _overlay_lookup(rtable.cvid, rtable.cowner, v, base)
+
+
+def base_owner(vids, n: int):
+    """The base ownership rule on the host (numpy twin of the traced
+    ``partition.owner_of``): interleaved ``v mod n``. Every host path that
+    needs native ownership goes through this or a ``RoutingTableHost``
+    lookup — nothing else hand-codes the modulo (pinned by
+    ``tests/test_ownership_centralized.py``)."""
+    return np.asarray(vids) % n
+
+
+def identity_table(n_shards: int, cap: int = DEFAULT_TABLE_CAP) -> RoutingTable:
+    """The empty table: routes exactly like ``owner_of(v, n)``."""
+    del n_shards  # the base rule needs n only at lookup time
+    return RoutingTable(
+        epoch=jnp.zeros((), jnp.int32),
+        svid=jnp.full((cap,), _FILL, jnp.int32),
+        sowner=jnp.full((cap,), -1, jnp.int32),
+        cvid=jnp.full((cap,), _FILL, jnp.int32),
+        cowner=jnp.full((cap,), -1, jnp.int32),
+    )
+
+
+def storage_view(rtable: RoutingTable) -> RoutingTable:
+    """The same table with cache exceptions stripped: routes every vertex
+    to its *storage* owner. The host's retry table for locality-deferred
+    rows — identical pytree structure, so it feeds the same compiled
+    step."""
+    return rtable._replace(
+        cvid=jnp.full_like(rtable.cvid, _FILL),
+        cowner=jnp.full_like(rtable.cowner, -1),
+    )
+
+
+class RoutingTableHost:
+    """Host-side mutable mirror of the device table.
+
+    The host owns the truth (numpy dicts), stamps immutable device tables
+    on demand, and answers the host-side lookups the drain/journal paths
+    need (``storage_owner`` / ``cache_owner`` over numpy ids). Every
+    mutation bumps ``epoch``; ``device_table()`` caches the stamped device
+    pytree until the next mutation, so the per-batch cost of an unchanged
+    table is a dict hit.
+
+    Capacity ``cap`` is a static shape — exceeding it raises rather than
+    silently recompiling the serve step with a larger table.
+    """
+
+    def __init__(self, n_shards: int, cap: int = DEFAULT_TABLE_CAP):
+        self.n = int(n_shards)
+        self.cap = int(cap)
+        self.epoch = 0
+        self._storage: dict[int, int] = {}
+        self._cache: dict[int, int] = {}
+        self._device: Optional[RoutingTable] = None
+        self._device_storage_only: Optional[RoutingTable] = None
+
+    # ------------------------------------------------------------ mutation
+    def _bump(self) -> None:
+        self.epoch += 1
+        self._device = None
+        self._device_storage_only = None
+
+    def set_storage_owner(self, vid: int, owner: int) -> None:
+        """Record that ``vid``'s rows now live at ``owner``. Moving a
+        vertex back to its native ``vid % n`` owner deletes the exception
+        (the table stores only deviations from the modulo)."""
+        vid, owner = int(vid), int(owner)
+        if not (0 <= owner < self.n):
+            raise ValueError(f"owner {owner} out of range [0, {self.n})")
+        if owner == vid % self.n:
+            self._storage.pop(vid, None)
+        else:
+            if vid not in self._storage and len(self._storage) >= self.cap:
+                raise ValueError(
+                    f"routing table full ({self.cap} storage exceptions); "
+                    f"raise cap (recompiles) or migrate a vertex home first"
+                )
+            self._storage[vid] = owner
+        self._bump()
+
+    def set_cache_owner(self, vid: int, owner: int) -> None:
+        """Redirect ``vid``'s cache home (locality routing) without moving
+        its rows. Setting it to the current storage owner clears the
+        exception."""
+        vid, owner = int(vid), int(owner)
+        if not (0 <= owner < self.n):
+            raise ValueError(f"owner {owner} out of range [0, {self.n})")
+        if owner == self.storage_owner(vid):
+            self._cache.pop(vid, None)
+        else:
+            if vid not in self._cache and len(self._cache) >= self.cap:
+                raise ValueError(
+                    f"routing table full ({self.cap} cache exceptions)"
+                )
+            self._cache[vid] = owner
+        self._bump()
+
+    def clear_cache_owner(self, vid: int) -> None:
+        if self._cache.pop(int(vid), None) is not None:
+            self._bump()
+
+    def apply_moves(self, moves) -> None:
+        """Apply a batch of storage moves ``[(vid, dst), ...]`` as ONE
+        epoch bump — the journal's MIGRATE record replays through here."""
+        for vid, dst in moves:
+            vid, dst = int(vid), int(dst)
+            if dst == vid % self.n:
+                self._storage.pop(vid, None)
+            else:
+                if vid not in self._storage and len(self._storage) >= self.cap:
+                    raise ValueError(
+                        f"routing table full ({self.cap} storage exceptions)"
+                    )
+                self._storage[vid] = dst
+            # the cache home follows the rows unless a locality override
+            # re-points it afterwards
+            self._cache.pop(vid, None)
+        self._bump()
+
+    # ------------------------------------------------------------- lookups
+    def storage_owner(self, vids):
+        """Vectorized host lookup (numpy). Scalar in → python int out."""
+        v = np.asarray(vids)
+        base = np.mod(v, self.n)
+        if self._storage:
+            sv = np.fromiter(self._storage.keys(), np.int64, len(self._storage))
+            so = np.fromiter(self._storage.values(), np.int64, len(self._storage))
+            order = np.argsort(sv)
+            sv, so = sv[order], so[order]
+            pos = np.clip(np.searchsorted(sv, v), 0, len(sv) - 1)
+            base = np.where(sv[pos] == v, so[pos], base)
+        return int(base) if np.ndim(vids) == 0 else base.astype(np.int32)
+
+    def cache_owner(self, vids):
+        v = np.asarray(vids)
+        base = np.asarray(self.storage_owner(v))
+        if self._cache:
+            cv = np.fromiter(self._cache.keys(), np.int64, len(self._cache))
+            co = np.fromiter(self._cache.values(), np.int64, len(self._cache))
+            order = np.argsort(cv)
+            cv, co = cv[order], co[order]
+            pos = np.clip(np.searchsorted(cv, v), 0, len(cv) - 1)
+            base = np.where(cv[pos] == v, co[pos], base)
+        return int(base) if np.ndim(vids) == 0 else base.astype(np.int32)
+
+    def is_split(self, vids):
+        """True where the cache home differs from the storage home — the
+        rows whose misses come back locality-deferred and must be retried
+        through ``storage_table()``."""
+        return np.asarray(self.cache_owner(vids)) != np.asarray(
+            self.storage_owner(vids)
+        )
+
+    @property
+    def storage_exceptions(self) -> dict:
+        return dict(self._storage)
+
+    @property
+    def cache_exceptions(self) -> dict:
+        return dict(self._cache)
+
+    def has_exceptions(self) -> bool:
+        return bool(self._storage or self._cache)
+
+    # ------------------------------------------------------- device tables
+    def _stamp(self, include_cache: bool) -> RoutingTable:
+        svid = np.full((self.cap,), _FILL, np.int32)
+        sown = np.full((self.cap,), -1, np.int32)
+        if self._storage:
+            items = sorted(self._storage.items())
+            svid[: len(items)] = [v for v, _ in items]
+            sown[: len(items)] = [o for _, o in items]
+        cvid = np.full((self.cap,), _FILL, np.int32)
+        cown = np.full((self.cap,), -1, np.int32)
+        if include_cache and self._cache:
+            items = sorted(self._cache.items())
+            cvid[: len(items)] = [v for v, _ in items]
+            cown[: len(items)] = [o for _, o in items]
+        return RoutingTable(
+            epoch=jnp.asarray(self.epoch, jnp.int32),
+            svid=jnp.asarray(svid), sowner=jnp.asarray(sown),
+            cvid=jnp.asarray(cvid), cowner=jnp.asarray(cown),
+        )
+
+    def device_table(self) -> RoutingTable:
+        """The full table (storage + cache overlays), cached per epoch."""
+        if self._device is None:
+            self._device = self._stamp(include_cache=True)
+        return self._device
+
+    def storage_table(self) -> RoutingTable:
+        """The cache-stripped table for locality-deferred retries."""
+        if self._device_storage_only is None:
+            self._device_storage_only = self._stamp(include_cache=False)
+        return self._device_storage_only
+
+    def metrics(self) -> dict:
+        return {
+            "table_epoch": self.epoch,
+            "storage_exceptions": len(self._storage),
+            "cache_exceptions": len(self._cache),
+        }

@@ -52,6 +52,15 @@ from repro.graphstore.journal import (
     replay_to_owner,
     restore_chain,
 )
+from repro.graphstore.migration import (
+    HotSetTracker,
+    MigrationEngine,
+    MigrationPolicy,
+    infer_storage_exceptions,
+    migrate_vertex_rows,
+    select_migrations,
+    vertex_row_counts,
+)
 from repro.graphstore.mutations import (
     AppliedMutations,
     MutationBatch,
@@ -98,6 +107,13 @@ __all__ = [
     "replay_to_owner",
     "restore_chain",
     "drain_queued",
+    "MigrationEngine",
+    "MigrationPolicy",
+    "HotSetTracker",
+    "migrate_vertex_rows",
+    "infer_storage_exceptions",
+    "select_migrations",
+    "vertex_row_counts",
     "MutationBatch",
     "AppliedMutations",
     "make_mutation_batch",

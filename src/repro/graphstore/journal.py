@@ -122,6 +122,7 @@ def _frame_crc(header: bytes, offset: int, payload: bytes) -> int:
 REC_COMMIT = 1
 REC_COMPACT = 2
 REC_GROW = 3
+REC_MIGRATE = 4
 
 
 class FlushError(RuntimeError):
@@ -338,7 +339,8 @@ class WriteBehindJournal:
                       gate: Optional[DeviceGate] = None,
                       commit_version: Optional[int] = None,
                       device_compactions: int = 0,
-                      applied: bool = True) -> int:
+                      applied: bool = True,
+                      route: Optional[Callable] = None) -> int:
         """Accept one committed gRW batch into the write-behind queue and
         mark the owners its mutation sections touch dirty.
 
@@ -349,7 +351,10 @@ class WriteBehindJournal:
         ``device_compactions`` (the gated step's on-device compaction
         count) conservatively marks every owner checkpoint-dirty: the gate
         may rewrite any over-threshold block's layout, not just the owners
-        the batch's ids name."""
+        the batch's ids name. ``route`` maps new-edge endpoint ids to
+        their *table* owners for the dirty map (pass
+        ``RoutingTableHost.storage_owner`` once migrations have run;
+        default is the static ``v % n``)."""
         seq = self._append(REC_COMMIT, encode_commit(batch, policy=policy, gate=gate))
         owners = set()
         for ids, cnt in (
@@ -365,7 +370,12 @@ class WriteBehindJournal:
                 if ids is batch.de_eid or ids is batch.se_eid:
                     owners.update(range(self.n))
                 else:
-                    owners.update(int(o) for o in np.unique(vals % self.n))
+                    if route is None:
+                        from repro.distributed.routing import base_owner
+
+                        route = lambda v: base_owner(v, self.n)  # noqa: E731
+                    dest = route(vals)
+                    owners.update(int(o) for o in np.unique(np.asarray(dest)))
         if int(device_compactions) > 0:
             owners.update(range(self.n))
         with self._lock:
@@ -397,6 +407,24 @@ class WriteBehindJournal:
             "e_blk_cap": int(e_blk_cap), "recent_blk_cap": int(recent_blk_cap),
         }).encode()
         seq = self._append(REC_GROW, payload)
+        with self._lock:
+            self._dirty_since_ckpt.update(range(self.n))
+            self.applied_seq = max(self.applied_seq, seq)
+        return seq
+
+    def append_migrate(self, moves, epoch: Optional[int] = None) -> int:
+        """Journal a hot-vertex migration round (``graphstore.migration``):
+        the move list ``[(vid, dst), ...]`` plus the routing-table epoch it
+        produces. Replayed through the same deterministic
+        ``migrate_vertex_rows`` splice, so the post-migration store is
+        byte-reconstructible; source and destination blocks are both
+        rewritten, so all owners go checkpoint-dirty (the source is not
+        recorded — it is whatever shard held the rows at replay time)."""
+        payload = json.dumps({
+            "moves": [[int(v), int(d)] for v, d in moves],
+            "epoch": None if epoch is None else int(epoch),
+        }).encode()
+        seq = self._append(REC_MIGRATE, payload)
         with self._lock:
             self._dirty_since_ckpt.update(range(self.n))
             self.applied_seq = max(self.applied_seq, seq)
@@ -867,12 +895,33 @@ def replay(journal: WriteBehindJournal, rt, ttable, *,
     (``journal.applied_seq``) — the queued remainder is ``drain_queued``'s
     job, applied against the live cache after the block splice.
 
+    MIGRATE records replay through the same deterministic
+    ``migrate_vertex_rows`` splice the live engine used, and replay
+    maintains the routing-table trajectory they imply: the restored
+    checkpoint's placement is *inferred from its bytes* (foreign rows name
+    their table owner — ``migration.infer_storage_exceptions``), each
+    MIGRATE advances it, and every replayed COMMIT routes its appends
+    through the table as of that point in the log. Post-migration stores
+    therefore reconstruct byte-for-byte.
+
     Returns ``(pstore, last_seq, info)``.
     """
+    import jax
+
+    from repro.distributed.routing import RoutingTableHost
+    from repro.graphstore.migration import (
+        infer_storage_exceptions,
+        migrate_vertex_rows,
+    )
+
     info = {"replayed_commits": 0, "replayed_compactions": 0,
-            "replayed_growths": 0}
+            "replayed_growths": 0, "replayed_migrations": 0}
     pstore, seq, _spec_meta = restore_chain(journal, rt)
     cache = rt.empty_cache()
+    exc = infer_storage_exceptions(rt.pspec, pstore)
+    rhost = RoutingTableHost(rt.n, cap=max(64, len(exc)))
+    if exc:
+        rhost.apply_moves(sorted(exc.items()))
     last = seq
     for rec in journal.read_records(after_seq=seq):
         if upto_seq is not None and rec.seq > upto_seq:
@@ -883,6 +932,7 @@ def replay(journal: WriteBehindJournal, rt, ttable, *,
                 pstore, cache, ttable, batch,
                 policy=policy or default_policy, gate=gate,
                 occupancy_metrics=False,
+                rtable=rhost.device_table() if rhost.has_exceptions() else None,
             )
             info["replayed_commits"] += 1
         elif rec.rtype == REC_COMPACT:
@@ -895,8 +945,26 @@ def replay(journal: WriteBehindJournal, rt, ttable, *,
                 pstore, m["e_blk_cap"], recent_blk_cap=m["recent_blk_cap"]
             )
             info["replayed_growths"] += 1
+        elif rec.rtype == REC_MIGRATE:
+            moves = [
+                (int(v), int(d))
+                for v, d in json.loads(rec.payload.decode())["moves"]
+            ]
+            pstore = jax.device_put(
+                migrate_vertex_rows(rt.pspec, pstore, moves),
+                rt.store_sharding(),
+            )
+            rhost.apply_moves(moves)
+            info["replayed_migrations"] += 1
         last = rec.seq
     journal.epochs.advance(int(np.asarray(pstore.version)))
+    # attach the reconstructed placement: serving a migrated store without
+    # its table would route moved vertices to owners that no longer hold
+    # their rows. A live runtime that already carries a host table keeps
+    # it (the cache overlay is not inferable from store bytes).
+    if (rhost.has_exceptions() and hasattr(rt, "attach_routing")
+            and getattr(rt, "rhost", None) is None):
+        rt.attach_routing(rhost)
     return pstore, last, info
 
 
@@ -940,19 +1008,24 @@ def replay_to_owner(journal: WriteBehindJournal, rt, ttable, *,
 
 def drain_queued(journal: WriteBehindJournal, rt, ttable, pstore, cache, *,
                  after_seq: Optional[int] = None,
-                 default_policy: str = "write-around"):
+                 default_policy: str = "write-around",
+                 rhost=None):
     """Apply the commits that queued (durable but unapplied) during an
     outage, in journal order, through the normal gRW step against the LIVE
     store and cache — write policies and maintenance listeners observe them
     exactly as if they had committed late, which they did. Advances
     ``journal.applied_seq`` per record and clears the queued counter.
-    Returns ``(pstore, cache, info)``."""
+    ``rhost`` (the live ``RoutingTableHost``) routes drained appends and
+    absorbs any drained MIGRATE records; omit it on unmigrated
+    deployments. Returns ``(pstore, cache, info)``."""
     import jax
+
+    from repro.graphstore.migration import migrate_vertex_rows
 
     journal.flush()
     after = journal.applied_seq if after_seq is None else int(after_seq)
     info = {"drained_commits": 0, "drained_compactions": 0,
-            "drained_growths": 0}
+            "drained_growths": 0, "drained_migrations": 0}
     for rec in journal.read_records(after_seq=after):
         if rec.rtype == REC_COMMIT:
             batch, policy, gate = decode_commit(rec.payload)
@@ -960,6 +1033,10 @@ def drain_queued(journal: WriteBehindJournal, rt, ttable, pstore, cache, *,
                 pstore, cache, ttable, batch,
                 policy=policy or default_policy, gate=gate,
                 occupancy_metrics=False,
+                rtable=(
+                    rhost.device_table()
+                    if rhost is not None and rhost.has_exceptions() else None
+                ),
             )
             info["drained_commits"] += 1
         elif rec.rtype == REC_COMPACT:
@@ -972,6 +1049,18 @@ def drain_queued(journal: WriteBehindJournal, rt, ttable, pstore, cache, *,
                 pstore, m["e_blk_cap"], recent_blk_cap=m["recent_blk_cap"]
             )
             info["drained_growths"] += 1
+        elif rec.rtype == REC_MIGRATE:
+            moves = [
+                (int(v), int(d))
+                for v, d in json.loads(rec.payload.decode())["moves"]
+            ]
+            pstore = jax.device_put(
+                migrate_vertex_rows(rt.pspec, pstore, moves),
+                rt.store_sharding(),
+            )
+            if rhost is not None:
+                rhost.apply_moves(moves)
+            info["drained_migrations"] += 1
         with journal._lock:
             journal.applied_seq = max(journal.applied_seq, rec.seq)
     with journal._lock:

@@ -88,7 +88,7 @@ class DeviceGate(NamedTuple):
 
 
 def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
-                  purge: bool = False) -> EdgeBlock:
+                  purge: bool = False, me=None) -> EdgeBlock:
     """Merge one shard's block recent region into its sorted CSR body.
 
     Operates on a *local* block view (shapes ``[e_blk_cap]``, the slice a
@@ -103,19 +103,40 @@ def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
     single-host ``store.compact``, making the result byte-identical to
     ``partition_store(compact(host_store))``; ``purge=True`` drops them and
     reclaims their slots (see module docstring for the pre-image caveat).
+
+    ``me`` (this shard's index — ``lax.axis_index`` inside ``shard_map``,
+    or the block row under ``compact_store``'s vmap) makes the merge
+    *native-aware* for blocks holding migrated-in rows
+    (``graphstore.migration``): only native rows (``key % n == me``) join
+    the CSR body — a foreign row merged into CSR would be unreachable,
+    because the CSR window indexes by aliased local id. Foreign live rows
+    instead form a sorted prefix of the recent region (``[csr_len,
+    blk_len)``), where the key-compare scan keeps serving them. On a block
+    with no foreign rows the result is byte-identical to ``me=None`` — the
+    extra sort tier is constant over kept lanes — so passing ``me``
+    unconditionally is safe.
     """
     EB, Vloc, n = pspec.e_blk_cap, pspec.v_loc, pspec.n_shards
     lanes = jnp.arange(EB, dtype=jnp.int32)
     keep = lanes < blk.blk_len[0]
     if purge:
         keep &= blk.alive
-    # lexicographic (key, geid) stable sort: dropped lanes sink to the end
-    # in slot order, mirroring the host-side block construction
+    if me is None:
+        native = keep
+    else:
+        native = keep & (jnp.mod(blk.key, n) == me)
+    # three-tier lexicographic (tier, key, geid) stable sort: native live
+    # rows form the CSR body, foreign live rows the recent region, dropped
+    # lanes sink to the end in slot order (mirroring the host-side block
+    # construction)
+    tier = jnp.where(native, 0, jnp.where(keep, 1, 2)).astype(jnp.int32)
     skey = jnp.where(keep, blk.key, INT32_MAX)
     sgeid = jnp.where(keep, blk.geid, INT32_MAX)
     perm = jnp.argsort(sgeid, stable=True)
     perm = perm[jnp.argsort(skey[perm], stable=True)]
+    perm = perm[jnp.argsort(tier[perm], stable=True)]
     new_len = jnp.sum(keep.astype(jnp.int32))
+    csr_len = jnp.sum(native.astype(jnp.int32))
     live = lanes < new_len
 
     def take(a, fill):
@@ -129,25 +150,30 @@ def compact_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, *,
     alive = take(blk.alive, False)
     props = take(blk.props, PROP_MISSING)
     geid = take(blk.geid, -1)
-    # CSR row offsets over the merged body (interleaved: local = key // n);
-    # non-live lanes carry INT32_MAX keys and sort past every local index
+    # CSR row offsets over the *native* prefix (interleaved: local =
+    # key // n); lanes past csr_len — foreign rows and fills — are masked
+    # to INT32_MAX so they sort past every local index
     indptr = jnp.searchsorted(
-        key // n, jnp.arange(Vloc + 1, dtype=jnp.int32), side="left"
+        jnp.where(lanes < csr_len, key // n, INT32_MAX),
+        jnp.arange(Vloc + 1, dtype=jnp.int32), side="left"
     ).astype(jnp.int32)
     return EdgeBlock(
         key=key, other=other, label=label, alive=alive, props=props,
         geid=geid, gperm=rebuild_geid_index(new_len, geid), indptr=indptr,
         blk_len=jnp.reshape(new_len, (1,)),
-        csr_len=jnp.reshape(new_len, (1,)),
+        csr_len=jnp.reshape(csr_len, (1,)),
     )
 
 
 def compact_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, *,
-                  purge: bool = False,
+                  purge: bool = False, native_only: bool = False,
                   tracer=None) -> PartitionedGraphStore:
     """Compact every shard's blocks of a *global-layout* partitioned store
     (host-side helper; the runtime runs ``compact_block`` inside shard_map
     instead). The replicated vertex tier and scalars pass through.
+    ``native_only`` threads each block's shard index as ``me`` so
+    migrated-in foreign rows stay in the recent region (required once any
+    migration has run; byte-identical to the default on unmigrated stores).
     ``tracer`` (a ``repro.obs.trace.Tracer``) records the pass as a
     ``compact_store`` span; default is the no-op tracer."""
     if tracer is None:
@@ -155,10 +181,18 @@ def compact_store(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, *,
 
         tracer = NULL_TRACER
     with tracer.span("compact_store"):
-        fn = jax.vmap(lambda blk: compact_block(pspec, blk, purge=purge))
+        if native_only:
+            fn = jax.vmap(
+                lambda blk, m: compact_block(pspec, blk, purge=purge, me=m),
+                in_axes=(0, 0),
+            )
+            mes = jnp.arange(pspec.n_shards, dtype=jnp.int32)
+            run = lambda b: fn(b, mes)
+        else:
+            run = jax.vmap(lambda blk: compact_block(pspec, blk, purge=purge))
         stacked = stack_blocks(pspec, ps)
         return unstack_blocks(
-            pspec, stacked._replace(out=fn(stacked.out), inc=fn(stacked.inc))
+            pspec, stacked._replace(out=run(stacked.out), inc=run(stacked.inc))
         )
 
 

@@ -1,0 +1,444 @@
+"""Hot-vertex block migration for the partitioned dual-CSR storage tier.
+
+The static interleave ``owner_of(v) = v % n`` fixes forever which shard
+serves vertex v's misses — under a Zipfian root distribution the shard that
+happens to own the hot set becomes the throughput ceiling while its peers
+idle. Smart query routing work (see PAPERS.md) moves the *query* to the
+data or the *data* to the query; this module is the latter half: a
+background engine that physically moves the hottest vertices' dual-CSR
+rows between owners, records each move in the write-behind journal as a
+``MIGRATE`` record, and publishes the new placement through the replicated
+routing table (``distributed.routing``) at a batch boundary — the serving
+step never recompiles, because placement is a traced table input.
+
+Mechanics (all host-side, deterministic numpy — the same discipline as
+``splice_owner_blocks``, so journal replay reconstructs the post-migration
+store byte-for-byte):
+
+- ``migrate_vertex_rows`` moves **all** allocated rows of a vertex (live
+  and tombstoned — dead rows keep their geid pre-image exactly as
+  compaction without purge does) out of whichever shard currently holds
+  them, compacts the source block in slot order, and appends them to the
+  destination block's *recent region* in ascending-geid order. At the
+  destination the rows are foreign (``key % n != dst``): the CSR window
+  cannot index them (local ids alias native vertices), but the
+  recent-region key-compare scan serves them exactly like freshly
+  appended edges, and the native-aware compaction
+  (``maintenance.compact_block(me=...)``) keeps them in the recent region
+  across maintenance. Moving a vertex *home* appends to its native
+  shard's recent region, where the next compaction folds the rows back
+  into the CSR body.
+- ``HotSetTracker`` keeps exponentially decayed per-root heat from the
+  frontier the serve loop already materializes — no new device work.
+- ``select_migrations`` turns (heat, per-owner load, table state) into a
+  bounded move list: hottest roots of the most-loaded owner, moved to the
+  least-loaded owner, gated by destination recent-window headroom (a
+  migrated vertex lives in that window permanently) and routing-table
+  capacity.
+- ``MigrationEngine`` sequences a round: queue behind any detected outage
+  (a move touching a down shard's blocks would fork from the journal's
+  replay order), journal first, then move rows, then publish the table.
+  The caller swaps the returned store/table in at the next batch
+  boundary under the epoch protocol.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphstore.partition import (
+    BlockCapacityError,
+    EdgeBlock,
+    PartitionedGraphStore,
+    PartitionedStoreSpec,
+)
+from repro.distributed.routing import base_owner
+from repro.graphstore.store import INT32_MAX
+from repro.utils import PROP_MISSING
+
+_PROP_MISSING = np.int32(int(PROP_MISSING))
+
+
+# ------------------------------------------------------------ row movement
+def _np_gperm(EB: int, geid: np.ndarray, blk_len: int) -> np.ndarray:
+    """Numpy twin of ``partition.rebuild_geid_index`` (byte-identical)."""
+    masked = np.where(np.arange(EB) < blk_len, geid, INT32_MAX)
+    return np.argsort(masked, kind="stable").astype(np.int32)
+
+
+def _np_indptr(keys: np.ndarray, n: int, v_loc: int) -> np.ndarray:
+    """CSR row offsets over a sorted native key prefix (``key // n``)."""
+    return np.searchsorted(
+        keys // n, np.arange(v_loc + 1), side="left"
+    ).astype(np.int32)
+
+
+def _migrate_block(pspec: PartitionedStoreSpec, blk: EdgeBlock,
+                   moves: Sequence[Tuple[int, int]]) -> EdgeBlock:
+    """One orientation: move every allocated row keyed by each ``vid`` to
+    its ``dst`` shard's recent region. Pure numpy, deterministic."""
+    n, EB, Vloc = pspec.n_shards, pspec.e_blk_cap, pspec.v_loc
+    cols = {
+        "key": (np.asarray(jax.device_get(blk.key)).reshape(n, EB).copy(),
+                INT32_MAX),
+        "other": (np.asarray(jax.device_get(blk.other)).reshape(n, EB).copy(),
+                  np.int32(-1)),
+        "label": (np.asarray(jax.device_get(blk.label)).reshape(n, EB).copy(),
+                  np.int32(-1)),
+        "alive": (np.asarray(jax.device_get(blk.alive)).reshape(n, EB).copy(),
+                  False),
+        "props": (np.asarray(jax.device_get(blk.props)).reshape(
+            n, EB, -1).copy(), _PROP_MISSING),
+        "geid": (np.asarray(jax.device_get(blk.geid)).reshape(n, EB).copy(),
+                 np.int32(-1)),
+    }
+    blk_len = np.asarray(jax.device_get(blk.blk_len)).astype(np.int64).copy()
+    csr_len = np.asarray(jax.device_get(blk.csr_len)).astype(np.int64).copy()
+    indptr = np.asarray(jax.device_get(blk.indptr)).reshape(
+        n, Vloc + 1).copy()
+    touched: set[int] = set()
+
+    for vid, dst in moves:
+        vid, dst = int(vid), int(dst)
+        for s in range(n):
+            if s == dst:
+                continue
+            L = int(blk_len[s])
+            sel = np.nonzero(cols["key"][0][s, :L] == vid)[0]
+            if sel.size == 0:
+                continue
+            k = int(sel.size)
+            if blk_len[dst] + k > EB:
+                raise BlockCapacityError(
+                    f"migration of v{vid} needs {k} rows at shard {dst} "
+                    f"({int(blk_len[dst])}/{EB} used)",
+                    needed=int(blk_len[dst]) + k,
+                )
+            # ascending-geid order for the appended run: deterministic and
+            # independent of the source block's physical layout
+            order = sel[np.argsort(cols["geid"][0][s, sel], kind="stable")]
+            keep = np.ones(L, bool)
+            keep[sel] = False
+            kept = np.nonzero(keep)[0]
+            pos = int(blk_len[dst])
+            for arr, fill in cols.values():
+                moved = arr[s, order].copy()
+                arr[s, : kept.size] = arr[s, kept]
+                arr[s, kept.size:L] = fill
+                arr[dst, pos: pos + k] = moved
+            removed_csr = int((sel < csr_len[s]).sum())
+            csr_len[s] -= removed_csr
+            blk_len[s] = kept.size
+            blk_len[dst] += k
+            indptr[s] = _np_indptr(
+                cols["key"][0][s, : int(csr_len[s])], n, Vloc
+            )
+            touched.add(s)
+            touched.add(dst)
+            break  # a vertex's rows live on exactly one shard
+
+    gperm = np.asarray(jax.device_get(blk.gperm)).reshape(n, EB).copy()
+    for s in sorted(touched):
+        gperm[s] = _np_gperm(EB, cols["geid"][0][s], int(blk_len[s]))
+    return EdgeBlock(
+        key=jnp.asarray(cols["key"][0].reshape(-1)),
+        other=jnp.asarray(cols["other"][0].reshape(-1)),
+        label=jnp.asarray(cols["label"][0].reshape(-1)),
+        alive=jnp.asarray(cols["alive"][0].reshape(-1)),
+        props=jnp.asarray(cols["props"][0].reshape(n * EB, -1)),
+        geid=jnp.asarray(cols["geid"][0].reshape(-1)),
+        gperm=jnp.asarray(gperm.reshape(-1)),
+        indptr=jnp.asarray(indptr.reshape(-1).astype(np.int32)),
+        blk_len=jnp.asarray(blk_len.astype(np.int32)),
+        csr_len=jnp.asarray(csr_len.astype(np.int32)),
+    )
+
+
+def migrate_vertex_rows(pspec: PartitionedStoreSpec,
+                        ps: PartitionedGraphStore,
+                        moves: Sequence[Tuple[int, int]],
+                        ) -> PartitionedGraphStore:
+    """Move each ``(vid, dst)``'s dual-CSR rows (both orientations, live
+    and dead) to shard ``dst``'s recent region. Host-side, deterministic —
+    journal replay of the same MIGRATE record reconstructs the same bytes.
+    Raises ``BlockCapacityError`` if a destination block cannot hold the
+    rows (the engine's policy pre-checks headroom, so this is a logic
+    error, not an operating condition). The replicated vertex tier and
+    global scalars pass through unchanged: migration moves copies, never
+    content."""
+    if not moves:
+        return ps
+    return ps._replace(
+        out=_migrate_block(pspec, ps.out, moves),
+        inc=_migrate_block(pspec, ps.inc, moves),
+    )
+
+
+def infer_storage_exceptions(pspec: PartitionedStoreSpec,
+                             ps: PartitionedGraphStore) -> dict:
+    """Reconstruct the routing table's storage exceptions from store bytes.
+
+    A vertex's rows live at their table owner, so any allocated row whose
+    key is foreign to its shard (``key % n != s``) names an exception
+    ``vid -> s``. This is how journal replay resumes the table trajectory
+    from a checkpoint taken *after* migrations: the placement is derivable
+    from the restored bytes alone, no table snapshot needed."""
+    n, EB = pspec.n_shards, pspec.e_blk_cap
+    exc: dict[int, int] = {}
+    for blk in (ps.out, ps.inc):
+        key = np.asarray(jax.device_get(blk.key)).reshape(n, EB)
+        ln = np.asarray(jax.device_get(blk.blk_len)).astype(np.int64)
+        for s in range(n):
+            k = key[s, : int(ln[s])]
+            for v in np.unique(k[base_owner(k, n) != s]).tolist():
+                exc[int(v)] = s
+    return exc
+
+
+def vertex_row_counts(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
+                      vids: Sequence[int]) -> np.ndarray:
+    """Allocated rows (live + dead, out + inc) keyed by each vid — the
+    migration cost of a vertex."""
+    n, EB = pspec.n_shards, pspec.e_blk_cap
+    out = np.zeros(len(vids), np.int64)
+    for blk in (ps.out, ps.inc):
+        key = np.asarray(jax.device_get(blk.key)).reshape(n, EB)
+        ln = np.asarray(jax.device_get(blk.blk_len)).astype(np.int64)
+        alloc = np.arange(EB)[None, :] < ln[:, None]
+        for i, v in enumerate(vids):
+            out[i] += int(((key == int(v)) & alloc).sum())
+    return out
+
+
+# ------------------------------------------------------------- heat signal
+class HotSetTracker:
+    """Exponentially decayed per-root heat from served frontiers.
+
+    ``observe(roots)`` decays all heat by ``decay`` and adds one unit per
+    root occurrence (host numpy — the serve loop already has the root ids
+    on host for routing). The map is pruned to ``cap`` entries by heat, so
+    memory stays bounded under arbitrary workloads.
+    """
+
+    def __init__(self, decay: float = 0.9, cap: int = 4096):
+        self.decay = float(decay)
+        self.cap = int(cap)
+        self._heat: dict[int, float] = {}
+
+    def observe(self, roots) -> None:
+        r = np.asarray(roots).reshape(-1)
+        r = r[r >= 0]
+        if self.decay < 1.0 and self._heat:
+            self._heat = {v: h * self.decay for v, h in self._heat.items()}
+        vals, cnt = np.unique(r, return_counts=True)
+        for v, c in zip(vals.tolist(), cnt.tolist()):
+            self._heat[int(v)] = self._heat.get(int(v), 0.0) + float(c)
+        if len(self._heat) > self.cap:
+            keep = sorted(self._heat.items(), key=lambda kv: -kv[1])
+            self._heat = dict(keep[: self.cap])
+
+    def hottest(self, k: int) -> list:
+        """Top-k ``(vid, heat)`` pairs, hottest first (ties by vid)."""
+        return sorted(
+            self._heat.items(), key=lambda kv: (-kv[1], kv[0])
+        )[: int(k)]
+
+    def heat(self, vid: int) -> float:
+        return self._heat.get(int(vid), 0.0)
+
+    def total_heat(self) -> float:
+        return float(sum(self._heat.values()))
+
+
+# ------------------------------------------------------------------ policy
+class MigrationPolicy(NamedTuple):
+    """When and what to migrate.
+
+    ``load_share_trigger`` — act only when the hottest owner's share of
+    frontier rows exceeds this multiple of the fair share ``1/n``.
+    ``max_moves_per_round`` — move-list bound per engine step (each move
+    is a journal record and a host splice; keep rounds small).
+    ``min_heat`` — ignore roots colder than this (heat units ≈ decayed
+    request counts).
+    ``max_rows_per_vertex`` — skip vertices whose dual-CSR rows exceed
+    this (they must fit — and keep fitting — inside the destination's
+    bounded recent-scan window).
+    ``dst_recent_headroom_frac`` — keep the destination's recent fill
+    (existing + migrated rows) under this fraction of
+    ``recent_blk_cap``: a migrated vertex occupies the window
+    permanently, and appends falling off the window silently vanish
+    from reads.
+    ``move_cooldown_rounds`` — a vertex the engine just moved is not a
+    candidate again for this many rounds: a hot vertex whose load alone
+    exceeds the fair share would otherwise ping-pong between owners
+    every round (each bounce a journal record and a splice) without the
+    balance ever improving.
+    """
+
+    load_share_trigger: float = 1.25
+    max_moves_per_round: int = 4
+    min_heat: float = 1.0
+    max_rows_per_vertex: int = 64
+    dst_recent_headroom_frac: float = 0.5
+    move_cooldown_rounds: int = 8
+
+
+def select_migrations(policy: MigrationPolicy, tracker: HotSetTracker,
+                      rhost, pspec: PartitionedStoreSpec,
+                      ps: PartitionedGraphStore,
+                      owner_rows, *, cooldown=frozenset()) -> list:
+    """Choose this round's moves from (heat, per-owner load, table state).
+
+    ``owner_rows`` is the per-owner frontier-row load ([n], e.g. the
+    ``frontier_rows`` column of ``obs.owner_stage_rows``). Returns
+    ``[(vid, dst), ...]`` — hottest vertices currently served by the
+    most-loaded owner, spread across the least-loaded owners, subject to
+    the policy's fit bounds and the routing table's exception capacity.
+
+    Destinations are chosen greedily against a working copy of the load
+    vector: each move's load estimate (the vertex's share of tracked
+    heat, capped at the hot owner's excess over fair share) lands on the
+    projected-coldest owner, and a move is only taken when the projected
+    destination stays strictly below the hot owner's current load —
+    dumping the whole hot set on one cold shard would just relocate the
+    bottleneck. ``cooldown`` vertices are skipped (see
+    ``MigrationPolicy.move_cooldown_rounds``).
+    """
+    n = pspec.n_shards
+    rows = np.asarray(owner_rows, np.float64).reshape(-1).copy()
+    assert rows.shape[0] == n, (rows.shape, n)
+    total = float(rows.sum())
+    if total <= 0:
+        return []
+    hot_owner = int(rows.argmax())
+    trigger = policy.load_share_trigger * total / n
+    if float(rows[hot_owner]) < trigger:
+        return []
+    table_room = rhost.cap - len(rhost.storage_exceptions)
+    budget = min(policy.max_moves_per_round, max(table_room, 0))
+    if budget <= 0:
+        return []
+
+    # per-destination recent-window headroom (max fill across orientations
+    # — both blocks receive the vertex's rows)
+    cap = int(policy.dst_recent_headroom_frac * pspec.recent_blk_cap)
+    fill = np.zeros(n, np.int64)
+    for blk in (ps.out, ps.inc):
+        ln = np.asarray(jax.device_get(blk.blk_len)).astype(np.int64)
+        cs = np.asarray(jax.device_get(blk.csr_len)).astype(np.int64)
+        fill = np.maximum(fill, ln - cs)
+    headroom = cap - fill
+
+    total_heat = max(tracker.total_heat(), 1e-12)
+    moves = []
+    for vid, heat in tracker.hottest(4 * policy.max_moves_per_round):
+        if heat < policy.min_heat or len(moves) >= budget:
+            break
+        if float(rows[hot_owner]) < trigger:
+            break  # balanced enough — don't churn the tail
+        if int(vid) in cooldown or rhost.storage_owner(vid) != hot_owner:
+            continue
+        cost = int(vertex_row_counts(pspec, ps, [vid])[0])
+        if cost == 0 or cost > policy.max_rows_per_vertex:
+            continue
+        excess = float(rows[hot_owner]) - total / n
+        est = min(heat / total_heat * total, excess)
+        order = np.argsort(rows, kind="stable")
+        dst = next(
+            (int(o) for o in order
+             if int(o) != hot_owner and headroom[int(o)] >= cost
+             and float(rows[int(o)]) + est < float(rows[hot_owner])),
+            None,
+        )
+        if dst is None:
+            continue
+        headroom[dst] -= cost
+        rows[hot_owner] -= est
+        rows[dst] += est
+        moves.append((int(vid), dst))
+    return moves
+
+
+# ------------------------------------------------------------------ engine
+class MigrationEngine:
+    """Background migration sequencer: journal → move → publish.
+
+    One ``step`` call runs at most one migration round. It refuses to act
+    while ``detector`` reports any shard down (recovery replays the
+    journal in commit order; a migration interleaved with an outage would
+    have to replay against a store the dead shard never saw) — the round
+    simply waits for the next step after recovery. The caller installs
+    the returned store and re-stamps ``rhost.device_table()`` at the next
+    batch boundary; in-flight epoch-pinned readers finished against the
+    old placement because the table they traced was an input of their
+    batch.
+    """
+
+    def __init__(self, pspec: PartitionedStoreSpec, rhost, *,
+                 policy: Optional[MigrationPolicy] = None,
+                 tracker: Optional[HotSetTracker] = None,
+                 journal=None, detector=None):
+        self.pspec = pspec
+        self.rhost = rhost
+        self.policy = policy or MigrationPolicy()
+        self.tracker = tracker or HotSetTracker()
+        self.journal = journal
+        self.detector = detector
+        self.rounds = 0
+        self.moved_vertices = 0
+        self.moved_rows = 0
+        self.deferred_rounds = 0
+        self._steps = 0
+        self._cooldown: dict = {}  # vid -> step index the cooldown expires at
+
+    def observe(self, roots) -> None:
+        self.tracker.observe(roots)
+
+    def step(self, ps: PartitionedGraphStore, owner_rows):
+        """Maybe run one migration round. Returns ``(store, moves)`` —
+        the (possibly unchanged) store and the applied move list."""
+        if self.detector is not None and bool(
+            np.asarray(self.detector.down_mask()).any()
+        ):
+            self.deferred_rounds += 1
+            return ps, []
+        self._steps += 1
+        self._cooldown = {
+            v: e for v, e in self._cooldown.items() if e > self._steps
+        }
+        moves = select_migrations(
+            self.policy, self.tracker, self.rhost, self.pspec, ps,
+            owner_rows, cooldown=self._cooldown.keys(),
+        )
+        if not moves:
+            return ps, []
+        for v, _ in moves:
+            self._cooldown[v] = self._steps + self.policy.move_cooldown_rounds
+        rows = int(
+            vertex_row_counts(self.pspec, ps, [v for v, _ in moves]).sum()
+        )
+        # journal first: a crash after the append but before the in-memory
+        # apply replays the move; a crash before the append replays none
+        # of it — either way the recovered store is one of the two control
+        # states, never torn
+        if self.journal is not None:
+            self.journal.append_migrate(moves)
+        ps = migrate_vertex_rows(self.pspec, ps, moves)
+        self.rhost.apply_moves(moves)
+        self.rounds += 1
+        self.moved_vertices += len(moves)
+        self.moved_rows += rows
+        return ps, moves
+
+    def metrics(self) -> dict:
+        return {
+            "migration_rounds": self.rounds,
+            "migrated_vertices": self.moved_vertices,
+            "migrated_rows": self.moved_rows,
+            "migration_deferred_rounds": self.deferred_rounds,
+            **self.rhost.metrics(),
+        }

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.routing import storage_owner_of
 from repro.graphstore.store import INT32_MAX, GraphStore, StoreSpec
 from repro.utils import PROP_MISSING, take_along0
 
@@ -328,7 +329,8 @@ def store_bytes_report(pspec: PartitionedStoreSpec, pstore=None) -> dict:
 
 # ------------------------------------------------------------------ reads
 def gather_block(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
-                 roots: jax.Array, max_deg: int, *, incoming: bool, me):
+                 roots: jax.Array, max_deg: int, *, incoming: bool, me,
+                 rtable=None):
     """Owner-local padded adjacency gather (one shard's view).
 
     Shard-local mirror of ``store._gather``: CSR lanes from the physically
@@ -338,6 +340,15 @@ def gather_block(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
     arrays (label/props reads), ``other`` carries global leaf ids. Roots not
     owned by this shard (or out of range) come back fully masked — the same
     observable as the single-host gather for an invalid root.
+
+    ``rtable`` (a ``distributed.routing.RoutingTable``) makes ownership
+    table-driven: a migrated-in root is valid here even though ``v % n``
+    says otherwise. Its rows live in the *recent region* (migration appends
+    them there) and match by global key; the CSR window is native-only —
+    a foreign root's local index ``v // n`` would alias a native vertex's
+    CSR rows — so both the CSR mask and the truncation flag gate on
+    nativeness when a table is in play. ``rtable=None`` is byte-identical
+    to the historical modulo-only gather.
     """
     spec, n = pspec.base, pspec.n_shards
     EB, Vloc, R = pspec.e_blk_cap, pspec.v_loc, pspec.recent_blk_cap
@@ -346,13 +357,21 @@ def gather_block(pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
     roots = roots.astype(jnp.int32)
     me = jnp.asarray(me, jnp.int32)
     local = local_of(roots, n)
-    rvalid = (owner_of(roots, n) == me) & (roots >= 0) & (roots < spec.v_cap)
+    rvalid = (storage_owner_of(rtable, roots, n) == me) & (roots >= 0) \
+        & (roots < spec.v_cap)
+    if rtable is None:
+        cvalid = rvalid
+    else:
+        native = owner_of(roots, n) == me
+        cvalid = rvalid & native
     lc = jnp.clip(local, 0, Vloc - 1)
     start = blk.indptr[lc]
     deg = blk.indptr[lc + 1] - start
     truncated = deg > max_deg
+    if rtable is not None:
+        truncated &= native
     pos = start[:, None] + jnp.arange(max_deg, dtype=jnp.int32)[None, :]
-    csr_mask = (jnp.arange(max_deg)[None, :] < deg[:, None]) & rvalid[:, None]
+    csr_mask = (jnp.arange(max_deg)[None, :] < deg[:, None]) & cvalid[:, None]
     slot_csr = jnp.clip(pos, 0, EB - 1)
 
     # recent region of this block: [csr_len, blk_len) within a bounded window
@@ -385,13 +404,16 @@ class BlockStoreView:
     ``own`` reports which vertices route here (clamped like the serve tier's
     owner routing, so out-of-range ids resolve to exactly one shard).
     Intended to be constructed *inside* ``shard_map`` (or a vmap with a
-    named axis) where ``ps`` holds the local block slices.
+    named axis) where ``ps`` holds the local block slices. ``rtable`` makes
+    ownership table-driven (``None`` = the compiled-in modulo, exactly).
     """
 
-    def __init__(self, pspec: PartitionedStoreSpec, ps: PartitionedGraphStore, me):
+    def __init__(self, pspec: PartitionedStoreSpec, ps: PartitionedGraphStore,
+                 me, rtable=None):
         self.pspec = pspec
         self.ps = ps
         self.me = jnp.asarray(me, jnp.int32)
+        self.rtable = rtable
 
     @property
     def vlabel(self):
@@ -406,11 +428,12 @@ class BlockStoreView:
         return self.ps.valive
 
     def own(self, vids):
-        return owner_of(vids, self.pspec.n_shards) == self.me
+        return storage_owner_of(self.rtable, vids, self.pspec.n_shards) == self.me
 
     def adjacency(self, roots: jax.Array, max_deg: int, *, incoming: bool):
         slots, other, mask, trunc = gather_block(
-            self.pspec, self.ps, roots, max_deg, incoming=incoming, me=self.me
+            self.pspec, self.ps, roots, max_deg, incoming=incoming, me=self.me,
+            rtable=self.rtable,
         )
         blk = self.ps.inc if incoming else self.ps.out
         elab = take_along0(blk.label, slots)
@@ -517,7 +540,8 @@ def _lookup_block(pspec: PartitionedStoreSpec, blk: EdgeBlock, eids, psum,
 
 
 def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
-                                ps: PartitionedGraphStore, batch, me, axes):
+                                ps: PartitionedGraphStore, batch, me, axes,
+                                rtable=None):
     """Apply one gRW commit to the partitioned tier (per shard, inside
     ``shard_map`` — or a vmap with a named axis for host testing).
 
@@ -533,6 +557,12 @@ def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
 
     Returns ``(store', applied, append_overflow)``; a nonzero overflow
     means a block's capacity dropped new edges (raise ``e_blk_cap``).
+
+    ``rtable`` routes new-edge appends to their *table* owner: edges of a
+    migrated vertex land in the block that now serves it (the recent
+    region matches by key, so they are readable there immediately). The
+    de/se sections locate their copies by geid, which is
+    placement-agnostic. ``rtable=None`` is the historical modulo routing.
     """
     from repro.graphstore.mutations import AppliedMutations, _sec_mask
 
@@ -542,7 +572,7 @@ def apply_mutations_partitioned(pspec: PartitionedStoreSpec,
     b = batch
     me = jnp.asarray(me, jnp.int32)
     psum = lambda x: jax.lax.psum(x, axes)
-    owner = lambda v: owner_of(v, n)
+    owner = lambda v: storage_owner_of(rtable, v, n)
     new_version = ps.version + 1
 
     nv_mask = _sec_mask(b.nv_label, b.nv_n)

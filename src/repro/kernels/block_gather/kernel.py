@@ -36,7 +36,7 @@ from repro.kernels.block_gather.ref import eval_pred_static
 def _block_gather_kernel(
     indptr_ref, key_ref, other_ref, label_ref, alive_ref, props_ref,
     vlabel_ref, valive_ref, vprops_ref, csr_len_ref, blk_len_ref,
-    roots_ref, lroot_ref, rvalid_ref, rmask_ref, r_ok_ref,
+    roots_ref, lroot_ref, rvalid_ref, cvalid_ref, rmask_ref, r_ok_ref,
     pe_bound_ref, pl_bound_ref,
     leaf_ref, scan_ref, emask_ref, qual_ref, trunc_ref,
     *, max_deg, recent_cap, e_blk_cap, edge_label, pe, pl,
@@ -44,7 +44,8 @@ def _block_gather_kernel(
     EB, R = e_blk_cap, recent_cap
     roots = roots_ref[...]          # [bb] global ids
     lroot = lroot_ref[...]          # [bb] clipped local ids
-    rvalid = rvalid_ref[...]
+    rvalid = rvalid_ref[...]        # recent-region gate (table owner == me)
+    cvalid = cvalid_ref[...]        # CSR-window gate (native roots only)
     rmask = rmask_ref[...]
     r_ok = r_ok_ref[...]
     bb = roots.shape[0]
@@ -57,7 +58,7 @@ def _block_gather_kernel(
     trunc = deg > max_deg
     lane = jax.lax.broadcasted_iota(jnp.int32, (bb, max_deg), 1)
     pos = start[:, None] + lane
-    csr_mask = (lane < deg[:, None]) & rvalid[:, None]
+    csr_mask = (lane < deg[:, None]) & cvalid[:, None]
     slot_csr = jnp.clip(pos, 0, EB - 1)
 
     # ---- recent region: [csr_len, blk_len) within a bounded window ----
@@ -104,7 +105,8 @@ def _block_gather_kernel(
 
 def block_gather_pallas(
     indptr, key, other, label, alive, props, vlabel, valive, vprops,
-    csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+    csr_len, blk_len, roots, lroot, rvalid, cvalid, rmask, r_ok,
+    pe_bound, pl_bound,
     *, max_deg, recent_cap, e_blk_cap, edge_label, pe, pl,
     block_b=128, interpret=False,
 ):
@@ -146,6 +148,7 @@ def block_gather_pallas(
             row1,             # roots
             row1,             # lroot
             row1,             # rvalid
+            row1,             # cvalid
             row1,             # rmask
             row1,             # r_ok
             row2(pe_bound.shape[1]),  # pe_bound
@@ -165,6 +168,6 @@ def block_gather_pallas(
     )(
         indptr, key, other, label, alive, props, vlabel, valive, vprops,
         jnp.reshape(csr_len, (1,)), jnp.reshape(blk_len, (1,)),
-        roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+        roots, lroot, rvalid, cvalid, rmask, r_ok, pe_bound, pl_bound,
     )
     return leaf, scan, emask, qual, trunc

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.keys import PARAM_LEN
 from repro.core.templates import DIR_BOTH, DIR_IN, DIR_OUT, MAX_CONDS, evaluate_pred
+from repro.distributed.routing import storage_owner_of
 from repro.graphstore.partition import local_of, owner_of
 from repro.kernels.block_gather.kernel import block_gather_pallas
 from repro.kernels.block_gather.ref import block_gather_filter_ref, pred_static
@@ -38,7 +39,8 @@ from repro.utils import NULL_ID, compact_masked, take_along0
 
 def block_gather(
     indptr, key, other, label, alive, props, vlabel, valive, vprops,
-    csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+    csr_len, blk_len, roots, lroot, rvalid, cvalid, rmask, r_ok,
+    pe_bound, pl_bound,
     *, max_deg, recent_cap, e_blk_cap, edge_label, pe, pl,
     block_b=128, use_pallas=None, interpret=None,
 ):
@@ -54,7 +56,7 @@ def block_gather(
     if not use_pallas:
         return block_gather_filter_ref(
             indptr, key, other, label, alive, props, vlabel, valive, vprops,
-            csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok,
+            csr_len, blk_len, roots, lroot, rvalid, cvalid, rmask, r_ok,
             pe_bound, pl_bound, **statics,
         )
     if interpret is None:
@@ -73,11 +75,12 @@ def block_gather(
             [x, jnp.zeros((pad, x.shape[1]), x.dtype)]
         )
         roots, lroot = pad_i(roots), pad_i(lroot)
-        rvalid, rmask, r_ok = pad_b(rvalid), pad_b(rmask), pad_b(r_ok)
+        rvalid, cvalid = pad_b(rvalid), pad_b(cvalid)
+        rmask, r_ok = pad_b(rmask), pad_b(r_ok)
         pe_bound, pl_bound = pad_2(pe_bound), pad_2(pl_bound)
     leaf, scan, emask, qual, trunc = block_gather_pallas(
         indptr, key, other, label, alive, props, vlabel, valive, vprops,
-        csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok,
+        csr_len, blk_len, roots, lroot, rvalid, cvalid, rmask, r_ok,
         pe_bound, pl_bound, block_b=blk, interpret=interpret, **statics,
     )
     return leaf[:B], scan[:B], emask[:B], qual[:B], trunc[:B]
@@ -122,7 +125,18 @@ def block_onehop_exec(
     rprops = take_along0(view.vprops, roots)
     r_ok = evaluate_pred(pr, rlab, rprops) & rmask
     local = local_of(roots, n)
-    rvalid = (owner_of(roots, n) == view.me) & (roots >= 0) & (roots < v_cap)
+    rtable = getattr(view, "rtable", None)
+    in_range = (roots >= 0) & (roots < v_cap)
+    rvalid = (storage_owner_of(rtable, roots, n) == view.me) & in_range
+    if rtable is None:
+        native = None
+        cvalid = rvalid
+    else:
+        # a migrated-in root's local index v//n aliases a *native* vertex's
+        # CSR rows — only native roots may open the CSR window (their rows,
+        # once migrated in, live in the recent region and match by key)
+        native = owner_of(roots, n) == view.me
+        cvalid = rvalid & native
     lroot = jnp.clip(local, 0, pspec.v_loc - 1)
 
     pe_s, pl_s = pred_static(pe), pred_static(pl)
@@ -131,14 +145,17 @@ def block_onehop_exec(
     for incoming in incs[direction]:
         o = view.kernel_operands(incoming=incoming)
         leaf, scan, emask, qual, t = block_gather(
-            *o, roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+            *o, roots, lroot, rvalid, cvalid, rmask, r_ok, pe_bound, pl_bound,
             max_deg=espec.max_deg, recent_cap=pspec.recent_blk_cap,
             e_blk_cap=pspec.e_blk_cap, edge_label=edge_label,
             pe=pe_s, pl=pl_s, use_pallas=use_pallas,
         )
         leaf_p.append(leaf), scan_p.append(scan)
         em_p.append(emask), qual_p.append(qual)
-        trunc |= t
+        # a foreign root's CSR deg is an aliased native vertex's — its
+        # truncation flag is meaningless (its real rows, in the recent
+        # region, are never truncated: migration policy bounds degree)
+        trunc |= (t & native) if native is not None else t
 
     leaf = jnp.concatenate(leaf_p, axis=1)
     scanned_mask = jnp.concatenate(scan_p, axis=1)

@@ -14,7 +14,12 @@ Inputs the caller prepares once per batch (shared by both orientations):
 
 - ``roots``    int32 [B] global root ids (recent-region key compare)
 - ``lroot``    int32 [B] clipped local index ``clip(local_of(root), 0, Vloc-1)``
-- ``rvalid``   bool  [B] ownership + range gate (owner == me, 0 <= root < v_cap)
+- ``rvalid``   bool  [B] ownership + range gate (table owner == me,
+               0 <= root < v_cap) — gates the recent-region scan
+- ``cvalid``   bool  [B] CSR-window gate: ``rvalid`` further restricted to
+               *native* roots (``v % n == me``) when a routing table is in
+               play — a migrated-in root's local index would alias a native
+               vertex's CSR rows. Without a table, ``cvalid == rvalid``.
 - ``rmask``    bool  [B] request mask (rows this call actually executes)
 - ``r_ok``     bool  [B] root-predicate result & rmask
 - ``pe_bound`` int32 [B, MAX_CONDS] bound edge-predicate wildcard values
@@ -115,7 +120,8 @@ def eval_pred_static(stat: tuple, labels, props, bound):
 
 def block_gather_filter_ref(
     indptr, key, other, label, alive, props, vlabel, valive, vprops,
-    csr_len, blk_len, roots, lroot, rvalid, rmask, r_ok, pe_bound, pl_bound,
+    csr_len, blk_len, roots, lroot, rvalid, cvalid, rmask, r_ok,
+    pe_bound, pl_bound,
     *, max_deg: int, recent_cap: int, e_blk_cap: int, edge_label: int,
     pe: tuple, pl: tuple,
 ):
@@ -131,7 +137,7 @@ def block_gather_filter_ref(
     trunc = deg > max_deg
     lane = jnp.arange(max_deg, dtype=jnp.int32)[None, :]
     pos = start[:, None] + lane
-    csr_mask = (lane < deg[:, None]) & rvalid[:, None]
+    csr_mask = (lane < deg[:, None]) & cvalid[:, None]
     slot_csr = jnp.clip(pos, 0, EB - 1)
 
     # ---- recent region: [csr_len, blk_len) within a bounded window ----

@@ -87,6 +87,14 @@ def main(argv=None):
     ap.add_argument("--full-checkpoints", action="store_true",
                     help="periodic checkpoints snapshot the whole store "
                          "(default: incremental — dirty owners only)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="attach the routing table and run the hot-vertex "
+                         "migration policy loop at batch boundaries "
+                         "(partitioned tier only)")
+    ap.add_argument("--hot-frac", type=float, default=0.0,
+                    help="fraction of each batch's roots drawn from a hot "
+                         "set colliding on one owner (the skew --migrate "
+                         "exists to fix; 0 = uniform)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write structured telemetry (span / snapshot / "
                          "report events) as JSONL to PATH; validate with "
@@ -116,7 +124,10 @@ def main(argv=None):
     from repro.graphstore import (
         DeviceGate, MaintenancePolicy, WriteBehindJournal, make_mutation_batch,
     )
+    from repro.distributed.routing import RoutingTableHost
+    from repro.graphstore.migration import HotSetTracker, MigrationEngine
     from repro.graphstore.store import ingest
+    from repro.obs.metrics import OWNER_STAGE_FIELDS
     from repro.obs.telemetry import ServeTelemetry
 
     cfg = GraphServeConfig(
@@ -199,7 +210,28 @@ def main(argv=None):
         print(f"chaos: shard {crash_shard} crashes at batch {crash_batch}, "
               f"recovery after {args.recover_after} degraded batches")
 
-    total = dict(requests=0, hits=0, misses=0, route_overflow=0, deferred=0)
+    engine = None
+    hot = None
+    if args.migrate:
+        if not partitioned:
+            ap.error("--migrate requires the partitioned store tier")
+        # the routing table is a traced input to the already-compiled serve
+        # step: attaching it (and every later epoch bump) never recompiles
+        rhost = RoutingTableHost(rt.n)
+        rt.attach_routing(rhost)
+        engine = MigrationEngine(
+            rt.pspec, rhost, tracker=HotSetTracker(), journal=journal,
+            detector=failover.detector if failover is not None else None,
+        )
+        print("routing: table attached (epoch 0), migration policy loop on")
+    if args.hot_frac > 0:
+        # hot roots all land on one owner under the modulo layout
+        hot = np.array([v for v in range(V) if v % args.shards == 1][:16],
+                       np.int64)
+    FR = OWNER_STAGE_FIELDS.index("frontier_rows")
+
+    total = dict(requests=0, hits=0, misses=0, route_overflow=0, deferred=0,
+                 locality_routed=0, locality_retry_rows=0)
     avail = dict(unavailable_batches=0, degraded_batches=0, deferred_rows=0,
                  queued_commits=0, recovery_seconds=0.0)
     maint = dict(device_compactions=0, growths=0, commits=0,
@@ -220,6 +252,10 @@ def main(argv=None):
                   f"(precompiled {swap['compiled_steps']} steps in "
                   f"{swap['precompile_seconds']:.1f} s off-loop)")
         roots = rng.integers(0, V, args.batch).astype(np.int32)
+        if hot is not None:
+            pick = rng.random(args.batch) < args.hot_frac
+            zipf = np.minimum(rng.zipf(1.2, args.batch) - 1, len(hot) - 1)
+            roots = np.where(pick, hot[zipf], roots).astype(np.int32)
         if failover is not None:
             failover.probe(b)
             try:
@@ -265,6 +301,16 @@ def main(argv=None):
                   f"{rinfo['replayed_to_seq']}, drained "
                   f"{rinfo['drained_commits']} queued, "
                   f"{rinfo['recovery_seconds']*1e3:.0f} ms")
+        if engine is not None:
+            # batch boundary: observe root heat, maybe run one journal-first
+            # migration round, and install the spliced store + bumped table
+            # together so no in-flight batch sees a torn layout
+            engine.observe(roots)
+            ps2, moves = engine.step(sstate, rt.last_owner_stage[:, FR])
+            if moves:
+                sstate = jax.device_put(ps2, rt.store_sharding())
+                print(f"batch {b}: migrated {moves} "
+                      f"(table epoch -> {engine.rhost.epoch})")
         wm = None
         if partitioned and args.write_every and (b + 1) % args.write_every == 0:
             # a small upsert burst lands in the block recent regions
@@ -384,6 +430,25 @@ def main(argv=None):
             f"recovery_seconds={avail['recovery_seconds']} "
             f"detections={fm['detections']} recoveries={fm['recoveries']} "
             f"hedge_rate={fm.get('hedge_rate', 0.0)}"
+        )
+    if engine is not None:
+        mm = engine.metrics()
+        total.update({k: mm[k] for k in (
+            "migration_rounds", "migrated_vertices", "migrated_rows",
+            "migration_deferred_rounds", "table_epoch",
+        )})
+        total["route_cap_retries"] = rt.route_cap_retries
+        print(
+            f"routing: migration_rounds={mm['migration_rounds']} "
+            f"migrated_vertices={mm['migrated_vertices']} "
+            f"migrated_rows={mm['migrated_rows']} "
+            f"deferred_rounds={mm['migration_deferred_rounds']} "
+            f"table_epoch={mm['table_epoch']} "
+            f"storage_exceptions={mm['storage_exceptions']} "
+            f"cache_exceptions={mm['cache_exceptions']} "
+            f"locality_routed={total['locality_routed']} "
+            f"locality_retry_rows={total['locality_retry_rows']} "
+            f"route_cap_retries={rt.route_cap_retries}"
         )
     # end-of-run telemetry report (emitted after journal.stop so the final
     # flush's span is counted)

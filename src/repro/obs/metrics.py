@@ -79,6 +79,26 @@ def hit_locality(owner_stage) -> np.ndarray:
     return out
 
 
+def owner_load_share(owner_stage) -> np.ndarray:
+    """Per-owner share of frontier-row load — the migration trigger.
+
+    ``share[s] = frontier_rows[s] / sum(frontier_rows)``; a balanced mesh
+    reads ``1/n`` everywhere, a hot owner reads above it. Zero total load
+    returns the uniform ``1/n`` vector (no signal → no skew claimed).
+    ``max(owner_load_share(...)) * n`` is the skew factor
+    ``MigrationPolicy.load_share_trigger`` compares against, and its
+    before/after ratio is BENCH_routing.json's hottest-owner-load-cut
+    criterion.
+    """
+    m = _as_matrix(owner_stage)
+    n = m.shape[0]
+    rows = m[:, OWNER_STAGE_FIELDS.index("frontier_rows")].astype(np.float64)
+    total = rows.sum()
+    if total <= 0 or n == 0:
+        return np.full(n, 1.0 / max(n, 1), dtype=np.float64)
+    return rows / total
+
+
 def attribute_step_seconds(step_seconds: float, owner_stage) -> np.ndarray:
     """Split one collective step's wall-clock across owners by work.
 

@@ -264,7 +264,7 @@ def test_checkpoint_replay_reconstructs_store_1shard(tmp_path):
     ps2, last, info = replay(j2, rt2, ttable)
     assert info == {
         "replayed_commits": 2, "replayed_compactions": 1,
-        "replayed_growths": 1,
+        "replayed_growths": 1, "replayed_migrations": 0,
     }
     assert rt2.pspec == rt.pspec
     for a, b in zip(

@@ -197,13 +197,16 @@ def _block_gather_world(rng, B, *, v_loc=8, v_cap=32, EB=64, max_deg=4,
     key[csr_len:blk_len] = roots[rng.integers(0, B, blk_len - csr_len)]
     lroot = rng.integers(0, v_loc, B).astype(np.int32)
     rvalid = rng.random(B) < 0.8
+    # without a routing table the CSR gate equals the ownership gate; a
+    # dedicated case below exercises cvalid ⊂ rvalid (migrated-in roots)
+    cvalid = rvalid
     rmask = rng.random(B) < 0.8
     r_ok = (rng.random(B) < 0.8) & rmask
     pe_bound = rng.integers(0, 8, (B, 3)).astype(np.int32)
     pl_bound = rng.integers(0, 8, (B, 3)).astype(np.int32)
     arrs = (indptr, key, other, label, alive, props, vlabel, valive, vprops,
             np.int32(csr_len), np.int32(blk_len), roots, lroot, rvalid,
-            rmask, r_ok, pe_bound, pl_bound)
+            cvalid, rmask, r_ok, pe_bound, pl_bound)
     statics = dict(max_deg=max_deg, recent_cap=recent_cap, e_blk_cap=EB)
     return tuple(map(jnp.asarray, arrs)), statics
 
@@ -248,7 +251,8 @@ def test_block_gather_empty_and_full_cap_frontier():
     statics.update(edge_label=-1, pe=(-1, ()), pl=(-1, ()))
     z = jnp.zeros(16, bool)
     empty = list(args)
-    empty[13], empty[14], empty[15] = z, z, z  # rvalid, rmask, r_ok
+    # rvalid, cvalid, rmask, r_ok
+    empty[13], empty[14], empty[15], empty[16] = z, z, z, z
     leaf_e, scan_e, emask_e, qual_e, _ = block_gather(
         *empty, **statics, block_b=16, use_pallas=True, interpret=True
     )
@@ -256,13 +260,36 @@ def test_block_gather_empty_and_full_cap_frontier():
                 or np.asarray(qual_e).any())
     o = jnp.ones(16, bool)
     full = list(args)
-    full[13], full[14], full[15] = o, o, o
+    full[13], full[14], full[15], full[16] = o, o, o, o
     ref = block_gather_filter_ref(*full, **statics)
     got = block_gather(*full, **statics, block_b=16, use_pallas=True,
                        interpret=True)
     for a, b in zip(ref, got):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert np.asarray(got[1]).any()  # the full frontier observed lanes
+
+
+def test_block_gather_cvalid_gates_csr_only():
+    """With the split gate (migrated-in roots: cvalid ⊂ rvalid) the CSR
+    window closes for non-native rows while the recent-region key scan
+    still serves them — and the kernel stays bit-exact with the ref."""
+    rng = np.random.default_rng(9)
+    args, statics = _block_gather_world(rng, 16)
+    statics.update(edge_label=-1, pe=(-1, ()), pl=(-1, ()))
+    o = jnp.ones(16, bool)
+    lst = list(args)
+    cvalid = jnp.asarray(np.arange(16) % 2 == 0)  # half the rows native
+    lst[13], lst[14], lst[15], lst[16] = o, cvalid, o, o
+    ref = block_gather_filter_ref(*lst, **statics)
+    got = block_gather(*lst, **statics, block_b=16, use_pallas=True,
+                       interpret=True)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a closed CSR window means scan lanes for odd rows can only come from
+    # the recent region (lanes >= max_deg in the concatenated layout)
+    scan = np.asarray(ref[1])
+    max_deg = statics["max_deg"]
+    assert not scan[1::2, :max_deg].any()
 
 
 def test_first_occurrence_mask_matches_dedup_masked():

@@ -112,6 +112,11 @@ MAINTENANCE_IDENTITY = textwrap.dedent(
         for i, r in enumerate(runs):
             res_s, miss_s, met_s = r.gr(tag, np.asarray(roots))
             assert met_s.pop("route_overflow") == 0, (tag, i)
+            # routing-tier keys exist only on the sharded side; identity
+            # runs use the implicit uniform table, so all must be zero
+            assert met_s.pop("locality_routed") == 0, (tag, i)
+            assert met_s.pop("route_cap_retries") == 0, (tag, i)
+            assert met_s.pop("locality_retry_rows") == 0, (tag, i)
             assert np.array_equal(res_h, res_s), (tag, i)
             assert met_h == met_s, (tag, i, met_h, met_s)
             assert miss_key(miss_h) == miss_key(miss_s), (tag, i)

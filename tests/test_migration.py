@@ -1,0 +1,196 @@
+"""Hot-vertex block migration, host-level semantics (graphstore.migration).
+
+Single-device suite for the splice itself and the policy/engine around it:
+``migrate_vertex_rows`` must move EVERY row of a vertex (both orientations,
+live and tombstoned) into the destination's recent region in ascending-geid
+order while leaving all other rows byte-untouched; the placement must be
+reconstructible from store bytes alone (``infer_storage_exceptions`` — what
+journal replay uses); the policy must trigger only on real skew; the engine
+must journal before it moves and refuse to move during an outage. The
+8-device serving-path integration (byte-identity vs the single-host engine,
+zero recompiles) lives in test_routing_runtime.py.
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+import pytest
+
+from conftest import build_world
+from repro.distributed.routing import RoutingTableHost, base_owner
+from repro.graphstore import WriteBehindJournal
+from repro.graphstore.journal import REC_MIGRATE
+from repro.graphstore.migration import (
+    HotSetTracker,
+    MigrationEngine,
+    MigrationPolicy,
+    infer_storage_exceptions,
+    migrate_vertex_rows,
+    select_migrations,
+    vertex_row_counts,
+)
+from repro.graphstore.partition import default_pspec, partition_store
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def world():
+    spec, store = build_world()
+    pspec = default_pspec(spec, N)
+    return dict(spec=spec, store=store, pspec=pspec,
+                pstore=partition_store(pspec, store))
+
+
+def _rows(pspec, ps, orient):
+    """Per-shard allocated rows of one orientation as comparable tuples:
+    (shard, slot, key, other, label, alive, geid, props...)."""
+    n, EB = pspec.n_shards, pspec.e_blk_cap
+    blk = getattr(ps, orient)
+    g = lambda a: np.asarray(a)
+    key = g(blk.key).reshape(n, EB)
+    other = g(blk.other).reshape(n, EB)
+    label = g(blk.label).reshape(n, EB)
+    alive = g(blk.alive).reshape(n, EB)
+    geid = g(blk.geid).reshape(n, EB)
+    props = g(blk.props).reshape(n, EB, -1)
+    ln = g(blk.blk_len).astype(np.int64)
+    out = []
+    for s in range(n):
+        for i in range(int(ln[s])):
+            out.append((s, i, int(key[s, i]), int(other[s, i]),
+                        int(label[s, i]), bool(alive[s, i]),
+                        int(geid[s, i]), tuple(props[s, i].tolist())))
+    return out
+
+
+def _row_payload(rows):
+    """Rows minus their (shard, slot) position — the migration-invariant."""
+    return sorted(r[2:] for r in rows)
+
+
+def test_migrate_moves_all_rows_to_dst_recent_region(world):
+    pspec, ps = world["pspec"], world["pstore"]
+    vid = 0  # native owner 0; has out- and in-edges in the fixture graph
+    dst = 2
+    before_out = _rows(pspec, ps, "out")
+    before_inc = _rows(pspec, ps, "inc")
+    assert int(vertex_row_counts(pspec, ps, [vid])[0]) > 0
+    ps2 = migrate_vertex_rows(pspec, ps, [(vid, dst)])
+    for orient, before in (("out", before_out), ("inc", before_inc)):
+        after = _rows(pspec, ps2, orient)
+        # the row payload is conserved exactly — a splice, not a rewrite
+        assert _row_payload(after) == _row_payload(before)
+        moved = [r for r in after if r[2] == vid]
+        stayed_before = [r for r in before if r[2] != vid]
+        stayed_after = [r for r in after if r[2] != vid]
+        # untouched vertices keep their exact (shard, slot) positions
+        assert stayed_before == stayed_after
+        if not moved:
+            continue
+        csr = np.asarray(getattr(ps2, orient).csr_len).astype(np.int64)
+        assert all(r[0] == dst for r in moved)
+        # recent region only (slot >= csr_len), ascending geid
+        assert all(r[1] >= int(csr[dst]) for r in moved)
+        geids = [r[6] for r in sorted(moved, key=lambda r: r[1])]
+        assert geids == sorted(geids)
+    # placement is reconstructible from the bytes alone (replay's view)
+    assert infer_storage_exceptions(pspec, ps2) == {vid: dst}
+
+
+def test_migrate_round_trip_restores_native_placement(world):
+    pspec, ps = world["pspec"], world["pstore"]
+    vid, dst = 5, 0  # native owner 1
+    assert int(base_owner(vid, N)) == 1
+    ps2 = migrate_vertex_rows(pspec, ps, [(vid, dst)])
+    assert infer_storage_exceptions(pspec, ps2) == {vid: dst}
+    ps3 = migrate_vertex_rows(pspec, ps2, [(vid, 1)])
+    assert infer_storage_exceptions(pspec, ps3) == {}
+    # payload conserved across the round trip
+    for orient in ("out", "inc"):
+        assert _row_payload(_rows(pspec, ps3, orient)) == _row_payload(
+            _rows(pspec, ps, orient)
+        )
+
+
+def test_multi_move_round_is_deterministic(world):
+    pspec, ps = world["pspec"], world["pstore"]
+    moves = [(0, 3), (5, 2)]
+    a = migrate_vertex_rows(pspec, ps, moves)
+    b = migrate_vertex_rows(pspec, ps, moves)
+    for orient in ("out", "inc"):
+        for f in a.out._fields:
+            assert np.array_equal(
+                np.asarray(getattr(getattr(a, orient), f)),
+                np.asarray(getattr(getattr(b, orient), f)),
+            ), (orient, f)
+    assert infer_storage_exceptions(pspec, a) == {0: 3, 5: 2}
+
+
+def test_hot_set_tracker_decays_and_bounds():
+    tr = HotSetTracker(decay=0.5, cap=3)
+    tr.observe([7, 7, 7, 2])
+    assert tr.hottest(1)[0][0] == 7
+    tr.observe([2, 2, 2, 2])          # 7 decays to 1.5, 2 rises to 4.5
+    assert tr.hottest(1)[0][0] == 2
+    tr.observe([1, 3, 4])             # cap=3 prunes the coldest
+    assert len(tr.hottest(10)) == 3
+    assert tr.heat(-1) == 0.0
+
+
+def test_select_migrations_triggers_only_on_skew(world):
+    pspec, ps = world["pspec"], world["pstore"]
+    rhost = RoutingTableHost(N)
+    tr = HotSetTracker()
+    tr.observe([0] * 50)  # vertex 0 is hot; its owner is shard 0
+    pol = MigrationPolicy(load_share_trigger=1.25, min_heat=1.0)
+    # balanced load: no move
+    assert select_migrations(pol, tr, rhost, pspec, ps, [10, 10, 10, 10]) == []
+    # shard 0 hot: vertex 0 re-homes to the least-loaded owner
+    moves = select_migrations(pol, tr, rhost, pspec, ps, [40, 10, 10, 5])
+    assert moves == [(0, 3)]
+    # zero load: no signal, no move
+    assert select_migrations(pol, tr, rhost, pspec, ps, [0, 0, 0, 0]) == []
+    # a full table refuses new exceptions
+    tiny = RoutingTableHost(N, cap=1)
+    tiny.set_storage_owner(9, 2)
+    assert select_migrations(pol, tr, tiny, pspec, ps, [40, 10, 10, 5]) == []
+
+
+class _FakeDetector:
+    def __init__(self, down):
+        self._down = np.asarray(down, bool)
+
+    def down_mask(self):
+        return self._down
+
+
+def test_engine_journals_before_moving_and_defers_during_outage(world):
+    pspec, ps = world["pspec"], world["pstore"]
+    root = tempfile.mkdtemp(prefix="migration-journal-")
+    j = WriteBehindJournal(root, N)
+    rhost = RoutingTableHost(N)
+    eng = MigrationEngine(
+        pspec, rhost, journal=j,
+        detector=_FakeDetector([False, True, False, False]),
+    )
+    eng.observe([0] * 50)
+    # an outage defers the round entirely — no journal record, no move
+    ps1, moves = eng.step(ps, [40, 10, 10, 5])
+    assert moves == [] and eng.deferred_rounds == 1
+    assert not rhost.has_exceptions()
+    assert j.read_records() == [] and not j._pending
+    # healthy: journal-first, then splice, then table update
+    eng.detector = _FakeDetector([False] * N)
+    ps2, moves = eng.step(ps1, [40, 10, 10, 5])
+    assert moves == [(0, 3)]
+    assert rhost.storage_owner(0) == 3
+    assert infer_storage_exceptions(pspec, ps2) == {0: 3}
+    j.flush()
+    recs = [r for r in j.read_records() if r.rtype == REC_MIGRATE]
+    assert len(recs) == 1
+    m = eng.metrics()
+    assert m["migration_rounds"] == 1 and m["migrated_vertices"] == 1
+    assert m["migrated_rows"] > 0 and m["table_epoch"] == rhost.epoch

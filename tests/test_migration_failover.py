@@ -1,0 +1,157 @@
+"""Chaos: crash at every point of the migration protocol; recovery must be
+byte-identical to the pre- OR post-migration control — never a torn mix.
+
+The live protocol is journal-first: ``append_migrate`` (durable MIGRATE
+record) → deterministic ``migrate_vertex_rows`` splice → one-epoch
+``apply_moves`` table publish (``MigrationEngine.step`` pins this order in
+test_migration.py). This suite snapshots the journal directory at each
+boundary of that sequence — plus a torn MIGRATE frame, the mid-write
+crash — and replays each snapshot on a fresh runtime:
+
+- crash BEFORE the record is durable (including the torn frame) recovers
+  the pre-migration store byte-for-byte;
+- crash anywhere AFTER the record is durable recovers the post-migration
+  store byte-for-byte, whether or not the live splice or table publish
+  ever ran;
+- commits journaled after the migration replay through the reconstructed
+  routing table, so the final store matches the live one byte-for-byte.
+
+Runs in a subprocess so XLA_FLAGS can create the 8 host devices before jax
+initializes (same pattern as test_sharded_runtime). The complementary
+liveness rule — the engine refuses to START a round while the failure
+detector reports an owner down — is pinned in test_migration.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import shutil
+    import tempfile
+    import numpy as np
+    import jax
+    from conftest import build_world, enabled_ttable, common_watchlist_plan
+    from repro.core import CacheSpec, EngineSpec
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.distributed.routing import RoutingTableHost
+    from repro.graphstore import WriteBehindJournal, make_mutation_batch, replay
+    from repro.graphstore.migration import (
+        infer_storage_exceptions, migrate_vertex_rows,
+    )
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+    mesh = flat_mesh(8)
+    plan = common_watchlist_plan()
+
+    def snapshot_bytes(ps):
+        return [np.asarray(x).copy()
+                for x in jax.tree_util.tree_leaves(jax.device_get(ps))]
+
+    def assert_bytes(got, want, tag):
+        assert len(got) == len(want), tag
+        for a, b in zip(got, want):
+            assert np.array_equal(a, b), tag
+
+    base = tempfile.mkdtemp(prefix="migration-chaos-")
+    live_root = os.path.join(base, "live")
+
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    ps = rt.partition_store(store)
+    rhost = RoutingTableHost(rt.n)
+    rt.attach_routing(rhost)
+    j = WriteBehindJournal(live_root, rt.n)
+    j.checkpoint(ps, e_blk_cap=rt.pspec.e_blk_cap,
+                 recent_blk_cap=rt.pspec.recent_blk_cap, store_version=0)
+
+    # commit 1 (pre-migration traffic), durable
+    mb1 = make_mutation_batch(
+        spec, new_edges=[(1, 12, 0, [1])], set_vprops=[(7, 0, 1)],
+    )
+    ps, _, _ = rt.run_grw_tx(ps, rt.empty_cache(), ttable, mb1, journal=j)
+    j.flush()
+    pre_control = snapshot_bytes(ps)
+    snaps = {}
+    shutil.copytree(live_root, os.path.join(base, "p0"))   # before MIGRATE
+    log_len_p0 = os.path.getsize(j.log_path)
+
+    # the migration round, journal-first (MigrationEngine.step's order)
+    moves = [(0, 7), (5, 2)]
+    j.append_migrate(moves, epoch=rhost.epoch + 1)
+    j.flush()
+    shutil.copytree(live_root, os.path.join(base, "p1"))   # durable, no splice
+    log_len_p1 = os.path.getsize(j.log_path)
+    ps = jax.device_put(
+        migrate_vertex_rows(rt.pspec, ps, moves), rt.store_sharding()
+    )
+    shutil.copytree(live_root, os.path.join(base, "p2"))   # spliced, unpublished
+    rhost.apply_moves(moves)
+    shutil.copytree(live_root, os.path.join(base, "p3"))   # published
+    post_control = snapshot_bytes(ps)
+    assert infer_storage_exceptions(rt.pspec, ps) == dict(moves)
+
+    # commit 2 (post-migration traffic through the table), durable
+    mb2 = make_mutation_batch(
+        spec, new_edges=[(5, 11, 0, [0])], del_edges=[2],
+    )
+    ps, _, _ = rt.run_grw_tx(ps, rt.empty_cache(), ttable, mb2, journal=j)
+    j.flush()
+    shutil.copytree(live_root, os.path.join(base, "p4"))   # post-traffic
+    final_control = snapshot_bytes(ps)
+
+    # torn MIGRATE frame: the writer died mid-append — truncate the p1 log
+    # halfway into the record's bytes
+    torn = os.path.join(base, "torn")
+    shutil.copytree(os.path.join(base, "p1"), torn)
+    torn_log = os.path.join(torn, os.path.basename(j.log_path))
+    with open(torn_log, "r+b") as f:
+        f.truncate(log_len_p0 + (log_len_p1 - log_len_p0) // 2)
+
+    cases = [
+        ("p0", pre_control, 0, 1),    # crash before the record: pre state
+        ("torn", pre_control, 0, 1),  # crash mid-append: pre state, clean
+        ("p1", post_control, 1, 1),   # durable record, splice never ran
+        ("p2", post_control, 1, 1),   # spliced, table never published
+        ("p3", post_control, 1, 1),   # fully published
+        ("p4", final_control, 1, 2),  # plus post-migration traffic
+    ]
+    for tag, want, n_migr, n_commits in cases:
+        rt2 = ShardedTxnRuntime(
+            espec, mesh, route_cap_factor=None, blk_slack=1.0
+        )
+        j2 = WriteBehindJournal(os.path.join(base, tag), rt2.n)
+        ps_r, _, info = replay(j2, rt2, ttable)
+        assert info["replayed_migrations"] == n_migr, (tag, info)
+        assert info["replayed_commits"] == n_commits, (tag, info)
+        assert_bytes(snapshot_bytes(ps_r), want, tag)
+    print("MIGRATION_CHAOS_OK")
+    """
+)
+
+
+def _run(script, token):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=1800,
+    )
+    assert token in out.stdout, out.stdout + out.stderr
+
+
+def test_crash_at_every_migration_point_recovers_pre_or_post_never_torn():
+    _run(SCRIPT, "MIGRATION_CHAOS_OK")

@@ -1,0 +1,90 @@
+"""Ownership is defined ONCE: the traced base rule ``partition.owner_of``
+(+ its host twin ``routing.base_owner``) and the routing-table lookups
+``storage_owner_of`` / ``cache_owner_of`` layered on top. This suite is the
+grep-clean assertion the routing tier's satellite task calls for — a stray
+hand-coded ``v % n`` anywhere else would silently diverge from the table
+the moment a vertex migrates, so any new occurrence fails here with the
+offending file:line.
+
+Comment/docstring mentions are fine (they explain the rule); divisibility
+checks (``% n == 0``) are not ownership; ``routing.py`` is the one module
+allowed to spell out the modulo (it IS the rule).
+"""
+
+import os
+import re
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# `something % n` where n is a shard count — the ownership-rule shape
+_MOD = re.compile(r"%\s*(n|self\.n|rt\.n|rt2?\.n|n_shards|self\.n_shards)\b")
+
+# the single module allowed to hand-code the base rule
+_ALLOWED = {os.path.join("repro", "distributed", "routing.py")}
+
+
+def _violations(root: str):
+    out = []
+    for dirpath, _dirs, files in os.walk(root):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, root)
+            if rel in _ALLOWED:
+                continue
+            with open(path) as f:
+                for i, line in enumerate(f, 1):
+                    if not _MOD.search(line):
+                        continue
+                    s = line.strip()
+                    if s.startswith("#"):
+                        continue  # comment
+                    if "`" in line:
+                        continue  # docstring mention (``v % n`` prose)
+                    if "== 0" in line:
+                        continue  # divisibility check, not ownership
+                    out.append(f"{rel}:{i}: {s}")
+    return out
+
+
+def test_no_stray_ownership_modulo_in_src():
+    v = _violations(os.path.join(REPO, "src"))
+    assert not v, (
+        "hard-coded ownership modulo outside the routing tier — use "
+        "partition.owner_of / routing.base_owner or a routing-table "
+        "lookup:\n" + "\n".join(v)
+    )
+
+
+def test_no_stray_ownership_modulo_in_tests_and_benchmarks():
+    v = []
+    for d in ("tests", "benchmarks"):
+        v += _violations(os.path.join(REPO, d))
+    assert not v, (
+        "hard-coded ownership modulo in test/bench code — import the "
+        "routing-tier lookup instead:\n" + "\n".join(v)
+    )
+
+
+def test_base_rule_and_table_agree_when_empty():
+    import numpy as np
+
+    from repro.distributed.routing import (
+        RoutingTableHost,
+        base_owner,
+        cache_owner_of,
+        identity_table,
+        storage_owner_of,
+    )
+
+    n = 8
+    vids = np.arange(64, dtype=np.int32)
+    expect = base_owner(vids, n)
+    assert np.array_equal(np.asarray(storage_owner_of(None, vids, n)), expect)
+    t = identity_table(n)
+    assert np.array_equal(np.asarray(storage_owner_of(t, vids, n)), expect)
+    assert np.array_equal(np.asarray(cache_owner_of(t, vids, n)), expect)
+    rh = RoutingTableHost(n)
+    assert np.array_equal(rh.storage_owner(vids), expect)
+    assert np.array_equal(rh.cache_owner(vids), expect)

@@ -1,0 +1,239 @@
+"""Routing-tier integration on the 8-device mesh: byte-identity, locality
+routing, migration, and replay (the ISSUE acceptance pins).
+
+Two subprocess suites (XLA_FLAGS must create the host devices before jax
+initializes — same pattern as test_sharded_runtime):
+
+- **Locality**: an explicit identity table, ``rtable=None``, and an attached
+  exception-free ``RoutingTableHost`` are the SAME program and the same
+  bytes (``step.jitted._cache_size() == 1`` across all three table inputs);
+  split vertices (cache home != storage owner) route to their cache home,
+  defer misses back to the storage owner (one compiled-program retry, no
+  recompile), populate at the cache home, and serve warm hits there —
+  results always equal the single-host engine.
+- **Migration**: the live protocol (journal-first MIGRATE, deterministic
+  splice, one-epoch table publish at a batch boundary) preserves gR/gRW
+  results vs the single-host engine, routes post-migration appends to the
+  table owners, keeps the serving step at one compiled trace, and journal
+  replay from the pre-migration checkpoint reconstructs the post-migration
+  post-commit store byte-for-byte.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    import numpy as np
+    import jax
+    from conftest import (
+        build_world, enabled_ttable, common_watchlist_plan, TPL_META,
+    )
+    from repro.core import (
+        CacheSpec, EngineSpec, GraphEngine, cache_entries, empty_cache,
+        run_grw_tx,
+    )
+    from repro.core.population import CachePopulator
+    from repro.core.runtime import bucket_for
+    from repro.distributed import flat_mesh
+    from repro.distributed.graph_serve import ShardedTxnRuntime
+    from repro.distributed.routing import RoutingTableHost, identity_table
+    from repro.graphstore import WriteBehindJournal, make_mutation_batch, replay
+    from repro.graphstore.migration import (
+        infer_storage_exceptions, migrate_vertex_rows, vertex_row_counts,
+    )
+
+    spec, store = build_world()
+    cspec = CacheSpec(capacity=1024, probes=8, max_leaves=16, max_chunks=2)
+    espec = EngineSpec(store=spec, cache=cspec, max_deg=32, frontier=32)
+    ttable, sc, qp = enabled_ttable()
+    mesh = flat_mesh(8)
+    plan = common_watchlist_plan()
+    roots = np.array([0, 3, 5, 6, 7, 11], np.int32)
+
+    rt = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    pstore = rt.partition_store(store)
+    eng = GraphEngine(espec, plan, True, fused=True)
+    bucket = max(bucket_for(len(roots)), rt.n)
+    step = rt.serve_step(plan, bucket)
+
+    def miss_key(ms):
+        return sorted(
+            (m.tpl_idx, m.root, tuple(m.params.tolist()), m.read_version)
+            for m in ms
+        )
+
+    def assert_tree_equal(a, b, tag):
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+    """
+)
+
+LOCALITY = PRELUDE + textwrap.dedent(
+    """
+    cache_h = empty_cache(cspec)
+    cache_s = rt.empty_cache()
+    res_h, miss_h, met_h = eng.run(store, cache_h, ttable, roots)
+
+    # --- identity: None, an explicit identity table, and an attached
+    # exception-free host table are the same program and the same bytes
+    runs = {}
+    runs["none"] = rt.run_gr_tx_batch(pstore, cache_s, ttable, plan, roots)
+    runs["identity"] = rt.run_gr_tx_batch(
+        pstore, cache_s, ttable, plan, roots, rtable=identity_table(rt.n)
+    )
+    rhost = RoutingTableHost(rt.n)
+    rt.attach_routing(rhost)
+    runs["attached"] = rt.run_gr_tx_batch(pstore, cache_s, ttable, plan, roots)
+    for tag, (res, miss, met) in runs.items():
+        assert np.array_equal(res, res_h), tag
+        assert miss_key(miss) == miss_key(miss_h), tag
+        assert met == runs["none"][2], (tag, met)
+        assert met["locality_routed"] == 0 and met["locality_retry_rows"] == 0
+    # one compiled trace across all three table inputs: the routing table
+    # is a traced input of the serving step, never a recompile
+    assert step.jitted._cache_size() == 1, step.jitted._cache_size()
+
+    # --- split vertices: cache home re-pointed away from the storage owner
+    # (5 and 7 are their own native owners on 8 shards; 0 and 2 are not)
+    rhost.set_cache_owner(5, 0)
+    rhost.set_cache_owner(7, 2)
+    res_c, miss_c, met_c = rt.run_gr_tx_batch(
+        pstore, cache_s, ttable, plan, roots
+    )
+    # cold: routed to the cache home, probe misses defer back to the
+    # storage owner through the table's storage view — results identical
+    assert np.array_equal(res_c, res_h)
+    assert miss_key(miss_c) == miss_key(miss_h)
+    assert met_c["locality_routed"] > 0, met_c
+    assert met_c["locality_retry_rows"] == 2, met_c
+    assert met_c["host_syncs"] == 2, met_c
+
+    # --- CP population lands split roots' entries at their cache home
+    pop_h = CachePopulator(espec, TPL_META); pop_h.queue.push(miss_h)
+    cache_h = pop_h.drain(store, store, cache_h, ttable)
+    pop_s = rt.populator(TPL_META); pop_s.queue.push(miss_c)
+    cache_s = pop_s.drain(pstore, pstore, cache_s, ttable)
+    assert (pop_h.committed, pop_h.aborted) == (pop_s.committed, pop_s.aborted)
+    assert cache_entries(cspec, cache_h) == cache_entries(cspec, cache_s)
+
+    # --- warm: hits serve AT the cache home, no deferral, no retry
+    res_w_h, _, met_w_h = eng.run(store, cache_h, ttable, roots)
+    res_w, _, met_w = rt.run_gr_tx_batch(pstore, cache_s, ttable, plan, roots)
+    assert np.array_equal(res_w, res_w_h)
+    assert met_w_h["misses"] == 0 and met_w["misses"] == 0, (met_w_h, met_w)
+    assert met_w["hits"] == met_w_h["hits"] and met_w["hits"] > 0
+    assert met_w["locality_routed"] > 0, met_w
+    assert met_w["locality_retry_rows"] == 0 and met_w["host_syncs"] == 1
+    # still the one compiled trace after split-table + storage-view inputs
+    assert step.jitted._cache_size() == 1, step.jitted._cache_size()
+    print("ROUTING_LOCALITY_OK")
+    """
+)
+
+MIGRATION = PRELUDE + textwrap.dedent(
+    """
+    rhost = RoutingTableHost(rt.n)
+    rt.attach_routing(rhost)
+    root_dir = os.path.join(tempfile.mkdtemp(), "journal")
+    j = WriteBehindJournal(root_dir, rt.n)
+    j.checkpoint(pstore, e_blk_cap=rt.pspec.e_blk_cap,
+                 recent_blk_cap=rt.pspec.recent_blk_cap, store_version=0)
+
+    # --- live migration protocol: journal-first, splice, one-epoch publish
+    moves = [(0, 7), (5, 2)]  # native owners 0 and 5 — both real moves
+    assert all(int(c) > 0 for c in
+               vertex_row_counts(rt.pspec, pstore, [v for v, _ in moves]))
+    j.append_migrate(moves, epoch=rhost.epoch + 1)
+    pstore = jax.device_put(
+        migrate_vertex_rows(rt.pspec, pstore, moves), rt.store_sharding()
+    )
+    rhost.apply_moves(moves)
+    assert infer_storage_exceptions(rt.pspec, pstore) == dict(moves)
+
+    # --- post-migration reads equal the single-host engine; migrated roots
+    # are locality-routed (dest != native) but never deferred (cache home
+    # follows the rows)
+    res_h, miss_h, met_h = eng.run(store, empty_cache(cspec), ttable, roots)
+    res_m, miss_m, met_m = rt.run_gr_tx_batch(
+        pstore, rt.empty_cache(), ttable, plan, roots
+    )
+    assert np.array_equal(res_m, res_h)
+    assert miss_key(miss_m) == miss_key(miss_h)
+    assert met_m["locality_routed"] > 0, met_m
+    assert met_m["locality_retry_rows"] == 0 and met_m["host_syncs"] == 1
+    assert step.jitted._cache_size() == 1, step.jitted._cache_size()
+
+    # --- gRW after migration: appends to migrated vertices land at their
+    # TABLE owners' blocks, and the commit journals through the table
+    mb = make_mutation_batch(
+        spec, new_edges=[(5, 12, 0, [1]), (0, 11, 0, [0])],
+        set_vprops=[(7, 0, 1)], del_edges=[2],
+    )
+    st_h, ch_h, m_h = run_grw_tx(
+        espec, store, empty_cache(cspec), ttable, mb
+    )
+    ps2, cs2, m_s = rt.run_grw_tx(
+        pstore, rt.empty_cache(), ttable, mb, journal=j
+    )
+    assert m_s["op_overflow"] == 0 and m_s["store_append_overflow"] == 0
+    assert m_h["impacted_keys"] == m_s["impacted_keys"]
+    # placement still reconstructible from bytes alone: the new rows for
+    # the migrated vertices are at the table owners, not the native ones
+    assert infer_storage_exceptions(rt.pspec, ps2) == dict(moves)
+    res2_h, miss2_h, _ = eng.run(st_h, empty_cache(cspec), ttable, roots)
+    res2_s, miss2_s, _ = rt.run_gr_tx_batch(
+        ps2, rt.empty_cache(), ttable, plan, roots
+    )
+    assert np.array_equal(res2_s, res2_h)
+    assert miss_key(miss2_s) == miss_key(miss2_h)
+    assert step.jitted._cache_size() == 1, step.jitted._cache_size()
+    j.flush()
+
+    # --- crash: replay from the PRE-migration checkpoint reconstructs the
+    # post-migration post-commit store byte-for-byte (MIGRATE record →
+    # same deterministic splice; COMMIT → appends routed through the
+    # reconstructed table)
+    rt2 = ShardedTxnRuntime(espec, mesh, route_cap_factor=None, blk_slack=1.0)
+    j2 = WriteBehindJournal(root_dir, rt2.n)
+    ps_r, last, info = replay(j2, rt2, ttable)
+    assert info["replayed_migrations"] == 1 and info["replayed_commits"] == 1
+    assert_tree_equal(ps_r, ps2, "replayed store diverges from live")
+    res3, miss3, _ = rt2.run_gr_tx_batch(
+        ps_r, rt2.empty_cache(), ttable, plan, roots
+    )
+    assert np.array_equal(res3, res2_h)
+    assert miss_key(miss3) == miss_key(miss2_h)
+    print("ROUTING_MIGRATION_OK")
+    """
+)
+
+
+def _run(script, token):
+    env = dict(
+        os.environ,
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+        ),
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=1800,
+    )
+    assert token in out.stdout, out.stdout + out.stderr
+
+
+def test_locality_routing_matches_single_host_and_never_recompiles():
+    _run(LOCALITY, "ROUTING_LOCALITY_OK")
+
+
+def test_migration_preserves_results_and_replays_byte_identical():
+    _run(MIGRATION, "ROUTING_MIGRATION_OK")

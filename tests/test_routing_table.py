@@ -1,0 +1,142 @@
+"""Unit coverage for the replicated routing table (distributed.routing).
+
+The table is the single source of vertex placement: a fixed-shape device
+pytree (traced input of the serving step — never a recompile) mirrored by
+a mutable host object. These tests pin the lookup semantics (base rule +
+storage overlay + cache overlay), the epoch/caching discipline, and the
+capacity guardrails, all host-side — the runtime integration lives in
+test_routing_runtime.py / test_sharded_collectives.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.routing import (
+    DEFAULT_TABLE_CAP,
+    RoutingTableHost,
+    base_owner,
+    cache_owner_of,
+    identity_table,
+    storage_owner_of,
+    storage_view,
+)
+
+N = 8
+
+
+def owners(fn, rtable, vids):
+    return np.asarray(fn(rtable, np.asarray(vids, np.int32), N))
+
+
+def test_identity_table_is_the_base_rule():
+    vids = np.arange(200, dtype=np.int32)
+    expect = base_owner(vids, N)
+    for t in (None, identity_table(N)):
+        assert np.array_equal(owners(storage_owner_of, t, vids), expect)
+        assert np.array_equal(owners(cache_owner_of, t, vids), expect)
+
+
+def test_storage_exception_overrides_only_its_vid():
+    rh = RoutingTableHost(N)
+    rh.set_storage_owner(10, 5)  # native owner is 2
+    t = rh.device_table()
+    vids = np.arange(64, dtype=np.int32)
+    got = owners(storage_owner_of, t, vids)
+    expect = base_owner(vids, N).copy()
+    expect[10] = 5
+    assert np.array_equal(got, expect)
+    # cache owner follows storage unless a cache exception re-points it
+    assert np.array_equal(owners(cache_owner_of, t, vids), expect)
+    # host lookups agree with the device table
+    assert np.array_equal(rh.storage_owner(vids), expect)
+    assert rh.storage_owner(10) == 5 and rh.storage_owner(11) == 3
+
+
+def test_cache_exception_layers_on_storage():
+    rh = RoutingTableHost(N)
+    rh.set_storage_owner(10, 5)
+    rh.set_cache_owner(10, 7)   # split vertex: rows at 5, cache home at 7
+    rh.set_cache_owner(3, 0)    # unmigrated vertex with a locality home
+    t = rh.device_table()
+    vids = np.arange(16, dtype=np.int32)
+    st = owners(storage_owner_of, t, vids)
+    ca = owners(cache_owner_of, t, vids)
+    assert st[10] == 5 and ca[10] == 7
+    assert st[3] == 3 and ca[3] == 0
+    assert np.array_equal(st[ca != st], np.asarray([3, 5]))
+    assert rh.is_split(np.asarray([10, 3, 4]).astype(np.int32)).tolist() == [
+        True, True, False,
+    ]
+    # storage_view strips cache overlays but keeps placement, and the
+    # pytree structure is unchanged (same compiled program)
+    sv = storage_view(t)
+    assert np.array_equal(owners(cache_owner_of, sv, vids), st)
+    assert jnp.asarray(sv.epoch).shape == jnp.asarray(t.epoch).shape
+    sv2 = rh.storage_table()
+    assert np.array_equal(owners(cache_owner_of, sv2, vids), st)
+
+
+def test_moving_home_deletes_the_exception():
+    rh = RoutingTableHost(N)
+    rh.set_storage_owner(10, 5)
+    assert rh.has_exceptions()
+    rh.set_storage_owner(10, base_owner(10, N))  # back to native
+    assert not rh.has_exceptions()
+    assert rh.storage_exceptions == {}
+
+
+def test_apply_moves_is_one_epoch_bump_and_clears_cache_overlay():
+    rh = RoutingTableHost(N)
+    rh.set_cache_owner(9, 4)
+    e0 = rh.epoch
+    rh.apply_moves([(9, 6), (17, 0)])
+    assert rh.epoch == e0 + 1  # ONE bump for the whole round
+    assert rh.storage_owner(9) == 6 and rh.storage_owner(17) == 0
+    # the cache home follows the rows on migration
+    assert rh.cache_exceptions == {}
+    assert rh.cache_owner(9) == 6
+
+
+def test_device_table_is_cached_per_epoch():
+    rh = RoutingTableHost(N)
+    rh.set_storage_owner(10, 5)
+    t1 = rh.device_table()
+    assert rh.device_table() is t1  # unchanged epoch → same stamp
+    rh.set_storage_owner(11, 6)
+    t2 = rh.device_table()
+    assert t2 is not t1
+    assert int(np.asarray(t2.epoch)) > int(np.asarray(t1.epoch))
+    # the stamped epoch tracks the host epoch
+    assert int(np.asarray(t2.epoch)) == rh.epoch
+
+
+def test_capacity_overflow_raises_instead_of_recompiling():
+    rh = RoutingTableHost(N, cap=2)
+    rh.set_storage_owner(10, 5)
+    rh.set_storage_owner(11, 5)
+    with pytest.raises(ValueError, match="full"):
+        rh.set_storage_owner(12, 5)
+    with pytest.raises(ValueError, match="full"):
+        rh.apply_moves([(13, 6)])  # 13's native owner is 5 — a real move
+    # shapes are static: cap is a table property, not data-dependent
+    assert identity_table(N, cap=2).cap == 2
+    assert identity_table(N).cap == DEFAULT_TABLE_CAP
+
+
+def test_owner_range_validated():
+    rh = RoutingTableHost(N)
+    with pytest.raises(ValueError, match="out of range"):
+        rh.set_storage_owner(1, N)
+    with pytest.raises(ValueError, match="out of range"):
+        rh.set_cache_owner(1, -1)
+
+
+def test_metrics_report_table_state():
+    rh = RoutingTableHost(N)
+    rh.set_storage_owner(10, 5)
+    rh.set_cache_owner(3, 0)
+    m = rh.metrics()
+    assert m["table_epoch"] == rh.epoch
+    assert m["storage_exceptions"] == 1
+    assert m["cache_exceptions"] == 1

@@ -76,7 +76,7 @@ def test_gr_step_collective_counts():
             step = rt.serve_step(plan, 64)
             hlo = step.jitted.lower(
                 pstore, cache, ttable, jnp.zeros(64, jnp.int32),
-                jnp.ones(64, bool), rt._down_none(),
+                jnp.ones(64, bool), rt._down_none(), rt._rtable_none(),
             ).compile().as_text()
             c = analyze(hlo)["counts"]
             h = len(plan.hops)
@@ -86,6 +86,46 @@ def test_gr_step_collective_counts():
         print("COLLECTIVE_COUNTS_OK")
         """,
         "COLLECTIVE_COUNTS_OK",
+    )
+
+
+def test_routing_table_keeps_collective_budget_and_program():
+    """The replicated routing table is a traced INPUT of the serving step,
+    not a closure constant: a table with live exceptions must (a) reuse the
+    exact compiled program the identity table compiled (zero recompiles —
+    ``_cache_size() == 1``), and (b) add ZERO collectives — still 2
+    all_to_alls per hop + 1 all-reduce, no all-gather / collective-permute
+    smuggled in by the locality routing or the defer mask."""
+    _run(
+        """
+        from repro.distributed.routing import RoutingTableHost
+
+        rt = ShardedTxnRuntime(espec, mesh)
+        pstore = rt.partition_store(store)
+        cache = rt.empty_cache()
+        rhost = RoutingTableHost(rt.n)
+        rhost.set_cache_owner(5, 0)   # split root (native owner is 5)
+        rhost.apply_moves([(9, 2)])   # migrated vertex (native owner is 1)
+        for plan in (fig1_plan(), common_watchlist_plan()):
+            h = len(plan.hops)
+            step = rt.serve_step(plan, 64)
+            roots = jnp.zeros(64, jnp.int32)
+            bv = jnp.ones(64, bool)
+            step(pstore, cache, ttable, roots, bv)
+            step(pstore, cache, ttable, roots, bv,
+                 rtable=rhost.device_table())
+            assert step.jitted._cache_size() == 1, step.jitted._cache_size()
+            hlo = step.jitted.lower(
+                pstore, cache, ttable, roots, bv, rt._down_none(),
+                rhost.device_table(),
+            ).compile().as_text()
+            c = analyze(hlo)["counts"]
+            assert c["all-to-all"] == 2 * h, (h, c)
+            assert c["all-reduce"] == 1, (h, c)
+            assert c["all-gather"] == 0 and c["collective-permute"] == 0, c
+        print("RTABLE_BUDGET_OK")
+        """,
+        "RTABLE_BUDGET_OK",
     )
 
 
@@ -151,7 +191,7 @@ def test_telemetry_keeps_collective_budget_and_bytes():
                 step = rt.serve_step(plan, 64)
                 hlo = step.jitted.lower(
                     ps, rt.empty_cache(), ttable, jnp.zeros(64, jnp.int32),
-                    jnp.ones(64, bool), rt._down_none(),
+                    jnp.ones(64, bool), rt._down_none(), rt._rtable_none(),
                 ).compile().as_text()
                 c = analyze(hlo)["counts"]
                 assert c["all-to-all"] == 2 * h, (h, c)

@@ -54,6 +54,11 @@ PRELUDE = textwrap.dedent(
         res_s, miss_s, met_s = rt.run_gr_tx_batch(store, cache_s, ttable, plan, roots)
         assert np.array_equal(res_h, res_s), (res_h, res_s)
         assert met_s.pop("route_overflow") == 0
+        # routing-tier keys exist only on the sharded side; identity runs
+        # use the implicit uniform table, so all of them must be zero
+        assert met_s.pop("locality_routed") == 0
+        assert met_s.pop("route_cap_retries") == 0
+        assert met_s.pop("locality_retry_rows") == 0
         assert met_h == met_s, (met_h, met_s)
         assert miss_key(miss_h) == miss_key(miss_s)
         return miss_h, miss_s, met_h
